@@ -1,0 +1,24 @@
+//! Bench: Fig 6 — all four panels of the point-to-point multi-path
+//! study (intra 1/2/3 paths, inter 1/2/4 NICs, both forwarding
+//! overhead panels), plus wall-clock of the underlying simulators.
+
+use nimble::exp::fig6;
+use nimble::fabric::FabricParams;
+use nimble::topology::Topology;
+use nimble::util::bench::{bench, header};
+
+fn main() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    println!("{}", fig6::render(&topo, &params, "all"));
+
+    println!("{}", header());
+    let r = bench("fig6a full sweep (fluid sim)", 0.5, || {
+        let _ = fig6::fig6a(&topo, &params);
+    });
+    println!("{}", r.row());
+    let r = bench("fig6c full sweep (chunk pipeline)", 0.5, || {
+        let _ = fig6::fig6c(&topo, &params);
+    });
+    println!("{}", r.row());
+}

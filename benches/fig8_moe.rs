@@ -1,0 +1,21 @@
+//! Bench: Fig 8 — MoE end-to-end step latency breakdown
+//! (dispatch/compute/combine) over tokens × hotspot, NCCL vs NIMBLE.
+
+use nimble::exp::fig8;
+use nimble::fabric::FabricParams;
+use nimble::topology::Topology;
+
+fn main() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    println!("{}", fig8::render(&topo, &params));
+    let rows = fig8::sweep(&topo, &params);
+    for &h in &fig8::HOTSPOTS {
+        let v: Vec<f64> =
+            rows.iter().filter(|r| r.hotspot == h).map(|r| r.speedup()).collect();
+        let avg = v.iter().sum::<f64>() / v.len() as f64;
+        let peak = v.iter().cloned().fold(0.0, f64::max);
+        println!("hotspot {h}: avg speedup {avg:.3}, peak {peak:.3}");
+    }
+    println!("(paper reference: avg 1.13×@0.4 → 1.26×@0.9, peak 1.35× @16K tokens)");
+}

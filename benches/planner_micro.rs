@@ -1,0 +1,75 @@
+//! Microbenchmarks of the L3 hot path: Algorithm 1 planning across
+//! workload shapes/sizes, the fluid simulator's rate solver, and the
+//! chunk-pipeline DP. These are the §Perf targets in EXPERIMENTS.md.
+
+use nimble::exp::MB;
+use nimble::fabric::fluid::{Flow, FluidSim};
+use nimble::fabric::pipeline::PipelineModel;
+use nimble::fabric::{FabricParams, XferMode};
+use nimble::planner::{Demand, Planner, PlannerCfg};
+use nimble::topology::path::candidates;
+use nimble::topology::Topology;
+use nimble::util::bench::{bench, header};
+use nimble::workloads::skew::hotspot_alltoallv;
+use nimble::workloads::stencil::stencil_1d;
+
+fn main() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    println!("{}", header());
+
+    // planner on the Table-I stencil (the paper's 0.032–0.048 ms row)
+    let demands = stencil_1d(&topo, 64.0 * MB);
+    let r = bench("plan: stencil 14 pairs @64MB", 0.5, || {
+        let mut p = Planner::new(&topo, PlannerCfg::default());
+        std::hint::black_box(p.plan(&demands));
+    });
+    println!("{}", r.row());
+
+    // planner on the skewed all-to-allv (56 pairs)
+    let demands = hotspot_alltoallv(&topo, 64.0 * MB, 0.9, 4);
+    let r = bench("plan: skewed a2av 56 pairs @64MB", 0.5, || {
+        let mut p = Planner::new(&topo, PlannerCfg::default());
+        std::hint::black_box(p.plan(&demands));
+    });
+    println!("{}", r.row());
+
+    // planner with reused candidate cache (execution-time re-planning)
+    let mut warm = Planner::new(&topo, PlannerCfg::default());
+    let r = bench("plan: skewed a2av, warm planner", 0.5, || {
+        std::hint::black_box(warm.plan(&demands));
+    });
+    println!("{}", r.row());
+
+    // single large pair (the `nimble plan` path)
+    let one = vec![Demand::new(0, 4, 256.0 * MB)];
+    let r = bench("plan: single pair @256MB", 0.5, || {
+        let mut p = Planner::new(&topo, PlannerCfg::default());
+        std::hint::black_box(p.plan(&one));
+    });
+    println!("{}", r.row());
+
+    // fluid simulator on the skewed a2av flow set
+    let mut router = nimble::coordinator::NimbleRouter::default_for(&topo);
+    let flows: Vec<Flow> = {
+        use nimble::baselines::Router;
+        router
+            .route(&topo, &demands)
+            .into_iter()
+            .map(|(p, b)| Flow::new(p, b))
+            .collect()
+    };
+    let sim = FluidSim::new(&topo, params.clone());
+    let r = bench(&format!("fluid sim: {} flows", flows.len()), 0.5, || {
+        std::hint::black_box(sim.run(&flows));
+    });
+    println!("{}", r.row());
+
+    // chunk pipeline DP on a 3-hop 256 MB transfer
+    let m = PipelineModel::new(&topo, params.clone());
+    let path = candidates(&topo, 1, 6, true).remove(3);
+    let r = bench("pipeline DP: 3-hop 256MB (512 chunks)", 0.5, || {
+        std::hint::black_box(m.transfer(&path, 256.0 * MB, XferMode::Kernel));
+    });
+    println!("{}", r.row());
+}

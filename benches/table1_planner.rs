@@ -1,0 +1,15 @@
+//! Bench: Table I — planner (Algorithm 1) time vs communication time
+//! on the 1-D stencil, intra-node and inter-node, sizes 16–256 MB.
+//! Regenerates the paper's table rows (paper: algo 0.032–0.048 ms).
+
+use nimble::exp::table1;
+use nimble::fabric::FabricParams;
+use nimble::topology::Topology;
+
+fn main() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    println!("{}", table1::render(&topo, &params, 19));
+    println!("(paper reference: intra algo 0.0321–0.0363 ms / comm 0.197–2.046 ms;");
+    println!(" inter algo 0.0325–0.0480 ms / comm 0.486–6.539 ms)");
+}

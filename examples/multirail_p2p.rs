@@ -1,0 +1,25 @@
+//! Fig 6 driver: point-to-point bandwidth with additional intra-node
+//! paths and inter-node rails, plus the forwarding-overhead panels.
+//!
+//! ```bash
+//! cargo run --release --offline --example multirail_p2p -- --part all
+//! ```
+
+use nimble::exp::fig6;
+use nimble::fabric::FabricParams;
+use nimble::topology::Topology;
+use nimble::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::new("multirail_p2p", "Fig 6 panels")
+        .flag("part", "all", "a|b|c|d|all")
+        .parse(&argv)
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        });
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    println!("{}", fig6::render(&topo, &params, args.get("part")));
+}

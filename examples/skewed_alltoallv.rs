@@ -1,0 +1,61 @@
+//! Fig 7 driver: skewed All-to-Allv sweep over hotspot ratios and
+//! payload sizes under all three engines (NCCL / OpenMPI / NIMBLE),
+//! including the tail-latency view the paper motivates (§I: "severe
+//! increase in tail latencies (p99)").
+//!
+//! ```bash
+//! cargo run --release --offline --example skewed_alltoallv -- --payload-mb 64
+//! ```
+
+use nimble::baselines::{MpiLike, NcclLike, Router};
+use nimble::collectives::alltoallv::alltoallv_demands;
+use nimble::coordinator::NimbleRouter;
+use nimble::exp::MB;
+use nimble::fabric::FabricParams;
+use nimble::metrics::Table;
+use nimble::topology::Topology;
+use nimble::util::cli::Args;
+use nimble::workloads::skew::hotspot_alltoallv;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::new("skewed_alltoallv", "Fig 7 driver with tail latency")
+        .flag("payload-mb", "64", "per-rank payload (MB)")
+        .flag("hot", "4", "hot destination GPU")
+        .parse(&argv)
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        });
+    let payload = args.get_f64("payload-mb") * MB;
+    let hot = args.get_usize("hot");
+
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+
+    let mut t = Table::new(&[
+        "hotspot", "engine", "makespan (ms)", "p50 (ms)", "p99 (ms)", "fairness",
+    ]);
+    for ratio in [0.125, 0.3, 0.5, 0.7, 0.9] {
+        let demands = hotspot_alltoallv(&topo, payload, ratio, hot);
+        let engines: Vec<Box<dyn Router>> = vec![
+            Box::new(NcclLike::new()),
+            Box::new(MpiLike::new()),
+            Box::new(NimbleRouter::default_for(&topo)),
+        ];
+        for mut e in engines {
+            let r = alltoallv_demands(&topo, &params, e.as_mut(), &demands);
+            let s = r.latency_summary();
+            t.row(&[
+                format!("{ratio:.3}"),
+                r.engine.clone(),
+                format!("{:.3}", r.makespan_s * 1e3),
+                format!("{:.3}", s.p50 * 1e3),
+                format!("{:.3}", s.p99 * 1e3),
+                format!("{:.3}", r.link_fairness),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("fairness = Jain index over busy-link utilization (1.0 = perfectly balanced)");
+}

@@ -1,0 +1,146 @@
+"""AOT bridge: lower the L2 graphs to HLO **text** + manifest.json.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts written to --out:
+  expert_ffn_t{T}.hlo.txt     Fig 8 compute buckets (Pallas kernel)
+  moe_block_fwd.hlo.txt       quickstart MoE block (both kernels)
+  train_step.hlo.txt          e2e training step (fwd+bwd+SGD)
+  manifest.json               input/output shapes + model config
+
+Usage: ``python -m compile.aot --out ../artifacts`` (via `make
+artifacts`; runs once, never on the request path).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def lower_expert_ffn(out_dir, manifest, tokens_buckets, d_model, d_ff):
+    for t in tokens_buckets:
+        name = f"expert_ffn_t{t}"
+        x = jax.ShapeDtypeStruct((t, d_model), jnp.float32)
+        w1 = jax.ShapeDtypeStruct((d_model, d_ff), jnp.float32)
+        w2 = jax.ShapeDtypeStruct((d_ff, d_model), jnp.float32)
+        lowered = jax.jit(M.expert_ffn).lower(x, w1, w2)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                spec((t, d_model)),
+                spec((d_model, d_ff)),
+                spec((d_ff, d_model)),
+            ],
+            "outputs": [spec((t, d_model))],
+            "tokens": t,
+            "d_model": d_model,
+            "d_ff": d_ff,
+        }
+
+
+def lower_moe_block(out_dir, manifest, t, d_model, d_ff, n_experts):
+    name = "moe_block_fwd"
+    x = jax.ShapeDtypeStruct((t, d_model), jnp.float32)
+    wg = jax.ShapeDtypeStruct((d_model, n_experts), jnp.float32)
+    w1s = jax.ShapeDtypeStruct((n_experts, d_model, d_ff), jnp.float32)
+    w2s = jax.ShapeDtypeStruct((n_experts, d_ff, d_model), jnp.float32)
+    lowered = jax.jit(M.moe_block_fwd).lower(x, wg, w1s, w2s)
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"][name] = {
+        "file": f"{name}.hlo.txt",
+        "inputs": [
+            spec((t, d_model)),
+            spec((d_model, n_experts)),
+            spec((n_experts, d_model, d_ff)),
+            spec((n_experts, d_ff, d_model)),
+        ],
+        "outputs": [spec((t, d_model))],
+        "tokens": t,
+        "d_model": d_model,
+        "d_ff": d_ff,
+        "n_experts": n_experts,
+    }
+
+
+def lower_train_step(out_dir, manifest, cfg: M.LmConfig):
+    name = "train_step"
+    tokens = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+    targets = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+    params = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in cfg.param_specs]
+    lowered = jax.jit(M.make_train_step(cfg)).lower(tokens, targets, *params)
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"][name] = {
+        "file": f"{name}.hlo.txt",
+        "inputs": [spec((cfg.batch, cfg.seq), "i32")] * 2
+        + [spec(s) for _, s in cfg.param_specs],
+        "outputs": [spec(())] + [spec(s) for _, s in cfg.param_specs],
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in cfg.param_specs
+        ],
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "d_ff": cfg.d_ff,
+            "n_experts": cfg.n_experts,
+            "n_layers": cfg.n_layers,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+            "lr": cfg.lr,
+            "param_count": cfg.param_count(),
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--ffn-buckets", default="256,512,1024,2048,4096")
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--d-ff", type=int, default=2048)
+    ap.add_argument("--block-experts", type=int, default=4)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"version": 1, "artifacts": {}}
+
+    buckets = [int(x) for x in args.ffn_buckets.split(",")]
+    lower_expert_ffn(args.out, manifest, buckets, args.d_model, args.d_ff)
+    lower_moe_block(args.out, manifest, 1024, args.d_model, args.d_ff,
+                    args.block_experts)
+    lower_train_step(args.out, manifest, M.LmConfig())
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: top-k weighted combine.
+
+After experts process their tokens, each token's k expert outputs are
+summed with its gate weights: ``out[t] = Σ_k gates[t,k] · ys[k,t]``.
+This is the compute half of the paper's "combine" phase (the comm half
+is the transpose All-to-Allv, orchestrated at L3).
+
+TPU mapping: the CUDA implementation scatters with warp-level atomics;
+on TPU we block over tokens and let each grid step do a dense weighted
+reduction over the (small) k axis in VMEM — no atomics needed because
+each token tile is owned by exactly one step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(ys_ref, gates_ref, o_ref):
+    ys = ys_ref[...]        # (k, bm, D)
+    gates = gates_ref[...]  # (bm, k)
+    # weighted sum over k: (bm, D)
+    o_ref[...] = jnp.einsum("kmd,mk->md", ys, gates)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def combine_topk(ys, gates, *, block_m=128):
+    """Weighted top-k combine.
+
+    Args:
+      ys:    (k, T, D) expert outputs aligned per token slot.
+      gates: (T, k) gate weights.
+
+    Returns: (T, D) combined tokens, f32.
+    """
+    k, t, d = ys.shape
+    assert gates.shape == (t, k), f"gates {gates.shape} vs ys {ys.shape}"
+    bm = min(block_m, t)
+    assert t % bm == 0, f"tokens {t} not divisible by block_m {bm}"
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=(t // bm,),
+        in_specs=[
+            pl.BlockSpec((k, bm, d), lambda i: (0, i, 0)),
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=True,
+    )(ys.astype(jnp.float32), gates.astype(jnp.float32))

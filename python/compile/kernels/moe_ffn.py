@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: the MoE expert FFN hot spot.
+
+Computes ``y = gelu(x @ w1) @ w2`` (the paper's "two-layer FFN with 4x
+expansion", §V-D) as a tiled Pallas kernel.
+
+TPU-oriented tiling (DESIGN.md §Hardware-Adaptation): the grid is
+(T/bm, F/bf) — token blocks × hidden blocks. Each step keeps one
+(bm, D) activation tile, one (D, bf) w1 tile and one (bf, D) w2 tile in
+VMEM, drives the MXU with two matmuls, and accumulates partial outputs
+in the (bm, D) output tile. gelu is applied per hidden block, which is
+exact because each h-block's D-reduction completes within the step.
+
+Run with ``interpret=True`` everywhere: the CPU PJRT backend cannot
+execute Mosaic custom-calls; interpret mode lowers to plain HLO so the
+same program runs under the rust runtime (see aot.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(x_ref, w1_ref, w2_ref, o_ref):
+    """One grid step: partial FFN over a (token-block, hidden-block)."""
+    # initialize the output accumulator on the first hidden block
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]          # (bm, D)
+    w1 = w1_ref[...]        # (D, bf)
+    w2 = w2_ref[...]        # (bf, D)
+    h = jax.nn.gelu(jnp.dot(x, w1))      # (bm, bf) — MXU matmul 1
+    o_ref[...] += jnp.dot(h, w2)         # (bm, D)  — MXU matmul 2
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_f"))
+def moe_ffn(x, w1, w2, *, block_m=128, block_f=512):
+    """Tiled Pallas expert FFN.
+
+    Args:
+      x:  (T, D) tokens routed to this expert.
+      w1: (D, F) up-projection.
+      w2: (F, D) down-projection.
+      block_m: token tile (grid dim 0).
+      block_f: hidden tile (grid dim 1).
+
+    Returns: (T, D) expert output, f32.
+    """
+    t, d = x.shape
+    d2, f = w1.shape
+    assert d2 == d, f"w1 shape {w1.shape} mismatches x {x.shape}"
+    assert w2.shape == (f, d), f"w2 shape {w2.shape}"
+    bm = min(block_m, t)
+    bf = min(block_f, f)
+    assert t % bm == 0, f"tokens {t} not divisible by block_m {bm}"
+    assert f % bf == 0, f"hidden {f} not divisible by block_f {bf}"
+    grid = (t // bm, f // bf)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),   # x: token tile
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),   # w1: hidden tile
+            pl.BlockSpec((bf, d), lambda i, j: (j, 0)),   # w2: hidden tile
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w1.astype(jnp.float32), w2.astype(jnp.float32))
+
+
+def vmem_estimate_bytes(d, block_m=128, block_f=512, elem=4):
+    """Static VMEM footprint of one grid step (DESIGN.md §7): the
+    x-tile, w1-tile, w2-tile, h-tile and output accumulator."""
+    return elem * (
+        block_m * d        # x tile
+        + d * block_f      # w1 tile
+        + block_f * d      # w2 tile
+        + block_m * block_f  # h
+        + block_m * d      # out accumulator
+    )
+
+
+def mxu_flops(t, d, f):
+    """MXU FLOPs for one expert call (2 matmuls)."""
+    return 2 * t * d * f * 2

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+pytest compares every kernel against these references across a
+hypothesis-driven sweep of shapes and dtypes — the core L1
+correctness signal (the kernels and these functions share no code).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_ffn_ref(x, w1, w2):
+    """y = gelu(x @ w1) @ w2 in f32."""
+    x = x.astype(jnp.float32)
+    w1 = w1.astype(jnp.float32)
+    w2 = w2.astype(jnp.float32)
+    return jax.nn.gelu(x @ w1) @ w2
+
+
+def combine_topk_ref(ys, gates):
+    """out[t] = sum_k gates[t, k] * ys[k, t]."""
+    ys = ys.astype(jnp.float32)
+    gates = gates.astype(jnp.float32)
+    return jnp.einsum("ktd,tk->td", ys, gates)
+
+
+def top1_gating_ref(logits):
+    """softmax gate + argmax expert (no capacity cap — the paper's
+    no-token-dropping deployment, §V-D)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    expert = jnp.argmax(probs, axis=-1)
+    gate = jnp.take_along_axis(probs, expert[:, None], axis=-1)[:, 0]
+    return expert, gate

@@ -1,0 +1,180 @@
+"""L2: the JAX compute graphs NIMBLE's coordinator executes via PJRT.
+
+Three graph families, all AOT-lowered to HLO text by aot.py:
+
+* ``expert_ffn`` — one expert's FFN over a token bucket, calling the
+  L1 Pallas kernel (the Fig 8 compute phase).
+* ``moe_block_fwd`` — gating + all experts + weighted combine (both
+  Pallas kernels), the quickstart's single-device MoE block.
+* ``train_step`` — a tiny MoE-transformer language model's fused
+  forward/backward/SGD step for the end-to-end example
+  (examples/moe_e2e.rs). The training graph uses the pure-jnp FFN
+  (mathematically identical to the kernel — pytest asserts so)
+  because Pallas interpret-mode has no registered VJP; the inference
+  graphs exercise the Pallas kernels.
+
+Everything here is build-time only; nothing imports at runtime.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.combine import combine_topk
+from compile.kernels.moe_ffn import moe_ffn
+from compile.kernels.ref import moe_ffn_ref
+
+
+# ---------------------------------------------------------------------------
+# Inference graphs (Pallas kernels)
+# ---------------------------------------------------------------------------
+
+def expert_ffn(x, w1, w2):
+    """One expert FFN over a token bucket (L1 Pallas kernel)."""
+    return moe_ffn(x, w1, w2, block_m=128, block_f=512)
+
+
+def moe_block_fwd(x, wg, w1s, w2s):
+    """Single-device MoE block: softmax gating over E experts, every
+    expert runs the Pallas FFN, outputs are gate-weighted and combined
+    with the Pallas combine kernel (soft-mixture form: exercises both
+    kernels and is the dense reference the EP pipeline must match).
+
+    x: (T, D); wg: (D, E); w1s: (E, D, F); w2s: (E, F, D) → (T, D)
+    """
+    e = wg.shape[1]
+    gates = jax.nn.softmax((x.astype(jnp.float32) @ wg.astype(jnp.float32)), axis=-1)
+    ys = jnp.stack([expert_ffn(x, w1s[i], w2s[i]) for i in range(e)])  # (E,T,D)
+    return combine_topk(ys, gates)
+
+
+# ---------------------------------------------------------------------------
+# Training model (tiny MoE-transformer LM)
+# ---------------------------------------------------------------------------
+
+class LmConfig(NamedTuple):
+    vocab: int = 256
+    d_model: int = 128
+    d_ff: int = 512
+    n_experts: int = 4
+    n_layers: int = 2
+    seq: int = 128
+    batch: int = 8
+    lr: float = 0.05
+
+    @property
+    def param_specs(self):
+        """Canonical (name, shape) order — the AOT flattening contract
+        shared with the rust runtime via manifest.json."""
+        c = self
+        specs = [("embed", (c.vocab, c.d_model))]
+        for l in range(c.n_layers):
+            specs += [
+                (f"l{l}.wq", (c.d_model, c.d_model)),
+                (f"l{l}.wk", (c.d_model, c.d_model)),
+                (f"l{l}.wv", (c.d_model, c.d_model)),
+                (f"l{l}.wo", (c.d_model, c.d_model)),
+                (f"l{l}.wg", (c.d_model, c.n_experts)),
+                (f"l{l}.w1", (c.n_experts, c.d_model, c.d_ff)),
+                (f"l{l}.w2", (c.n_experts, c.d_ff, c.d_model)),
+            ]
+        specs.append(("unembed", (c.d_model, c.vocab)))
+        return specs
+
+    def param_count(self):
+        import math
+        return sum(math.prod(s) for _, s in self.param_specs)
+
+
+def init_params(key, cfg: LmConfig):
+    """He-ish init, returned as the canonical flat list of arrays."""
+    params = []
+    for name, shape in cfg.param_specs:
+        key, sub = jax.random.split(key)
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        params.append(jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in))
+    return params
+
+
+def _causal_attention(x, wq, wk, wv, wo):
+    """Single-head causal self-attention. x: (B, S, D)."""
+    b, s, d = x.shape
+    q, k, v = x @ wq, x @ wk, x @ wv
+    att = jnp.einsum("bsd,btd->bst", q, k) / jnp.sqrt(d).astype(x.dtype)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask[None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    return jnp.einsum("bst,btd->bsd", att, v) @ wo
+
+
+def _moe_ffn_dense(x, wg, w1s, w2s):
+    """Soft-mixture MoE FFN over (B, S, D) using the jnp reference
+    (differentiable twin of the Pallas path)."""
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    gates = jax.nn.softmax(flat @ wg, axis=-1)  # (T, E)
+    ys = jnp.stack(
+        [moe_ffn_ref(flat, w1s[i], w2s[i]) for i in range(wg.shape[1])]
+    )  # (E, T, D)
+    out = jnp.einsum("ktd,tk->td", ys, gates)
+    return out.reshape(b, s, d)
+
+
+def _rms_norm(x):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def lm_loss(params, tokens, targets, cfg: LmConfig):
+    """Next-token cross-entropy of the tiny MoE transformer.
+
+    params: canonical flat list; tokens/targets: (B, S) int32.
+    """
+    it = iter(params)
+    embed = next(it)
+    x = embed[tokens]  # (B, S, D)
+    for _ in range(cfg.n_layers):
+        wq, wk, wv, wo = next(it), next(it), next(it), next(it)
+        wg, w1s, w2s = next(it), next(it), next(it)
+        x = x + _causal_attention(_rms_norm(x), wq, wk, wv, wo)
+        x = x + _moe_ffn_dense(_rms_norm(x), wg, w1s, w2s)
+    unembed = next(it)
+    logits = _rms_norm(x) @ unembed  # (B, S, V)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def train_step(params, tokens, targets, cfg: LmConfig):
+    """One fused fwd+bwd+SGD step → (loss, new_params...)."""
+    loss, grads = jax.value_and_grad(lm_loss)(params, tokens, targets, cfg)
+    new_params = [p - cfg.lr * g for p, g in zip(params, grads)]
+    return (loss, *new_params)
+
+
+def make_train_step(cfg: LmConfig):
+    """Positional-arg wrapper for AOT lowering: (tokens, targets,
+    *params) → (loss, *new_params)."""
+
+    def fn(tokens, targets, *params):
+        return train_step(list(params), tokens, targets, cfg)
+
+    return fn
+
+
+def synthetic_batch(key, cfg: LmConfig):
+    """Synthetic 'copy-with-shift' corpus: sequences follow a fixed
+    random bigram table, so a competent LM drives loss well below
+    ln(vocab) — giving the e2e example a meaningful loss curve."""
+    k1, k2 = jax.random.split(key)
+    table = jax.random.randint(k1, (cfg.vocab,), 0, cfg.vocab, jnp.int32)
+    start = jax.random.randint(k2, (cfg.batch, 1), 0, cfg.vocab, jnp.int32)
+
+    def step(tok, _):
+        nxt = table[tok]
+        return nxt, nxt
+
+    _, seq = jax.lax.scan(step, start[:, 0], None, length=cfg.seq)
+    toks = jnp.concatenate([start, seq.T], axis=1)  # (B, S+1)
+    return toks[:, :-1], toks[:, 1:]

@@ -1,0 +1,136 @@
+//! NCCL-style baseline (§II-B, §V): static fastest-path routing fixed
+//! at init time, kernel-driven dataplane, PXN rail discipline.
+//!
+//! * Intra-node p2p: always the direct NVLink edge.
+//! * Inter-node p2p: PXN — the message moves over NVLink to the local
+//!   GPU sitting on the *destination's* rail, then crosses that single
+//!   rail NIC (rail-matched, avoids switch tiers; NCCL ≥2.12).
+//!
+//! The failure mode the paper exploits: under a destination hotspot,
+//! every source on a node picks the *same* rail (the hot GPU's), so
+//! one NIC saturates while three idle.
+
+use super::Router;
+use crate::fabric::XferMode;
+use crate::planner::Demand;
+use crate::topology::path::candidates;
+use crate::topology::{Path, PathKind, Topology};
+
+pub struct NcclLike {
+    /// PXN enabled (NCCL ≥ 2.12 default on rail-optimized fabrics).
+    pub pxn: bool,
+}
+
+impl NcclLike {
+    pub fn new() -> Self {
+        NcclLike { pxn: true }
+    }
+
+    pub fn without_pxn() -> Self {
+        NcclLike { pxn: false }
+    }
+
+    fn pick_path(&self, topo: &Topology, s: usize, d: usize) -> Path {
+        if topo.same_node(s, d) {
+            return candidates(topo, s, d, false).remove(0);
+        }
+        if self.pxn {
+            // PXN: rail selected by the DESTINATION's local index.
+            let rail = topo.local_of(d);
+            candidates(topo, s, d, true)
+                .into_iter()
+                .find(|p| p.kind == PathKind::InterRail { rail })
+                .expect("rail-matched candidate exists")
+        } else {
+            // pre-PXN: source's own NIC; mismatched rails pay the
+            // switch-tier penalty via the cross-rail edge.
+            match crate::topology::path::cross_rail_path(topo, s, d) {
+                Some(p) => p,
+                None => candidates(topo, s, d, false).remove(0), // same rail
+            }
+        }
+    }
+}
+
+impl Default for NcclLike {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Router for NcclLike {
+    fn name(&self) -> &'static str {
+        if self.pxn {
+            "nccl"
+        } else {
+            "nccl-nopxn"
+        }
+    }
+
+    fn mode(&self) -> XferMode {
+        XferMode::Kernel
+    }
+
+    fn route(&mut self, topo: &Topology, demands: &[Demand]) -> Vec<(Path, f64)> {
+        demands
+            .iter()
+            .filter(|d| d.bytes > 0.0)
+            .map(|d| (self.pick_path(topo, d.src, d.dst), d.bytes))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intra_always_direct() {
+        let t = Topology::paper();
+        let mut e = NcclLike::new();
+        let flows = e.route(&t, &[Demand::new(0, 3, 1e6)]);
+        assert_eq!(flows.len(), 1);
+        assert_eq!(flows[0].0.kind, PathKind::IntraDirect);
+    }
+
+    #[test]
+    fn pxn_picks_destination_rail() {
+        let t = Topology::paper();
+        let mut e = NcclLike::new();
+        // gpu1 → gpu6 (dst local = 2): PXN uses rail 2
+        let flows = e.route(&t, &[Demand::new(1, 6, 1e6)]);
+        assert_eq!(flows[0].0.kind, PathKind::InterRail { rail: 2 });
+    }
+
+    #[test]
+    fn hotspot_concentrates_on_one_rail() {
+        let t = Topology::paper();
+        let mut e = NcclLike::new();
+        let demands: Vec<Demand> = (0..4).map(|s| Demand::new(s, 4, 1e6)).collect();
+        let flows = e.route(&t, &demands);
+        // all four land on rail 0 (GPU 4's rail): the congestion the
+        // paper highlights
+        for (p, _) in &flows {
+            assert_eq!(p.kind, PathKind::InterRail { rail: 0 });
+        }
+    }
+
+    #[test]
+    fn no_pxn_uses_cross_rail() {
+        let t = Topology::paper();
+        let mut e = NcclLike::without_pxn();
+        let flows = e.route(&t, &[Demand::new(1, 6, 1e6)]);
+        assert!(matches!(flows[0].0.kind, PathKind::InterCross { .. }));
+        // same-rail pair stays matched
+        let flows2 = e.route(&t, &[Demand::new(1, 5, 1e6)]);
+        assert_eq!(flows2[0].0.kind, PathKind::InterRail { rail: 1 });
+    }
+
+    #[test]
+    fn zero_demands_dropped() {
+        let t = Topology::paper();
+        let mut e = NcclLike::new();
+        let flows = e.route(&t, &[Demand::new(0, 1, 0.0), Demand::new(0, 2, 5.0)]);
+        assert_eq!(flows.len(), 1);
+    }
+}

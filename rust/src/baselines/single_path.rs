@@ -1,0 +1,53 @@
+//! Single-path baseline: the "direct" series of Fig 6 — always the
+//! default least-hop path (direct NVLink intra-node, source-rail NIC
+//! inter-node), kernel dataplane, no splitting of any kind.
+
+use super::Router;
+use crate::fabric::XferMode;
+use crate::planner::Demand;
+use crate::topology::path::candidates;
+use crate::topology::{Path, Topology};
+
+#[derive(Default)]
+pub struct SinglePath;
+
+impl SinglePath {
+    pub fn new() -> Self {
+        SinglePath
+    }
+}
+
+impl Router for SinglePath {
+    fn name(&self) -> &'static str {
+        "single-path"
+    }
+
+    fn mode(&self) -> XferMode {
+        XferMode::Kernel
+    }
+
+    fn route(&mut self, topo: &Topology, demands: &[Demand]) -> Vec<(Path, f64)> {
+        demands
+            .iter()
+            .filter(|d| d.bytes > 0.0)
+            .map(|d| (candidates(topo, d.src, d.dst, false).remove(0), d.bytes))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::PathKind;
+
+    #[test]
+    fn one_flow_per_demand() {
+        let t = Topology::paper();
+        let mut e = SinglePath::new();
+        let flows =
+            e.route(&t, &[Demand::new(0, 1, 1e6), Demand::new(0, 4, 1e6)]);
+        assert_eq!(flows.len(), 2);
+        assert_eq!(flows[0].0.kind, PathKind::IntraDirect);
+        assert_eq!(flows[1].0.kind, PathKind::InterRail { rail: 0 });
+    }
+}

@@ -1,0 +1,13 @@
+//! Communication operations built over the routing engines and the
+//! fabric: the skew-sensitive ops NIMBLE orchestrates (All-to-Allv,
+//! async Send/Recv) and the intrinsically balanced collectives that
+//! keep their classic ring algorithms (§IV-E: "for these collectives,
+//! NIMBLE is not involved in the routing orchestration").
+
+pub mod alltoallv;
+pub mod ring;
+pub mod sendrecv;
+
+pub use alltoallv::alltoallv;
+pub use ring::{allgather, allreduce, reduce_scatter};
+pub use sendrecv::sendrecv_batch;

@@ -1,0 +1,99 @@
+//! Balanced collectives on their classic ring algorithms (§IV-E).
+//!
+//! AllReduce = reduce-scatter + all-gather over a ring; each of the
+//! 2(n−1) steps moves `bytes/n` between every adjacent rank pair
+//! simultaneously. These schedules already use every link uniformly,
+//! so NIMBLE leaves them alone — this module exists (a) for parity
+//! experiments and (b) because a real framework ships them.
+
+use crate::fabric::fluid::{Flow, FluidSim};
+use crate::fabric::FabricParams;
+use crate::topology::path::candidates;
+use crate::topology::Topology;
+
+/// Time (seconds) for one ring sweep step-set: `steps` sequential
+/// steps, each moving `step_bytes` along every ring edge concurrently.
+fn ring_steps_time(
+    topo: &Topology,
+    params: &FabricParams,
+    steps: usize,
+    step_bytes: f64,
+) -> f64 {
+    let n = topo.num_gpus();
+    let mut total = 0.0;
+    // every step has identical structure; simulate one and multiply
+    // (ring edges don't change between steps)
+    let flows: Vec<Flow> = (0..n)
+        .map(|i| {
+            let next = (i + 1) % n;
+            let path = candidates(topo, i, next, false).remove(0);
+            Flow::new(path, step_bytes)
+        })
+        .collect();
+    let sim = FluidSim::new(topo, params.clone()).run(&flows);
+    total += sim.makespan * steps as f64;
+    total
+}
+
+/// Ring AllReduce completion time for `bytes` per rank.
+pub fn allreduce(topo: &Topology, params: &FabricParams, bytes: f64) -> f64 {
+    let n = topo.num_gpus();
+    if n == 1 {
+        return 0.0;
+    }
+    ring_steps_time(topo, params, 2 * (n - 1), bytes / n as f64)
+}
+
+/// Ring ReduceScatter: (n−1) steps of bytes/n.
+pub fn reduce_scatter(topo: &Topology, params: &FabricParams, bytes: f64) -> f64 {
+    let n = topo.num_gpus();
+    if n == 1 {
+        return 0.0;
+    }
+    ring_steps_time(topo, params, n - 1, bytes / n as f64)
+}
+
+/// Ring AllGather: (n−1) steps of bytes/n.
+pub fn allgather(topo: &Topology, params: &FabricParams, bytes: f64) -> f64 {
+    reduce_scatter(topo, params, bytes) // identical schedule shape
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: f64 = 1024.0 * 1024.0;
+
+    #[test]
+    fn allreduce_is_two_phases() {
+        let t = Topology::paper();
+        let p = FabricParams::default();
+        let ar = allreduce(&t, &p, 256.0 * MB);
+        let rs = reduce_scatter(&t, &p, 256.0 * MB);
+        let ag = allgather(&t, &p, 256.0 * MB);
+        assert!((ar - (rs + ag)).abs() / ar < 1e-9);
+    }
+
+    #[test]
+    fn bandwidth_approaches_ring_bound() {
+        let t = Topology::paper();
+        let p = FabricParams::default();
+        let bytes = 512.0 * MB;
+        let time = allreduce(&t, &p, bytes);
+        // algorithm bandwidth = bytes·2(n−1)/n / time; the ring crosses
+        // the inter-node rail (45.1 GB/s) twice, so the busbw bound is
+        // the rail rate.
+        let busbw = 2.0 * (8.0 - 1.0) / 8.0 * bytes / time / 1e9;
+        assert!(busbw <= 45.1 + 0.1, "busbw={busbw}");
+        assert!(busbw > 30.0, "busbw={busbw} too far below the rail bound");
+    }
+
+    #[test]
+    fn zero_bytes_is_near_zero_time() {
+        let t = Topology::paper();
+        let p = FabricParams::default();
+        // latency-only floor
+        let time = allreduce(&t, &p, 8.0);
+        assert!(time < 1e-3);
+    }
+}

@@ -1,0 +1,86 @@
+//! Asynchronous point-to-point Send/Recv batches (paper §I evaluation
+//! highlight: "1.15–2.3× speedup at 8 MB and up to 3.4× at 256 MB over
+//! the baseline as imbalance grows").
+//!
+//! A batch is a set of concurrent p2p transfers with per-stream sizes;
+//! imbalance concentrates bytes on a few streams so their default
+//! links saturate while others idle — exactly where multi-path
+//! splitting pays.
+
+use crate::baselines::{run_round, Router};
+use crate::fabric::FabricParams;
+use crate::metrics::CommReport;
+use crate::planner::Demand;
+use crate::topology::Topology;
+
+/// Run a batch of concurrent sends.
+pub fn sendrecv_batch(
+    topo: &Topology,
+    params: &FabricParams,
+    router: &mut dyn Router,
+    sends: &[Demand],
+) -> CommReport {
+    run_round(topo, params, router, sends)
+}
+
+/// Build an imbalanced concurrent batch: `streams` p2p transfers
+/// between distinct intra-node pairs; stream 0 carries
+/// `imbalance ×` the bytes of the others so its direct link becomes
+/// the bottleneck. Total volume is `streams × base_bytes` regardless
+/// of imbalance (skew moves bytes, not adds them).
+pub fn imbalanced_batch(topo: &Topology, base_bytes: f64, imbalance: f64) -> Vec<Demand> {
+    assert!(imbalance >= 1.0);
+    // 2 streams on node 0: (0→1) heavy, (2→3) light — plus the mirror
+    // on node 1 for symmetry. heavy = imbalance × light, volume fixed.
+    let total = 4.0 * base_bytes;
+    let light = total / (2.0 * (imbalance + 1.0));
+    let heavy = imbalance * light;
+    vec![
+        Demand::new(0, 1, heavy),
+        Demand::new(2, 3, light),
+        Demand::new(topo.gpu(1, 0), topo.gpu(1, 1), heavy),
+        Demand::new(topo.gpu(1, 2), topo.gpu(1, 3), light),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::SinglePath;
+    use crate::coordinator::NimbleRouter;
+
+    const MB: f64 = 1024.0 * 1024.0;
+
+    #[test]
+    fn batch_conserves_volume() {
+        let t = Topology::paper();
+        for imb in [1.0, 4.0, 16.0] {
+            let batch = imbalanced_batch(&t, 8.0 * MB, imb);
+            let total: f64 = batch.iter().map(|d| d.bytes).sum();
+            assert!((total - 32.0 * MB).abs() < 1.0, "imb={imb}");
+        }
+    }
+
+    /// The §I claim's direction: speedup grows with imbalance and
+    /// message size; balanced batches show parity.
+    #[test]
+    fn speedup_grows_with_imbalance() {
+        let t = Topology::paper();
+        let params = FabricParams::default();
+        let run = |imb: f64| {
+            let batch = imbalanced_batch(&t, 64.0 * MB, imb);
+            let mut base = SinglePath::new();
+            let mut nim = NimbleRouter::default_for(&t);
+            let a = sendrecv_batch(&t, &params, &mut base, &batch);
+            let b = sendrecv_batch(&t, &params, &mut nim, &batch);
+            a.makespan_s / b.makespan_s
+        };
+        let s1 = run(1.0);
+        let s8 = run(8.0);
+        // even "balanced" 2-streams-per-node leaves NVLink edges idle,
+        // so NIMBLE may already win some; it must never be worse.
+        assert!(s1 > 0.95, "regression on balanced batch: {s1}");
+        assert!(s8 > s1, "no gain from imbalance: {s1} vs {s8}");
+        assert!(s8 > 1.3, "imbalanced speedup too small: {s8}");
+    }
+}

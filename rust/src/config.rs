@@ -1,0 +1,157 @@
+//! Experiment configuration: load topology, fabric calibration and
+//! planner parameters from a TOML file so deployments other than the
+//! paper's 2×(4 GPU + 4 NIC) testbed are first-class (see
+//! `configs/paper.toml` for the reference file).
+
+use crate::fabric::FabricParams;
+use crate::planner::{CostModel, PlannerCfg};
+use crate::topology::Topology;
+use crate::util::toml::TomlDoc;
+use std::path::Path;
+
+/// Fully-resolved experiment configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub topology: Topology,
+    pub fabric: FabricParams,
+    pub planner: PlannerCfg,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            topology: Topology::paper(),
+            fabric: FabricParams::default(),
+            planner: PlannerCfg::default(),
+        }
+    }
+}
+
+impl Config {
+    /// Load from a TOML file; unspecified keys keep their defaults.
+    pub fn load(path: impl AsRef<Path>) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| format!("reading {:?}: {e}", path.as_ref()))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<Config, String> {
+        let doc = TomlDoc::parse(text).map_err(|e| e.to_string())?;
+        let mut cfg = Config::default();
+
+        // [topology]
+        let nodes = doc.get_usize("topology", "nodes").unwrap_or(2);
+        let gpus = doc.get_usize("topology", "gpus_per_node").unwrap_or(4);
+        let nics = doc.get_usize("topology", "nics_per_node").unwrap_or(gpus);
+        let nvlink = doc
+            .get_f64("topology", "nvlink_gbps")
+            .unwrap_or(crate::topology::NVLINK_GBPS);
+        let rail =
+            doc.get_f64("topology", "rail_gbps").unwrap_or(crate::topology::RAIL_GBPS);
+        let mut topo = Topology::build(nodes, gpus, nics, nvlink, rail, true);
+        if doc.get_bool("topology", "nvswitch").unwrap_or(false) {
+            topo.nvswitch = true;
+        }
+        cfg.topology = topo;
+
+        // [fabric]
+        let f = &mut cfg.fabric;
+        let g = |k: &str, d: f64| doc.get_f64("fabric", k).unwrap_or(d);
+        f.relay_rho = g("relay_rho", f.relay_rho);
+        f.inject_cap_gbps = g("inject_cap_gbps", f.inject_cap_gbps);
+        f.recv_cap_gbps = g("recv_cap_gbps", f.recv_cap_gbps);
+        f.node_net_cap_gbps = g("node_net_cap_gbps", f.node_net_cap_gbps);
+        f.s_half_intra = g("s_half_intra_bytes", f.s_half_intra);
+        f.s_half_inter = g("s_half_inter_bytes", f.s_half_inter);
+        f.alpha_kernel_us = g("alpha_kernel_us", f.alpha_kernel_us);
+        f.alpha_copy_engine_us = g("alpha_copy_engine_us", f.alpha_copy_engine_us);
+        f.p2p_buf_bytes = g("p2p_buf_bytes", f.p2p_buf_bytes);
+        f.chunk_bytes = g("chunk_bytes", f.chunk_bytes);
+
+        // [planner]
+        let p = &mut cfg.planner;
+        p.lambda = doc.get_f64("planner", "lambda").unwrap_or(p.lambda);
+        p.epsilon_bytes =
+            doc.get_f64("planner", "epsilon_bytes").unwrap_or(p.epsilon_bytes);
+        p.multipath = doc.get_bool("planner", "multipath").unwrap_or(p.multipath);
+        let c: &mut CostModel = &mut p.cost;
+        c.multipath_min_bytes =
+            doc.get_f64("planner", "multipath_min_bytes").unwrap_or(c.multipath_min_bytes);
+        c.amortize_bytes =
+            doc.get_f64("planner", "amortize_bytes").unwrap_or(c.amortize_bytes);
+        c.penalty_scale =
+            doc.get_f64("planner", "penalty_scale").unwrap_or(c.penalty_scale);
+        c.hysteresis = doc.get_f64("planner", "hysteresis").unwrap_or(c.hysteresis);
+
+        // sanity
+        if cfg.planner.lambda <= 0.0 || cfg.planner.lambda > 1.0 {
+            return Err(format!("planner.lambda out of (0,1]: {}", cfg.planner.lambda));
+        }
+        if cfg.fabric.relay_rho <= 0.0 || cfg.fabric.relay_rho > 1.0 {
+            return Err(format!("fabric.relay_rho out of (0,1]: {}", cfg.fabric.relay_rho));
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = Config::default();
+        assert_eq!(c.topology.num_gpus(), 8);
+        assert!((c.fabric.relay_rho - 0.776).abs() < 1e-9);
+    }
+
+    #[test]
+    fn toml_overrides_apply() {
+        let c = Config::from_toml(
+            r#"
+            [topology]
+            nodes = 4
+            gpus_per_node = 8
+            nics_per_node = 8
+            nvlink_gbps = 150.0
+            [fabric]
+            node_net_cap_gbps = 300.0
+            [planner]
+            lambda = 0.5
+            hysteresis = 0.1
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.topology.num_gpus(), 32);
+        assert_eq!(c.topology.nvlink_gbps, 150.0);
+        assert_eq!(c.fabric.node_net_cap_gbps, 300.0);
+        assert_eq!(c.planner.lambda, 0.5);
+        assert_eq!(c.planner.cost.hysteresis, 0.1);
+        // untouched keys keep defaults
+        assert!((c.fabric.relay_rho - 0.776).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nvswitch_flag_respected() {
+        let c = Config::from_toml("[topology]\nnvswitch = true\n").unwrap();
+        assert!(c.topology.nvswitch);
+        assert_eq!(
+            crate::topology::path::candidates(&c.topology, 0, 1, true).len(),
+            1
+        );
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(Config::from_toml("[planner]\nlambda = 1.5\n").is_err());
+        assert!(Config::from_toml("[fabric]\nrelay_rho = 0.0\n").is_err());
+        assert!(Config::from_toml("garbage without equals\n").is_err());
+    }
+
+    #[test]
+    fn reference_config_file_parses() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/paper.toml");
+        let c = Config::load(path).unwrap();
+        assert_eq!(c.topology.num_gpus(), 8);
+    }
+}

@@ -1,0 +1,151 @@
+//! Peer-exclusive kernel pairing (paper §IV-D).
+//!
+//! Each GPU launches one persistent channel (thread-block group +
+//! pre-allocated P2P staging buffer) per (peer, direction); all tasks
+//! toward the same peer share that channel via a task queue. Creating
+//! a second channel for the same peer would duplicate the P2P buffer
+//! ("significant overhead at runtime"), so the registry enforces
+//! exclusivity and tracks buffer allocation as the §IV-D invariant.
+
+use crate::topology::GpuId;
+use std::collections::{BTreeMap, VecDeque};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Direction {
+    Send,
+    Recv,
+    /// Relay traffic being forwarded through this GPU toward `peer`.
+    Forward,
+}
+
+/// One communication task enqueued on a channel.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChannelTask {
+    pub flow_id: usize,
+    pub bytes: f64,
+}
+
+/// A persistent per-(gpu, peer, direction) channel.
+#[derive(Clone, Debug)]
+pub struct Channel {
+    pub gpu: GpuId,
+    pub peer: GpuId,
+    pub dir: Direction,
+    pub buf_bytes: f64,
+    pub queue: VecDeque<ChannelTask>,
+    /// Total tasks ever enqueued (for stats/asserts).
+    pub enqueued: u64,
+}
+
+/// Registry enforcing peer-exclusive pairing.
+#[derive(Debug, Default)]
+pub struct ChannelRegistry {
+    channels: BTreeMap<(GpuId, GpuId, Direction), Channel>,
+    pub buf_per_channel: f64,
+}
+
+impl ChannelRegistry {
+    pub fn new(buf_per_channel: f64) -> Self {
+        ChannelRegistry { channels: BTreeMap::new(), buf_per_channel }
+    }
+
+    /// Get-or-create the unique channel for (gpu, peer, dir). A second
+    /// request returns the SAME channel — no extra buffer allocation.
+    pub fn channel(&mut self, gpu: GpuId, peer: GpuId, dir: Direction) -> &mut Channel {
+        assert_ne!(gpu, peer, "self-channel");
+        let buf = self.buf_per_channel;
+        self.channels.entry((gpu, peer, dir)).or_insert_with(|| Channel {
+            gpu,
+            peer,
+            dir,
+            buf_bytes: buf,
+            queue: VecDeque::new(),
+            enqueued: 0,
+        })
+    }
+
+    pub fn enqueue(&mut self, gpu: GpuId, peer: GpuId, dir: Direction, task: ChannelTask) {
+        let ch = self.channel(gpu, peer, dir);
+        ch.queue.push_back(task);
+        ch.enqueued += 1;
+    }
+
+    /// Pop the next task on a channel (the dataplane drains in FIFO
+    /// order — ordering semantics feed the reassembly layer).
+    pub fn pop(&mut self, gpu: GpuId, peer: GpuId, dir: Direction) -> Option<ChannelTask> {
+        self.channels.get_mut(&(gpu, peer, dir)).and_then(|c| c.queue.pop_front())
+    }
+
+    pub fn channel_count(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Total staging memory allocated across all channels — the
+    /// quantity §IV-D's design keeps minimal.
+    pub fn total_buffer_bytes(&self) -> f64 {
+        self.channels.len() as f64 * self.buf_per_channel
+    }
+
+    pub fn pending_tasks(&self) -> usize {
+        self.channels.values().map(|c| c.queue.len()).sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Channel> {
+        self.channels.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_is_exclusive_per_peer() {
+        let mut r = ChannelRegistry::new(10e6);
+        r.enqueue(0, 1, Direction::Send, ChannelTask { flow_id: 1, bytes: 100.0 });
+        r.enqueue(0, 1, Direction::Send, ChannelTask { flow_id: 2, bytes: 200.0 });
+        // two tasks, ONE channel, ONE buffer
+        assert_eq!(r.channel_count(), 1);
+        assert_eq!(r.total_buffer_bytes(), 10e6);
+        assert_eq!(r.pending_tasks(), 2);
+    }
+
+    #[test]
+    fn directions_are_separate_channels() {
+        let mut r = ChannelRegistry::new(10e6);
+        r.channel(0, 1, Direction::Send);
+        r.channel(0, 1, Direction::Recv);
+        r.channel(0, 1, Direction::Forward);
+        assert_eq!(r.channel_count(), 3);
+    }
+
+    #[test]
+    fn fifo_draining() {
+        let mut r = ChannelRegistry::new(1.0);
+        for i in 0..5 {
+            r.enqueue(2, 3, Direction::Send, ChannelTask { flow_id: i, bytes: 1.0 });
+        }
+        for i in 0..5 {
+            assert_eq!(r.pop(2, 3, Direction::Send).unwrap().flow_id, i);
+        }
+        assert!(r.pop(2, 3, Direction::Send).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "self-channel")]
+    fn rejects_self_channel() {
+        let mut r = ChannelRegistry::new(1.0);
+        r.channel(1, 1, Direction::Send);
+    }
+
+    #[test]
+    fn buffer_accounting_scales_with_distinct_peers_only() {
+        let mut r = ChannelRegistry::new(5.0);
+        for peer in 1..4 {
+            for _ in 0..10 {
+                r.enqueue(0, peer, Direction::Send, ChannelTask { flow_id: 0, bytes: 1.0 });
+            }
+        }
+        assert_eq!(r.total_buffer_bytes(), 15.0); // 3 peers × 5
+    }
+}

@@ -1,0 +1,134 @@
+//! Lightweight runtime monitoring (paper §IV-A component 1): per-link
+//! load tracking with exponential decay and hysteresis so the
+//! orchestration engine sees a stable view of live link pressure and
+//! path selection does not oscillate between near-equal alternatives.
+
+/// EWMA link-load monitor with hysteresis gating.
+#[derive(Clone, Debug)]
+pub struct LinkMonitor {
+    /// Smoothed byte-load estimate per link.
+    ewma: Vec<f64>,
+    /// Last value actually *published* to the planner per link.
+    published: Vec<f64>,
+    /// EWMA smoothing factor (weight of the newest observation).
+    pub alpha: f64,
+    /// Relative change required before a new estimate is published
+    /// (hysteresis; avoids plan churn on noise).
+    pub publish_threshold: f64,
+    /// How many times publication was suppressed (oscillation metric).
+    pub suppressed: u64,
+    /// How many times a new value was published.
+    pub published_count: u64,
+}
+
+impl LinkMonitor {
+    pub fn new(links: usize) -> Self {
+        LinkMonitor {
+            ewma: vec![0.0; links],
+            published: vec![0.0; links],
+            alpha: 0.5,
+            publish_threshold: 0.1,
+            suppressed: 0,
+            published_count: 0,
+        }
+    }
+
+    /// Fold one round's observed per-link byte counts into the EWMA.
+    pub fn observe(&mut self, link_bytes: &[f64]) {
+        assert_eq!(link_bytes.len(), self.ewma.len());
+        for (e, &o) in self.ewma.iter_mut().zip(link_bytes) {
+            *e = (1.0 - self.alpha) * *e + self.alpha * o;
+        }
+        // hysteresis: publish a link's estimate only on meaningful change
+        for i in 0..self.ewma.len() {
+            let old = self.published[i];
+            let new = self.ewma[i];
+            let denom = old.abs().max(1.0);
+            if (new - old).abs() / denom > self.publish_threshold {
+                self.published[i] = new;
+                self.published_count += 1;
+            } else if (new - old).abs() > 0.0 {
+                self.suppressed += 1;
+            }
+        }
+    }
+
+    /// Estimates the planner warm-starts from (hysteresis-stabilized).
+    pub fn load_estimates(&self) -> &[f64] {
+        &self.published
+    }
+
+    /// Raw EWMA (no hysteresis) — used by the ablation.
+    pub fn raw_estimates(&self) -> &[f64] {
+        &self.ewma
+    }
+
+    /// Decay all estimates (e.g. idle periods between phases).
+    pub fn decay(&mut self, factor: f64) {
+        for e in self.ewma.iter_mut() {
+            *e *= factor;
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.ewma.iter_mut().for_each(|e| *e = 0.0);
+        self.published.iter_mut().for_each(|e| *e = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_converges_to_steady_load() {
+        let mut m = LinkMonitor::new(2);
+        for _ in 0..20 {
+            m.observe(&[100.0, 0.0]);
+        }
+        assert!((m.raw_estimates()[0] - 100.0).abs() < 1e-3);
+        assert_eq!(m.raw_estimates()[1], 0.0);
+    }
+
+    #[test]
+    fn hysteresis_suppresses_noise() {
+        let mut m = LinkMonitor::new(1);
+        m.observe(&[1000.0]);
+        let published_after_first = m.load_estimates()[0];
+        assert!(published_after_first > 0.0);
+        let count0 = m.published_count;
+        // ±2% noise around the steady state: published value must not
+        // chase it
+        for i in 0..50 {
+            let noise = if i % 2 == 0 { 1020.0 } else { 980.0 };
+            m.observe(&[noise]);
+        }
+        assert!(m.suppressed > 20, "suppressed={}", m.suppressed);
+        // few publications beyond the initial convergence
+        assert!(m.published_count - count0 <= 4);
+    }
+
+    #[test]
+    fn big_shift_publishes() {
+        let mut m = LinkMonitor::new(1);
+        for _ in 0..10 {
+            m.observe(&[100.0]);
+        }
+        let before = m.load_estimates()[0];
+        for _ in 0..10 {
+            m.observe(&[10_000.0]);
+        }
+        assert!(m.load_estimates()[0] > before * 10.0);
+    }
+
+    #[test]
+    fn decay_and_reset() {
+        let mut m = LinkMonitor::new(1);
+        m.observe(&[100.0]);
+        m.decay(0.5);
+        assert!((m.raw_estimates()[0] - 25.0).abs() < 1e-9); // 50 ewma → 25
+        m.reset();
+        assert_eq!(m.raw_estimates()[0], 0.0);
+        assert_eq!(m.load_estimates()[0], 0.0);
+    }
+}

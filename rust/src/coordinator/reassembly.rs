@@ -1,0 +1,168 @@
+//! Per-destination reassembly queues (paper §I / §IV: "per-destination
+//! reassembly queues to maintain ordering semantics").
+//!
+//! When NIMBLE splits one logical message across multiple paths, the
+//! chunks can land out of order at the receiver. Each (src → dst)
+//! stream owns a reassembly queue that buffers out-of-order arrivals
+//! and releases data strictly in sequence, so the application sees
+//! exactly the ordering a single-path transfer would deliver.
+
+use std::collections::BTreeMap;
+
+/// Sequenced chunk arrival for one stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChunkArrival {
+    pub seq: u64,
+    pub bytes: u64,
+}
+
+/// In-order release buffer for a single (src, dst) stream.
+#[derive(Debug, Default)]
+pub struct ReassemblyQueue {
+    next: u64,
+    pending: BTreeMap<u64, u64>, // seq → bytes
+    delivered_bytes: u64,
+    /// Peak number of buffered out-of-order chunks (memory watermark).
+    pub peak_pending: usize,
+}
+
+impl ReassemblyQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accept a chunk; returns every chunk that becomes deliverable,
+    /// in order. Duplicate/stale seqs are rejected.
+    pub fn push(&mut self, chunk: ChunkArrival) -> Result<Vec<ChunkArrival>, String> {
+        if chunk.seq < self.next || self.pending.contains_key(&chunk.seq) {
+            return Err(format!("duplicate or stale chunk seq {}", chunk.seq));
+        }
+        self.pending.insert(chunk.seq, chunk.bytes);
+        let mut out = Vec::new();
+        while let Some(bytes) = self.pending.remove(&self.next) {
+            out.push(ChunkArrival { seq: self.next, bytes });
+            self.delivered_bytes += bytes;
+            self.next += 1;
+        }
+        // watermark counts chunks actually stuck waiting (after drain)
+        self.peak_pending = self.peak_pending.max(self.pending.len());
+        Ok(out)
+    }
+
+    pub fn delivered_bytes(&self) -> u64 {
+        self.delivered_bytes
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_drained(&self) -> bool {
+        self.pending.is_empty()
+    }
+}
+
+/// All streams terminating at one destination GPU.
+#[derive(Debug, Default)]
+pub struct ReassemblyTable {
+    streams: BTreeMap<(usize, usize), ReassemblyQueue>, // (src, dst)
+}
+
+impl ReassemblyTable {
+    pub fn push(
+        &mut self,
+        src: usize,
+        dst: usize,
+        chunk: ChunkArrival,
+    ) -> Result<Vec<ChunkArrival>, String> {
+        self.streams.entry((src, dst)).or_default().push(chunk)
+    }
+
+    pub fn stream(&self, src: usize, dst: usize) -> Option<&ReassemblyQueue> {
+        self.streams.get(&(src, dst))
+    }
+
+    pub fn all_drained(&self) -> bool {
+        self.streams.values().all(|q| q.is_drained())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check_seeded, Gen};
+    use crate::util::rng::Rng;
+
+    fn arrivals(order: &[u64]) -> Vec<ChunkArrival> {
+        order.iter().map(|&seq| ChunkArrival { seq, bytes: 10 + seq }).collect()
+    }
+
+    #[test]
+    fn in_order_stream_passes_through() {
+        let mut q = ReassemblyQueue::new();
+        for c in arrivals(&[0, 1, 2]) {
+            let out = q.push(c).unwrap();
+            assert_eq!(out, vec![c]);
+        }
+        assert_eq!(q.peak_pending, 0, "in-order stream never buffers");
+    }
+
+    #[test]
+    fn out_of_order_is_buffered_then_released() {
+        let mut q = ReassemblyQueue::new();
+        assert!(q.push(ChunkArrival { seq: 2, bytes: 1 }).unwrap().is_empty());
+        assert!(q.push(ChunkArrival { seq: 1, bytes: 1 }).unwrap().is_empty());
+        let out = q.push(ChunkArrival { seq: 0, bytes: 1 }).unwrap();
+        assert_eq!(out.iter().map(|c| c.seq).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert!(q.is_drained());
+        assert_eq!(q.peak_pending, 2);
+    }
+
+    #[test]
+    fn duplicates_rejected() {
+        let mut q = ReassemblyQueue::new();
+        q.push(ChunkArrival { seq: 0, bytes: 1 }).unwrap();
+        assert!(q.push(ChunkArrival { seq: 0, bytes: 1 }).is_err()); // stale
+        q.push(ChunkArrival { seq: 2, bytes: 1 }).unwrap();
+        assert!(q.push(ChunkArrival { seq: 2, bytes: 1 }).is_err()); // dup pending
+    }
+
+    /// Property: for ANY arrival permutation, delivery is exactly
+    /// 0..n in order with all bytes accounted.
+    #[test]
+    fn any_permutation_delivers_in_order() {
+        check_seeded(0xA55E, 200, |g: &mut Gen| {
+            let n = g.usize(1, 64) as u64;
+            let mut order: Vec<u64> = (0..n).collect();
+            let mut rng = Rng::new(g.u64(0, u64::MAX));
+            rng.shuffle(&mut order);
+            let mut q = ReassemblyQueue::new();
+            let mut delivered = Vec::new();
+            for c in arrivals(&order) {
+                delivered.extend(q.push(c).map_err(|e| e)?);
+            }
+            crate::prop_assert!(q.is_drained(), "queue not drained");
+            let seqs: Vec<u64> = delivered.iter().map(|c| c.seq).collect();
+            crate::prop_assert!(
+                seqs == (0..n).collect::<Vec<_>>(),
+                "out of order: {seqs:?}"
+            );
+            let total: u64 = delivered.iter().map(|c| c.bytes).sum();
+            let expect: u64 = (0..n).map(|s| 10 + s).sum();
+            crate::prop_assert!(total == expect, "bytes lost");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn table_separates_streams() {
+        let mut t = ReassemblyTable::default();
+        t.push(0, 4, ChunkArrival { seq: 1, bytes: 5 }).unwrap();
+        t.push(1, 4, ChunkArrival { seq: 0, bytes: 7 }).unwrap();
+        assert!(!t.all_drained()); // (0,4) still waiting for seq 0
+        let out = t.push(0, 4, ChunkArrival { seq: 0, bytes: 5 }).unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(t.all_drained());
+        assert_eq!(t.stream(1, 4).unwrap().delivered_bytes(), 7);
+    }
+}

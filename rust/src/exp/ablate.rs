@@ -1,0 +1,200 @@
+//! Ablations over NIMBLE's design choices (DESIGN.md §4):
+//! max-vs-sum path cost, cost-curve shape, λ and ε sweeps, hysteresis
+//! (oscillation), size-threshold, rail matching (PXN), and the MWU
+//! optimality gap against the exact IP on a tiny instance.
+
+use super::MB;
+use crate::baselines::{run_round, NcclLike};
+use crate::coordinator::NimbleRouter;
+use crate::fabric::FabricParams;
+use crate::metrics::Table;
+use crate::planner::{
+    exact::exact_min_max, CostShape, Demand, Planner, PlannerCfg,
+};
+use crate::topology::Topology;
+use crate::workloads::skew::hotspot_alltoallv;
+
+fn skewed_demands(topo: &Topology) -> Vec<Demand> {
+    hotspot_alltoallv(topo, 128.0 * MB, 0.8, topo.gpu(1, 0))
+}
+
+fn run_with_cfg(topo: &Topology, params: &FabricParams, cfg: PlannerCfg) -> f64 {
+    let mut router = NimbleRouter::new(topo, cfg);
+    run_round(topo, params, &mut router, &skewed_demands(topo)).makespan_s
+}
+
+/// Max vs sum path metric + cost shapes, on the skewed workload.
+pub fn cost_metric(topo: &Topology, params: &FabricParams) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    let mut base = PlannerCfg::default();
+    out.push(("max(link) [paper]".into(), run_with_cfg(topo, params, base.clone())));
+    base.cost.sum_cost = true;
+    out.push(("sum(link) [dijkstra-style]".into(), run_with_cfg(topo, params, base)));
+    for (name, shape) in [
+        ("exp(alpha=40)", CostShape::Exponential { alpha: 40.0 }),
+        ("poly(p=2)", CostShape::Polynomial { p: 2.0 }),
+    ] {
+        let mut cfg = PlannerCfg::default();
+        cfg.cost.shape = shape;
+        out.push((format!("max(link), {name}"), run_with_cfg(topo, params, cfg)));
+    }
+    out
+}
+
+/// λ sweep: plan quality (makespan) and planner time.
+pub fn lambda_sweep(topo: &Topology, params: &FabricParams) -> Vec<(f64, f64, f64)> {
+    [0.05, 0.1, 0.25, 0.5, 0.9]
+        .iter()
+        .map(|&lambda| {
+            let cfg = PlannerCfg { lambda, ..PlannerCfg::default() };
+            let mut planner = Planner::new(topo, cfg.clone());
+            let plan = planner.plan(&skewed_demands(topo));
+            let makespan = run_with_cfg(topo, params, cfg);
+            (lambda, plan.plan_time_s, makespan)
+        })
+        .collect()
+}
+
+/// ε (chunk granularity) sweep.
+pub fn epsilon_sweep(topo: &Topology, params: &FabricParams) -> Vec<(f64, f64, f64)> {
+    [64.0 * 1024.0, 256.0 * 1024.0, 1024.0 * 1024.0, 4096.0 * 1024.0]
+        .iter()
+        .map(|&eps| {
+            let cfg = PlannerCfg { epsilon_bytes: eps, ..PlannerCfg::default() };
+            let mut planner = Planner::new(topo, cfg.clone());
+            let plan = planner.plan(&skewed_demands(topo));
+            let makespan = run_with_cfg(topo, params, cfg);
+            (eps, plan.plan_time_s, makespan)
+        })
+        .collect()
+}
+
+/// Size-threshold ablation: disable the ≤1 MB guard and watch small
+/// messages regress.
+pub fn size_threshold(topo: &Topology, params: &FabricParams) -> (f64, f64) {
+    let demands = hotspot_alltoallv(topo, 0.5 * MB, 0.8, topo.gpu(1, 0));
+    let with_guard = {
+        let mut r = NimbleRouter::default_for(topo);
+        run_round(topo, params, &mut r, &demands).makespan_s
+    };
+    let without = {
+        let mut cfg = PlannerCfg::default();
+        cfg.cost.multipath_min_bytes = 0.0;
+        cfg.cost.penalty_scale = 0.0;
+        let mut r = NimbleRouter::new(topo, cfg);
+        run_round(topo, params, &mut r, &demands).makespan_s
+    };
+    (with_guard, without)
+}
+
+/// Rail-matching ablation: NCCL with PXN vs without, under skew.
+pub fn rail_matching(topo: &Topology, params: &FabricParams) -> (f64, f64) {
+    let demands = skewed_demands(topo);
+    let pxn = run_round(topo, params, &mut NcclLike::new(), &demands).makespan_s;
+    let nopxn =
+        run_round(topo, params, &mut NcclLike::without_pxn(), &demands).makespan_s;
+    (pxn, nopxn)
+}
+
+/// MWU gap vs the exact IP optimum on a tiny instance.
+pub fn exact_gap(topo: &Topology) -> (f64, f64) {
+    let demands = vec![
+        Demand::new(0, 1, 240.0 * MB),
+        Demand::new(2, 1, 120.0 * MB),
+        Demand::new(3, 1, 60.0 * MB),
+    ];
+    let (z_star, _) = exact_min_max(topo, &demands, 6).unwrap();
+    let mut planner = Planner::new(topo, PlannerCfg::default());
+    let z = planner.plan(&demands).max_norm_load(topo);
+    (z_star, z)
+}
+
+pub fn render(topo: &Topology, params: &FabricParams) -> String {
+    let mut out = String::new();
+
+    let mut t = Table::new(&["path metric / cost shape", "makespan (ms)"]);
+    for (name, s) in cost_metric(topo, params) {
+        t.row(&[name, format!("{:.3}", s * 1e3)]);
+    }
+    out += &format!("Ablation: path-cost metric (skewed All-to-Allv)\n{}\n", t.render());
+
+    let mut t = Table::new(&["lambda", "plan time (ms)", "makespan (ms)"]);
+    for (l, pt, ms) in lambda_sweep(topo, params) {
+        t.row(&[format!("{l}"), format!("{:.4}", pt * 1e3), format!("{:.3}", ms * 1e3)]);
+    }
+    out += &format!("Ablation: flow fraction λ\n{}\n", t.render());
+
+    let mut t = Table::new(&["epsilon (KB)", "plan time (ms)", "makespan (ms)"]);
+    for (e, pt, ms) in epsilon_sweep(topo, params) {
+        t.row(&[
+            format!("{}", e / 1024.0),
+            format!("{:.4}", pt * 1e3),
+            format!("{:.3}", ms * 1e3),
+        ]);
+    }
+    out += &format!("Ablation: chunk granularity ε\n{}\n", t.render());
+
+    let (with_g, without_g) = size_threshold(topo, params);
+    out += &format!(
+        "Ablation: ≤1 MB single-path guard — with: {:.3} ms, without: {:.3} ms ({}× regression when disabled)\n\n",
+        with_g * 1e3,
+        without_g * 1e3,
+        format!("{:.2}", without_g / with_g)
+    );
+
+    let (pxn, nopxn) = rail_matching(topo, params);
+    out += &format!(
+        "Ablation: rail matching (NCCL) — PXN: {:.3} ms, no PXN: {:.3} ms\n\n",
+        pxn * 1e3,
+        nopxn * 1e3
+    );
+
+    let (z_star, z) = exact_gap(topo);
+    out += &format!(
+        "MWU vs exact IP (tiny instance): exact Z*={:.4} ms, MWU Z={:.4} ms, gap {:.1}%\n",
+        z_star * 1e3,
+        z * 1e3,
+        100.0 * (z / z_star - 1.0)
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_metric_not_worse_than_sum() {
+        let t = Topology::paper();
+        let p = FabricParams::default();
+        let rows = cost_metric(&t, &p);
+        let max_ms = rows[0].1;
+        let sum_ms = rows[1].1;
+        assert!(max_ms <= sum_ms * 1.1, "max {max_ms} vs sum {sum_ms}");
+    }
+
+    #[test]
+    fn threshold_guard_protects_small_messages() {
+        let t = Topology::paper();
+        let p = FabricParams::default();
+        let (with_g, without) = size_threshold(&t, &p);
+        assert!(without >= with_g * 0.99, "guard should never hurt");
+    }
+
+    #[test]
+    fn exact_gap_is_bounded() {
+        let t = Topology::paper();
+        let (z_star, z) = exact_gap(&t);
+        assert!(z >= z_star - 1e-12);
+        assert!(z <= z_star * 1.5, "gap too big: {z} vs {z_star}");
+    }
+
+    #[test]
+    fn lambda_extremes_still_valid() {
+        let t = Topology::paper();
+        let p = FabricParams::default();
+        for (_, pt, ms) in lambda_sweep(&t, &p) {
+            assert!(pt >= 0.0 && ms > 0.0);
+        }
+    }
+}

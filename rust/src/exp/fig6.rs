@@ -1,0 +1,207 @@
+//! Fig 6 — point-to-point speedup from additional paths, four panels:
+//! (a) intra-node bandwidth vs size for 1/2/3 paths,
+//! (b) inter-node bandwidth vs size for 1/2/4 NICs,
+//! (c) intra-node 2-hop forwarding overhead vs direct,
+//! (d) inter-node multi-hop GPU-NIC path vs rail-matched direct.
+
+use super::MB;
+use crate::fabric::fluid::{Flow, FluidSim};
+use crate::fabric::pipeline::PipelineModel;
+use crate::fabric::{FabricParams, XferMode};
+use crate::metrics::Table;
+use crate::topology::path::candidates;
+use crate::topology::Topology;
+
+pub const SIZES_MB: [f64; 10] =
+    [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0];
+
+/// Panel (a): aggregate GPU0→GPU1 bandwidth with 1, 2, 3 paths.
+/// Paper anchors: 120 / 213.1 / 278.2 GB/s at saturation.
+pub fn fig6a(topo: &Topology, params: &FabricParams) -> Vec<(f64, f64, f64, f64)> {
+    let sim = FluidSim::new(topo, params.clone());
+    let cands = candidates(topo, 0, 1, true);
+    SIZES_MB
+        .iter()
+        .map(|&mb| {
+            let bytes = mb * MB;
+            let one = {
+                let r = sim.run(&[Flow::new(cands[0].clone(), bytes)]);
+                bytes / r.makespan / 1e9
+            };
+            let two = {
+                // split ∝ achievable rates (direct : ρ·direct)
+                let b2 = bytes * params.relay_rho;
+                let r = sim.run(&[
+                    Flow::new(cands[0].clone(), bytes),
+                    Flow::new(cands[1].clone(), b2),
+                ]);
+                (bytes + b2) / r.makespan / 1e9
+            };
+            let three = {
+                let r = sim.run(&[
+                    Flow::new(cands[0].clone(), bytes),
+                    Flow::new(cands[1].clone(), bytes),
+                    Flow::new(cands[2].clone(), bytes),
+                ]);
+                3.0 * bytes / r.makespan / 1e9
+            };
+            (mb, one, two, three)
+        })
+        .collect()
+}
+
+/// Panel (b): GPU0→GPU4 aggregate bandwidth with 1, 2, 4 rails.
+/// Paper anchors: 45.1 / ~90 / 170.0 GB/s.
+pub fn fig6b(topo: &Topology, params: &FabricParams) -> Vec<(f64, f64, f64, f64)> {
+    let sim = FluidSim::new(topo, params.clone());
+    let cands = candidates(topo, 0, topo.gpu(1, 0), true);
+    let run_k = |bytes: f64, k: usize| {
+        let flows: Vec<Flow> =
+            cands.iter().take(k).map(|p| Flow::new(p.clone(), bytes)).collect();
+        let r = sim.run(&flows);
+        k as f64 * bytes / r.makespan / 1e9
+    };
+    SIZES_MB
+        .iter()
+        .map(|&mb| {
+            let b = mb * MB;
+            (mb, run_k(b, 1), run_k(b, 2), run_k(b, 4))
+        })
+        .collect()
+}
+
+/// Panel (c): standalone 2-hop path bandwidth as a fraction of the
+/// direct path (chunk-level pipeline model). The paper disables
+/// multi-path ≤ 1 MB because this ratio collapses there.
+pub fn fig6c(topo: &Topology, params: &FabricParams) -> Vec<(f64, f64, f64, f64)> {
+    let m = PipelineModel::new(topo, params.clone());
+    let cands = candidates(topo, 0, 1, true);
+    SIZES_MB
+        .iter()
+        .map(|&mb| {
+            let b = mb * MB;
+            let direct = m.bandwidth_gbps(&cands[0], b, XferMode::Kernel);
+            let two_hop = m.bandwidth_gbps(&cands[1], b, XferMode::Kernel);
+            (mb, direct, two_hop, two_hop / direct)
+        })
+        .collect()
+}
+
+/// Panel (d): inter-node paths — rail-matched direct (1 hop), GPU
+/// forwarded rail-matched (3 hops) and raw cross-rail — NIC is the
+/// bottleneck so forwarding is nearly free.
+pub fn fig6d(topo: &Topology, params: &FabricParams) -> Vec<(f64, f64, f64, f64)> {
+    let m = PipelineModel::new(topo, params.clone());
+    // gpu1 → gpu6: rail 1 = src-matched (2 hops incl. dst-side),
+    // rail 3 = fully forwarded (3 hops); cross path for contrast.
+    let inter = candidates(topo, 1, topo.gpu(1, 2), true);
+    let matched = inter.iter().find(|p| p.hops.len() == 2).unwrap().clone();
+    let forwarded = inter.iter().find(|p| p.hops.len() == 3).unwrap().clone();
+    let cross = crate::topology::path::cross_rail_path(topo, 1, topo.gpu(1, 2)).unwrap();
+    SIZES_MB
+        .iter()
+        .map(|&mb| {
+            let b = mb * MB;
+            (
+                mb,
+                m.bandwidth_gbps(&matched, b, XferMode::Kernel),
+                m.bandwidth_gbps(&forwarded, b, XferMode::Kernel),
+                m.bandwidth_gbps(&cross, b, XferMode::Kernel),
+            )
+        })
+        .collect()
+}
+
+pub fn render(topo: &Topology, params: &FabricParams, part: &str) -> String {
+    let mut out = String::new();
+    let fmt = |x: f64| format!("{x:.1}");
+    if part == "a" || part == "all" {
+        let mut t = Table::new(&["size (MB)", "1 path", "2 paths", "3 paths (GB/s)"]);
+        for (mb, a, b, c) in fig6a(topo, params) {
+            t.row(&[format!("{mb}"), fmt(a), fmt(b), fmt(c)]);
+        }
+        out += &format!("Fig 6(a) intra-node multi-path bandwidth (paper: 120 / 213.1 / 278.2 at saturation)\n{}\n", t.render());
+    }
+    if part == "b" || part == "all" {
+        let mut t = Table::new(&["size (MB)", "1 NIC", "2 NICs", "4 NICs (GB/s)"]);
+        for (mb, a, b, c) in fig6b(topo, params) {
+            t.row(&[format!("{mb}"), fmt(a), fmt(b), fmt(c)]);
+        }
+        out += &format!("Fig 6(b) inter-node multi-rail bandwidth (paper: 45.1 / ~90 / 170.0 at saturation)\n{}\n", t.render());
+    }
+    if part == "c" || part == "all" {
+        let mut t = Table::new(&["size (MB)", "direct", "2-hop (GB/s)", "ratio"]);
+        for (mb, a, b, r) in fig6c(topo, params) {
+            t.row(&[format!("{mb}"), fmt(a), fmt(b), format!("{r:.3}")]);
+        }
+        out += &format!("Fig 6(c) intra-node forwarding overhead (multi-path disabled ≤1 MB)\n{}\n", t.render());
+    }
+    if part == "d" || part == "all" {
+        let mut t =
+            Table::new(&["size (MB)", "rail-matched", "GPU-forwarded", "cross-rail (GB/s)"]);
+        for (mb, a, b, c) in fig6d(topo, params) {
+            t.row(&[format!("{mb}"), fmt(a), fmt(b), fmt(c)]);
+        }
+        out += &format!("Fig 6(d) inter-node forwarding overhead (paper: rail-matched 45.1, forwarding ≈ free)\n{}\n", t.render());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6a_anchors_hold() {
+        let t = Topology::paper();
+        let p = FabricParams::default();
+        let rows = fig6a(&t, &p);
+        let last = rows.last().unwrap();
+        assert!((last.1 - 120.0).abs() < 5.0, "direct {}", last.1);
+        assert!((last.2 - 213.1).abs() < 9.0, "2-path {}", last.2);
+        assert!((last.3 - 278.2).abs() < 11.0, "3-path {}", last.3);
+        // saturation: 64 MB within 10% of the 512 MB value
+        let at64 = rows.iter().find(|r| r.0 == 64.0).unwrap();
+        assert!(at64.1 / last.1 > 0.9);
+    }
+
+    #[test]
+    fn fig6b_anchors_hold() {
+        let t = Topology::paper();
+        let p = FabricParams::default();
+        let rows = fig6b(&t, &p);
+        let last = rows.last().unwrap();
+        assert!((last.1 - 45.1).abs() < 2.0, "1 NIC {}", last.1);
+        assert!((last.3 - 170.0).abs() < 7.0, "4 NIC {}", last.3);
+        // 2 NICs "nearly double"
+        assert!(last.2 / last.1 > 1.85);
+    }
+
+    #[test]
+    fn fig6c_ratio_improves_with_size() {
+        let t = Topology::paper();
+        let p = FabricParams::default();
+        let rows = fig6c(&t, &p);
+        assert!(rows.first().unwrap().3 < rows.last().unwrap().3);
+        assert!((rows.last().unwrap().3 - p.relay_rho).abs() < 0.1);
+    }
+
+    #[test]
+    fn fig6d_forwarding_cheap_cross_rail_costly() {
+        let t = Topology::paper();
+        let p = FabricParams::default();
+        let last = *fig6d(&t, &p).last().unwrap();
+        assert!(last.2 / last.1 > 0.93, "forwarding overhead: {} vs {}", last.1, last.2);
+        assert!(last.3 < last.1 * 0.8, "cross-rail should lag: {}", last.3);
+    }
+
+    #[test]
+    fn render_produces_all_panels() {
+        let t = Topology::paper();
+        let p = FabricParams::default();
+        let s = render(&t, &p, "all");
+        for tag in ["6(a)", "6(b)", "6(c)", "6(d)"] {
+            assert!(s.contains(tag), "missing {tag}");
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Fig 8 — MoE end-to-end latency breakdown, NCCL vs NIMBLE, over
+//! global token counts {2K..64K} × hotspot ratios {0.4..0.9}.
+//! Paper: average speedup 1.13× (hotspot 0.4) → 1.26× (0.9), peak
+//! 1.35× at 16K tokens / 0.9; compute identical between methods.
+
+use crate::baselines::NcclLike;
+use crate::coordinator::NimbleRouter;
+use crate::fabric::FabricParams;
+use crate::metrics::Table;
+use crate::moe::{run_moe_step, MoeStep};
+use crate::runtime::ComputeModel;
+use crate::topology::Topology;
+use crate::workloads::moe_traffic::MoeConfig;
+
+pub const TOKENS: [usize; 6] = [2048, 4096, 8192, 16384, 32768, 65536];
+pub const HOTSPOTS: [f64; 4] = [0.4, 0.5, 0.7, 0.9];
+
+#[derive(Clone, Copy, Debug)]
+pub struct Fig8Row {
+    pub tokens: usize,
+    pub hotspot: f64,
+    pub nccl: MoeStep,
+    pub nimble: MoeStep,
+}
+
+impl Fig8Row {
+    pub fn speedup(&self) -> f64 {
+        self.nccl.total_s() / self.nimble.total_s()
+    }
+}
+
+pub fn sweep(topo: &Topology, params: &FabricParams) -> Vec<Fig8Row> {
+    let cm = ComputeModel::default();
+    let mut out = Vec::new();
+    for &hot in &HOTSPOTS {
+        for &tok in &TOKENS {
+            let cfg = MoeConfig::paper(tok, hot);
+            let nccl = run_moe_step(topo, params, &cm, &mut NcclLike::new(), &cfg);
+            let nimble =
+                run_moe_step(topo, params, &cm, &mut NimbleRouter::default_for(topo), &cfg);
+            out.push(Fig8Row { tokens: tok, hotspot: hot, nccl, nimble });
+        }
+    }
+    out
+}
+
+pub fn render(topo: &Topology, params: &FabricParams) -> String {
+    let rows = sweep(topo, params);
+    let mut t = Table::new(&[
+        "hotspot",
+        "tokens",
+        "nccl disp",
+        "compute",
+        "nccl comb",
+        "nim disp",
+        "nim comb (ms)",
+        "speedup",
+    ]);
+    for r in &rows {
+        t.row(&[
+            format!("{:.1}", r.hotspot),
+            format!("{}", r.tokens),
+            format!("{:.3}", r.nccl.dispatch_s * 1e3),
+            format!("{:.3}", r.nccl.compute_s * 1e3),
+            format!("{:.3}", r.nccl.combine_s * 1e3),
+            format!("{:.3}", r.nimble.dispatch_s * 1e3),
+            format!("{:.3}", r.nimble.combine_s * 1e3),
+            format!("{:.2}", r.speedup()),
+        ]);
+    }
+    format!(
+        "Fig 8 MoE step breakdown (paper: avg 1.13×@0.4 → 1.26×@0.9, peak 1.35×)\n{}",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_band_matches_paper_shape() {
+        let t = Topology::paper();
+        let p = FabricParams::default();
+        let rows = sweep(&t, &p);
+        // averages per hotspot rise with the ratio
+        let avg = |h: f64| {
+            let v: Vec<f64> = rows
+                .iter()
+                .filter(|r| r.hotspot == h)
+                .map(|r| r.speedup())
+                .collect();
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        let a04 = avg(0.4);
+        let a09 = avg(0.9);
+        assert!(a09 > a04, "hotter should be faster: {a04:.3} vs {a09:.3}");
+        assert!(a04 > 1.0, "NIMBLE should win on average at 0.4: {a04:.3}");
+        assert!((1.03..2.0).contains(&a09), "0.9 avg out of band: {a09:.3}");
+        // the paper's "enable region": tokens ≥ 16K & hotspot ≥ 0.7 ⇒
+        // consistently faster (paper: >1.16×; our compute model is more
+        // generous to the baseline — see EXPERIMENTS.md)
+        for r in rows.iter().filter(|r| r.tokens >= 16384 && r.hotspot >= 0.7) {
+            assert!(r.speedup() > 1.05, "{}t/{} ⇒ {:.2}", r.tokens, r.hotspot, r.speedup());
+        }
+    }
+
+    #[test]
+    fn compute_column_identical() {
+        let t = Topology::paper();
+        let p = FabricParams::default();
+        for r in sweep(&t, &p) {
+            assert!((r.nccl.compute_s - r.nimble.compute_s).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §4),
+//! shared between the `nimble` CLI, the examples and the benches so
+//! every surface regenerates identical numbers.
+
+pub mod ablate;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod interference;
+pub mod sendrecv;
+pub mod table1;
+
+pub const MB: f64 = 1024.0 * 1024.0;

@@ -1,0 +1,33 @@
+//! # NIMBLE — Node-Interconnect Multi-path Balancing with
+//! Execution-time planning
+//!
+//! Reproduction of *"From Skew to Symmetry: Node-Interconnect
+//! Multi-Path Balancing with Execution-time Planning for Modern GPU
+//! Clusters"* (Yao et al., CS.DC 2026) as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's orchestration contribution:
+//!   the MWU minimum-congestion planner (Algorithm 1), the NIMBLE
+//!   coordinator (monitoring, channels, reassembly, thresholds),
+//!   collectives, baselines, workload generators — all running against
+//!   a calibrated fabric simulator standing in for the H100/NDR
+//!   testbed (see DESIGN.md §2 for the substitution table).
+//! * **L2/L1 (python/compile)** — JAX MoE model with Pallas kernels,
+//!   AOT-lowered to HLO text and executed from [`runtime`] via PJRT.
+//!
+//! Entry points: the `nimble` binary (`nimble --help`), the
+//! `examples/`, and the per-figure benches under `benches/`.
+
+pub mod baselines;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod exp;
+pub mod fabric;
+pub mod metrics;
+pub mod moe;
+pub mod planner;
+pub mod runtime;
+pub mod topology;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,183 @@
+//! `nimble` — launcher CLI for the NIMBLE reproduction.
+//!
+//! Subcommands regenerate every table/figure of the paper plus the
+//! ablations (all shared with benches/ via `nimble::exp`):
+//!
+//! ```text
+//! nimble table1            planner overhead vs comm (Table I)
+//! nimble fig6 [--part a|b|c|d|all]
+//! nimble fig7 [--payload-mb 64]
+//! nimble fig8
+//! nimble sendrecv          async p2p imbalance sweep
+//! nimble ablate            design-choice ablations
+//! nimble plan --src 0 --dst 1 --mb 256   show a routing plan
+//! nimble moe-compute       run the real PJRT FFN artifacts
+//! nimble info              topology + fabric calibration summary
+//! ```
+
+use nimble::exp::{ablate, fig6, fig7, fig8, interference, sendrecv, table1, MB};
+use nimble::fabric::FabricParams;
+use nimble::planner::{CostModel, Demand, Planner};
+use nimble::runtime::Runtime;
+use nimble::topology::Topology;
+use nimble::util::cli::Args;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    // global --config <path> (anywhere on the line): applies to every
+    // subcommand; see configs/paper.toml for the reference file
+    let mut cfg = nimble::config::Config::default();
+    if let Some(i) = argv.iter().position(|a| a == "--config") {
+        let path = argv.get(i + 1).cloned().unwrap_or_default();
+        cfg = match nimble::config::Config::load(&path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("--config {path}: {e}");
+                std::process::exit(2);
+            }
+        };
+        argv.drain(i..=i + 1);
+    }
+    let Some(cmd) = argv.first().cloned() else {
+        eprintln!("{}", usage());
+        std::process::exit(2);
+    };
+    let rest = &argv[1..];
+    let topo = cfg.topology.clone();
+    let params = cfg.fabric.clone();
+    let result = match cmd.as_str() {
+        "table1" => {
+            println!("{}", table1::render(&topo, &params, 9));
+            Ok(())
+        }
+        "fig6" => Args::new("nimble fig6", "point-to-point multi-path bandwidth")
+            .flag("part", "all", "a|b|c|d|all")
+            .parse(rest)
+            .map(|p| println!("{}", fig6::render(&topo, &params, p.get("part")))),
+        "fig7" => Args::new("nimble fig7", "skewed All-to-Allv sweep")
+            .flag("payload-mb", "64", "per-rank payload in MB")
+            .parse(rest)
+            .map(|p| {
+                println!("{}", fig7::render(&topo, &params, p.get_f64("payload-mb") * MB))
+            }),
+        "fig8" => {
+            println!("{}", fig8::render(&topo, &params));
+            Ok(())
+        }
+        "sendrecv" => {
+            println!("{}", sendrecv::render(&topo, &params));
+            Ok(())
+        }
+        "ablate" => {
+            println!("{}", ablate::render(&topo, &params));
+            Ok(())
+        }
+        "interference" => {
+            println!("{}", interference::render(&topo, &params));
+            Ok(())
+        }
+        "plan" => Args::new("nimble plan", "show the routing plan for one demand")
+            .flag("src", "0", "source GPU")
+            .flag("dst", "1", "destination GPU")
+            .flag("mb", "256", "message size in MB")
+            .parse(rest)
+            .map(|p| {
+                let d = Demand::new(p.get_usize("src"), p.get_usize("dst"), p.get_f64("mb") * MB);
+                let mut planner = Planner::new(&topo, cfg.planner.clone());
+                let plan = planner.plan(&[d]);
+                println!(
+                    "plan for {} → {} ({} MB), computed in {:.1} µs:",
+                    d.src,
+                    d.dst,
+                    p.get("mb"),
+                    plan.plan_time_s * 1e6
+                );
+                for (path, bytes) in &plan.assignments[&(d.src, d.dst)].parts {
+                    println!(
+                        "  {:>10.1} MB via {:?} ({} hops{})",
+                        bytes / MB,
+                        path.kind,
+                        path.hops.len(),
+                        if CostModel::is_detour(&topo, path) { ", detour" } else { "" }
+                    );
+                }
+            }),
+        "moe-compute" => run_moe_compute(),
+        "info" => {
+            print_info(&topo, &params);
+            Ok(())
+        }
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+}
+
+fn usage() -> String {
+    "nimble — NIMBLE (skew-to-symmetry multi-path balancing) reproduction\n\
+     commands: table1 | fig6 | fig7 | fig8 | sendrecv | ablate | interference | plan | moe-compute | info\n\
+     run `nimble <cmd> --help` for flags"
+        .to_string()
+}
+
+fn print_info(topo: &Topology, params: &FabricParams) {
+    println!("topology: {} nodes × {} GPUs (+{} NICs) = {} GPUs, {} directed links",
+        topo.nodes, topo.gpus_per_node, topo.nics_per_node, topo.num_gpus(), topo.links.len());
+    println!("calibration (from the paper's §V-B measurements):");
+    println!("  NVLink direct      : {:.1} GB/s effective", topo.nvlink_gbps);
+    println!("  NDR rail           : {:.1} GB/s effective", topo.rail_gbps);
+    println!("  relay pass-through : ρ = {:.3}  (⇒ 213.1 GB/s for 2 paths)", params.relay_rho);
+    println!("  GPU injection cap  : {:.1} GB/s (⇒ 278.2 GB/s for 3 paths)", params.inject_cap_gbps);
+    println!("  node NIC aggregate : {:.1} GB/s (4 rails)", params.node_net_cap_gbps);
+    println!("  multi-path guard   : ≤ {} bytes single-path", 1024 * 1024);
+}
+
+fn run_moe_compute() -> Result<(), nimble::util::cli::CliError> {
+    let dir = Runtime::default_dir();
+    let mut rt = match Runtime::open(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            return Err(nimble::util::cli::CliError(format!(
+                "{e}\nhint: run `make artifacts` first"
+            )))
+        }
+    };
+    println!("artifacts: {:?}", rt.artifact_names());
+    for name in ["expert_ffn_t256", "expert_ffn_t1024", "expert_ffn_t4096"] {
+        let info = rt.artifact_info(name);
+        let (t, d, f) = (
+            info.get("tokens").as_u64().unwrap() as usize,
+            info.get("d_model").as_u64().unwrap() as usize,
+            info.get("d_ff").as_u64().unwrap() as usize,
+        );
+        let x = vec![0.1f32; t * d];
+        let w1 = vec![0.02f32; d * f];
+        let w2 = vec![0.02f32; f * d];
+        let inputs = [
+            Runtime::literal_f32(&x, &[t as i64, d as i64]).unwrap(),
+            Runtime::literal_f32(&w1, &[d as i64, f as i64]).unwrap(),
+            Runtime::literal_f32(&w2, &[f as i64, d as i64]).unwrap(),
+        ];
+        let t0 = std::time::Instant::now();
+        let out = rt.execute(name, &inputs).map_err(|e| {
+            nimble::util::cli::CliError(format!("execute {name}: {e}"))
+        })?;
+        let dt = t0.elapsed().as_secs_f64();
+        let y = out[0].to_vec::<f32>().unwrap();
+        println!(
+            "{name}: {t}×{d} tokens through FFN({d}→{f}→{d}) in {:.1} ms on PJRT-CPU (y[0]={:.4})",
+            dt * 1e3,
+            y[0]
+        );
+    }
+    Ok(())
+}

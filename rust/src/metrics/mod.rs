@@ -1,0 +1,143 @@
+//! Communication run reports: latency summaries, link utilization,
+//! imbalance metrics, and fixed-width table rendering used by the
+//! experiment drivers and benches.
+
+use crate::fabric::fluid::SimResult;
+use crate::topology::Topology;
+use crate::util::stats::{jain_index, Summary};
+
+/// Outcome of one communication round under some engine.
+#[derive(Clone, Debug)]
+pub struct CommReport {
+    pub engine: String,
+    /// Wall-clock (virtual seconds) until the last byte landed.
+    pub makespan_s: f64,
+    /// Per-demand completion latency (seconds, from issue).
+    pub latencies_s: Vec<f64>,
+    /// Total bytes moved (payload, not counting multi-hop re-sends).
+    pub payload_bytes: f64,
+    /// Jain fairness index over busy-link utilization.
+    pub link_fairness: f64,
+    /// Highest per-link utilization (0..1) over the run.
+    pub peak_link_util: f64,
+    /// Number of distinct links that carried traffic.
+    pub links_used: usize,
+}
+
+impl CommReport {
+    pub fn from_sim(engine: &str, topo: &Topology, sim: &SimResult, payload: f64) -> Self {
+        let util = sim.link_utilization(topo);
+        let utils: Vec<f64> = util.iter().map(|&(_, u)| u).collect();
+        CommReport {
+            engine: engine.to_string(),
+            makespan_s: sim.makespan,
+            latencies_s: sim.flows.iter().map(|f| f.finish_t).collect(),
+            payload_bytes: payload,
+            link_fairness: if utils.is_empty() { 1.0 } else { jain_index(&utils) },
+            peak_link_util: utils.iter().cloned().fold(0.0, f64::max),
+            links_used: utils.len(),
+        }
+    }
+
+    /// Effective goodput in GB/s.
+    pub fn goodput_gbps(&self) -> f64 {
+        self.payload_bytes / self.makespan_s.max(1e-12) / 1e9
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        Summary::of(&self.latencies_s)
+    }
+}
+
+/// Minimal fixed-width table printer for bench/experiment output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(width) {
+                line.push_str(&format!(" {:>w$} |", c, w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &width));
+        let mut sep = String::from("|");
+        for w in &width {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &width));
+        }
+        out
+    }
+}
+
+/// Format seconds as adaptive ms/µs string.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["size", "bw (GB/s)"]);
+        t.row(&["16 MB".into(), "45.1".into()]);
+        t.row(&["256 MB".into(), "170.0".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all lines same width
+        assert!(lines.iter().all(|l| l.chars().count() == lines[0].chars().count()));
+        assert!(s.contains("170.0"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.5), "2.500 s");
+        assert_eq!(fmt_time(0.0032), "3.200 ms");
+        assert_eq!(fmt_time(42e-6), "42.0 µs");
+    }
+}

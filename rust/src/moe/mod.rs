@@ -1,0 +1,110 @@
+//! MoE expert-parallel step driver (paper §V-D / Fig 8).
+//!
+//! One EP step = **dispatch** (All-to-Allv of tokens to their experts)
+//! → **compute** (each GPU's expert FFN over its received tokens) →
+//! **combine** (transpose All-to-Allv returning results to owners).
+//!
+//! Dispatch/combine timing comes from the fabric simulator under the
+//! router being tested (NIMBLE vs baselines). Compute timing uses the
+//! H100 roofline model — identical between methods, as the paper notes
+//! ("Compute is identical across methods; gains come from slimmer
+//! dispatch/combine") — while the *real* FFN kernel runs through the
+//! PJRT runtime in examples/moe_e2e.rs to prove the stack composes.
+
+use crate::baselines::{run_round, Router};
+use crate::fabric::FabricParams;
+use crate::planner::Demand;
+use crate::runtime::ComputeModel;
+use crate::topology::Topology;
+use crate::workloads::moe_traffic::{
+    combine_demands, dispatch_demands, expert_token_counts, MoeConfig,
+};
+
+/// Latency breakdown for one EP step.
+#[derive(Clone, Copy, Debug)]
+pub struct MoeStep {
+    pub dispatch_s: f64,
+    pub compute_s: f64,
+    pub combine_s: f64,
+}
+
+impl MoeStep {
+    pub fn total_s(&self) -> f64 {
+        self.dispatch_s + self.compute_s + self.combine_s
+    }
+}
+
+/// Run one MoE step under `router`; `d_ff` defaults to 4×d_model
+/// (paper: "expert compute is a two-layer FFN with 4× expansion").
+pub fn run_moe_step(
+    topo: &Topology,
+    params: &FabricParams,
+    compute: &ComputeModel,
+    router: &mut dyn Router,
+    cfg: &MoeConfig,
+) -> MoeStep {
+    let disp: Vec<Demand> = dispatch_demands(topo, cfg);
+    let comb: Vec<Demand> = combine_demands(topo, cfg);
+    let dispatch_s = run_round(topo, params, router, &disp).makespan_s;
+    let combine_s = run_round(topo, params, router, &comb).makespan_s;
+    // experts run in parallel on their GPUs: the step waits for the
+    // most loaded (hot) expert
+    let d_ff = (cfg.d_model * 4) as f64;
+    let compute_s = expert_token_counts(topo, cfg)
+        .into_iter()
+        .map(|t| compute.expert_ffn_s(t, cfg.d_model as f64, d_ff))
+        .fold(0.0, f64::max);
+    MoeStep { dispatch_s, compute_s, combine_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::NcclLike;
+    use crate::coordinator::NimbleRouter;
+
+    #[test]
+    fn compute_identical_between_routers() {
+        let t = Topology::paper();
+        let params = FabricParams::default();
+        let cm = ComputeModel::default();
+        let cfg = MoeConfig::paper(16_384, 0.8);
+        let mut nccl = NcclLike::new();
+        let mut nim = NimbleRouter::default_for(&t);
+        let a = run_moe_step(&t, &params, &cm, &mut nccl, &cfg);
+        let b = run_moe_step(&t, &params, &cm, &mut nim, &cfg);
+        assert!((a.compute_s - b.compute_s).abs() < 1e-12);
+        // and NIMBLE's comm phases are no slower (small tolerance:
+        // combine is already rail-balanced under PXN, so NIMBLE can
+        // only match it modulo chunk quantization)
+        assert!(b.dispatch_s <= a.dispatch_s * 1.05);
+        assert!(b.combine_s <= a.combine_s * 1.05);
+    }
+
+    /// Fig 8 trend: end-to-end speedup grows with token count (comm
+    /// fraction grows) and with hotspot ratio.
+    #[test]
+    fn speedup_trends_match_paper() {
+        let t = Topology::paper();
+        let params = FabricParams::default();
+        let cm = ComputeModel::default();
+        let speedup = |tokens: usize, ratio: f64| {
+            let cfg = MoeConfig::paper(tokens, ratio);
+            let mut nccl = NcclLike::new();
+            let mut nim = NimbleRouter::default_for(&t);
+            let a = run_moe_step(&t, &params, &cm, &mut nccl, &cfg).total_s();
+            let b = run_moe_step(&t, &params, &cm, &mut nim, &cfg).total_s();
+            a / b
+        };
+        let s_small = speedup(2048, 0.9);
+        let s_big = speedup(65_536, 0.9);
+        assert!(s_big > s_small, "more tokens should help: {s_small} vs {s_big}");
+        let s_mild = speedup(16_384, 0.4);
+        let s_hot = speedup(16_384, 0.9);
+        assert!(s_hot > s_mild, "hotter should help: {s_mild} vs {s_hot}");
+        // paper's "enable" region shows >1.16×; our compute model is
+        // more generous to the baseline (see EXPERIMENTS.md), so the
+        // bound here is the direction + a floor
+        assert!(s_hot > 1.05, "16K/0.9 speedup too small: {s_hot}");
+    }
+}

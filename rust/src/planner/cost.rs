@@ -1,0 +1,226 @@
+//! The link cost function `c_e = F(L_e)` of Algorithm 1 and the
+//! path-cost metric.
+//!
+//! The paper's `F` is (a) **capacity-normalized** — load is divided by
+//! link capacity so NVLink edges and NIC rails are comparable, (b)
+//! **sharply increasing** with load to discourage congested links
+//! (Garg–Könemann uses `exp`, the paper uses a custom hardware-aware
+//! function), and (c) carries a **size-aware detour penalty** so that
+//! multi-path splitting is suppressed for small messages (§V-B:
+//! disabled ≤ 1 MB, fully amortized around 64 MB).
+//!
+//! Path cost is the **max** link cost along the path (not the sum):
+//! the §IV-C pipeline makes a path's throughput equal to its
+//! bottleneck link, so congestion on any one hop prices the whole
+//! path (§IV-B).
+
+use crate::topology::{Path, PathKind, Topology};
+
+/// Shape of the load→cost curve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CostShape {
+    /// `c = L/cap` — linear drain-time cost (NIMBLE's default: with
+    /// incremental λ-assignment it directly greedily levels the
+    /// normalized load, which is the min-max objective).
+    Linear,
+    /// `c = exp(alpha · L/cap) − 1` — classic Garg–Könemann weights.
+    Exponential { alpha: f64 },
+    /// `c = (L/cap)^p` — polynomial sharpening.
+    Polynomial { p: f64 },
+}
+
+/// Cost model parameters (ablation targets; see `nimble ablate`).
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub shape: CostShape,
+    /// Messages at or below this never use alternate paths (paper: 1 MB).
+    pub multipath_min_bytes: f64,
+    /// Message size by which detour *pipeline overhead* (extra
+    /// launch/sync + relay fill) is amortized. Distinct from the 64 MB
+    /// *bandwidth-saturation* knee — that lives in the fabric
+    /// efficiency curve; this penalty only prices the fixed forwarding
+    /// overhead, which is gone by a few MB (Fig 6c).
+    pub amortize_bytes: f64,
+    /// Scale of the detour penalty, in the same unit as link cost
+    /// (seconds of equivalent drain time for Linear).
+    pub penalty_scale: f64,
+    /// Hysteresis margin: an alternative path must beat the incumbent
+    /// by this relative factor before the planner switches (§I:
+    /// "hysteresis-based load metrics to avoid oscillations").
+    pub hysteresis: f64,
+    /// Ablation: price paths by the SUM of link costs (Dijkstra-style)
+    /// instead of the paper's bottleneck MAX (§IV-B discusses why max
+    /// is right for the pipelined dataplane). Default false.
+    pub sum_cost: bool,
+    /// Hardware-aware load inflation for relay (detour) hops: a relay
+    /// GPU's pass-through runs at ρ of NVLink rate, so bytes routed
+    /// through a relay hop occupy the link 1/ρ longer. Part of the
+    /// paper's "F designed according to hardware features" (§IV-B).
+    pub relay_inflation: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            shape: CostShape::Linear,
+            multipath_min_bytes: 1024.0 * 1024.0,
+            amortize_bytes: 8.0 * 1024.0 * 1024.0,
+            penalty_scale: 2.0e-4, // 0.2 ms equivalent drain time
+            hysteresis: 0.05,
+            sum_cost: false,
+            relay_inflation: 1.0 / 0.776,
+        }
+    }
+}
+
+impl CostShape {
+    /// Apply the (monotone) load→cost curve to a normalized load
+    /// (drain-time seconds). Monotonicity is what lets the planner
+    /// hot loop compute `max F(norm) = F(max norm)`.
+    #[inline]
+    pub fn apply(&self, norm: f64) -> f64 {
+        match *self {
+            CostShape::Linear => norm,
+            CostShape::Exponential { alpha } => (alpha * norm).exp_m1(),
+            CostShape::Polynomial { p } => norm.powf(p),
+        }
+    }
+}
+
+impl CostModel {
+    /// `c_e = F(L_e)`: cost of a link carrying `load_bytes` with
+    /// capacity `cap_gbps`.
+    pub fn link_cost(&self, load_bytes: f64, cap_gbps: f64) -> f64 {
+        self.shape.apply(load_bytes / (cap_gbps * 1e9))
+    }
+
+    /// Size-aware detour penalty for a candidate path: zero for the
+    /// preferred (direct / source-rail) path, prohibitive for small
+    /// messages, decaying as the message amortizes pipeline overhead.
+    pub fn detour_penalty(&self, topo: &Topology, path: &Path, msg_bytes: f64) -> f64 {
+        if !Self::is_detour(topo, path) {
+            return 0.0;
+        }
+        if msg_bytes <= self.multipath_min_bytes {
+            return f64::INFINITY;
+        }
+        // (amortize/S − 1)+ : 7× scale at 1 MB, 0 beyond amortize.
+        let ramp = (self.amortize_bytes / msg_bytes - 1.0).max(0.0);
+        let extra_hops = path.relay_count() as f64;
+        self.penalty_scale * ramp * extra_hops.max(1.0)
+    }
+
+    /// A path is a detour when it is not the library's default
+    /// least-hop choice: intra-node 2-hop, or an inter-node rail other
+    /// than the source GPU's own rail (detected by whether the first
+    /// hop is already the rail link — GPU-NIC affinity, §IV-B).
+    pub fn is_detour(topo: &Topology, path: &Path) -> bool {
+        match path.kind {
+            PathKind::IntraDirect => false,
+            PathKind::IntraTwoHop { .. } => true,
+            PathKind::InterRail { .. } => !matches!(
+                topo.link(path.hops[0]).kind,
+                crate::topology::LinkKind::Rail { .. }
+            ),
+            PathKind::InterCross { .. } => true,
+        }
+    }
+
+    /// Bottleneck path cost: max link cost + size-aware detour penalty.
+    pub fn path_cost(
+        &self,
+        topo: &Topology,
+        loads: &[f64],
+        path: &Path,
+        msg_bytes: f64,
+    ) -> f64 {
+        let mut agg = 0.0f64;
+        for &h in &path.hops {
+            let l = topo.link(h);
+            let c = self.link_cost(loads[h], l.cap_gbps);
+            agg = if self.sum_cost { agg + c } else { agg.max(c) };
+        }
+        agg + self.detour_penalty(topo, path, msg_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::path::candidates;
+
+    const MB: f64 = 1024.0 * 1024.0;
+
+    #[test]
+    fn linear_cost_is_drain_time() {
+        let m = CostModel::default();
+        // 120 MB on a 120 GB/s link ≈ 1.048 ms (binary MB vs GB=1e9)
+        let c = m.link_cost(120.0 * MB, 120.0);
+        assert!((c - 120.0 * MB / 120e9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shapes_are_monotone_in_load() {
+        for shape in [
+            CostShape::Linear,
+            CostShape::Exponential { alpha: 50.0 },
+            CostShape::Polynomial { p: 3.0 },
+        ] {
+            let m = CostModel { shape, ..CostModel::default() };
+            let mut prev = -1.0;
+            for l in [0.0, 1.0 * MB, 10.0 * MB, 100.0 * MB] {
+                let c = m.link_cost(l, 120.0);
+                assert!(c >= prev, "{shape:?} not monotone");
+                prev = c;
+            }
+        }
+    }
+
+    #[test]
+    fn small_messages_never_detour() {
+        let t = Topology::paper();
+        let m = CostModel::default();
+        let c = candidates(&t, 0, 1, true);
+        assert_eq!(m.detour_penalty(&t, &c[0], 0.5 * MB), 0.0); // direct
+        assert!(m.detour_penalty(&t, &c[1], 0.5 * MB).is_infinite()); // 2-hop
+        assert!(m.detour_penalty(&t, &c[1], 1.0 * MB).is_infinite()); // == threshold
+    }
+
+    #[test]
+    fn penalty_amortizes_with_size() {
+        let t = Topology::paper();
+        let m = CostModel::default();
+        let two_hop = candidates(&t, 0, 1, true).remove(1);
+        let p2 = m.detour_penalty(&t, &two_hop, 1.5 * MB);
+        let p4 = m.detour_penalty(&t, &two_hop, 4.0 * MB);
+        let p8 = m.detour_penalty(&t, &two_hop, 8.0 * MB);
+        assert!(p2 > p4 && p4 > p8);
+        assert_eq!(p8, 0.0, "amortized by 8 MB");
+    }
+
+    #[test]
+    fn source_rail_is_not_a_detour() {
+        let t = Topology::paper();
+        // gpu1 → gpu6: rail 1 has no source-side hop (src's own NIC)
+        let inter = candidates(&t, 1, 6, true);
+        for p in &inter {
+            match p.kind {
+                PathKind::InterRail { rail: 1 } => assert!(!CostModel::is_detour(&t, p)),
+                _ => assert!(CostModel::is_detour(&t, p), "{:?}", p.kind),
+            }
+        }
+    }
+
+    #[test]
+    fn path_cost_is_bottleneck_plus_penalty() {
+        let t = Topology::paper();
+        let m = CostModel::default();
+        let mut loads = vec![0.0; t.links.len()];
+        let two_hop = candidates(&t, 0, 1, true).remove(1);
+        loads[two_hop.hops[0]] = 100.0 * MB;
+        loads[two_hop.hops[1]] = 10.0 * MB;
+        let c = m.path_cost(&t, &loads, &two_hop, 128.0 * MB);
+        let expect = m.link_cost(100.0 * MB, 120.0); // penalty = 0 at 128 MB
+        assert!((c - expect).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,168 @@
+//! Brute-force exact solver for the paper's Integer Programming
+//! formulation (§IV-B, eqs. 1–5) on tiny instances.
+//!
+//! The IP minimizes the max link load `Z` subject to flow conservation
+//! and integrality in ε-chunks. Exact solutions are exponential — the
+//! paper's reason for the MWU approximation — but on ≤3 pairs with a
+//! handful of chunks we can enumerate every chunk→path assignment and
+//! obtain the true optimum. The test-suite uses this to measure the
+//! MWU optimality gap (also surfaced by `nimble ablate --exact-gap`).
+
+use super::plan::Demand;
+use crate::topology::path::candidates;
+use crate::topology::{Path, Topology};
+
+/// Exact minimum of the capacity-normalized max load, enumerating all
+/// ways to place each pair's chunks on its candidate paths.
+/// `chunks_per_pair` bounds the enumeration (demand split evenly).
+///
+/// Returns (optimal normalized max load in seconds, per-pair split) or
+/// None if the instance is too large.
+pub fn exact_min_max(
+    topo: &Topology,
+    demands: &[Demand],
+    chunks_per_pair: usize,
+) -> Option<(f64, Vec<Vec<f64>>)> {
+    if demands.len() > 3 || chunks_per_pair > 8 {
+        return None; // refuse instances that would blow up
+    }
+    let cands: Vec<Vec<Path>> = demands
+        .iter()
+        .map(|d| candidates(topo, d.src, d.dst, true))
+        .collect();
+    // per pair: enumerate compositions of `chunks_per_pair` over its
+    // candidate paths
+    let comps: Vec<Vec<Vec<usize>>> = cands
+        .iter()
+        .map(|c| compositions(chunks_per_pair, c.len()))
+        .collect();
+
+    let mut best = f64::INFINITY;
+    let mut best_split: Vec<Vec<f64>> = Vec::new();
+    let mut idx = vec![0usize; demands.len()];
+    loop {
+        // evaluate this joint assignment
+        let mut load = vec![0.0f64; topo.links.len()];
+        for (k, d) in demands.iter().enumerate() {
+            let comp = &comps[k][idx[k]];
+            let chunk = d.bytes / chunks_per_pair as f64;
+            for (pi, &cnt) in comp.iter().enumerate() {
+                if cnt == 0 {
+                    continue;
+                }
+                for &h in &cands[k][pi].hops {
+                    load[h] += chunk * cnt as f64;
+                }
+            }
+        }
+        let z = load
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| l / (topo.link(i).cap_gbps * 1e9))
+            .fold(0.0, f64::max);
+        if z < best {
+            best = z;
+            best_split = demands
+                .iter()
+                .enumerate()
+                .map(|(k, d)| {
+                    let chunk = d.bytes / chunks_per_pair as f64;
+                    comps[k][idx[k]].iter().map(|&c| c as f64 * chunk).collect()
+                })
+                .collect();
+        }
+        // odometer increment
+        let mut k = 0;
+        loop {
+            if k == demands.len() {
+                return Some((best, best_split));
+            }
+            idx[k] += 1;
+            if idx[k] < comps[k].len() {
+                break;
+            }
+            idx[k] = 0;
+            k += 1;
+        }
+    }
+}
+
+/// All ways to write `n` as an ordered sum of `parts` non-negative
+/// integers.
+fn compositions(n: usize, parts: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut cur = vec![0usize; parts];
+    fn rec(n: usize, i: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if i == cur.len() - 1 {
+            cur[i] = n;
+            out.push(cur.clone());
+            return;
+        }
+        for v in 0..=n {
+            cur[i] = v;
+            rec(n - v, i + 1, cur, out);
+        }
+    }
+    if parts == 0 {
+        return out;
+    }
+    rec(n, 0, &mut cur, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::mwu::{Planner, PlannerCfg};
+    use crate::topology::Topology;
+
+    const MB: f64 = 1024.0 * 1024.0;
+
+    #[test]
+    fn composition_count() {
+        // C(n+k-1, k-1): n=4, k=3 → 15
+        assert_eq!(compositions(4, 3).len(), 15);
+        for c in compositions(4, 3) {
+            assert_eq!(c.iter().sum::<usize>(), 4);
+        }
+    }
+
+    #[test]
+    fn single_pair_optimum_spreads() {
+        let t = Topology::paper();
+        // one 360 MB intra-node message, 6 chunks, candidates
+        // {direct, via-2, via-3}: optimum places 2 chunks per path
+        // → max link load = 120 MB.
+        let d = vec![Demand::new(0, 1, 360.0 * MB)];
+        let (z, split) = exact_min_max(&t, &d, 6).unwrap();
+        let expect = 120.0 * MB / 120e9;
+        assert!((z - expect).abs() < 1e-9, "z={z} expect={expect}");
+        assert_eq!(split[0].len(), 3);
+        for &b in &split[0] {
+            assert!((b - 120.0 * MB).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn mwu_within_factor_of_exact() {
+        let t = Topology::paper();
+        let demands = vec![
+            Demand::new(0, 1, 240.0 * MB),
+            Demand::new(2, 1, 120.0 * MB),
+        ];
+        let (z_star, _) = exact_min_max(&t, &demands, 6).unwrap();
+        let mut planner = Planner::new(&t, PlannerCfg::default());
+        let plan = planner.plan(&demands);
+        let z = plan.max_norm_load(&t);
+        assert!(z >= z_star - 1e-9, "MWU beat the exact optimum?!");
+        assert!(z <= z_star * 1.5, "gap too large: mwu={z} exact={z_star}");
+    }
+
+    #[test]
+    fn too_large_instance_refused() {
+        let t = Topology::paper();
+        let d: Vec<Demand> = (0..4).map(|s| Demand::new(s, (s + 1) % 4, 1e6)).collect();
+        assert!(exact_min_max(&t, &d, 4).is_none());
+        assert!(exact_min_max(&t, &d[..1], 9).is_none());
+    }
+}

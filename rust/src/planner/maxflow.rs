@@ -1,0 +1,192 @@
+//! Dinic max-flow substrate.
+//!
+//! Used to bound what any routing scheme can achieve: for the traffic
+//! aimed at a single destination (the paper's hotspot scenario), the
+//! max-flow from a super-source to the hot GPU is an upper bound on
+//! deliverable throughput — the planner's plans are checked against it
+//! in the property suite, and the Fig 7 analysis uses it to show
+//! NIMBLE sits near the achievable ceiling.
+//!
+//! Generic small-graph implementation (f64 capacities, adjacency
+//! lists); the fabric graphs here have tens of vertices.
+
+/// Directed flow network on vertices `0..n`.
+pub struct FlowNet {
+    n: usize,
+    // edge arrays: to[i], cap[i]; paired edges i^1 are residuals
+    to: Vec<usize>,
+    cap: Vec<f64>,
+    head: Vec<Vec<usize>>, // per-vertex edge indices
+}
+
+impl FlowNet {
+    pub fn new(n: usize) -> FlowNet {
+        FlowNet { n, to: Vec::new(), cap: Vec::new(), head: vec![Vec::new(); n] }
+    }
+
+    /// Add a directed edge u→v with capacity c (and residual v→u of 0).
+    pub fn add_edge(&mut self, u: usize, v: usize, c: f64) {
+        assert!(u < self.n && v < self.n);
+        let e = self.to.len();
+        self.to.push(v);
+        self.cap.push(c);
+        self.head[u].push(e);
+        self.to.push(u);
+        self.cap.push(0.0);
+        self.head[v].push(e + 1);
+    }
+
+    /// Max flow from s to t (Dinic). Returns total flow value.
+    pub fn max_flow(&mut self, s: usize, t: usize) -> f64 {
+        assert_ne!(s, t);
+        let mut total = 0.0f64;
+        loop {
+            // BFS level graph
+            let mut level = vec![usize::MAX; self.n];
+            level[s] = 0;
+            let mut q = std::collections::VecDeque::from([s]);
+            while let Some(u) = q.pop_front() {
+                for &e in &self.head[u] {
+                    let v = self.to[e];
+                    if self.cap[e] > 1e-12 && level[v] == usize::MAX {
+                        level[v] = level[u] + 1;
+                        q.push_back(v);
+                    }
+                }
+            }
+            if level[t] == usize::MAX {
+                return total;
+            }
+            // DFS blocking flow with iteration pointers
+            let mut it = vec![0usize; self.n];
+            loop {
+                let pushed = self.dfs(s, t, f64::INFINITY, &level, &mut it);
+                if pushed <= 1e-12 {
+                    break;
+                }
+                total += pushed;
+            }
+        }
+    }
+
+    fn dfs(&mut self, u: usize, t: usize, f: f64, level: &[usize], it: &mut [usize]) -> f64 {
+        if u == t {
+            return f;
+        }
+        while it[u] < self.head[u].len() {
+            let e = self.head[u][it[u]];
+            let v = self.to[e];
+            if self.cap[e] > 1e-12 && level[v] == level[u] + 1 {
+                let d = self.dfs(v, t, f.min(self.cap[e]), level, it);
+                if d > 1e-12 {
+                    self.cap[e] -= d;
+                    self.cap[e ^ 1] += d;
+                    return d;
+                }
+            }
+            it[u] += 1;
+        }
+        0.0
+    }
+}
+
+use crate::topology::{GpuId, LinkKind, Topology};
+
+/// Max deliverable rate (GB/s) from a set of sources (with per-source
+/// demand weights ignored — pure capacity) to a single destination
+/// GPU, over rail-matched links only. Vertices: GPUs + super-source.
+pub fn max_rate_to_destination(topo: &Topology, sources: &[GpuId], dst: GpuId) -> f64 {
+    let g = topo.num_gpus();
+    let s_super = g;
+    let mut net = FlowNet::new(g + 1);
+    for l in &topo.links {
+        if matches!(l.kind, LinkKind::CrossRail { .. }) {
+            continue; // NIMBLE never uses mismatched rails
+        }
+        net.add_edge(l.src, l.dst, l.cap_gbps);
+    }
+    for &s in sources {
+        if s != dst {
+            net.add_edge(s_super, s, f64::INFINITY);
+        }
+    }
+    net.max_flow(s_super, dst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn textbook_max_flow() {
+        // classic CLRS-style example, max flow = 23
+        let mut net = FlowNet::new(6);
+        let edges = [
+            (0, 1, 16.0),
+            (0, 2, 13.0),
+            (1, 2, 10.0),
+            (2, 1, 4.0),
+            (1, 3, 12.0),
+            (3, 2, 9.0),
+            (2, 4, 14.0),
+            (4, 3, 7.0),
+            (3, 5, 20.0),
+            (4, 5, 4.0),
+        ];
+        for (u, v, c) in edges {
+            net.add_edge(u, v, c);
+        }
+        let f = net.max_flow(0, 5);
+        assert!((f - 23.0).abs() < 1e-9, "f={f}");
+    }
+
+    #[test]
+    fn disconnected_is_zero() {
+        let mut net = FlowNet::new(4);
+        net.add_edge(0, 1, 5.0);
+        net.add_edge(2, 3, 5.0);
+        assert_eq!(net.max_flow(0, 3), 0.0);
+    }
+
+    #[test]
+    fn parallel_paths_add() {
+        let mut net = FlowNet::new(4);
+        net.add_edge(0, 1, 3.0);
+        net.add_edge(1, 3, 3.0);
+        net.add_edge(0, 2, 4.0);
+        net.add_edge(2, 3, 4.0);
+        assert!((net.max_flow(0, 3) - 7.0).abs() < 1e-9);
+    }
+
+    /// Intra-node incast ceiling: 3 peers → 1 GPU is bounded by the
+    /// destination's total in-capacity — 3 NVLink edges plus its rail
+    /// (max-flow may legally detour through the other node, a path the
+    /// planner does not use; the bound is an upper bound either way).
+    #[test]
+    fn intra_incast_ceiling() {
+        let t = Topology::paper();
+        let rate = max_rate_to_destination(&t, &[0, 1, 2], 3);
+        assert!((rate - (3.0 * 120.0 + 45.1)).abs() < 1e-6, "rate={rate}");
+    }
+
+    /// Cross-node hotspot ceiling: node-0 sources into GPU 4 pass the
+    /// 4 rails (4×45.1) but must land on GPU 4 whose in-degree is
+    /// 3 NVLink + rail 0 — rails 1–3 relay through peers.
+    #[test]
+    fn inter_hotspot_ceiling() {
+        let t = Topology::paper();
+        let rate = max_rate_to_destination(&t, &[0, 1, 2, 3], 4);
+        // bounded by the rails: 180.4; landing capacity 3·120+45.1 ≫
+        assert!((rate - 4.0 * 45.1).abs() < 1e-6, "rate={rate}");
+    }
+
+    /// With peers on the destination node also sending, the ceiling is
+    /// the destination's total in-capacity.
+    #[test]
+    fn full_incast_ceiling() {
+        let t = Topology::paper();
+        let all: Vec<usize> = (0..8).filter(|&g| g != 4).collect();
+        let rate = max_rate_to_destination(&t, &all, 4);
+        assert!((rate - (3.0 * 120.0 + 45.1)).abs() < 1e-6, "rate={rate}");
+    }
+}

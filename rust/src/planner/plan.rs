@@ -1,0 +1,177 @@
+//! Routing plan types produced by the planner (Algorithm 1's
+//! `Paths^(s,d)` / `Flows^(s,d)` outputs) plus validation of the
+//! invariants the coordinator relies on.
+
+use crate::topology::{GpuId, Path, Topology};
+use std::collections::BTreeMap;
+
+/// One traffic demand (a message or message aggregate) from `src` to `dst`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Demand {
+    pub src: GpuId,
+    pub dst: GpuId,
+    pub bytes: f64,
+}
+
+impl Demand {
+    pub fn new(src: GpuId, dst: GpuId, bytes: f64) -> Demand {
+        Demand { src, dst, bytes }
+    }
+}
+
+/// Flow assignment for one demand: byte volumes per concrete path.
+#[derive(Clone, Debug, Default)]
+pub struct Assignment {
+    pub parts: Vec<(Path, f64)>,
+}
+
+impl Assignment {
+    pub fn total_bytes(&self) -> f64 {
+        self.parts.iter().map(|(_, b)| b).sum()
+    }
+    pub fn path_count(&self) -> usize {
+        self.parts.len()
+    }
+}
+
+/// The full routing plan.
+#[derive(Clone, Debug, Default)]
+pub struct Plan {
+    /// Keyed by (src, dst).
+    pub assignments: BTreeMap<(GpuId, GpuId), Assignment>,
+    /// Final per-link load in bytes (Algorithm 1's `L_e`).
+    pub link_load: Vec<f64>,
+    /// Planner wall time in seconds (reported in Table I).
+    pub plan_time_s: f64,
+}
+
+impl Plan {
+    /// The objective `Z` normalized by capacity: max over links of
+    /// load/capacity, i.e. the bottleneck drain time in seconds.
+    pub fn max_norm_load(&self, topo: &Topology) -> f64 {
+        self.link_load
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| l / (topo.link(i).cap_gbps * 1e9))
+            .fold(0.0, f64::max)
+    }
+
+    /// Validate the invariants Algorithm 1 guarantees:
+    /// 1. conservation — per-pair flows sum to the demand;
+    /// 2. every path is a valid connected (s,d) chain;
+    /// 3. `link_load` is consistent with the assignments;
+    /// 4. all flow parts are positive.
+    pub fn validate(&self, topo: &Topology, demands: &[Demand]) -> Result<(), String> {
+        let mut want: BTreeMap<(GpuId, GpuId), f64> = BTreeMap::new();
+        for d in demands {
+            *want.entry((d.src, d.dst)).or_insert(0.0) += d.bytes;
+        }
+        for (&(s, dst), a) in &self.assignments {
+            let expect = want.remove(&(s, dst)).ok_or_else(|| {
+                format!("assignment for ({s},{dst}) without a matching demand")
+            })?;
+            let got = a.total_bytes();
+            if (got - expect).abs() > 1e-3 {
+                return Err(format!(
+                    "conservation violated for ({s},{dst}): routed {got}, demanded {expect}"
+                ));
+            }
+            for (p, b) in &a.parts {
+                if *b <= 0.0 {
+                    return Err(format!("non-positive flow part {b} on ({s},{dst})"));
+                }
+                if p.src != s || p.dst != dst {
+                    return Err(format!("path endpoints mismatch on ({s},{dst})"));
+                }
+                if !p.is_valid(topo) {
+                    return Err(format!("invalid path for ({s},{dst}): {:?}", p.kind));
+                }
+            }
+        }
+        if let Some((&(s, d), _)) = want.iter().find(|(_, &b)| b > 0.0) {
+            return Err(format!("demand ({s},{d}) received no assignment"));
+        }
+        // recompute link loads
+        let mut loads = vec![0.0; topo.links.len()];
+        for a in self.assignments.values() {
+            for (p, b) in &a.parts {
+                for &h in &p.hops {
+                    loads[h] += b;
+                }
+            }
+        }
+        for (i, (&a, &b)) in loads.iter().zip(self.link_load.iter()).enumerate() {
+            if (a - b).abs() > 1e-3 {
+                return Err(format!("link {i} load mismatch: recomputed {a}, stored {b}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of distinct paths used across all assignments.
+    pub fn total_paths(&self) -> usize {
+        self.assignments.values().map(|a| a.path_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::path::candidates;
+    use crate::topology::Topology;
+
+    fn one_path_plan(topo: &Topology, s: GpuId, d: GpuId, bytes: f64) -> Plan {
+        let p = candidates(topo, s, d, false).remove(0);
+        let mut link_load = vec![0.0; topo.links.len()];
+        for &h in &p.hops {
+            link_load[h] += bytes;
+        }
+        let mut assignments = BTreeMap::new();
+        assignments.insert((s, d), Assignment { parts: vec![(p, bytes)] });
+        Plan { assignments, link_load, plan_time_s: 0.0 }
+    }
+
+    #[test]
+    fn valid_plan_passes() {
+        let t = Topology::paper();
+        let plan = one_path_plan(&t, 0, 1, 1e6);
+        plan.validate(&t, &[Demand::new(0, 1, 1e6)]).unwrap();
+    }
+
+    #[test]
+    fn conservation_violation_detected() {
+        let t = Topology::paper();
+        let plan = one_path_plan(&t, 0, 1, 1e6);
+        let err = plan.validate(&t, &[Demand::new(0, 1, 2e6)]).unwrap_err();
+        assert!(err.contains("conservation"), "{err}");
+    }
+
+    #[test]
+    fn missing_assignment_detected() {
+        let t = Topology::paper();
+        let plan = one_path_plan(&t, 0, 1, 1e6);
+        let err = plan
+            .validate(&t, &[Demand::new(0, 1, 1e6), Demand::new(2, 3, 5.0)])
+            .unwrap_err();
+        assert!(err.contains("no assignment"), "{err}");
+    }
+
+    #[test]
+    fn stale_link_load_detected() {
+        let t = Topology::paper();
+        let mut plan = one_path_plan(&t, 0, 1, 1e6);
+        plan.link_load[0] += 42.0;
+        // hop 0 of the (0,1) direct path is link nvlink(0,1); corrupt a
+        // different entry to be sure detection is load-table-wide.
+        let err = plan.validate(&t, &[Demand::new(0, 1, 1e6)]).unwrap_err();
+        assert!(err.contains("load mismatch"), "{err}");
+    }
+
+    #[test]
+    fn max_norm_load_is_bottleneck_drain() {
+        let t = Topology::paper();
+        let plan = one_path_plan(&t, 0, 4, 45.1e9); // 45.1 GB over a 45.1 GB/s rail
+        let z = plan.max_norm_load(&t);
+        assert!((z - 1.0).abs() < 1e-9, "z={z}");
+    }
+}

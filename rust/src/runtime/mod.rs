@@ -1,0 +1,212 @@
+//! PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place the rust side touches XLA; Python never runs
+//! on the request path. Artifacts are HLO *text* (see aot.py for why),
+//! parsed with `HloModuleProto::from_text_file`, compiled once per
+//! process, and cached.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Loader + executor over an artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Json,
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (expects `manifest.json` inside).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {mpath:?} — run `make artifacts` first"))?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, manifest, cache: BTreeMap::new() })
+    }
+
+    /// Default artifact directory (repo-root/artifacts).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn manifest(&self) -> &Json {
+        &self.manifest
+    }
+
+    /// Artifact names available.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest
+            .get("artifacts")
+            .as_obj()
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Metadata for one artifact.
+    pub fn artifact_info(&self, name: &str) -> &Json {
+        self.manifest.get("artifacts").get(name)
+    }
+
+    /// Compile (or fetch from cache) an artifact.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let info = self.manifest.get("artifacts").get(name);
+            let file = info
+                .get("file")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact with literal inputs; returns the flattened
+    /// tuple outputs (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let expect = self.artifact_info(name).get("inputs").as_arr().map(|a| a.len());
+        if let Some(n) = expect {
+            if n != inputs.len() {
+                bail!("artifact '{name}' wants {n} inputs, got {}", inputs.len());
+            }
+        }
+        let exe = self.load(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Helper: f32 literal from a flat vec + dims.
+    pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    /// Helper: i32 literal from a flat vec + dims.
+    pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+}
+
+/// Analytic H100 compute model for the Fig 8 timeline (the simulated
+/// cluster's compute phase; the *real* kernels run via [`Runtime`] in
+/// the e2e example). bf16 FFN on an H100 SXM: peak 989 TFLOP/s; we
+/// assume the paper's stack sustains ~45% on these GEMM shapes.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeModel {
+    pub sustained_tflops: f64,
+    pub kernel_launch_us: f64,
+}
+
+impl Default for ComputeModel {
+    fn default() -> Self {
+        ComputeModel { sustained_tflops: 445.0, kernel_launch_us: 12.0 }
+    }
+}
+
+impl ComputeModel {
+    /// Time for one expert to run its two-layer FFN over `tokens`.
+    pub fn expert_ffn_s(&self, tokens: f64, d_model: f64, d_ff: f64) -> f64 {
+        let flops = 2.0 * 2.0 * tokens * d_model * d_ff; // 2 GEMMs × 2 flop/MAC
+        flops / (self.sustained_tflops * 1e12) + self.kernel_launch_us * 1e-6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = Runtime::default_dir();
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn compute_model_scales_linearly() {
+        let m = ComputeModel::default();
+        let t1 = m.expert_ffn_s(1024.0, 4096.0, 16384.0);
+        let t2 = m.expert_ffn_s(2048.0, 4096.0, 16384.0);
+        let flop_part1 = t1 - m.kernel_launch_us * 1e-6;
+        let flop_part2 = t2 - m.kernel_launch_us * 1e-6;
+        assert!((flop_part2 / flop_part1 - 2.0).abs() < 1e-9);
+    }
+
+    /// Full PJRT round-trip over the real artifacts (skips cleanly if
+    /// `make artifacts` hasn't run yet — `make test` orders it first).
+    #[test]
+    fn expert_ffn_artifact_executes() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let mut rt = Runtime::open(dir).unwrap();
+        let info = rt.artifact_info("expert_ffn_t256");
+        let d = info.get("d_model").as_u64().unwrap() as usize;
+        let f = info.get("d_ff").as_u64().unwrap() as usize;
+        let t = 256usize;
+        let x = vec![0.5f32; t * d];
+        let w1 = vec![0.01f32; d * f];
+        let w2 = vec![0.01f32; f * d];
+        let out = rt
+            .execute(
+                "expert_ffn_t256",
+                &[
+                    Runtime::literal_f32(&x, &[t as i64, d as i64]).unwrap(),
+                    Runtime::literal_f32(&w1, &[d as i64, f as i64]).unwrap(),
+                    Runtime::literal_f32(&w2, &[f as i64, d as i64]).unwrap(),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let y = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(y.len(), t * d);
+        // y = gelu(x@w1)@w2 with constant inputs: every element equal
+        // and matching the analytic value
+        assert!(y[0].is_finite());
+        assert!((y[0] - y[t * d - 1]).abs() < 1e-3);
+        let h = 0.5 * 0.01 * d as f64;
+        let gelu = 0.5 * h * (1.0 + erf(h / std::f64::consts::SQRT_2));
+        let expect = (gelu * 0.01 * f as f64) as f32;
+        assert!(
+            (y[0] - expect).abs() / expect.abs() < 2e-2,
+            "y={} expect={expect}",
+            y[0]
+        );
+    }
+
+    /// erf via Abramowitz–Stegun 7.1.26 (tests only).
+    fn erf(x: f64) -> f64 {
+        let t = 1.0 / (1.0 + 0.3275911 * x.abs());
+        let y = 1.0
+            - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736)
+                * t
+                + 0.254829592)
+                * t
+                * (-x * x).exp();
+        if x >= 0.0 {
+            y
+        } else {
+            -y
+        }
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let mut rt = Runtime::open(dir).unwrap();
+        assert!(rt.execute("nonexistent", &[]).is_err());
+    }
+}

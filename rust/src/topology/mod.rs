@@ -1,0 +1,344 @@
+//! Cluster topology model: nodes with all-to-all NVLink-connected GPUs
+//! and rail-matched NICs (one NIC per GPU, NIC *i* ↔ GPU *i*), plus
+//! inter-node rail links. This is the graph over which the planner
+//! (Algorithm 1) routes and the fabric simulator schedules flows.
+//!
+//! Matches the paper's testbed shape (§V-A): per node, 4× H100 with
+//! all-to-all NVLink4 and 4× NDR400 HCAs, one per GPU. The topology is
+//! parametric so larger/smaller configurations are first-class.
+
+pub mod path;
+
+pub use path::{Path, PathKind};
+
+/// Global GPU index: `node * gpus_per_node + local`.
+pub type GpuId = usize;
+/// Index into `Topology::links`.
+pub type LinkId = usize;
+
+/// Directed communication link.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Link {
+    pub id: LinkId,
+    pub kind: LinkKind,
+    /// Source GPU (for rail links: the GPU the source NIC is attached to).
+    pub src: GpuId,
+    /// Destination GPU.
+    pub dst: GpuId,
+    /// Capacity in GB/s (effective, large-message).
+    pub cap_gbps: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    /// Intra-node GPU↔GPU NVLink edge.
+    NvLink,
+    /// Inter-node rail-matched NIC↔NIC edge (rail r of node a → rail r
+    /// of node b). Endpoints are expressed as the rail-attached GPUs.
+    Rail { rail: usize },
+    /// Inter-node rail-MISmatched NIC edge (crosses a switch tier);
+    /// only baselines that ignore rail matching use these. Carries a
+    /// capacity penalty.
+    CrossRail { src_rail: usize, dst_rail: usize },
+}
+
+/// Static description of the cluster fabric.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// NICs per node; must equal `gpus_per_node` for the rail-matched
+    /// layout the paper targets (NIC i attached to GPU i).
+    pub nics_per_node: usize,
+    pub links: Vec<Link>,
+    /// NVLink effective capacity (GB/s) per directed edge.
+    pub nvlink_gbps: f64,
+    /// Rail (NIC) effective capacity (GB/s) per directed edge.
+    pub rail_gbps: f64,
+    /// Penalty factor applied to cross-rail (mismatched) edges.
+    pub cross_rail_factor: f64,
+    /// DGX-style NVSwitch fabric (paper §VII): every GPU has a single
+    /// uplink into a central switch, so intra-node 2-hop forwarding is
+    /// impossible — the only link a relay could use is already taken
+    /// by the direct path. Inter-node multi-rail balancing still works.
+    pub nvswitch: bool,
+    // ---- O(1) link lookup tables ----
+    nvlink_idx: Vec<Vec<Vec<Option<LinkId>>>>, // [node][src_local][dst_local]
+    rail_idx: Vec<Vec<Vec<Option<LinkId>>>>,   // [src_node][dst_node][rail]
+    cross_idx: Vec<Vec<Vec<Vec<Option<LinkId>>>>>, // [src_node][dst_node][sr][dr]
+}
+
+/// Effective large-message capacities measured on the paper's testbed
+/// (§V-B): 120 GB/s per direct NVLink path, 45.1 GB/s per NDR400 rail.
+pub const NVLINK_GBPS: f64 = 120.0;
+pub const RAIL_GBPS: f64 = 45.1;
+/// Switch-tier penalty for rail-mismatched traffic (baselines only).
+pub const CROSS_RAIL_FACTOR: f64 = 0.72;
+
+impl Topology {
+    /// The paper's testbed: `hgx(2, 4, 4)` = 2 nodes × (4 GPU + 4 NIC).
+    pub fn hgx(nodes: usize, gpus_per_node: usize, nics_per_node: usize) -> Topology {
+        Self::build(nodes, gpus_per_node, nics_per_node, NVLINK_GBPS, RAIL_GBPS, true)
+    }
+
+    /// Paper evaluation config: 2 nodes, 4 GPUs + 4 NICs each.
+    pub fn paper() -> Topology {
+        Self::hgx(2, 4, 4)
+    }
+
+    /// DGX-like NVSwitch variant (paper §VII "Limitations"): same
+    /// node/GPU/NIC counts, but intra-node connectivity goes through a
+    /// central NVSwitch — direct paths only, no GPU relaying inside a
+    /// node. Used by `nimble ablate`-adjacent experiments to reproduce
+    /// the paper's observation that only inter-node multi-NIC
+    /// balancing remains available there.
+    pub fn dgx_nvswitch(nodes: usize, gpus_per_node: usize, nics_per_node: usize) -> Topology {
+        let mut t = Self::hgx(nodes, gpus_per_node, nics_per_node);
+        t.nvswitch = true;
+        t
+    }
+
+    /// Fully parametric constructor. `with_cross_rail` adds the
+    /// mismatched-rail edges used by baselines.
+    pub fn build(
+        nodes: usize,
+        gpus_per_node: usize,
+        nics_per_node: usize,
+        nvlink_gbps: f64,
+        rail_gbps: f64,
+        with_cross_rail: bool,
+    ) -> Topology {
+        assert!(nodes >= 1 && gpus_per_node >= 1);
+        assert_eq!(
+            nics_per_node, gpus_per_node,
+            "rail-matched layout requires one NIC per GPU (paper §IV-B)"
+        );
+        let mut links = Vec::new();
+        let mut nvlink_idx =
+            vec![vec![vec![None; gpus_per_node]; gpus_per_node]; nodes];
+        let mut rail_idx = vec![vec![vec![None; nics_per_node]; nodes]; nodes];
+        let mut cross_idx =
+            vec![vec![vec![vec![None; nics_per_node]; nics_per_node]; nodes]; nodes];
+
+        // Intra-node all-to-all NVLink mesh (directed edges).
+        for n in 0..nodes {
+            for i in 0..gpus_per_node {
+                for j in 0..gpus_per_node {
+                    if i == j {
+                        continue;
+                    }
+                    let id = links.len();
+                    links.push(Link {
+                        id,
+                        kind: LinkKind::NvLink,
+                        src: n * gpus_per_node + i,
+                        dst: n * gpus_per_node + j,
+                        cap_gbps: nvlink_gbps,
+                    });
+                    nvlink_idx[n][i][j] = Some(id);
+                }
+            }
+        }
+        // Inter-node rail-matched NIC edges.
+        for a in 0..nodes {
+            for b in 0..nodes {
+                if a == b {
+                    continue;
+                }
+                for r in 0..nics_per_node {
+                    let id = links.len();
+                    links.push(Link {
+                        id,
+                        kind: LinkKind::Rail { rail: r },
+                        src: a * gpus_per_node + r,
+                        dst: b * gpus_per_node + r,
+                        cap_gbps: rail_gbps,
+                    });
+                    rail_idx[a][b][r] = Some(id);
+                }
+                if with_cross_rail {
+                    for sr in 0..nics_per_node {
+                        for dr in 0..nics_per_node {
+                            if sr == dr {
+                                continue;
+                            }
+                            let id = links.len();
+                            links.push(Link {
+                                id,
+                                kind: LinkKind::CrossRail { src_rail: sr, dst_rail: dr },
+                                src: a * gpus_per_node + sr,
+                                dst: b * gpus_per_node + dr,
+                                cap_gbps: rail_gbps * CROSS_RAIL_FACTOR,
+                            });
+                            cross_idx[a][b][sr][dr] = Some(id);
+                        }
+                    }
+                }
+            }
+        }
+        Topology {
+            nodes,
+            gpus_per_node,
+            nics_per_node,
+            links,
+            nvlink_gbps,
+            rail_gbps,
+            cross_rail_factor: CROSS_RAIL_FACTOR,
+            nvswitch: false,
+            nvlink_idx,
+            rail_idx,
+            cross_idx,
+        }
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    pub fn node_of(&self, g: GpuId) -> usize {
+        g / self.gpus_per_node
+    }
+
+    pub fn local_of(&self, g: GpuId) -> usize {
+        g % self.gpus_per_node
+    }
+
+    pub fn gpu(&self, node: usize, local: usize) -> GpuId {
+        node * self.gpus_per_node + local
+    }
+
+    pub fn same_node(&self, a: GpuId, b: GpuId) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// NVLink edge between two GPUs on the same node.
+    pub fn nvlink(&self, src: GpuId, dst: GpuId) -> Option<LinkId> {
+        if !self.same_node(src, dst) || src == dst {
+            return None;
+        }
+        self.nvlink_idx[self.node_of(src)][self.local_of(src)][self.local_of(dst)]
+    }
+
+    /// Rail-matched inter-node edge on rail `r`.
+    pub fn rail(&self, src_node: usize, dst_node: usize, r: usize) -> Option<LinkId> {
+        if src_node == dst_node {
+            return None;
+        }
+        self.rail_idx[src_node][dst_node][r]
+    }
+
+    /// Cross-rail (mismatched) inter-node edge.
+    pub fn cross_rail(
+        &self,
+        src_node: usize,
+        dst_node: usize,
+        sr: usize,
+        dr: usize,
+    ) -> Option<LinkId> {
+        if src_node == dst_node || sr == dr {
+            return None;
+        }
+        self.cross_idx[src_node][dst_node][sr][dr]
+    }
+
+    pub fn link(&self, id: LinkId) -> &Link {
+        &self.links[id]
+    }
+
+    /// All links a GPU injects into (used for per-endpoint load bounds).
+    pub fn out_links(&self, g: GpuId) -> impl Iterator<Item = &Link> {
+        self.links.iter().filter(move |l| l.src == g)
+    }
+
+    pub fn in_links(&self, g: GpuId) -> impl Iterator<Item = &Link> {
+        self.links.iter().filter(move |l| l.dst == g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_topology_counts() {
+        let t = Topology::paper();
+        assert_eq!(t.num_gpus(), 8);
+        // per node: 4*3 = 12 nvlink edges, ×2 nodes = 24
+        let nv = t.links.iter().filter(|l| l.kind == LinkKind::NvLink).count();
+        assert_eq!(nv, 24);
+        // rails: 2 ordered node pairs × 4 rails = 8
+        let rails =
+            t.links.iter().filter(|l| matches!(l.kind, LinkKind::Rail { .. })).count();
+        assert_eq!(rails, 8);
+        // cross rails: 2 × 4×3 = 24
+        let cross = t
+            .links
+            .iter()
+            .filter(|l| matches!(l.kind, LinkKind::CrossRail { .. }))
+            .count();
+        assert_eq!(cross, 24);
+    }
+
+    #[test]
+    fn lookup_tables_agree_with_links() {
+        let t = Topology::paper();
+        for l in &t.links {
+            match l.kind {
+                LinkKind::NvLink => {
+                    assert_eq!(t.nvlink(l.src, l.dst), Some(l.id));
+                }
+                LinkKind::Rail { rail } => {
+                    assert_eq!(t.rail(t.node_of(l.src), t.node_of(l.dst), rail), Some(l.id));
+                    assert_eq!(t.local_of(l.src), rail, "NIC r attaches to GPU r");
+                    assert_eq!(t.local_of(l.dst), rail);
+                }
+                LinkKind::CrossRail { src_rail, dst_rail } => {
+                    assert_eq!(
+                        t.cross_rail(t.node_of(l.src), t.node_of(l.dst), src_rail, dst_rail),
+                        Some(l.id)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_self_or_cross_node_nvlink() {
+        let t = Topology::paper();
+        assert_eq!(t.nvlink(0, 0), None);
+        assert_eq!(t.nvlink(0, 4), None); // gpu 4 is on node 1
+        assert!(t.nvlink(0, 3).is_some());
+    }
+
+    #[test]
+    fn capacities() {
+        let t = Topology::paper();
+        for l in &t.links {
+            match l.kind {
+                LinkKind::NvLink => assert_eq!(l.cap_gbps, NVLINK_GBPS),
+                LinkKind::Rail { .. } => assert_eq!(l.cap_gbps, RAIL_GBPS),
+                LinkKind::CrossRail { .. } => {
+                    assert!((l.cap_gbps - RAIL_GBPS * CROSS_RAIL_FACTOR).abs() < 1e-9)
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_id_arithmetic() {
+        let t = Topology::hgx(3, 4, 4);
+        assert_eq!(t.gpu(2, 1), 9);
+        assert_eq!(t.node_of(9), 2);
+        assert_eq!(t.local_of(9), 1);
+        assert!(t.same_node(8, 11));
+        assert!(!t.same_node(7, 8));
+    }
+
+    #[test]
+    fn out_links_of_gpu0() {
+        let t = Topology::paper();
+        // GPU 0 on node 0: 3 nvlink out + 1 rail out (to node 1, rail 0)
+        // + 3 cross-rail out (to node 1 rails 1..3).
+        assert_eq!(t.out_links(0).count(), 7);
+    }
+}

@@ -1,0 +1,236 @@
+//! Candidate path enumeration per the paper's §IV-B.
+//!
+//! For a pair (s, d) the planner considers:
+//! - **Intra-node direct**: the single NVLink edge (s, d).
+//! - **Intra-node 2-hop**: (s, i), (i, d) for every other GPU i on the
+//!   node — exactly one intermediate hop ("the rest of GPUs can be part
+//!   of more potential paths").
+//! - **Inter-node rail-matched**: for each rail r — optional NVLink hop
+//!   s → GPU_r on the source node, the rail edge, optional NVLink hop
+//!   GPU_r → d on the destination node. Rail matching is enforced
+//!   (mismatched rails go through extra switch tiers; NCCL's PXN makes
+//!   the same choice).
+//! - **Inter-node cross-rail** (baselines only): the mismatched NIC
+//!   edge, with its capacity penalty.
+
+use super::{GpuId, LinkId, Topology};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PathKind {
+    IntraDirect,
+    /// via intermediate GPU (global id)
+    IntraTwoHop { via: GpuId },
+    /// rail-matched inter-node path over rail `rail`
+    InterRail { rail: usize },
+    /// rail-mismatched inter-node path (baselines)
+    InterCross { src_rail: usize, dst_rail: usize },
+}
+
+/// A concrete routed path: an ordered list of directed links.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Path {
+    pub src: GpuId,
+    pub dst: GpuId,
+    pub kind: PathKind,
+    pub hops: Vec<LinkId>,
+}
+
+impl Path {
+    /// Number of GPU-relay forwarding stops (not counting src/dst):
+    /// every interior vertex of the hop chain is a relay GPU.
+    pub fn relay_count(&self) -> usize {
+        self.hops.len().saturating_sub(1)
+    }
+
+    /// GPUs that forward (interior vertices of the path).
+    pub fn relays(&self, topo: &Topology) -> Vec<GpuId> {
+        let mut out = Vec::new();
+        for w in self.hops.windows(2) {
+            let mid = topo.link(w[0]).dst;
+            debug_assert_eq!(mid, topo.link(w[1]).src, "disconnected path");
+            out.push(mid);
+        }
+        out
+    }
+
+    /// Validate connectivity: hops chain from src to dst.
+    pub fn is_valid(&self, topo: &Topology) -> bool {
+        if self.hops.is_empty() {
+            return false;
+        }
+        if topo.link(self.hops[0]).src != self.src {
+            return false;
+        }
+        if topo.link(*self.hops.last().unwrap()).dst != self.dst {
+            return false;
+        }
+        self.hops.windows(2).all(|w| topo.link(w[0]).dst == topo.link(w[1]).src)
+    }
+}
+
+/// Enumerate NIMBLE's candidate paths for (s, d).
+///
+/// `allow_multipath = false` restricts to the single fastest path (what
+/// the planner uses below the size threshold).
+pub fn candidates(topo: &Topology, s: GpuId, d: GpuId, allow_multipath: bool) -> Vec<Path> {
+    assert_ne!(s, d, "no self-paths");
+    let mut out = Vec::new();
+    if topo.same_node(s, d) {
+        let direct = topo.nvlink(s, d).expect("all-to-all NVLink mesh");
+        out.push(Path { src: s, dst: d, kind: PathKind::IntraDirect, hops: vec![direct] });
+        // §VII: on NVSwitch fabrics each GPU has one uplink — a relay
+        // would reuse the link the direct path already occupies, so
+        // intra-node multi-path is structurally unavailable.
+        if allow_multipath && !topo.nvswitch {
+            let node = topo.node_of(s);
+            for local in 0..topo.gpus_per_node {
+                let i = topo.gpu(node, local);
+                if i == s || i == d {
+                    continue;
+                }
+                out.push(Path {
+                    src: s,
+                    dst: d,
+                    kind: PathKind::IntraTwoHop { via: i },
+                    hops: vec![topo.nvlink(s, i).unwrap(), topo.nvlink(i, d).unwrap()],
+                });
+            }
+        }
+    } else {
+        let (na, nb) = (topo.node_of(s), topo.node_of(d));
+        let rails: Vec<usize> = if allow_multipath {
+            (0..topo.nics_per_node).collect()
+        } else {
+            // single fastest path: the source GPU's own rail (GPU-NIC
+            // affinity), like NCCL's default p2p choice.
+            vec![topo.local_of(s)]
+        };
+        for r in rails {
+            let mut hops = Vec::with_capacity(3);
+            let g_ra = topo.gpu(na, r);
+            let g_rb = topo.gpu(nb, r);
+            if g_ra != s {
+                hops.push(topo.nvlink(s, g_ra).unwrap());
+            }
+            hops.push(topo.rail(na, nb, r).unwrap());
+            if g_rb != d {
+                hops.push(topo.nvlink(g_rb, d).unwrap());
+            }
+            out.push(Path { src: s, dst: d, kind: PathKind::InterRail { rail: r }, hops });
+        }
+    }
+    out
+}
+
+/// The baseline cross-rail path (source rail NIC straight to the
+/// destination rail's NIC, no GPU forwarding): what a rail-unaware
+/// library does for an inter-node pair whose endpoints sit on
+/// different rails.
+pub fn cross_rail_path(topo: &Topology, s: GpuId, d: GpuId) -> Option<Path> {
+    if topo.same_node(s, d) {
+        return None;
+    }
+    let (sr, dr) = (topo.local_of(s), topo.local_of(d));
+    if sr == dr {
+        return None; // same rail: the matched path exists
+    }
+    let link = topo.cross_rail(topo.node_of(s), topo.node_of(d), sr, dr)?;
+    Some(Path {
+        src: s,
+        dst: d,
+        kind: PathKind::InterCross { src_rail: sr, dst_rail: dr },
+        hops: vec![link],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intra_candidates_paper_topology() {
+        let t = Topology::paper();
+        let c = candidates(&t, 0, 1, true);
+        // direct + 2 two-hop (via gpu 2, gpu 3)
+        assert_eq!(c.len(), 3);
+        assert!(c.iter().all(|p| p.is_valid(&t)));
+        assert_eq!(c.iter().filter(|p| p.kind == PathKind::IntraDirect).count(), 1);
+        let vias: Vec<_> = c
+            .iter()
+            .filter_map(|p| match p.kind {
+                PathKind::IntraTwoHop { via } => Some(via),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(vias, vec![2, 3]);
+    }
+
+    #[test]
+    fn inter_candidates_rail_matched() {
+        let t = Topology::paper();
+        // GPU 1 (node 0) → GPU 6 (node 1, local 2)
+        let c = candidates(&t, 1, 6, true);
+        assert_eq!(c.len(), 4); // one per rail
+        for p in &c {
+            assert!(p.is_valid(&t));
+            match p.kind {
+                PathKind::InterRail { rail } => {
+                    // rail 1: no hop on source side; rail 2: no hop on dst side
+                    let expect_hops =
+                        1 + usize::from(rail != 1) + usize::from(rail != 2);
+                    assert_eq!(p.hops.len(), expect_hops, "rail {rail}");
+                }
+                _ => panic!("unexpected kind"),
+            }
+        }
+    }
+
+    #[test]
+    fn single_path_mode() {
+        let t = Topology::paper();
+        assert_eq!(candidates(&t, 0, 1, false).len(), 1);
+        let inter = candidates(&t, 1, 6, false);
+        assert_eq!(inter.len(), 1);
+        assert_eq!(inter[0].kind, PathKind::InterRail { rail: 1 });
+    }
+
+    #[test]
+    fn relays_identified() {
+        let t = Topology::paper();
+        let c = candidates(&t, 0, 1, true);
+        let two_hop = c
+            .iter()
+            .find(|p| matches!(p.kind, PathKind::IntraTwoHop { via: 2 }))
+            .unwrap();
+        assert_eq!(two_hop.relays(&t), vec![2]);
+        // inter-node via rail 3 from gpu1→gpu6: relays are gpu3 and gpu7
+        let inter = candidates(&t, 1, 6, true);
+        let via3 = inter
+            .iter()
+            .find(|p| p.kind == (PathKind::InterRail { rail: 3 }))
+            .unwrap();
+        assert_eq!(via3.relays(&t), vec![3, 7]);
+    }
+
+    #[test]
+    fn cross_rail_only_when_mismatched() {
+        let t = Topology::paper();
+        assert!(cross_rail_path(&t, 0, 4).is_none()); // same rail 0
+        let p = cross_rail_path(&t, 0, 5).unwrap(); // rails 0 → 1
+        assert!(p.is_valid(&t));
+        assert_eq!(p.hops.len(), 1);
+    }
+
+    #[test]
+    fn validity_catches_broken_chains() {
+        let t = Topology::paper();
+        let good = candidates(&t, 0, 3, true).pop().unwrap();
+        let mut bad = good.clone();
+        bad.hops.reverse();
+        if bad.hops.len() > 1 {
+            assert!(!bad.is_valid(&t));
+        }
+        let empty = Path { src: 0, dst: 3, kind: PathKind::IntraDirect, hops: vec![] };
+        assert!(!empty.is_valid(&t));
+    }
+}

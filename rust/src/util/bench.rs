@@ -1,0 +1,111 @@
+//! Minimal benchmarking harness (no `criterion` in the offline vendor
+//! set): warmup + timed iterations, median/MAD reporting, and a
+//! uniform table output used by every `benches/*.rs` target (which
+//! are built with `harness = false`).
+
+use crate::util::stats::{mad, percentile};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>10}  n={}",
+            self.name,
+            fmt_s(self.median_s),
+            fmt_s(self.mad_s),
+            fmt_s(self.min_s),
+            self.iters
+        )
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>12} {:>12} {:>10}",
+        "benchmark", "median", "±mad", "min"
+    )
+}
+
+fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Time `f` with auto-scaled iteration count (targets ~`budget_s` of
+/// total measurement after `warmup` calls).
+pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / one) as usize).clamp(5, 10_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_s: percentile(&samples, 50.0),
+        mad_s: mad(&samples),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Run a set of benches and print the table; returns results for
+/// programmatic use.
+pub fn run_suite(title: &str, benches: Vec<(&str, Box<dyn FnMut()>)>) -> Vec<BenchResult> {
+    println!("\n== {title} ==");
+    println!("{}", header());
+    let mut out = Vec::new();
+    for (name, mut f) in benches {
+        let r = bench(name, 0.2, &mut *f);
+        println!("{}", r.row());
+        out.push(r);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleepless_work() {
+        let mut acc = 0u64;
+        let r = bench("spin", 0.02, || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(r.median_s > 0.0 && r.median_s < 0.1);
+        assert!(r.iters >= 5);
+        assert!(acc != 0);
+    }
+
+    #[test]
+    fn formatting_scales() {
+        assert!(fmt_s(2.0).contains('s'));
+        assert!(fmt_s(2e-3).contains("ms"));
+        assert!(fmt_s(2e-6).contains("µs"));
+        assert!(fmt_s(2e-9).contains("ns"));
+    }
+}

@@ -1,0 +1,208 @@
+//! Tiny declarative CLI flag parser (no `clap` in the offline vendor
+//! set). Supports `--flag value`, `--flag=value`, boolean `--flag`,
+//! positional arguments, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_bool: bool,
+}
+
+/// Declarative arg parser: register flags, then `parse`.
+#[derive(Default)]
+pub struct Args {
+    specs: Vec<FlagSpec>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+    prog: String,
+    about: &'static str,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Args {
+    pub fn new(prog: &str, about: &'static str) -> Args {
+        Args { prog: prog.to_string(), about, ..Default::default() }
+    }
+
+    pub fn flag(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, help, default: Some(default), is_bool: false });
+        self
+    }
+
+    pub fn flag_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, help, default: None, is_bool: false });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, help, default: Some("false"), is_bool: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.prog, self.about);
+        let _ = writeln!(s, "\nflags:");
+        for f in &self.specs {
+            let d = match f.default {
+                Some(d) if !f.is_bool => format!(" (default: {d})"),
+                _ => String::new(),
+            };
+            let _ = writeln!(s, "  --{:<22} {}{}", f.name, f.help, d);
+        }
+        s
+    }
+
+    /// Parse a raw arg list (excluding argv[0]).
+    pub fn parse(mut self, argv: &[String]) -> Result<Parsed, CliError> {
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError(self.usage()));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError(format!("unknown flag --{name}\n\n{}", self.usage())))?
+                    .clone();
+                let value = if spec.is_bool {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| CliError(format!("flag --{name} needs a value")))?
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // fill defaults, check required
+        for s in &self.specs {
+            if !self.values.contains_key(s.name) {
+                match s.default {
+                    Some(d) => {
+                        self.values.insert(s.name.to_string(), d.to_string());
+                    }
+                    None => return Err(CliError(format!("missing required flag --{}", s.name))),
+                }
+            }
+        }
+        Ok(Parsed { values: self.values, positionals: self.positionals })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} was not registered"))
+    }
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name).parse().unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), "true" | "1" | "yes" | "on")
+    }
+    /// Comma-separated list of numbers, e.g. `--sizes 16,32,64`.
+    pub fn get_list_f64(&self, name: &str) -> Vec<f64> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad number '{s}'")))
+            .collect()
+    }
+    pub fn get_list_usize(&self, name: &str) -> Vec<usize> {
+        self.get_list_f64(name).into_iter().map(|x| x as usize).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_defaults() {
+        let p = Args::new("t", "test")
+            .flag("size", "8", "message size")
+            .switch("verbose", "chatty")
+            .parse(&argv(&["--size", "64", "pos1"]))
+            .unwrap();
+        assert_eq!(p.get_usize("size"), 64);
+        assert!(!p.get_bool("verbose"));
+        assert_eq!(p.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_form_and_switch() {
+        let p = Args::new("t", "test")
+            .flag("ratio", "0.5", "hotspot")
+            .switch("fast", "go fast")
+            .parse(&argv(&["--ratio=0.9", "--fast"]))
+            .unwrap();
+        assert_eq!(p.get_f64("ratio"), 0.9);
+        assert!(p.get_bool("fast"));
+    }
+
+    #[test]
+    fn required_flag_missing() {
+        let e = Args::new("t", "test").flag_req("model", "path").parse(&argv(&[]));
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let e = Args::new("t", "test").parse(&argv(&["--nope", "1"]));
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let p = Args::new("t", "test")
+            .flag("sizes", "1,2,3", "sizes")
+            .parse(&argv(&["--sizes", "16, 32,64"]))
+            .unwrap();
+        assert_eq!(p.get_list_usize("sizes"), vec![16, 32, 64]);
+    }
+}

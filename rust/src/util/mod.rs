@@ -1,0 +1,45 @@
+//! Self-built substrates for crates unavailable in the offline vendor
+//! set (see DESIGN.md §2): PRNG, JSON, CLI parsing, statistics, and a
+//! mini property-testing harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod toml;
+
+/// Byte-size pretty printer used across reports.
+pub fn fmt_bytes(b: u64) -> String {
+    const KB: u64 = 1 << 10;
+    const MB: u64 = 1 << 20;
+    const GB: u64 = 1 << 30;
+    if b >= GB && b % GB == 0 {
+        format!("{} GB", b / GB)
+    } else if b >= MB && b % MB == 0 {
+        format!("{} MB", b / MB)
+    } else if b >= KB && b % KB == 0 {
+        format!("{} KB", b / KB)
+    } else {
+        format!("{b} B")
+    }
+}
+
+pub const KB: u64 = 1 << 10;
+pub const MB: u64 = 1 << 20;
+pub const GB: u64 = 1 << 30;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2 * KB), "2 KB");
+        assert_eq!(fmt_bytes(64 * MB), "64 MB");
+        assert_eq!(fmt_bytes(3 * GB), "3 GB");
+        assert_eq!(fmt_bytes(MB + 1), format!("{} B", MB + 1));
+    }
+}

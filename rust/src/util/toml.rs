@@ -1,0 +1,208 @@
+//! Minimal TOML-subset parser (no `toml` crate in the offline vendor
+//! set). Supports what the config system needs: `[section]` tables,
+//! `key = value` with string / integer / float / boolean values, `#`
+//! comments, and bare or quoted keys. Arrays and nested tables are
+//! intentionally out of scope — configs here are flat two-level.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(x) if *x >= 0 => Some(*x as usize),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// section → key → value; top-level keys live under the "" section.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for TomlError {}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(ln, "unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err(ln, "empty section name"));
+                }
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| err(ln, "expected `key = value`"))?;
+            let key = key.trim().trim_matches('"').to_string();
+            if key.is_empty() {
+                return Err(err(ln, "empty key"));
+            }
+            let value = parse_value(value.trim()).map_err(|m| err(ln, &m))?;
+            doc.sections.entry(section.clone()).or_default().insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key)?.as_f64()
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
+        self.get(section, key)?.as_usize()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key)?.as_bool()
+    }
+}
+
+fn err(ln: usize, msg: &str) -> TomlError {
+    TomlError { line: ln + 1, msg: msg.to_string() }
+}
+
+/// Remove a trailing comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue, String> {
+    if v.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(body) = v.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(body.to_string()));
+    }
+    match v {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = v.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{v}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+            # cluster shape
+            name = "paper"
+            [topology]
+            nodes = 2
+            gpus_per_node = 4   # comment after value
+            nvlink_gbps = 120.0
+            nvswitch = false
+            [planner]
+            lambda = 0.25
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("paper"));
+        assert_eq!(doc.get_usize("topology", "nodes"), Some(2));
+        assert_eq!(doc.get_f64("topology", "nvlink_gbps"), Some(120.0));
+        assert_eq!(doc.get_bool("topology", "nvswitch"), Some(false));
+        assert_eq!(doc.get_f64("planner", "lambda"), Some(0.25));
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let doc = TomlDoc::parse("x = 3").unwrap();
+        assert_eq!(doc.get_f64("", "x"), Some(3.0));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = TomlDoc::parse("bytes = 1_048_576").unwrap();
+        assert_eq!(doc.get_usize("", "bytes"), Some(1 << 20));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = TomlDoc::parse(r##"tag = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc.get("", "tag").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("k = \n").is_err());
+    }
+}

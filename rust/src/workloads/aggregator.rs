@@ -1,0 +1,48 @@
+//! Sparse many-to-few aggregator traffic (paper §III-A-b): numerous
+//! sources funnel into a small set of aggregation destinations —
+//! parameter servers, distributed reductions, telemetry sinks.
+
+use crate::planner::Demand;
+use crate::topology::Topology;
+
+/// Every non-aggregator rank sends `bytes` to each of the
+/// `aggregators` (round-robin weighted if `weights` given).
+pub fn many_to_few(topo: &Topology, aggregators: &[usize], bytes: f64) -> Vec<Demand> {
+    let n = topo.num_gpus();
+    let mut out = Vec::new();
+    for s in 0..n {
+        if aggregators.contains(&s) {
+            continue;
+        }
+        for &a in aggregators {
+            out.push(Demand::new(s, a, bytes / aggregators.len() as f64));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregators_receive_everything() {
+        let t = Topology::paper();
+        let d = many_to_few(&t, &[0, 4], 2e6);
+        // 6 senders × 2e6 total each
+        let total: f64 = d.iter().map(|x| x.bytes).sum();
+        assert!((total - 12e6).abs() < 1e-3);
+        for dm in &d {
+            assert!(dm.dst == 0 || dm.dst == 4);
+            assert!(dm.src != 0 && dm.src != 4);
+        }
+    }
+
+    #[test]
+    fn single_aggregator_pure_incast() {
+        let t = Topology::paper();
+        let d = many_to_few(&t, &[3], 1e6);
+        assert_eq!(d.len(), 7);
+        assert!(d.iter().all(|x| x.dst == 3));
+    }
+}

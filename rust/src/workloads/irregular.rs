@@ -1,0 +1,67 @@
+//! Irregular point-to-point traffic (paper §III-A-d): graph/sparse
+//! workloads whose per-pair volumes follow a heavy-tailed (Zipf)
+//! distribution over randomly drawn communicating pairs.
+
+use crate::planner::Demand;
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+
+/// Draw `pairs` distinct (src,dst) pairs; pair ranks get Zipf(s)
+/// weights scaled so the total volume is `total_bytes`.
+pub fn powerlaw_pairs(
+    topo: &Topology,
+    pairs: usize,
+    zipf_s: f64,
+    total_bytes: f64,
+    rng: &mut Rng,
+) -> Vec<Demand> {
+    let n = topo.num_gpus();
+    assert!(pairs <= n * (n - 1), "more pairs than the topology has");
+    let mut chosen = Vec::with_capacity(pairs);
+    let mut seen = std::collections::BTreeSet::new();
+    while chosen.len() < pairs {
+        let s = rng.below(n as u64) as usize;
+        let d = rng.below(n as u64) as usize;
+        if s != d && seen.insert((s, d)) {
+            chosen.push((s, d));
+        }
+    }
+    // Zipf weights over pair ranks
+    let weights: Vec<f64> =
+        (0..pairs).map(|r| 1.0 / ((r + 1) as f64).powf(zipf_s)).collect();
+    let wsum: f64 = weights.iter().sum();
+    chosen
+        .into_iter()
+        .zip(weights)
+        .map(|((s, d), w)| Demand::new(s, d, total_bytes * w / wsum))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn volume_conserved_and_skewed() {
+        let t = Topology::paper();
+        let mut rng = Rng::new(3);
+        let d = powerlaw_pairs(&t, 20, 1.4, 1e9, &mut rng);
+        assert_eq!(d.len(), 20);
+        let total: f64 = d.iter().map(|x| x.bytes).sum();
+        assert!((total - 1e9).abs() < 1.0);
+        // first (rank-0) pair dominates the last
+        assert!(d[0].bytes > d[19].bytes * 10.0);
+    }
+
+    #[test]
+    fn pairs_are_distinct_and_valid() {
+        let t = Topology::paper();
+        let mut rng = Rng::new(11);
+        let d = powerlaw_pairs(&t, 30, 1.0, 1e6, &mut rng);
+        let mut set = std::collections::BTreeSet::new();
+        for dm in &d {
+            assert_ne!(dm.src, dm.dst);
+            assert!(set.insert((dm.src, dm.dst)));
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Workload generators for the imbalance patterns the paper
+//! classifies in §III-A: skewed All-to-Allv (a), many-to-few
+//! aggregation (b), stencil neighbor exchange with boundary hotspots
+//! (c), and irregular point-to-point (d), plus the MoE token-routing
+//! traffic used in §V-D.
+
+pub mod aggregator;
+pub mod irregular;
+pub mod moe_traffic;
+pub mod skew;
+pub mod stencil;
+
+pub use skew::hotspot_alltoallv;

@@ -1,0 +1,205 @@
+//! MoE expert-parallel token routing traffic (paper §V-D / Fig 8).
+//!
+//! Two-node, eight-GPU EP: one expert per GPU, tokens of dimension
+//! `d_model` in bf16 (2 bytes/element). Gating sends a `hotspot_ratio`
+//! fraction of every rank's tokens to the hot expert, the rest spread
+//! evenly — the inference-time drift the paper motivates with
+//! DeepSeek/Qwen deployments. Dispatch is the forward All-to-Allv;
+//! combine is its exact transpose (tokens return to their owners).
+
+use crate::planner::Demand;
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct MoeConfig {
+    /// Total tokens across all ranks per step (paper sweeps 2K..64K).
+    pub global_tokens: usize,
+    /// Token embedding dimension (paper: 4096).
+    pub d_model: usize,
+    /// Bytes per element (bf16 = 2).
+    pub elem_bytes: usize,
+    /// Fraction of each rank's tokens routed to the hot expert.
+    pub hotspot_ratio: f64,
+    /// Hot expert's GPU.
+    pub hot_expert: usize,
+}
+
+impl MoeConfig {
+    pub fn paper(global_tokens: usize, hotspot_ratio: f64) -> MoeConfig {
+        MoeConfig {
+            global_tokens,
+            d_model: 4096,
+            elem_bytes: 2,
+            hotspot_ratio,
+            hot_expert: 4,
+        }
+    }
+
+    pub fn token_bytes(&self) -> f64 {
+        (self.d_model * self.elem_bytes) as f64
+    }
+}
+
+/// Per-(src,dst) token counts for the dispatch phase.
+/// `counts[s][d]` = tokens rank `s` sends to expert on GPU `d`
+/// (self-routed tokens stay local — no demand).
+pub fn routing_matrix(topo: &Topology, cfg: &MoeConfig) -> Vec<Vec<f64>> {
+    let n = topo.num_gpus();
+    let per_rank = cfg.global_tokens as f64 / n as f64;
+    let mut m = vec![vec![0.0; n]; n];
+    for s in 0..n {
+        if s == cfg.hot_expert {
+            // hot rank's own tokens spread evenly over all experts
+            for d in 0..n {
+                m[s][d] = per_rank / n as f64;
+            }
+        } else {
+            let hot = per_rank * cfg.hotspot_ratio;
+            let rest = (per_rank - hot) / (n - 1) as f64;
+            for d in 0..n {
+                m[s][d] = if d == cfg.hot_expert { hot + rest * 0.0 } else { rest };
+            }
+            // tokens for the local expert included in `rest` (d == s)
+        }
+    }
+    m
+}
+
+/// Dispatch demands (tokens × token_bytes), excluding local traffic.
+pub fn dispatch_demands(topo: &Topology, cfg: &MoeConfig) -> Vec<Demand> {
+    let m = routing_matrix(topo, cfg);
+    matrix_to_demands(&m, cfg.token_bytes())
+}
+
+/// Combine demands: the transpose of dispatch (experts return results
+/// to token owners; same volume per token in this FFN setting).
+pub fn combine_demands(topo: &Topology, cfg: &MoeConfig) -> Vec<Demand> {
+    let m = routing_matrix(topo, cfg);
+    let n = m.len();
+    let mut t = vec![vec![0.0; n]; n];
+    for s in 0..n {
+        for d in 0..n {
+            t[d][s] = m[s][d];
+        }
+    }
+    matrix_to_demands(&t, cfg.token_bytes())
+}
+
+fn matrix_to_demands(m: &[Vec<f64>], token_bytes: f64) -> Vec<Demand> {
+    let mut out = Vec::new();
+    for (s, row) in m.iter().enumerate() {
+        for (d, &tok) in row.iter().enumerate() {
+            if s != d && tok > 0.0 {
+                out.push(Demand::new(s, d, tok * token_bytes));
+            }
+        }
+    }
+    out
+}
+
+/// Tokens each expert must process (incl. locally routed ones) — the
+/// compute-phase input sizes for the FFN.
+pub fn expert_token_counts(topo: &Topology, cfg: &MoeConfig) -> Vec<f64> {
+    let m = routing_matrix(topo, cfg);
+    let n = m.len();
+    (0..n).map(|d| (0..n).map(|s| m[s][d]).sum()).collect()
+}
+
+/// Stochastic gating variant: multinomial token draws instead of exact
+/// fractions (soak/property tests).
+pub fn routing_matrix_sampled(
+    topo: &Topology,
+    cfg: &MoeConfig,
+    rng: &mut Rng,
+) -> Vec<Vec<f64>> {
+    let n = topo.num_gpus();
+    let per_rank = cfg.global_tokens / n;
+    let mut m = vec![vec![0.0; n]; n];
+    for s in 0..n {
+        for _ in 0..per_rank {
+            let d = if s != cfg.hot_expert && rng.bool(cfg.hotspot_ratio) {
+                cfg.hot_expert
+            } else {
+                rng.below(n as u64) as usize
+            };
+            m[s][d] += 1.0;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_conservation() {
+        let t = Topology::paper();
+        let cfg = MoeConfig::paper(16_384, 0.7);
+        let m = routing_matrix(&t, &cfg);
+        let total: f64 = m.iter().flatten().sum();
+        assert!((total - 16_384.0).abs() < 1e-6);
+        let per_expert = expert_token_counts(&t, &cfg);
+        let total2: f64 = per_expert.iter().sum();
+        assert!((total2 - 16_384.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hot_expert_dominates() {
+        let t = Topology::paper();
+        let cfg = MoeConfig::paper(16_384, 0.9);
+        let counts = expert_token_counts(&t, &cfg);
+        let hot = counts[cfg.hot_expert];
+        let cold_max = counts
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != cfg.hot_expert)
+            .map(|(_, &c)| c)
+            .fold(0.0, f64::max);
+        assert!(hot > cold_max * 5.0, "hot={hot} cold_max={cold_max}");
+    }
+
+    #[test]
+    fn combine_is_transpose_of_dispatch() {
+        let t = Topology::paper();
+        let cfg = MoeConfig::paper(8192, 0.6);
+        let disp = dispatch_demands(&t, &cfg);
+        let comb = combine_demands(&t, &cfg);
+        let find = |v: &[Demand], s: usize, d: usize| {
+            v.iter().find(|x| x.src == s && x.dst == d).map(|x| x.bytes).unwrap_or(0.0)
+        };
+        for s in 0..8 {
+            for d in 0..8 {
+                if s != d {
+                    assert!(
+                        (find(&disp, s, d) - find(&comb, d, s)).abs() < 1e-6,
+                        "transpose mismatch at ({s},{d})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_scale_with_d_model() {
+        let t = Topology::paper();
+        let mut cfg = MoeConfig::paper(4096, 0.5);
+        let d1: f64 = dispatch_demands(&t, &cfg).iter().map(|x| x.bytes).sum();
+        cfg.d_model *= 2;
+        let d2: f64 = dispatch_demands(&t, &cfg).iter().map(|x| x.bytes).sum();
+        assert!((d2 / d1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampled_matrix_is_close_to_exact() {
+        let t = Topology::paper();
+        let cfg = MoeConfig::paper(65_536, 0.8);
+        let mut rng = Rng::new(5);
+        let m = routing_matrix_sampled(&t, &cfg, &mut rng);
+        let hot_in: f64 = (0..8).map(|s| m[s][cfg.hot_expert]).sum();
+        let total: f64 = m.iter().flatten().sum();
+        // hot share ≈ 7/8·0.8 + small uniform residue
+        assert!((hot_in / total - 0.72).abs() < 0.06, "share={}", hot_in / total);
+    }
+}

@@ -1,0 +1,130 @@
+//! Skewed All-to-Allv generator (paper §V-C / Fig 7): "each GPU
+//! directs a fixed fraction of its payload to a designated hot peer,
+//! while the remaining payload is spread across the other peers."
+
+use crate::planner::Demand;
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+
+/// Every rank sends `payload_bytes` total; `hotspot_ratio` of it goes
+/// to `hot_dst`, the rest evenly to all other peers. The hot rank
+/// itself spreads uniformly (it has no hot peer other than itself).
+pub fn hotspot_alltoallv(
+    topo: &Topology,
+    payload_bytes: f64,
+    hotspot_ratio: f64,
+    hot_dst: usize,
+) -> Vec<Demand> {
+    assert!((0.0..=1.0).contains(&hotspot_ratio));
+    let n = topo.num_gpus();
+    let mut out = Vec::new();
+    for s in 0..n {
+        if s == hot_dst {
+            // uniform spread from the hot rank
+            let per = payload_bytes / (n - 1) as f64;
+            for d in 0..n {
+                if d != s {
+                    out.push(Demand::new(s, d, per));
+                }
+            }
+            continue;
+        }
+        let hot_bytes = payload_bytes * hotspot_ratio;
+        let rest = (payload_bytes - hot_bytes) / (n - 2).max(1) as f64;
+        for d in 0..n {
+            if d == s {
+                continue;
+            }
+            let b = if d == hot_dst { hot_bytes } else { rest };
+            if b > 0.0 {
+                out.push(Demand::new(s, d, b));
+            }
+        }
+    }
+    out
+}
+
+/// Randomized variant: hot destination and per-rank payload jitter are
+/// drawn from `rng` (used by the property suite and soak tests).
+pub fn hotspot_alltoallv_jittered(
+    topo: &Topology,
+    payload_bytes: f64,
+    hotspot_ratio: f64,
+    rng: &mut Rng,
+) -> (usize, Vec<Demand>) {
+    let hot = rng.below(topo.num_gpus() as u64) as usize;
+    let mut demands = hotspot_alltoallv(topo, payload_bytes, hotspot_ratio, hot);
+    for d in demands.iter_mut() {
+        d.bytes *= rng.range_f64(0.9, 1.1);
+    }
+    (hot, demands)
+}
+
+/// The uniform (hotspot_ratio = 1/(n-1)) All-to-All used for the
+/// balanced-parity experiments.
+pub fn uniform_alltoall(topo: &Topology, payload_bytes: f64) -> Vec<Demand> {
+    let n = topo.num_gpus();
+    let per = payload_bytes / (n - 1) as f64;
+    let mut out = Vec::new();
+    for s in 0..n {
+        for d in 0..n {
+            if s != d {
+                out.push(Demand::new(s, d, per));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_hot_fraction() {
+        let t = Topology::paper();
+        let payload = 1e8;
+        let demands = hotspot_alltoallv(&t, payload, 0.7, 4);
+        // every rank sends exactly `payload`
+        for s in 0..8 {
+            let sent: f64 =
+                demands.iter().filter(|d| d.src == s).map(|d| d.bytes).sum();
+            assert!((sent - payload).abs() < 1e-3, "rank {s} sent {sent}");
+        }
+        // hot destination receives 7·0.7·payload + its own spread... no:
+        // 7 non-hot ranks each send 0.7·payload to it
+        let hot_in: f64 =
+            demands.iter().filter(|d| d.dst == 4).map(|d| d.bytes).sum();
+        assert!((hot_in - 7.0 * 0.7 * payload).abs() < 1e-3);
+    }
+
+    #[test]
+    fn uniform_case_is_balanced() {
+        let t = Topology::paper();
+        let demands = uniform_alltoall(&t, 7e7);
+        for d in 0..8 {
+            let rx: f64 = demands.iter().filter(|x| x.dst == d).map(|x| x.bytes).sum();
+            assert!((rx - 7e7).abs() < 1e-3);
+        }
+        assert_eq!(demands.len(), 8 * 7);
+    }
+
+    #[test]
+    fn ratio_one_sends_everything_to_hot() {
+        let t = Topology::paper();
+        let demands = hotspot_alltoallv(&t, 1e6, 1.0, 0);
+        for d in demands.iter().filter(|d| d.src != 0) {
+            assert_eq!(d.dst, 0, "all non-hot traffic must target the hotspot");
+        }
+    }
+
+    #[test]
+    fn jittered_conserves_roughly() {
+        let t = Topology::paper();
+        let mut rng = Rng::new(7);
+        let (hot, demands) = hotspot_alltoallv_jittered(&t, 1e8, 0.5, &mut rng);
+        assert!(hot < 8);
+        let total: f64 = demands.iter().map(|d| d.bytes).sum();
+        assert!((total / 8e8 - 1.0).abs() < 0.1);
+    }
+}

@@ -1,0 +1,75 @@
+//! 1-D stencil neighbor exchange (paper Table I's workload, §III-A-c).
+//!
+//! Rank i exchanges halos with ranks i−1 and i+1. With an optional
+//! boundary hotspot factor, edge ranks carry heavier halos — the
+//! "boundary hotspot" pattern of adaptive mesh refinement.
+
+use crate::planner::Demand;
+use crate::topology::Topology;
+
+/// Plain 1-D stencil: every adjacent rank pair exchanges `halo_bytes`
+/// in both directions (open chain, no wraparound).
+pub fn stencil_1d(topo: &Topology, halo_bytes: f64) -> Vec<Demand> {
+    let n = topo.num_gpus();
+    let mut out = Vec::new();
+    for i in 0..n.saturating_sub(1) {
+        out.push(Demand::new(i, i + 1, halo_bytes));
+        out.push(Demand::new(i + 1, i, halo_bytes));
+    }
+    out
+}
+
+/// Boundary-hotspot stencil: ranks in the middle third exchange
+/// `hot_factor ×` heavier halos (refined region).
+pub fn stencil_1d_hotspot(topo: &Topology, halo_bytes: f64, hot_factor: f64) -> Vec<Demand> {
+    let n = topo.num_gpus();
+    let (lo, hi) = (n / 3, 2 * n / 3);
+    let mut out = Vec::new();
+    for i in 0..n.saturating_sub(1) {
+        let hot = i >= lo && i < hi;
+        let b = if hot { halo_bytes * hot_factor } else { halo_bytes };
+        out.push(Demand::new(i, i + 1, b));
+        out.push(Demand::new(i + 1, i, b));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_structure() {
+        let t = Topology::paper();
+        let d = stencil_1d(&t, 1e6);
+        assert_eq!(d.len(), 14); // 7 adjacent pairs × 2 directions
+        for dm in &d {
+            assert_eq!((dm.src as i64 - dm.dst as i64).abs(), 1);
+        }
+    }
+
+    #[test]
+    fn only_one_cross_node_pair() {
+        let t = Topology::paper();
+        let d = stencil_1d(&t, 1e6);
+        let cross = d.iter().filter(|dm| !t.same_node(dm.src, dm.dst)).count();
+        assert_eq!(cross, 2); // 3↔4 both directions
+    }
+
+    #[test]
+    fn hotspot_inflates_middle() {
+        let t = Topology::paper();
+        let d = stencil_1d_hotspot(&t, 1e6, 4.0);
+        let mid: f64 = d
+            .iter()
+            .filter(|dm| dm.src.min(dm.dst) == 3)
+            .map(|dm| dm.bytes)
+            .sum();
+        let edge: f64 = d
+            .iter()
+            .filter(|dm| dm.src.min(dm.dst) == 0)
+            .map(|dm| dm.bytes)
+            .sum();
+        assert!((mid / edge - 4.0).abs() < 1e-9);
+    }
+}

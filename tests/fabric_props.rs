@@ -1,0 +1,169 @@
+//! Property suite over the fabric simulators: conservation, capacity
+//! respect, and monotonicity invariants that must hold for ANY random
+//! flow set — these are the physics the whole evaluation rests on.
+
+use nimble::fabric::fluid::{Flow, FluidSim};
+use nimble::fabric::pipeline::PipelineModel;
+use nimble::fabric::{FabricParams, XferMode};
+use nimble::prop_assert;
+use nimble::topology::path::candidates;
+use nimble::topology::Topology;
+use nimble::util::quickcheck::{check_seeded, Gen};
+use nimble::util::rng::Rng;
+
+const MB: f64 = 1024.0 * 1024.0;
+
+fn random_flows(g: &mut Gen, topo: &Topology, max_flows: usize) -> Vec<Flow> {
+    let n = g.usize(1, max_flows);
+    let mut rng = Rng::new(g.u64(0, u64::MAX - 1));
+    (0..n)
+        .map(|_| {
+            let s = rng.below(topo.num_gpus() as u64) as usize;
+            let mut d = rng.below(topo.num_gpus() as u64) as usize;
+            if d == s {
+                d = (d + 1) % topo.num_gpus();
+            }
+            let cands = candidates(topo, s, d, true);
+            let path = rng.choose(&cands).clone();
+            let bytes = g.size_log((64 * 1024) as u64, (256 * 1024 * 1024) as u64) as f64;
+            let mode = if g.bool() { XferMode::Kernel } else { XferMode::CopyEngine };
+            Flow::new(path, bytes).with_mode(mode).at(g.f64(0.0, 2e-3))
+        })
+        .collect()
+}
+
+/// Byte conservation: each flow deposits exactly `bytes` on every hop
+/// of its path, nothing more, nothing less, anywhere.
+#[test]
+fn prop_fluid_conserves_bytes_per_link() {
+    let topo = Topology::paper();
+    let sim = FluidSim::new(&topo, FabricParams::default());
+    check_seeded(0xFAB1, 40, |g| {
+        let flows = random_flows(g, &topo, 24);
+        let r = sim.run(&flows);
+        let mut expect = vec![0.0f64; topo.links.len()];
+        for f in &flows {
+            for &h in &f.path.hops {
+                expect[h] += f.bytes;
+            }
+        }
+        for (i, (&got, &want)) in r.link_bytes.iter().zip(&expect).enumerate() {
+            prop_assert!(
+                (got - want).abs() <= want.max(1.0) * 1e-6 + 16.0,
+                "link {i}: carried {got}, expected {want}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// No link ever runs above capacity: utilization ≤ 1 over the run.
+#[test]
+fn prop_fluid_respects_link_capacity() {
+    let topo = Topology::paper();
+    let sim = FluidSim::new(&topo, FabricParams::default());
+    check_seeded(0xFAB2, 40, |g| {
+        let flows = random_flows(g, &topo, 24);
+        let r = sim.run(&flows);
+        for (link, util) in r.link_utilization(&topo) {
+            prop_assert!(util <= 1.0 + 1e-6, "link {link} ran at {util}");
+        }
+        Ok(())
+    });
+}
+
+/// Every flow finishes, after its start, and the makespan is at least
+/// the naive single-flow lower bound of the largest transfer.
+#[test]
+fn prop_fluid_flows_all_finish_sanely() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    let sim = FluidSim::new(&topo, params.clone());
+    check_seeded(0xFAB3, 40, |g| {
+        let flows = random_flows(g, &topo, 16);
+        let r = sim.run(&flows);
+        for (i, fr) in r.flows.iter().enumerate() {
+            prop_assert!(fr.finish_t.is_finite(), "flow {i} never finished");
+            prop_assert!(fr.finish_t >= fr.start_t, "flow {i} finished before start");
+            // can't beat its own unshared rate ceiling
+            let cap =
+                params.flow_rate_cap_gbps(&topo, &flows[i].path, flows[i].bytes) * 1e9;
+            let min_duration = flows[i].bytes / cap;
+            prop_assert!(
+                fr.finish_t - fr.start_t >= min_duration * (1.0 - 1e-9),
+                "flow {i} ran faster than its rate cap"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Fluid monotonicity: adding a competing flow never speeds up the
+/// original one.
+#[test]
+fn prop_fluid_contention_is_monotone() {
+    let topo = Topology::paper();
+    let sim = FluidSim::new(&topo, FabricParams::default());
+    check_seeded(0xFAB4, 30, |g| {
+        let base = random_flows(g, &topo, 8);
+        let extra = random_flows(g, &topo, 4);
+        let r1 = sim.run(&base);
+        let mut all = base.clone();
+        all.extend(extra);
+        let r2 = sim.run(&all);
+        for i in 0..base.len() {
+            prop_assert!(
+                r2.flows[i].finish_t >= r1.flows[i].finish_t - 1e-9,
+                "flow {i} got faster with MORE contention: {} vs {}",
+                r1.flows[i].finish_t,
+                r2.flows[i].finish_t
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Pipeline monotonicity: more bytes never finish earlier; more
+/// credits never finish later.
+#[test]
+fn prop_pipeline_monotone_in_bytes_and_credits() {
+    let topo = Topology::paper();
+    check_seeded(0xFAB5, 40, |g| {
+        let cands = candidates(&topo, 1, 6, true);
+        let path = g.pick(&cands).clone();
+        let b1 = g.f64(1.0, 64.0) * MB;
+        let b2 = b1 * g.f64(1.1, 4.0);
+        let m = PipelineModel::new(&topo, FabricParams::default());
+        let t1 = m.transfer(&path, b1, XferMode::Kernel).finish_s;
+        let t2 = m.transfer(&path, b2, XferMode::Kernel).finish_s;
+        prop_assert!(t2 >= t1, "more bytes finished earlier: {t1} vs {t2}");
+
+        let mut small = FabricParams::default();
+        small.p2p_buf_bytes = small.chunk_bytes * g.f64(1.0, 3.0);
+        let m_small = PipelineModel::new(&topo, small);
+        let t_small = m_small.transfer(&path, b2, XferMode::Kernel).finish_s;
+        prop_assert!(
+            t_small >= t2 - 1e-12,
+            "fewer credits finished earlier: {t2} vs {t_small}"
+        );
+        Ok(())
+    });
+}
+
+/// Determinism: identical inputs give bit-identical results (the
+/// paper's "preserving ordering, determinism" claim at the sim layer).
+#[test]
+fn prop_simulators_deterministic() {
+    let topo = Topology::paper();
+    let sim = FluidSim::new(&topo, FabricParams::default());
+    check_seeded(0xFAB6, 20, |g| {
+        let flows = random_flows(g, &topo, 12);
+        let a = sim.run(&flows);
+        let b = sim.run(&flows);
+        prop_assert!(a.makespan == b.makespan, "nondeterministic makespan");
+        for (x, y) in a.flows.iter().zip(&b.flows) {
+            prop_assert!(x.finish_t == y.finish_t, "nondeterministic finish");
+        }
+        Ok(())
+    });
+}

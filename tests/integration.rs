@@ -1,0 +1,213 @@
+//! Cross-module integration + property tests: planner ↔ fabric ↔
+//! coordinator invariants over randomized workloads, fluid ↔ pipeline
+//! model agreement, and bound checks against Dinic max-flow.
+
+use nimble::baselines::{run_round, MpiLike, NcclLike, Router, SinglePath};
+use nimble::coordinator::{NimbleRouter, Orchestrator};
+use nimble::fabric::fluid::{Flow, FluidSim};
+use nimble::fabric::pipeline::PipelineModel;
+use nimble::fabric::{FabricParams, XferMode};
+use nimble::planner::maxflow::max_rate_to_destination;
+use nimble::planner::{lower_bound_norm_load, Demand, Planner, PlannerCfg};
+use nimble::prop_assert;
+use nimble::topology::path::candidates;
+use nimble::topology::Topology;
+use nimble::util::quickcheck::{check_seeded, Gen};
+use nimble::util::rng::Rng;
+use nimble::workloads::skew::hotspot_alltoallv_jittered;
+
+const MB: f64 = 1024.0 * 1024.0;
+
+/// Random demand set generator over the paper topology.
+fn random_demands(g: &mut Gen, topo: &Topology) -> Vec<Demand> {
+    let n = g.usize(1, 20);
+    let mut rng = Rng::new(g.u64(0, u64::MAX - 1));
+    (0..n)
+        .map(|_| {
+            let s = rng.below(topo.num_gpus() as u64) as usize;
+            let mut d = rng.below(topo.num_gpus() as u64) as usize;
+            if d == s {
+                d = (d + 1) % topo.num_gpus();
+            }
+            Demand::new(s, d, g.size_log(64 * 1024, 512 * 1024 * 1024) as f64)
+        })
+        .collect()
+}
+
+/// Property: every plan over random demand sets validates (demand
+/// conservation, path validity, consistent link loads) and respects
+/// the analytic lower bound.
+#[test]
+fn prop_plans_always_valid_and_bounded() {
+    let topo = Topology::paper();
+    check_seeded(0xA11D, 60, |g| {
+        let demands = random_demands(g, &topo);
+        let mut planner = Planner::new(&topo, PlannerCfg::default());
+        let plan = planner.plan(&demands);
+        plan.validate(&topo, &demands).map_err(|e| e)?;
+        let z = plan.max_norm_load(&topo);
+        let lb = lower_bound_norm_load(&topo, &demands);
+        prop_assert!(z >= lb - 1e-9, "plan beat the lower bound: z={z} lb={lb}");
+        prop_assert!(z <= lb * 3.0 + 1e-3, "plan too far from bound: z={z} lb={lb}");
+        Ok(())
+    });
+}
+
+/// Property: NIMBLE never loses to the single-path baseline by more
+/// than simulator noise, on any random hotspot workload.
+#[test]
+fn prop_nimble_never_regresses_vs_single_path() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    check_seeded(77, 20, |g| {
+        let ratio = g.f64(0.125, 0.95);
+        let payload = g.f64(4.0, 128.0) * MB;
+        let mut rng = Rng::new(g.u64(0, u64::MAX - 1));
+        let (_, demands) = hotspot_alltoallv_jittered(&topo, payload, ratio, &mut rng);
+        let base = run_round(&topo, &params, &mut SinglePath::new(), &demands);
+        let nim =
+            run_round(&topo, &params, &mut NimbleRouter::default_for(&topo), &demands);
+        // NIMBLE may give back a few % in endpoint-bound moderate-skew
+        // cases (the paper's own "enable rule" §V-D recommends the
+        // baseline for mild skew); it must never collapse.
+        prop_assert!(
+            nim.makespan_s <= base.makespan_s * 1.12,
+            "regression at ratio {ratio:.2}, payload {:.0} MB: {} vs {}",
+            payload / MB,
+            nim.makespan_s,
+            base.makespan_s
+        );
+        Ok(())
+    });
+}
+
+/// Property: the goodput any engine achieves toward a single hot
+/// destination never exceeds the Dinic max-flow ceiling.
+#[test]
+fn prop_goodput_within_maxflow_ceiling() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    check_seeded(99, 12, |g| {
+        let hot = g.usize(0, topo.num_gpus() - 1);
+        let payload = g.f64(32.0, 256.0) * MB;
+        let sources: Vec<usize> =
+            (0..topo.num_gpus()).filter(|&s| s != hot).collect();
+        let demands: Vec<Demand> =
+            sources.iter().map(|&s| Demand::new(s, hot, payload)).collect();
+        let ceiling_gbps = max_rate_to_destination(&topo, &sources, hot);
+        for router in [
+            &mut NimbleRouter::default_for(&topo) as &mut dyn Router,
+            &mut NcclLike::new(),
+            &mut MpiLike::new(),
+        ] {
+            let rep = run_round(&topo, &params, router, &demands);
+            let goodput = rep.goodput_gbps();
+            prop_assert!(
+                goodput <= ceiling_gbps * 1.01,
+                "{} exceeded max-flow ceiling: {goodput:.1} > {ceiling_gbps:.1} GB/s",
+                rep.engine
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Fluid and chunk-pipeline models agree on single-flow steady state
+/// (same bottleneck physics, independent implementations).
+#[test]
+fn fluid_and_pipeline_models_agree() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    let fluid = FluidSim::new(&topo, params.clone());
+    let pipe = PipelineModel::new(&topo, params.clone());
+    for (s, d) in [(0usize, 1usize), (0, 4), (1, 6)] {
+        for path in candidates(&topo, s, d, true) {
+            let bytes = 256.0 * MB;
+            let f = fluid.run(&[Flow::new(path.clone(), bytes)]);
+            let bw_fluid = bytes / f.makespan / 1e9;
+            let bw_pipe = pipe.bandwidth_gbps(&path, bytes, XferMode::Kernel);
+            let ratio = bw_pipe / bw_fluid;
+            assert!(
+                (0.8..1.25).contains(&ratio),
+                "models disagree on {:?}: fluid {bw_fluid:.1} vs pipe {bw_pipe:.1}",
+                path.kind
+            );
+        }
+    }
+}
+
+/// Multi-round adaptive soak: orchestrator handles 20 rounds of
+/// shifting hotspots without violating ordering/channel invariants,
+/// and its makespans stay within the static planner's ballpark.
+#[test]
+fn adaptive_soak_over_shifting_hotspots() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    let mut orch = Orchestrator::new(&topo, params.clone());
+    let mut rng = Rng::new(2026);
+    let mut buffers = Vec::new();
+    for round in 0..20 {
+        let (_, demands) =
+            hotspot_alltoallv_jittered(&topo, 48.0 * MB, 0.5 + 0.4 * rng.f64(), &mut rng);
+        let out = orch.run_round(&demands);
+        assert!(out.report.makespan_s > 0.0, "round {round} produced nothing");
+        buffers.push(out.channel_buffer_bytes);
+    }
+    // staging memory must plateau (peer-exclusive channels)
+    let last = *buffers.last().unwrap();
+    assert_eq!(buffers[buffers.len() - 2], last);
+    assert_eq!(buffers[buffers.len() - 5], last);
+}
+
+/// The monitor-driven adaptive path beats cold planning when a
+/// persistent background flow occupies the direct link.
+#[test]
+fn adaptation_beats_cold_planning_under_background_load() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    // background: a permanent (2→1) stream loading nvlink(2,1); the
+    // (0→1) pair's best 2-hop detour via 2 is then worse than via 3.
+    let bg_link = topo.nvlink(2, 1).unwrap();
+    let mut router = NimbleRouter::adaptive_for(&topo);
+    let mut bg = vec![0.0; topo.links.len()];
+    bg[bg_link] = 2e9;
+    for _ in 0..6 {
+        router.monitor.observe(&bg);
+    }
+    let demands = vec![Demand::new(0, 1, 256.0 * MB)];
+    let flows = router.route(&topo, &demands);
+    let via2: f64 = flows
+        .iter()
+        .filter(|(p, _)| p.hops.contains(&bg_link))
+        .map(|(_, b)| b)
+        .sum();
+    let via3: f64 = flows
+        .iter()
+        .filter(|(p, _)| {
+            matches!(p.kind, nimble::topology::PathKind::IntraTwoHop { via: 3 })
+        })
+        .map(|(_, b)| b)
+        .sum();
+    assert!(
+        via3 > via2,
+        "adaptive plan should prefer the unloaded relay: via3={via3} via2={via2}"
+    );
+}
+
+/// Balanced-parity integration check across all engines (paper
+/// abstract: "matching baseline performance under balanced traffic").
+#[test]
+fn balanced_alltoall_parity_all_engines() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    let demands = nimble::workloads::skew::uniform_alltoall(&topo, 56.0 * MB);
+    let nccl = run_round(&topo, &params, &mut NcclLike::new(), &demands).makespan_s;
+    let nim =
+        run_round(&topo, &params, &mut NimbleRouter::default_for(&topo), &demands)
+            .makespan_s;
+    let ratio = nccl / nim;
+    assert!(
+        (0.95..1.35).contains(&ratio),
+        "balanced parity violated: nimble {ratio:.3}× vs nccl"
+    );
+}
