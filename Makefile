@@ -1,0 +1,30 @@
+# NIMBLE reproduction — convenience targets.
+#
+# `make artifacts` needs a Python with jax installed (build-time only;
+# nothing on the rust execution path imports Python). `make test` tries
+# to build the artifacts first but tolerates their absence — the
+# artifact-dependent tests skip cleanly.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: all build test bench artifacts clean
+
+all: build
+
+build:
+	$(CARGO) build --release --all-targets
+
+test:
+	-$(MAKE) artifacts
+	$(CARGO) build --release && $(CARGO) test -q
+
+bench: build
+	$(CARGO) bench
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out ../artifacts
+
+clean:
+	$(CARGO) clean
+	rm -rf artifacts

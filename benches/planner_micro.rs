@@ -1,6 +1,6 @@
 //! Microbenchmarks of the L3 hot path: Algorithm 1 planning across
 //! workload shapes/sizes, the fluid simulator's rate solver, and the
-//! chunk-pipeline DP. These are the §Perf targets in EXPERIMENTS.md.
+//! chunk-pipeline DP. These are the perf targets of DESIGN.md §4.
 
 use nimble::exp::MB;
 use nimble::fabric::fluid::{Flow, FluidSim};

@@ -1,149 +1,141 @@
-//! End-to-end driver: trains the tiny MoE-transformer LM via the AOT
-//! `train_step` artifact (JAX fwd+bwd+SGD → HLO → PJRT-CPU, executed
-//! from rust) on a synthetic bigram corpus, logging the loss curve —
-//! while NIMBLE simulates the expert-parallel dispatch/combine the
-//! same layers would incur on the paper's 8-GPU cluster, reporting
-//! per-step communication under NCCL vs NIMBLE.
+//! End-to-end driver: runs the AOT expert-FFN artifacts (JAX/Pallas →
+//! HLO text + manifest, executed through the crate's offline
+//! interpreter runtime) — while NIMBLE simulates the expert-parallel
+//! dispatch/combine the same layers would incur on the paper's 8-GPU
+//! cluster, reporting per-step communication under NCCL vs NIMBLE.
 //!
-//! This is the "all layers compose" proof: L1 Pallas kernels (inside
-//! the inference artifacts), L2 JAX training graph, L3 coordinator —
-//! one binary, no Python.
+//! This is the "all layers compose" proof for the offline build: L1/L2
+//! artifact math (manifest-driven FFN) + L3 coordinator — one binary,
+//! no Python on the execution path. The `train_step` artifact
+//! (fwd+bwd+SGD) needs the PJRT-enabled build and is reported, not run.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --offline --example moe_e2e -- --steps 150
+//! make artifacts && cargo run --release --offline --example moe_e2e
 //! ```
 
 use nimble::baselines::NcclLike;
 use nimble::coordinator::NimbleRouter;
 use nimble::fabric::FabricParams;
 use nimble::moe::run_moe_step;
-use nimble::runtime::{ComputeModel, Runtime};
+use nimble::runtime::{ComputeModel, Literal, Runtime};
 use nimble::topology::Topology;
 use nimble::util::cli::Args;
 use nimble::util::rng::Rng;
 use nimble::workloads::moe_traffic::MoeConfig;
 
-fn main() -> anyhow::Result<()> {
+fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::new("moe_e2e", "train the MoE LM through PJRT artifacts")
-        .flag("steps", "150", "training steps")
-        .flag("seed", "42", "init/data seed")
-        .flag("log-every", "10", "loss log cadence")
+    let args = Args::new("moe_e2e", "run the MoE FFN artifacts + EP comm simulation")
+        .flag("seed", "42", "input data seed")
+        .flag("tokens", "16384", "global tokens per EP step (simulation)")
+        .flag("hotspot", "0.8", "gating hotspot ratio (simulation)")
         .parse(&argv)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let steps: usize = args.get_usize("steps");
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        });
     let seed = args.get_u64("seed");
-    let log_every = args.get_usize("log-every").max(1);
+    let tokens = args.get_usize("tokens");
+    let hotspot = args.get_f64("hotspot");
 
-    let mut rt = Runtime::open(Runtime::default_dir())?;
-    let info = rt.artifact_info("train_step");
-    let cfg = info.get("config");
-    let (vocab, seq, batch) = (
-        cfg.get("vocab").as_u64().unwrap() as usize,
-        cfg.get("seq").as_u64().unwrap() as usize,
-        cfg.get("batch").as_u64().unwrap() as usize,
-    );
-    let param_count = cfg.get("param_count").as_u64().unwrap();
-    println!(
-        "model: {} params, vocab {vocab}, seq {seq}, batch {batch} (see manifest.json)",
-        param_count
-    );
-
-    // ---- init params in-rust from the manifest's canonical specs ----
-    let mut rng = Rng::new(seed);
-    let specs: Vec<(String, Vec<usize>)> = info
-        .get("params")
-        .as_arr()
-        .unwrap()
-        .iter()
-        .map(|p| {
-            let name = p.get("name").as_str().unwrap().to_string();
-            let shape: Vec<usize> = p
-                .get("shape")
-                .as_arr()
-                .unwrap()
-                .iter()
-                .map(|x| x.as_u64().unwrap() as usize)
-                .collect();
-            (name, shape)
-        })
-        .collect();
-    let mut params: Vec<xla::Literal> = specs
-        .iter()
-        .map(|(_, shape)| {
-            let n: usize = shape.iter().product();
-            let fan_in = if shape.len() >= 2 { shape[shape.len() - 2] } else { shape[0] };
-            let scale = 1.0 / (fan_in as f64).sqrt();
-            let data: Vec<f32> = (0..n).map(|_| (rng.normal() * scale) as f32).collect();
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            Runtime::literal_f32(&data, &dims).unwrap()
-        })
-        .collect();
-
-    // ---- synthetic bigram corpus (learnable: fixed successor table) ----
-    let table: Vec<i32> = (0..vocab).map(|_| rng.below(vocab as u64) as i32).collect();
-    let make_batch = |rng: &mut Rng| {
-        let mut toks = vec![0i32; batch * seq];
-        let mut tgts = vec![0i32; batch * seq];
-        for b in 0..batch {
-            let mut cur = rng.below(vocab as u64) as i32;
-            for s in 0..seq {
-                toks[b * seq + s] = cur;
-                let nxt = table[cur as usize];
-                tgts[b * seq + s] = nxt;
-                cur = nxt;
-            }
-        }
-        (
-            Runtime::literal_i32(&toks, &[batch as i64, seq as i64]).unwrap(),
-            Runtime::literal_i32(&tgts, &[batch as i64, seq as i64]).unwrap(),
-        )
-    };
-
-    // ---- EP-deployment comm simulation alongside training ----
+    // ---- EP-deployment comm simulation (always available) ----
     let topo = Topology::paper();
     let fp = FabricParams::default();
     let cm = ComputeModel::default();
-    let moe_cfg = MoeConfig::paper(16_384, 0.8);
+    let moe_cfg = MoeConfig::paper(tokens, hotspot);
     let nccl_step = run_moe_step(&topo, &fp, &cm, &mut NcclLike::new(), &moe_cfg);
     let nim_step =
         run_moe_step(&topo, &fp, &cm, &mut NimbleRouter::default_for(&topo), &moe_cfg);
+    println!(
+        "simulated EP step ({} tokens, hotspot {:.2}) on the paper's 8-GPU cluster:"
+        , tokens, hotspot
+    );
+    println!(
+        "  nccl   : dispatch {:.3} ms + compute {:.3} ms + combine {:.3} ms = {:.3} ms",
+        nccl_step.dispatch_s * 1e3,
+        nccl_step.compute_s * 1e3,
+        nccl_step.combine_s * 1e3,
+        nccl_step.total_s() * 1e3
+    );
+    println!(
+        "  nimble : dispatch {:.3} ms + compute {:.3} ms + combine {:.3} ms = {:.3} ms  ({:.2}x)",
+        nim_step.dispatch_s * 1e3,
+        nim_step.compute_s * 1e3,
+        nim_step.combine_s * 1e3,
+        nim_step.total_s() * 1e3,
+        nccl_step.total_s() / nim_step.total_s()
+    );
 
-    // ---- training loop ----
-    println!("\nstep   loss      step-time   (simulated EP comm/step: nccl {:.2} ms → nimble {:.2} ms)",
-        (nccl_step.dispatch_s + nccl_step.combine_s) * 1e3,
-        (nim_step.dispatch_s + nim_step.combine_s) * 1e3);
-    let mut first_loss = None;
-    let mut last_loss = 0.0f32;
-    for step in 0..steps {
-        let (toks, tgts) = make_batch(&mut rng);
-        let mut inputs = Vec::with_capacity(2 + params.len());
-        inputs.push(toks);
-        inputs.push(tgts);
-        inputs.extend(params.drain(..));
-        let t0 = std::time::Instant::now();
-        let mut out = rt.execute("train_step", &inputs)?;
-        let dt = t0.elapsed().as_secs_f64();
-        let loss = out.remove(0).to_vec::<f32>()?[0];
-        params = out; // new params
-        if first_loss.is_none() {
-            first_loss = Some(loss);
+    // ---- real artifact execution through the offline runtime ----
+    let dir = Runtime::default_dir();
+    let mut rt = match Runtime::open(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("\nartifacts not available ({e})");
+            println!("run `make artifacts` to lower the JAX/Pallas graphs, then re-run.");
+            println!("comm simulation completed; exiting.");
+            return;
         }
-        last_loss = loss;
-        if step % log_every == 0 || step + 1 == steps {
-            println!("{step:>4}   {loss:<8.4}  {:>7.1} ms", dt * 1e3);
+    };
+    println!("\nartifacts: {:?}", rt.artifact_names());
+    let mut rng = Rng::new(seed);
+    let mut ran = 0usize;
+    for name in rt.artifact_names() {
+        if !rt.supports(&name) {
+            println!("{name}: skipped (needs the PJRT-enabled build)");
+            continue;
+        }
+        let info = rt.artifact_info(&name);
+        let n_inputs = info.get("inputs").as_arr().map(|a| a.len()).unwrap_or(0);
+        let (Some(t), Some(d), Some(f)) = (
+            info.get("tokens").as_u64().map(|x| x as usize),
+            info.get("d_model").as_u64().map(|x| x as usize),
+            info.get("d_ff").as_u64().map(|x| x as usize),
+        ) else {
+            println!("{name}: skipped (manifest lacks shape metadata)");
+            continue;
+        };
+        let n_experts = info.get("n_experts").as_u64().map(|x| x as usize);
+        let scale = 1.0 / (d as f64).sqrt();
+        let mut tensor = |dims: &[usize]| -> Literal {
+            let n: usize = dims.iter().product();
+            let data: Vec<f32> = (0..n).map(|_| (rng.normal() * scale) as f32).collect();
+            let dims: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+            Runtime::literal_f32(&data, &dims).unwrap()
+        };
+        // dispatch on the manifest arity (the same signal the
+        // interpreter keys on): 3 = expert FFN, 4 = gated MoE block
+        let inputs: Vec<Literal> = match (n_inputs, n_experts) {
+            (3, _) => vec![tensor(&[t, d]), tensor(&[d, f]), tensor(&[f, d])],
+            (4, Some(e)) => vec![
+                tensor(&[t, d]),
+                tensor(&[d, e]),
+                tensor(&[e, d, f]),
+                tensor(&[e, f, d]),
+            ],
+            _ => {
+                println!("{name}: skipped (unrecognized input arity {n_inputs})");
+                continue;
+            }
+        };
+        let t0 = std::time::Instant::now();
+        match rt.execute(&name, &inputs) {
+            Ok(out) => {
+                let dt = t0.elapsed().as_secs_f64();
+                let y = out[0].to_vec::<f32>().unwrap();
+                let norm: f64 = y.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+                assert!(norm.is_finite(), "{name}: non-finite output");
+                let kind = if inputs.len() == 4 { "gated MoE block" } else { "expert FFN" };
+                println!(
+                    "{name}: {t}x{d} tokens through the {kind} ({d}->{f}->{d}) in {:.1} ms (||y|| = {norm:.3})",
+                    dt * 1e3
+                );
+                ran += 1;
+            }
+            Err(e) => println!("{name}: {e}"),
         }
     }
-    let first = first_loss.unwrap();
-    println!(
-        "\nloss: {first:.4} → {last_loss:.4} over {steps} steps \
-         (uniform baseline ln({vocab}) = {:.4})",
-        (vocab as f64).ln()
-    );
-    anyhow::ensure!(
-        last_loss < first * 0.7,
-        "training did not converge: {first} → {last_loss}"
-    );
-    println!("e2e OK: L1 kernels (artifacts) + L2 train graph + L3 coordinator compose.");
-    Ok(())
+    if ran > 0 {
+        println!("\ne2e OK: L1/L2 artifact math + L3 coordinator compose in one binary.");
+    }
 }

@@ -99,7 +99,7 @@ mod tests {
         assert!((1.03..2.0).contains(&a09), "0.9 avg out of band: {a09:.3}");
         // the paper's "enable region": tokens ≥ 16K & hotspot ≥ 0.7 ⇒
         // consistently faster (paper: >1.16×; our compute model is more
-        // generous to the baseline — see EXPERIMENTS.md)
+        // generous to the baseline — see DESIGN.md §2)
         for r in rows.iter().filter(|r| r.tokens >= 16384 && r.hotspot >= 0.7) {
             assert!(r.speedup() > 1.05, "{}t/{} ⇒ {:.2}", r.tokens, r.hotspot, r.speedup());
         }

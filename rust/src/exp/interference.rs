@@ -99,10 +99,11 @@ pub fn nvswitch_limitation(params: &FabricParams) -> Vec<(String, f64, f64)> {
     let hgx = Topology::paper();
     let dgx = Topology::dgx_nvswitch(2, 4, 4);
     let mut out = Vec::new();
-    for make in [
-        || -> Box<dyn Router> { Box::new(NcclLike::new()) },
-        || -> Box<dyn Router> { Box::new(NimbleRouter::default_for(&Topology::paper())) },
-    ] {
+    let makes: [fn() -> Box<dyn Router>; 2] = [
+        || Box::new(NcclLike::new()),
+        || Box::new(NimbleRouter::default_for(&Topology::paper())),
+    ];
+    for make in makes {
         let mut name = String::new();
         let mut times = Vec::new();
         for topo in [&hgx, &dgx] {

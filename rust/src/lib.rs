@@ -13,7 +13,8 @@
 //!   a calibrated fabric simulator standing in for the H100/NDR
 //!   testbed (see DESIGN.md §2 for the substitution table).
 //! * **L2/L1 (python/compile)** — JAX MoE model with Pallas kernels,
-//!   AOT-lowered to HLO text and executed from [`runtime`] via PJRT.
+//!   AOT-lowered to HLO text + manifest and executed from [`runtime`]
+//!   (offline CPU interpreter; see DESIGN.md §6).
 //!
 //! Entry points: the `nimble` binary (`nimble --help`), the
 //! `examples/`, and the per-figure benches under `benches/`.

@@ -11,7 +11,7 @@
 //! nimble sendrecv          async p2p imbalance sweep
 //! nimble ablate            design-choice ablations
 //! nimble plan --src 0 --dst 1 --mb 256   show a routing plan
-//! nimble moe-compute       run the real PJRT FFN artifacts
+//! nimble moe-compute       run the AOT FFN artifacts (offline interpreter)
 //! nimble info              topology + fabric calibration summary
 //! ```
 
@@ -174,7 +174,7 @@ fn run_moe_compute() -> Result<(), nimble::util::cli::CliError> {
         let dt = t0.elapsed().as_secs_f64();
         let y = out[0].to_vec::<f32>().unwrap();
         println!(
-            "{name}: {t}×{d} tokens through FFN({d}→{f}→{d}) in {:.1} ms on PJRT-CPU (y[0]={:.4})",
+            "{name}: {t}×{d} tokens through FFN({d}→{f}→{d}) in {:.1} ms via the offline interpreter (y[0]={:.4})",
             dt * 1e3,
             y[0]
         );

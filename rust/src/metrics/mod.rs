@@ -80,7 +80,7 @@ impl Table {
         let fmt_row = |cells: &[String], width: &[usize]| {
             let mut line = String::from("|");
             for (c, w) in cells.iter().zip(width) {
-                line.push_str(&format!(" {:>w$} |", c, w = w));
+                line.push_str(&format!(" {:>w$} |", c, w = *w));
             }
             line.push('\n');
             line

@@ -103,7 +103,7 @@ mod tests {
         let s_hot = speedup(16_384, 0.9);
         assert!(s_hot > s_mild, "hotter should help: {s_mild} vs {s_hot}");
         // paper's "enable" region shows >1.16×; our compute model is
-        // more generous to the baseline (see EXPERIMENTS.md), so the
+        // more generous to the baseline (see DESIGN.md §2), so the
         // bound here is the direction + a floor
         assert!(s_hot > 1.05, "16K/0.9 speedup too small: {s_hot}");
     }

@@ -1,22 +1,109 @@
-//! PJRT runtime: loads the AOT artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Artifact runtime: loads the AOT manifest produced by
+//! `python/compile/aot.py` and executes the FFN-family artifacts with a
+//! built-in pure-Rust CPU reference interpreter.
 //!
-//! This is the only place the rust side touches XLA; Python never runs
-//! on the request path. Artifacts are HLO *text* (see aot.py for why),
-//! parsed with `HloModuleProto::from_text_file`, compiled once per
-//! process, and cached.
+//! The original design executed the HLO text through PJRT via the `xla`
+//! bindings; those bindings (and `anyhow`) are not in the offline
+//! vendor set, and this crate ships with **zero external dependencies**
+//! (DESIGN.md §6). The interpreter computes the same math the lowered
+//! graphs encode — `expert_ffn`: `y = gelu(x @ w1) @ w2`, and
+//! `moe_block_fwd`: softmax gating + per-expert FFN + gate-weighted
+//! combine — directly from the manifest's shape metadata, so the
+//! `nimble moe-compute` CLI and `examples/moe_e2e.rs` still run the L2
+//! graphs' semantics end-to-end from Rust. `train_step` (fwd+bwd+SGD of
+//! the tiny MoE-transformer LM) is out of interpreter scope and reports
+//! a clear error; re-enabling true PJRT execution is a vendoring task,
+//! not an API change — this module's surface matches the PJRT version.
 
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::BTreeMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
+
+/// Runtime error (message-carrying, mirrors the former `anyhow` usage).
+#[derive(Debug)]
+pub struct RtError(pub String);
+
+impl fmt::Display for RtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for RtError {}
+
+pub type Result<T> = std::result::Result<T, RtError>;
+
+fn err(msg: impl Into<String>) -> RtError {
+    RtError(msg.into())
+}
+
+/// Typed dense tensor (the interpreter's stand-in for `xla::Literal`).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: LiteralData,
+}
+
+#[derive(Clone, Debug)]
+enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Element types a [`Literal`] can hold / be read back as.
+pub trait LiteralElem: Sized {
+    fn from_literal(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl LiteralElem for f32 {
+    fn from_literal(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.data {
+            LiteralData::F32(v) => Ok(v.clone()),
+            LiteralData::I32(_) => Err(err("literal holds i32, asked for f32")),
+        }
+    }
+}
+
+impl LiteralElem for i32 {
+    fn from_literal(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.data {
+            LiteralData::I32(v) => Ok(v.clone()),
+            LiteralData::F32(_) => Err(err("literal holds f32, asked for i32")),
+        }
+    }
+}
+
+impl Literal {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn to_vec<T: LiteralElem>(&self) -> Result<Vec<T>> {
+        T::from_literal(self)
+    }
+
+    fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            LiteralData::F32(v) => Ok(v),
+            LiteralData::I32(_) => Err(err("expected f32 literal")),
+        }
+    }
+}
 
 /// Loader + executor over an artifact directory.
 pub struct Runtime {
-    client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Json,
-    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl Runtime {
@@ -25,15 +112,19 @@ impl Runtime {
         let dir = dir.as_ref().to_path_buf();
         let mpath = dir.join("manifest.json");
         let text = std::fs::read_to_string(&mpath)
-            .with_context(|| format!("reading {mpath:?} — run `make artifacts` first"))?;
-        let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, dir, manifest, cache: BTreeMap::new() })
+            .map_err(|e| err(format!("reading {mpath:?} — run `make artifacts` first: {e}")))?;
+        let manifest = Json::parse(&text).map_err(|e| err(format!("manifest: {e}")))?;
+        Ok(Runtime { dir, manifest })
     }
 
     /// Default artifact directory (repo-root/artifacts).
     pub fn default_dir() -> PathBuf {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Directory this runtime was opened on.
+    pub fn dir(&self) -> &Path {
+        &self.dir
     }
 
     pub fn manifest(&self) -> &Json {
@@ -54,54 +145,230 @@ impl Runtime {
         self.manifest.get("artifacts").get(name)
     }
 
-    /// Compile (or fetch from cache) an artifact.
-    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(name) {
-            let info = self.manifest.get("artifacts").get(name);
-            let file = info
-                .get("file")
-                .as_str()
-                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
-            let path = self.dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            self.cache.insert(name.to_string(), exe);
+    /// Whether the built-in interpreter can execute this artifact.
+    pub fn supports(&self, name: &str) -> bool {
+        let info = self.artifact_info(name);
+        if info.as_obj().is_none() {
+            return false;
         }
-        Ok(&self.cache[name])
+        Self::interp_kind(name, info).is_some()
+    }
+
+    fn interp_kind(name: &str, info: &Json) -> Option<InterpKind> {
+        let n_inputs = info.get("inputs").as_arr().map(|a| a.len())?;
+        if name.starts_with("expert_ffn") && n_inputs == 3 {
+            return Some(InterpKind::ExpertFfn);
+        }
+        if name == "moe_block_fwd" && n_inputs == 4 {
+            return Some(InterpKind::MoeBlockFwd);
+        }
+        None
     }
 
     /// Execute an artifact with literal inputs; returns the flattened
     /// tuple outputs (aot.py lowers with `return_tuple=True`).
-    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let expect = self.artifact_info(name).get("inputs").as_arr().map(|a| a.len());
-        if let Some(n) = expect {
-            if n != inputs.len() {
-                bail!("artifact '{name}' wants {n} inputs, got {}", inputs.len());
+    pub fn execute(&mut self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let info = self.manifest.get("artifacts").get(name);
+        if info.as_obj().is_none() {
+            return Err(err(format!("artifact '{name}' not in manifest")));
+        }
+        if let Some(specs) = info.get("inputs").as_arr() {
+            if specs.len() != inputs.len() {
+                return Err(err(format!(
+                    "artifact '{name}' wants {} inputs, got {}",
+                    specs.len(),
+                    inputs.len()
+                )));
+            }
+            // Per-input shapes must match the manifest specs — the PJRT
+            // path rejected layout mismatches at compile time; an
+            // element-count check alone would accept e.g. a transposed
+            // tensor and silently compute on the wrong layout.
+            for (i, (spec, lit)) in specs.iter().zip(inputs).enumerate() {
+                if let Some(shape) = spec.get("shape").as_arr() {
+                    let want: Vec<i64> = shape.iter().filter_map(|x| x.as_i64()).collect();
+                    if want.len() == shape.len() && lit.dims() != want.as_slice() {
+                        return Err(err(format!(
+                            "artifact '{name}' input {i}: literal shape {:?} does not \
+                             match manifest shape {want:?}",
+                            lit.dims()
+                        )));
+                    }
+                }
             }
         }
-        let exe = self.load(name)?;
-        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple()?)
+        match Self::interp_kind(name, info) {
+            Some(InterpKind::ExpertFfn) => {
+                let (t, d, f) = (
+                    info.get("tokens").as_u64().ok_or_else(|| err("manifest missing tokens"))?
+                        as usize,
+                    info.get("d_model").as_u64().ok_or_else(|| err("manifest missing d_model"))?
+                        as usize,
+                    info.get("d_ff").as_u64().ok_or_else(|| err("manifest missing d_ff"))?
+                        as usize,
+                );
+                let y = expert_ffn(
+                    inputs[0].f32s()?,
+                    inputs[1].f32s()?,
+                    inputs[2].f32s()?,
+                    t,
+                    d,
+                    f,
+                )?;
+                Ok(vec![Runtime::literal_f32(&y, &[t as i64, d as i64])?])
+            }
+            Some(InterpKind::MoeBlockFwd) => {
+                let (t, d, f, e) = (
+                    info.get("tokens").as_u64().ok_or_else(|| err("manifest missing tokens"))?
+                        as usize,
+                    info.get("d_model").as_u64().ok_or_else(|| err("manifest missing d_model"))?
+                        as usize,
+                    info.get("d_ff").as_u64().ok_or_else(|| err("manifest missing d_ff"))?
+                        as usize,
+                    info.get("n_experts")
+                        .as_u64()
+                        .ok_or_else(|| err("manifest missing n_experts"))?
+                        as usize,
+                );
+                let y = moe_block_fwd(
+                    inputs[0].f32s()?,
+                    inputs[1].f32s()?,
+                    inputs[2].f32s()?,
+                    inputs[3].f32s()?,
+                    t,
+                    d,
+                    f,
+                    e,
+                )?;
+                Ok(vec![Runtime::literal_f32(&y, &[t as i64, d as i64])?])
+            }
+            None => Err(err(format!(
+                "artifact '{name}' is outside the built-in interpreter's scope \
+                 (only the FFN-family inference artifacts run offline; \
+                 train_step needs the PJRT-enabled build)"
+            ))),
+        }
     }
 
     /// Helper: f32 literal from a flat vec + dims.
-    pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+        check_dims(data.len(), dims)?;
+        Ok(Literal { dims: dims.to_vec(), data: LiteralData::F32(data.to_vec()) })
     }
 
     /// Helper: i32 literal from a flat vec + dims.
-    pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
-        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+        check_dims(data.len(), dims)?;
+        Ok(Literal { dims: dims.to_vec(), data: LiteralData::I32(data.to_vec()) })
     }
 }
 
+enum InterpKind {
+    ExpertFfn,
+    MoeBlockFwd,
+}
+
+fn check_dims(len: usize, dims: &[i64]) -> Result<()> {
+    let expect: i64 = dims.iter().product();
+    if expect < 0 || expect as usize != len {
+        return Err(err(format!("literal of {len} elements cannot reshape to {dims:?}")));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Reference kernels (the interpreter's math, mirroring compile/kernels/ref.py)
+// ---------------------------------------------------------------------------
+
+/// `jax.nn.gelu` default: the tanh approximation.
+fn gelu(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+    let x3 = x * x * x;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044_715 * x3)).tanh())
+}
+
+/// `c[m][n] = sum_k a[m][k] * b[k][n]` — row-major f32 GEMM.
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let aip = a[i * k + p];
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aip * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// `y = gelu(x @ w1) @ w2` over (t×d) tokens.
+fn expert_ffn(x: &[f32], w1: &[f32], w2: &[f32], t: usize, d: usize, f: usize) -> Result<Vec<f32>> {
+    if x.len() != t * d || w1.len() != d * f || w2.len() != f * d {
+        return Err(err(format!(
+            "expert_ffn shape mismatch: x {}, w1 {}, w2 {} for (t={t}, d={d}, f={f})",
+            x.len(),
+            w1.len(),
+            w2.len()
+        )));
+    }
+    let mut h = matmul(x, w1, t, d, f);
+    for v in h.iter_mut() {
+        *v = gelu(*v);
+    }
+    Ok(matmul(&h, w2, t, f, d))
+}
+
+/// Softmax gating + all experts + gate-weighted combine
+/// (`model.moe_block_fwd`): x (t,d), wg (d,e), w1s (e,d,f), w2s (e,f,d).
+#[allow(clippy::too_many_arguments)]
+fn moe_block_fwd(
+    x: &[f32],
+    wg: &[f32],
+    w1s: &[f32],
+    w2s: &[f32],
+    t: usize,
+    d: usize,
+    f: usize,
+    e: usize,
+) -> Result<Vec<f32>> {
+    if x.len() != t * d || wg.len() != d * e || w1s.len() != e * d * f || w2s.len() != e * f * d {
+        return Err(err("moe_block_fwd shape mismatch"));
+    }
+    // gates = softmax(x @ wg, axis=-1)
+    let mut gates = matmul(x, wg, t, d, e);
+    for row in gates.chunks_mut(e) {
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    let mut out = vec![0.0f32; t * d];
+    for k in 0..e {
+        let y = expert_ffn(x, &w1s[k * d * f..(k + 1) * d * f], &w2s[k * f * d..(k + 1) * f * d], t, d, f)?;
+        for ti in 0..t {
+            let g = gates[ti * e + k];
+            for di in 0..d {
+                out[ti * d + di] += g * y[ti * d + di];
+            }
+        }
+    }
+    Ok(out)
+}
+
 /// Analytic H100 compute model for the Fig 8 timeline (the simulated
-/// cluster's compute phase; the *real* kernels run via [`Runtime`] in
-/// the e2e example). bf16 FFN on an H100 SXM: peak 989 TFLOP/s; we
-/// assume the paper's stack sustains ~45% on these GEMM shapes.
+/// cluster's compute phase; the artifacts above are the *real* kernel
+/// math). bf16 FFN on an H100 SXM: peak 989 TFLOP/s; we assume the
+/// paper's stack sustains ~45% on these GEMM shapes.
 #[derive(Clone, Copy, Debug)]
 pub struct ComputeModel {
     pub sustained_tflops: f64,
@@ -131,6 +398,26 @@ mod tests {
         dir.join("manifest.json").exists().then_some(dir)
     }
 
+    /// erf via Abramowitz–Stegun 7.1.26 (tests only).
+    fn erf(x: f64) -> f64 {
+        let t = 1.0 / (1.0 + 0.3275911 * x.abs());
+        let y = 1.0
+            - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736)
+                * t
+                + 0.254829592)
+                * t
+                * (-x * x).exp();
+        if x >= 0.0 {
+            y
+        } else {
+            -y
+        }
+    }
+
+    fn exact_gelu(x: f64) -> f64 {
+        0.5 * x * (1.0 + erf(x / std::f64::consts::SQRT_2))
+    }
+
     #[test]
     fn compute_model_scales_linearly() {
         let m = ComputeModel::default();
@@ -141,8 +428,96 @@ mod tests {
         assert!((flop_part2 / flop_part1 - 2.0).abs() < 1e-9);
     }
 
-    /// Full PJRT round-trip over the real artifacts (skips cleanly if
-    /// `make artifacts` hasn't run yet — `make test` orders it first).
+    #[test]
+    fn gelu_matches_exact_form() {
+        // tanh approximation tracks the erf definition to <1e-3 abs
+        for x in [-3.0f32, -1.0, -0.1, 0.0, 0.5, 1.0, 2.56, 4.0] {
+            let approx = gelu(x) as f64;
+            let exact = exact_gelu(x as f64);
+            assert!((approx - exact).abs() < 1e-3, "x={x}: {approx} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn matmul_small_case() {
+        // [1 2; 3 4] @ [5 6; 7 8] = [19 22; 43 50]
+        let c = matmul(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0], 2, 2, 2);
+        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip_and_type_safety() {
+        let l = Runtime::literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(Runtime::literal_f32(&[1.0], &[2, 2]).is_err());
+        let i = Runtime::literal_i32(&[7, 8], &[2]).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+
+    /// End-to-end interpreter check against the analytic constant-input
+    /// value, via a synthetic manifest (no `make artifacts` needed).
+    #[test]
+    fn expert_ffn_interpreter_matches_analytic() {
+        let dir = std::env::temp_dir().join(format!("nimble-rt-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (t, d, f) = (4usize, 64usize, 128usize);
+        let manifest = format!(
+            r#"{{"version": 1, "artifacts": {{"expert_ffn_t{t}": {{
+                "file": "expert_ffn_t{t}.hlo.txt",
+                "inputs": [{{"shape": [{t}, {d}]}}, {{"shape": [{d}, {f}]}}, {{"shape": [{f}, {d}]}}],
+                "outputs": [{{"shape": [{t}, {d}]}}],
+                "tokens": {t}, "d_model": {d}, "d_ff": {f}}}}}}}"#
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let mut rt = Runtime::open(&dir).unwrap();
+        assert!(rt.supports(&format!("expert_ffn_t{t}")));
+        assert!(!rt.supports("train_step"));
+        let x = vec![0.5f32; t * d];
+        let w1 = vec![0.01f32; d * f];
+        let w2 = vec![0.01f32; f * d];
+        let out = rt
+            .execute(
+                &format!("expert_ffn_t{t}"),
+                &[
+                    Runtime::literal_f32(&x, &[t as i64, d as i64]).unwrap(),
+                    Runtime::literal_f32(&w1, &[d as i64, f as i64]).unwrap(),
+                    Runtime::literal_f32(&w2, &[f as i64, d as i64]).unwrap(),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let y = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(y.len(), t * d);
+        // constant inputs ⇒ every element equal and analytic:
+        // h = 0.5·0.01·d; y = gelu(h)·0.01·f
+        let h = 0.5 * 0.01 * d as f64;
+        let expect = (exact_gelu(h) * 0.01 * f as f64) as f32;
+        assert!((y[0] - y[t * d - 1]).abs() < 1e-5);
+        assert!(
+            (y[0] - expect).abs() / expect.abs() < 2e-2,
+            "y={} expect={expect}",
+            y[0]
+        );
+        // probes: transposed input (same element count) and wrong arity
+        // must both be rejected, like the PJRT path would have
+        let transposed = rt.execute(
+            &format!("expert_ffn_t{t}"),
+            &[
+                Runtime::literal_f32(&x, &[d as i64, t as i64]).unwrap(),
+                Runtime::literal_f32(&w1, &[d as i64, f as i64]).unwrap(),
+                Runtime::literal_f32(&w2, &[f as i64, d as i64]).unwrap(),
+            ],
+        );
+        assert!(transposed.is_err(), "transposed x must be rejected");
+        assert!(rt.execute(&format!("expert_ffn_t{t}"), &[]).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Full round-trip over the real artifacts when `make artifacts`
+    /// has produced them (skips cleanly otherwise — `make test` orders
+    /// it first).
     #[test]
     fn expert_ffn_artifact_executes() {
         let Some(dir) = artifacts_dir() else {
@@ -151,7 +526,10 @@ mod tests {
         };
         let mut rt = Runtime::open(dir).unwrap();
         let info = rt.artifact_info("expert_ffn_t256");
-        let d = info.get("d_model").as_u64().unwrap() as usize;
+        let Some(d) = info.get("d_model").as_u64().map(|x| x as usize) else {
+            eprintln!("skipping: expert_ffn_t256 not in manifest");
+            return;
+        };
         let f = info.get("d_ff").as_u64().unwrap() as usize;
         let t = 256usize;
         let x = vec![0.5f32; t * d];
@@ -170,34 +548,15 @@ mod tests {
         assert_eq!(out.len(), 1);
         let y = out[0].to_vec::<f32>().unwrap();
         assert_eq!(y.len(), t * d);
-        // y = gelu(x@w1)@w2 with constant inputs: every element equal
-        // and matching the analytic value
+        let h = 0.5 * 0.01 * d as f64;
+        let expect = (exact_gelu(h) * 0.01 * f as f64) as f32;
         assert!(y[0].is_finite());
         assert!((y[0] - y[t * d - 1]).abs() < 1e-3);
-        let h = 0.5 * 0.01 * d as f64;
-        let gelu = 0.5 * h * (1.0 + erf(h / std::f64::consts::SQRT_2));
-        let expect = (gelu * 0.01 * f as f64) as f32;
         assert!(
             (y[0] - expect).abs() / expect.abs() < 2e-2,
             "y={} expect={expect}",
             y[0]
         );
-    }
-
-    /// erf via Abramowitz–Stegun 7.1.26 (tests only).
-    fn erf(x: f64) -> f64 {
-        let t = 1.0 / (1.0 + 0.3275911 * x.abs());
-        let y = 1.0
-            - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736)
-                * t
-                + 0.254829592)
-                * t
-                * (-x * x).exp();
-        if x >= 0.0 {
-            y
-        } else {
-            -y
-        }
     }
 
     #[test]
