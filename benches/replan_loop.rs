@@ -1,0 +1,59 @@
+//! Bench of the execution-time re-planning loop: per-epoch overhead
+//! (monitor sample + incremental replan decision) and the end-to-end
+//! static vs re-planned round on the phase-shifting hot-row workload.
+
+use nimble::coordinator::replan::ReplanExecutor;
+use nimble::exp::MB;
+use nimble::fabric::FabricParams;
+use nimble::planner::{Planner, PlannerCfg, ReplanCfg};
+use nimble::topology::Topology;
+use nimble::util::bench::{bench, header};
+use nimble::workloads::dynamic::PhasedHotRows;
+
+fn main() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    println!("{}", header());
+
+    let sched = PhasedHotRows::paper_default(&topo, 64.0 * MB);
+    let d0 = sched.demands_at(&topo, 0);
+    let d1 = sched.demands_at(&topo, 1);
+    let incumbent = Planner::new(&topo, PlannerCfg::default()).plan(&d0);
+    let enabled =
+        ReplanCfg { enable: true, cadence_s: 5.0e-4, margin: 0.1, ..ReplanCfg::default() };
+
+    // the per-epoch decision alone (the loop's hot path): observed
+    // loads match the plan, so this measures the no-op fast path
+    let observed = incumbent.link_load.clone();
+    let mut warm = Planner::new(&topo, PlannerCfg::default());
+    let r = bench("replan decision: matched (no-op)", 0.5, || {
+        std::hint::black_box(warm.replan(&incumbent, &observed, &d0, &enabled));
+    });
+    println!("{}", r.row());
+
+    // the decision when the hot row shifted (challenger computed)
+    let r = bench("replan decision: shifted hot row", 0.5, || {
+        std::hint::black_box(warm.replan(&incumbent, &observed, &d1, &enabled));
+    });
+    println!("{}", r.row());
+
+    // one full static round (engine only, no epochs)
+    let mut stat = ReplanExecutor::new(
+        &topo,
+        params.clone(),
+        PlannerCfg::default(),
+        ReplanCfg::default(),
+    );
+    let r = bench("round: static plan (stale)", 0.5, || {
+        std::hint::black_box(stat.execute(&incumbent, &d1));
+    });
+    println!("{}", r.row());
+
+    // one full re-planned round (epochs + preemption + reroute)
+    let mut dynex =
+        ReplanExecutor::new(&topo, params, PlannerCfg::default(), enabled);
+    let r = bench("round: monitor+replan+reroute loop", 0.5, || {
+        std::hint::black_box(dynex.execute(&incumbent, &d1));
+    });
+    println!("{}", r.row());
+}

@@ -4,7 +4,7 @@
 //! `configs/paper.toml` for the reference file).
 
 use crate::fabric::FabricParams;
-use crate::planner::{CostModel, PlannerCfg};
+use crate::planner::{CostModel, PlannerCfg, ReplanCfg};
 use crate::topology::Topology;
 use crate::util::toml::TomlDoc;
 use std::path::Path;
@@ -15,6 +15,9 @@ pub struct Config {
     pub topology: Topology,
     pub fabric: FabricParams,
     pub planner: PlannerCfg,
+    /// Execution-time re-planning loop (`[replan]`): disabled by
+    /// default so every static experiment reproduces bit-identically.
+    pub replan: ReplanCfg,
 }
 
 impl Default for Config {
@@ -23,6 +26,7 @@ impl Default for Config {
             topology: Topology::paper(),
             fabric: FabricParams::default(),
             planner: PlannerCfg::default(),
+            replan: ReplanCfg::default(),
         }
     }
 }
@@ -83,12 +87,31 @@ impl Config {
             doc.get_f64("planner", "penalty_scale").unwrap_or(c.penalty_scale);
         c.hysteresis = doc.get_f64("planner", "hysteresis").unwrap_or(c.hysteresis);
 
+        // [replan] (endpoint anchors follow the [fabric] calibration)
+        let r = &mut cfg.replan;
+        r.enable = doc.get_bool("replan", "enable").unwrap_or(r.enable);
+        r.cadence_s = doc
+            .get_f64("replan", "cadence_ms")
+            .map(|ms| ms * 1e-3)
+            .unwrap_or(r.cadence_s);
+        r.margin = doc.get_f64("replan", "margin").unwrap_or(r.margin);
+        r.caps = crate::planner::DrainCaps::from(&cfg.fabric);
+
         // sanity
         if cfg.planner.lambda <= 0.0 || cfg.planner.lambda > 1.0 {
             return Err(format!("planner.lambda out of (0,1]: {}", cfg.planner.lambda));
         }
         if cfg.fabric.relay_rho <= 0.0 || cfg.fabric.relay_rho > 1.0 {
             return Err(format!("fabric.relay_rho out of (0,1]: {}", cfg.fabric.relay_rho));
+        }
+        if cfg.replan.cadence_s <= 0.0 {
+            return Err(format!(
+                "replan.cadence_ms must be positive: {}",
+                cfg.replan.cadence_s * 1e3
+            ));
+        }
+        if !(0.0..1.0).contains(&cfg.replan.margin) {
+            return Err(format!("replan.margin out of [0,1): {}", cfg.replan.margin));
         }
         Ok(cfg)
     }
@@ -146,6 +169,25 @@ mod tests {
         assert!(Config::from_toml("[planner]\nlambda = 1.5\n").is_err());
         assert!(Config::from_toml("[fabric]\nrelay_rho = 0.0\n").is_err());
         assert!(Config::from_toml("garbage without equals\n").is_err());
+        assert!(Config::from_toml("[replan]\ncadence_ms = 0.0\n").is_err());
+        assert!(Config::from_toml("[replan]\nmargin = 1.0\n").is_err());
+    }
+
+    #[test]
+    fn replan_section_defaults_off_and_overrides() {
+        // no section ⇒ disabled with library defaults
+        let c = Config::from_toml("").unwrap();
+        assert!(!c.replan.enable);
+        assert!((c.replan.cadence_s - 5.0e-4).abs() < 1e-12);
+        assert!((c.replan.margin - 0.1).abs() < 1e-12);
+        // explicit section overrides every knob
+        let c = Config::from_toml(
+            "[replan]\nenable = true\ncadence_ms = 2.0\nmargin = 0.25\n",
+        )
+        .unwrap();
+        assert!(c.replan.enable);
+        assert!((c.replan.cadence_s - 2.0e-3).abs() < 1e-12);
+        assert!((c.replan.margin - 0.25).abs() < 1e-12);
     }
 
     #[test]
@@ -153,5 +195,7 @@ mod tests {
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/paper.toml");
         let c = Config::load(path).unwrap();
         assert_eq!(c.topology.num_gpus(), 8);
+        // [replan] ships disabled so paper experiments replay verbatim
+        assert!(!c.replan.enable);
     }
 }

@@ -1,12 +1,21 @@
 //! The NIMBLE coordinator (paper §IV): ties the monitoring module,
 //! the orchestration engine (planner) and the dataplane bookkeeping
 //! (channels + reassembly) together behind the [`Router`] interface
-//! used by every experiment, plus an adaptive multi-round
-//! [`Orchestrator`] implementing the execution-time feedback loop.
+//! used by every experiment, plus two execution-time feedback loops:
+//!
+//! * [`Orchestrator`] — round-granular adaptation: each round is
+//!   planned warm-started from the previous round's link monitor;
+//! * [`replan::ReplanExecutor`] — *mid-flight* adaptation: within a
+//!   round, the monitor → [`crate::planner::Planner::replan`] →
+//!   preempt/reroute loop runs at a configurable cadence (the paper's
+//!   execution-time planning claim, closed end to end).
 
 pub mod channels;
 pub mod monitor;
 pub mod reassembly;
+pub mod replan;
+
+pub use replan::{ReplanExecutor, ReplanRun};
 
 use crate::baselines::Router;
 use crate::fabric::fluid::{Flow, FluidSim, SimResult};

@@ -2,6 +2,16 @@
 //! load tracking with exponential decay and hysteresis so the
 //! orchestration engine sees a stable view of live link pressure and
 //! path selection does not oscillate between near-equal alternatives.
+//!
+//! Two monitors, two cadences:
+//!
+//! * [`LinkMonitor`] — per-*round* EWMA estimates feeding
+//!   [`crate::coordinator::NimbleRouter`]'s warm start between rounds;
+//! * [`WindowedMonitor`] — per-*epoch* utilization/backlog estimates
+//!   sampled from the fluid engine at a configurable cadence, feeding
+//!   the mid-flight [`crate::planner::Planner::replan`] loop.
+
+use crate::topology::Topology;
 
 /// EWMA link-load monitor with hysteresis gating.
 #[derive(Clone, Debug)]
@@ -76,6 +86,98 @@ impl LinkMonitor {
     }
 }
 
+/// Windowed per-link utilization/backlog monitor for the execution-time
+/// re-planning loop: every `cadence_s` of virtual time the coordinator
+/// feeds it the bytes each link moved during the window (from
+/// [`crate::fabric::fluid::SimEngine::take_window`]) and reads back
+///
+/// * instantaneous **utilization** (window bytes / capacity·window),
+/// * an **EWMA byte-load estimate** per link (what
+///   [`crate::planner::Planner::replan`] consumes as `observed_loads`),
+/// * cumulative delivered bytes, from which per-link **backlog**
+///   against a plan's expected loads is derived.
+#[derive(Clone, Debug)]
+pub struct WindowedMonitor {
+    caps_bps: Vec<f64>,
+    /// Sampling cadence in virtual seconds.
+    pub cadence_s: f64,
+    /// EWMA smoothing factor (weight of the newest window).
+    pub alpha: f64,
+    ewma_bytes: Vec<f64>,
+    last_util: Vec<f64>,
+    cum_bytes: Vec<f64>,
+    /// Number of windows observed so far.
+    pub windows: u64,
+}
+
+impl WindowedMonitor {
+    pub fn new(topo: &Topology, cadence_s: f64) -> Self {
+        let links = topo.links.len();
+        WindowedMonitor {
+            caps_bps: topo.links.iter().map(|l| l.cap_gbps * 1e9).collect(),
+            cadence_s,
+            alpha: 0.5,
+            ewma_bytes: vec![0.0; links],
+            last_util: vec![0.0; links],
+            cum_bytes: vec![0.0; links],
+            windows: 0,
+        }
+    }
+
+    /// Fold one sampling window taken at the configured cadence.
+    pub fn observe(&mut self, window_bytes: &[f64]) {
+        self.observe_window(window_bytes, self.cadence_s);
+    }
+
+    /// Fold one sampling window (per-link bytes over `dt` seconds) —
+    /// the explicit-duration form for irregular windows.
+    pub fn observe_window(&mut self, window_bytes: &[f64], dt: f64) {
+        assert_eq!(window_bytes.len(), self.ewma_bytes.len());
+        let dt = dt.max(1e-12);
+        self.windows += 1;
+        // first window seeds the EWMA directly (no zero-bias ramp-up)
+        let alpha = if self.windows == 1 { 1.0 } else { self.alpha };
+        for i in 0..window_bytes.len() {
+            let w = window_bytes[i];
+            self.cum_bytes[i] += w;
+            self.last_util[i] = (w / (self.caps_bps[i] * dt)).min(1.0);
+            self.ewma_bytes[i] = (1.0 - alpha) * self.ewma_bytes[i] + alpha * w;
+        }
+    }
+
+    /// Smoothed per-link byte loads (the replan loop's `observed_loads`).
+    pub fn load_estimates(&self) -> &[f64] {
+        &self.ewma_bytes
+    }
+
+    /// Utilization (0..1) of each link over the last window.
+    pub fn utilization(&self) -> &[f64] {
+        &self.last_util
+    }
+
+    /// Total bytes each link carried since construction/reset.
+    pub fn cumulative_bytes(&self) -> &[f64] {
+        &self.cum_bytes
+    }
+
+    /// Per-link backlog against a plan: expected bytes not yet seen on
+    /// the wire (clamped at zero where execution ran ahead).
+    pub fn backlog(&self, planned_bytes: &[f64]) -> Vec<f64> {
+        planned_bytes
+            .iter()
+            .zip(&self.cum_bytes)
+            .map(|(&p, &c)| (p - c).max(0.0))
+            .collect()
+    }
+
+    pub fn reset(&mut self) {
+        self.ewma_bytes.iter_mut().for_each(|x| *x = 0.0);
+        self.last_util.iter_mut().for_each(|x| *x = 0.0);
+        self.cum_bytes.iter_mut().for_each(|x| *x = 0.0);
+        self.windows = 0;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,5 +232,45 @@ mod tests {
         m.reset();
         assert_eq!(m.raw_estimates()[0], 0.0);
         assert_eq!(m.load_estimates()[0], 0.0);
+    }
+
+    #[test]
+    fn windowed_utilization_and_cumulative() {
+        let topo = Topology::paper();
+        let mut m = WindowedMonitor::new(&topo, 1e-3);
+        let link = topo.nvlink(0, 1).unwrap();
+        let cap = topo.link(link).cap_gbps * 1e9;
+        let mut w = vec![0.0; topo.links.len()];
+        w[link] = cap * 1e-3 * 0.5; // half utilization over the window
+        m.observe_window(&w, 1e-3);
+        assert!((m.utilization()[link] - 0.5).abs() < 1e-12);
+        // first window seeds the EWMA directly
+        assert_eq!(m.load_estimates()[link], w[link]);
+        // observe() uses the configured cadence as the window duration
+        m.observe(&w);
+        assert!((m.utilization()[link] - 0.5).abs() < 1e-12);
+        assert!((m.cumulative_bytes()[link] - 2.0 * w[link]).abs() < 1e-6);
+        assert_eq!(m.windows, 2);
+    }
+
+    #[test]
+    fn windowed_backlog_tracks_plan() {
+        let topo = Topology::paper();
+        let mut m = WindowedMonitor::new(&topo, 1e-3);
+        let link = topo.nvlink(0, 1).unwrap();
+        let mut planned = vec![0.0; topo.links.len()];
+        planned[link] = 100.0;
+        let mut w = vec![0.0; topo.links.len()];
+        w[link] = 30.0;
+        m.observe_window(&w, 1e-3);
+        assert_eq!(m.backlog(&planned)[link], 70.0);
+        m.observe_window(&w, 1e-3);
+        m.observe_window(&w, 1e-3);
+        m.observe_window(&w, 1e-3);
+        // execution ran ahead of the plan: clamped at zero
+        assert_eq!(m.backlog(&planned)[link], 0.0);
+        m.reset();
+        assert_eq!(m.backlog(&planned)[link], 100.0);
+        assert_eq!(m.windows, 0);
     }
 }

@@ -1,0 +1,497 @@
+//! The closed execution-time loop (paper §I: "NIMBLE performs
+//! execution-time planning … redistributing traffic when runtime load
+//! deviates from the plan"): **monitor → incremental replan →
+//! mid-flight reroute**.
+//!
+//! [`ReplanExecutor`] flies one round of demands on the fluid engine
+//! and, every [`ReplanCfg::cadence_s`] of virtual time,
+//!
+//! 1. samples the engine's per-link byte window into a
+//!    [`WindowedMonitor`],
+//! 2. derives the residual demands and the residual routing actually in
+//!    flight,
+//! 3. asks [`Planner::replan`] whether a challenger plan beats the
+//!    incumbent by the hysteresis margin,
+//! 4. if so, **preempts** the changed pairs' flows
+//!    ([`SimEngine::preempt`]) and re-issues their residual bytes on
+//!    the new paths.
+//!
+//! Ordering across a reroute is preserved exactly as §IV promises: a
+//! pair's chunks keep their original sequence numbers; a preempted
+//! path's undelivered sequence numbers are redistributed over the new
+//! paths; every path still delivers its own chunks in ascending order;
+//! and the receiver's per-pair [`ReassemblyTable`] queue releases data
+//! strictly in sequence. The executor simulates the worst-case
+//! round-robin arrival interleave and panics if the reassembly
+//! invariant is ever violated.
+//!
+//! With `enable == false` the engine runs the round in one shot — the
+//! result is byte-identical to the static plan (see
+//! `static_path_bit_identical_when_disabled`).
+
+use super::monitor::WindowedMonitor;
+use super::reassembly::{ChunkArrival, ReassemblyTable};
+use crate::fabric::fluid::{Flow, SimEngine, SimResult};
+use crate::fabric::FabricParams;
+use crate::metrics::CommReport;
+use crate::planner::replan::{carry_plan, DrainCaps};
+use crate::planner::{Assignment, Demand, Plan, Planner, PlannerCfg, ReplanCfg};
+use crate::topology::{GpuId, Path, Topology};
+use std::collections::BTreeMap;
+
+/// One replan epoch's bookkeeping.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochStat {
+    /// Virtual time at the epoch boundary.
+    pub t_s: f64,
+    /// Traffic-drift indicator: shape gap between the monitor's
+    /// (rate-proportional) window estimates and the residual routing's
+    /// byte shape. Nonzero whenever links drain at different speeds
+    /// than their backlog share — a diagnostic, not the accept signal
+    /// (the decision uses the drain-time metric in
+    /// [`crate::planner::Planner::replan`]).
+    pub deviation: f64,
+    /// Whether a challenger plan was adopted.
+    pub replanned: bool,
+    /// Flows preempted at this epoch.
+    pub preempted: usize,
+}
+
+/// Outcome of one round under the execution-time loop.
+pub struct ReplanRun {
+    pub report: CommReport,
+    pub sim: SimResult,
+    /// The routing in force when the round finished (next round's
+    /// incumbent).
+    pub final_plan: Plan,
+    pub epochs: Vec<EpochStat>,
+    /// Epochs at which a challenger was adopted.
+    pub replans: usize,
+    /// Total flows preempted mid-transfer.
+    pub preemptions: usize,
+    /// Peak out-of-order chunks buffered in any reassembly queue.
+    pub peak_reassembly: usize,
+}
+
+/// Per-path chunk-sequence bookkeeping for one (src, dst) stream.
+struct PartState {
+    /// Engine flow index carrying this part.
+    flow: usize,
+    /// Chunk sequence numbers assigned to this path (ascending).
+    seqs: Vec<u64>,
+    /// Prefix of `seqs` already pushed into the reassembly queue.
+    delivered: usize,
+}
+
+/// Drives rounds of demands through the monitor → replan → reroute
+/// loop. With `rcfg.enable == false` it degenerates to the static
+/// plan-once path (one uninterrupted fluid run).
+pub struct ReplanExecutor<'a> {
+    pub topo: &'a Topology,
+    pub params: FabricParams,
+    pub planner_cfg: PlannerCfg,
+    pub rcfg: ReplanCfg,
+}
+
+impl<'a> ReplanExecutor<'a> {
+    pub fn new(
+        topo: &'a Topology,
+        params: FabricParams,
+        planner_cfg: PlannerCfg,
+        mut rcfg: ReplanCfg,
+    ) -> Self {
+        // planner and dataplane must agree on what is endpoint-bound
+        rcfg.caps = DrainCaps::from(&params);
+        ReplanExecutor { topo, params, planner_cfg, rcfg }
+    }
+
+    /// Fly one round of `demands`, initially routed by scaling
+    /// `incumbent`'s splits onto them (the execution-time situation: the
+    /// plan predates the traffic). Returns timings plus the plan in
+    /// force at the end, which becomes the next round's incumbent.
+    pub fn execute(&mut self, incumbent: &Plan, demands: &[Demand]) -> ReplanRun {
+        let topo = self.topo;
+        let chunk = self.params.chunk_bytes.max(1.0);
+        let plan0 = carry_plan(topo, incumbent, demands);
+
+        // initial flows + chunk-sequence layout per pair
+        let mut init_flows: Vec<Flow> = Vec::new();
+        let mut streams: BTreeMap<(GpuId, GpuId), Vec<PartState>> = BTreeMap::new();
+        let mut chunks_per_pair: BTreeMap<(GpuId, GpuId), u64> = BTreeMap::new();
+        for (&pair, a) in &plan0.assignments {
+            let mut base = 0u64;
+            let mut parts = Vec::new();
+            for (path, bytes) in &a.parts {
+                let n = (bytes / chunk).ceil().max(1.0) as u64;
+                parts.push(PartState {
+                    flow: init_flows.len(),
+                    seqs: (base..base + n).collect(),
+                    delivered: 0,
+                });
+                init_flows.push(Flow::new(path.clone(), *bytes));
+                base += n;
+            }
+            streams.insert(pair, parts);
+            chunks_per_pair.insert(pair, base);
+        }
+
+        // the engine owns the flow list from here on; parts reference
+        // flows by engine index only
+        let mut engine = SimEngine::new(topo, self.params.clone(), &init_flows);
+        drop(init_flows);
+        let mut reass = ReassemblyTable::default();
+        let mut planner = Planner::new(topo, self.planner_cfg.clone());
+        let cadence = self.rcfg.cadence_s.max(1e-6);
+        let mut monitor = WindowedMonitor::new(topo, cadence);
+        let mut epochs: Vec<EpochStat> = Vec::new();
+        let mut replans = 0usize;
+        let mut preemptions = 0usize;
+        let mut final_plan = plan0.clone();
+
+        if !self.rcfg.enable {
+            engine.run_to_completion();
+        } else {
+            let mut t_next = cadence;
+            while !engine.is_done() {
+                engine.advance_to(t_next);
+                t_next += cadence;
+                if engine.is_done() {
+                    break;
+                }
+                monitor.observe(&engine.take_window());
+
+                // residual demands + the residual routing in flight
+                let mut residual_demands: Vec<Demand> = Vec::new();
+                let mut assignments = BTreeMap::new();
+                let mut link_load = vec![0.0f64; topo.links.len()];
+                for (&pair, parts) in &streams {
+                    let mut pr: Vec<(Path, f64)> = Vec::new();
+                    let mut total = 0.0f64;
+                    for ps in parts {
+                        let r = engine.residual_bytes(ps.flow);
+                        if r > 1.0 {
+                            pr.push((engine.flow(ps.flow).path.clone(), r));
+                            total += r;
+                        }
+                    }
+                    if total > 1.0 {
+                        residual_demands.push(Demand::new(pair.0, pair.1, total));
+                        for (p, b) in &pr {
+                            for &h in &p.hops {
+                                link_load[h] += *b;
+                            }
+                        }
+                        assignments.insert(pair, Assignment { parts: pr });
+                    }
+                }
+                if residual_demands.is_empty() {
+                    continue;
+                }
+                let in_flight = Plan { assignments, link_load, plan_time_s: 0.0 };
+
+                let out = planner.replan(
+                    &in_flight,
+                    monitor.load_estimates(),
+                    &residual_demands,
+                    &self.rcfg,
+                );
+                let mut preempted_here = 0usize;
+                if out.replanned {
+                    replans += 1;
+                    let now = engine.now();
+                    // one engine registration per epoch: accumulate every
+                    // changed pair's re-issued flows, then add_flows once
+                    // (each call rebuilds the full constraint structure)
+                    let mut epoch_batch: Vec<Flow> = Vec::new();
+                    struct Reissue {
+                        pair: (GpuId, GpuId),
+                        batch_off: usize,
+                        counts: Vec<usize>,
+                        pool: Vec<u64>,
+                    }
+                    let mut reissues: Vec<Reissue> = Vec::new();
+                    for &pair in &out.changed_pairs {
+                        let Some(newa) = out.plan.assignments.get(&pair) else {
+                            continue;
+                        };
+                        let Some(parts) = streams.get_mut(&pair) else { continue };
+                        // preempt live parts; release their completed
+                        // chunk prefixes; pool the undelivered seqs
+                        let mut pool: Vec<u64> = Vec::new();
+                        for ps in parts.iter_mut() {
+                            if !engine.is_live(ps.flow) {
+                                continue;
+                            }
+                            let moved = engine.moved_bytes(ps.flow);
+                            engine.preempt(ps.flow);
+                            preempted_here += 1;
+                            let done = ((moved / chunk).floor() as usize)
+                                .clamp(ps.delivered, ps.seqs.len());
+                            for &s in &ps.seqs[ps.delivered..done] {
+                                reass
+                                    .push(
+                                        pair.0,
+                                        pair.1,
+                                        ChunkArrival { seq: s, bytes: chunk as u64 },
+                                    )
+                                    .expect("ordering invariant violated");
+                            }
+                            pool.extend_from_slice(&ps.seqs[done..]);
+                            ps.seqs.truncate(done);
+                            ps.delivered = done;
+                        }
+                        // stage the residual on the new paths; the pooled
+                        // seqs are split across them by byte share
+                        let total_new = newa.total_bytes().max(1.0);
+                        let n_pool = pool.len();
+                        let batch_off = epoch_batch.len();
+                        let mut counts: Vec<usize> = Vec::new();
+                        let mut allotted = 0usize;
+                        for (path, bytes) in &newa.parts {
+                            epoch_batch.push(Flow::new(path.clone(), *bytes).at(now));
+                            let want =
+                                ((bytes / total_new) * n_pool as f64).round() as usize;
+                            let n = want.min(n_pool - allotted);
+                            counts.push(n);
+                            allotted += n;
+                        }
+                        if let Some(last) = counts.last_mut() {
+                            *last += n_pool - allotted;
+                        }
+                        reissues.push(Reissue { pair, batch_off, counts, pool });
+                    }
+                    let first = engine.add_flows(&epoch_batch);
+                    for r in reissues {
+                        let parts = streams.get_mut(&r.pair).expect("pair staged");
+                        let mut off = 0usize;
+                        for (j, &n) in r.counts.iter().enumerate() {
+                            parts.push(PartState {
+                                flow: first + r.batch_off + j,
+                                seqs: r.pool[off..off + n].to_vec(),
+                                delivered: 0,
+                            });
+                            off += n;
+                        }
+                    }
+                    preemptions += preempted_here;
+                    // merge the adopted splits into the full-round plan:
+                    // pairs that already drained keep their original
+                    // routing as next round's incumbent preference
+                    for (pair, a) in &out.plan.assignments {
+                        final_plan.assignments.insert(*pair, a.clone());
+                    }
+                    let mut merged_load = vec![0.0f64; topo.links.len()];
+                    for a in final_plan.assignments.values() {
+                        for (p, b) in &a.parts {
+                            for &h in &p.hops {
+                                merged_load[h] += *b;
+                            }
+                        }
+                    }
+                    final_plan.link_load = merged_load;
+                }
+                epochs.push(EpochStat {
+                    t_s: engine.now(),
+                    deviation: out.deviation,
+                    replanned: out.replanned,
+                    preempted: preempted_here,
+                });
+            }
+        }
+
+        // deliver every remaining chunk, worst-case interleaved
+        // round-robin across each pair's paths, through reassembly
+        for (&pair, parts) in streams.iter_mut() {
+            let mut live = true;
+            while live {
+                live = false;
+                for ps in parts.iter_mut() {
+                    if ps.delivered < ps.seqs.len() {
+                        reass
+                            .push(
+                                pair.0,
+                                pair.1,
+                                ChunkArrival {
+                                    seq: ps.seqs[ps.delivered],
+                                    bytes: chunk as u64,
+                                },
+                            )
+                            .expect("ordering invariant violated");
+                        ps.delivered += 1;
+                        live = true;
+                    }
+                }
+            }
+            let q = reass.stream(pair.0, pair.1).expect("stream exists");
+            assert!(q.is_drained(), "stream {pair:?} not fully reassembled");
+            assert_eq!(
+                q.delivered_bytes(),
+                chunks_per_pair[&pair] * chunk as u64,
+                "stream {pair:?} lost chunks across reroutes"
+            );
+        }
+
+        let sim = engine.result();
+        let payload: f64 = demands.iter().map(|d| d.bytes).sum();
+        let name = if self.rcfg.enable { "nimble-replan" } else { "nimble-static" };
+        let report = CommReport::from_sim(name, topo, &sim, payload);
+        let peak_reassembly = streams
+            .keys()
+            .filter_map(|&(s, d)| reass.stream(s, d).map(|q| q.peak_pending))
+            .max()
+            .unwrap_or(0);
+        ReplanRun {
+            report,
+            sim,
+            final_plan,
+            epochs,
+            replans,
+            preemptions,
+            peak_reassembly,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: f64 = 1024.0 * 1024.0;
+
+    fn enabled(cadence_s: f64) -> ReplanCfg {
+        ReplanCfg { enable: true, cadence_s, margin: 0.1, ..ReplanCfg::default() }
+    }
+
+    /// A stale single-path plan for a now-heavy pair gets rerouted
+    /// mid-flight, beats the static execution, and the receiver still
+    /// sees every chunk exactly once, in order.
+    #[test]
+    fn midflight_reroute_beats_static_and_keeps_ordering() {
+        let topo = Topology::paper();
+        let params = FabricParams::default();
+        // incumbent planned when (2,1) was tiny: direct path only
+        let mut planner = Planner::new(&topo, PlannerCfg::default());
+        let incumbent = planner.plan(&[Demand::new(2, 1, 2.0 * MB)]);
+        let demands = vec![Demand::new(2, 1, 512.0 * MB)];
+
+        let mut stat = ReplanExecutor::new(
+            &topo,
+            params.clone(),
+            PlannerCfg::default(),
+            ReplanCfg::default(),
+        );
+        let static_run = stat.execute(&incumbent, &demands);
+
+        let mut dyn_ = ReplanExecutor::new(
+            &topo,
+            params,
+            PlannerCfg::default(),
+            enabled(2.0e-4),
+        );
+        let replan_run = dyn_.execute(&incumbent, &demands);
+
+        assert!(replan_run.replans >= 1, "no replan fired");
+        assert!(replan_run.preemptions >= 1, "no flow was preempted");
+        // multi-path reroute buffers out-of-order chunks at the receiver
+        assert!(replan_run.peak_reassembly >= 1);
+        assert!(
+            replan_run.report.makespan_s < static_run.report.makespan_s * 0.75,
+            "reroute gained too little: {} vs {}",
+            replan_run.report.makespan_s,
+            static_run.report.makespan_s
+        );
+    }
+
+    /// Disabled replanning is the static path, bit for bit.
+    #[test]
+    fn static_path_bit_identical_when_disabled() {
+        let topo = Topology::paper();
+        let params = FabricParams::default();
+        let demands = vec![
+            Demand::new(0, 1, 256.0 * MB),
+            Demand::new(4, 1, 96.0 * MB),
+            Demand::new(2, 3, 64.0 * MB),
+        ];
+        let mut planner = Planner::new(&topo, PlannerCfg::default());
+        let plan = planner.plan(&demands);
+
+        let run = |rcfg: ReplanCfg| {
+            ReplanExecutor::new(&topo, params.clone(), PlannerCfg::default(), rcfg)
+                .execute(&plan, &demands)
+        };
+        let a = run(ReplanCfg::default());
+        let b = run(ReplanCfg::default());
+        assert_eq!(a.report.makespan_s.to_bits(), b.report.makespan_s.to_bits());
+        assert_eq!(a.sim.link_bytes, b.sim.link_bytes);
+        assert_eq!(a.replans, 0);
+        assert_eq!(a.preemptions, 0);
+
+        // and identical to a plain one-shot fluid run of the same plan
+        let flows: Vec<Flow> = plan
+            .assignments
+            .values()
+            .flat_map(|asg| asg.parts.iter().cloned())
+            .map(|(p, bytes)| Flow::new(p, bytes))
+            .collect();
+        let direct = crate::fabric::fluid::FluidSim::new(&topo, params).run(&flows);
+        assert_eq!(a.report.makespan_s.to_bits(), direct.makespan.to_bits());
+    }
+
+    /// A balanced, well-matched round is left alone entirely (no
+    /// churn), and on endpoint-bound heavy pairs the loop only fires
+    /// when re-leveling the residuals genuinely pays — it never loses
+    /// to leaving the plan alone.
+    #[test]
+    fn matched_plan_never_hurt_by_loop() {
+        let topo = Topology::paper();
+        let params = FabricParams::default();
+
+        // balanced hot-row round 0: plan matches traffic ⇒ zero replans
+        let sched = crate::workloads::dynamic::PhasedHotRows::paper_default(
+            &topo,
+            64.0 * MB,
+        );
+        let demands = sched.demands_at(&topo, 0);
+        let mut planner = Planner::new(&topo, PlannerCfg::default());
+        let plan = planner.plan(&demands);
+        let mut ex = ReplanExecutor::new(
+            &topo,
+            params.clone(),
+            PlannerCfg::default(),
+            enabled(2.0e-4),
+        );
+        let run = ex.execute(&plan, &demands);
+        assert_eq!(run.replans, 0, "churned a matched balanced plan");
+        assert_eq!(run.preemptions, 0);
+        assert!(!run.epochs.is_empty(), "loop never sampled");
+
+        // endpoint-bound heavy pairs: residual drain deviates from the
+        // plan's split (the recv cap equalizes flow rates), so the loop
+        // may re-level — but adoption must strictly pay for itself
+        let demands = vec![
+            Demand::new(0, 1, 256.0 * MB),
+            Demand::new(2, 1, 128.0 * MB),
+        ];
+        let plan = Planner::new(&topo, PlannerCfg::default()).plan(&demands);
+        let static_run = ReplanExecutor::new(
+            &topo,
+            params.clone(),
+            PlannerCfg::default(),
+            ReplanCfg::default(),
+        )
+        .execute(&plan, &demands);
+        let looped = ReplanExecutor::new(
+            &topo,
+            params,
+            PlannerCfg::default(),
+            enabled(2.0e-4),
+        )
+        .execute(&plan, &demands);
+        assert!(
+            looped.report.makespan_s <= static_run.report.makespan_s * 1.001,
+            "loop hurt a matched plan: {} vs {}",
+            looped.report.makespan_s,
+            static_run.report.makespan_s
+        );
+    }
+}

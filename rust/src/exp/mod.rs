@@ -7,6 +7,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod interference;
+pub mod replan;
 pub mod sendrecv;
 pub mod table1;
 

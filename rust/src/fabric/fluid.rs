@@ -15,6 +15,16 @@
 //! uniformly until some constraint saturates, freezes that
 //! constraint's flows, and repeats — the textbook max-min allocation
 //! generalized to multiple resource kinds.
+//!
+//! Two execution surfaces share the same event loop:
+//!
+//! * [`FluidSim::run`] — run a fixed flow set to completion (the
+//!   closed-form path used by every static experiment);
+//! * [`SimEngine`] — the resumable form behind the execution-time
+//!   re-planning loop (paper §I/§IV "execution-time planning"):
+//!   advance virtual time in bounded steps, sample per-link byte
+//!   windows for the monitor, **preempt** a flow's residual bytes and
+//!   re-issue them on different paths at a replan epoch.
 
 use super::{gbps_to_bps, FabricParams, XferMode};
 use crate::topology::{LinkKind, Path, Topology};
@@ -118,100 +128,12 @@ impl<'a> FluidSim<'a> {
     }
 
     /// Run all flows to completion; returns per-flow finish times and
-    /// per-link byte totals.
+    /// per-link byte totals. Implemented on [`SimEngine`] so the static
+    /// path and the resumable re-planning path share one event loop.
     pub fn run(&self, flows: &[Flow]) -> SimResult {
-        let n = flows.len();
-        let mut start_t = vec![0.0f64; n];
-        for (i, f) in flows.iter().enumerate() {
-            start_t[i] = f.issue_t + self.params.start_latency_s(&f.path, f.mode);
-        }
-        let mut remaining: Vec<f64> = flows.iter().map(|f| f.bytes.max(1.0)).collect();
-        let mut finish_t = vec![f64::NAN; n];
-        let mut link_bytes = vec![0.0f64; self.topo.links.len()];
-
-        // Static constraint structure over ALL flows; the rate solver
-        // only considers currently-active members.
-        let constraints = self.build_constraints(flows);
-        // reverse index: constraints each flow belongs to (hot-loop aid)
-        let mut flow_cons: Vec<Vec<usize>> = vec![Vec::new(); n];
-        for (ci, c) in constraints.iter().enumerate() {
-            for &m in &c.members {
-                flow_cons[m].push(ci);
-            }
-        }
-        let rate_cap: Vec<f64> = flows
-            .iter()
-            .map(|f| {
-                gbps_to_bps(self.params.flow_rate_cap_gbps(self.topo, &f.path, f.bytes))
-                    * f.rate_factor
-            })
-            .collect();
-
-        let mut t = 0.0f64;
-        let mut active: Vec<usize> = Vec::new();
-        let mut pending: Vec<usize> = (0..n).collect();
-        pending.sort_by(|&a, &b| start_t[a].partial_cmp(&start_t[b]).unwrap());
-        pending.reverse(); // pop from the back = earliest
-
-        let mut rates = vec![0.0f64; n];
-        while !active.is_empty() || !pending.is_empty() {
-            // admit arrivals at the current time
-            while let Some(&i) = pending.last() {
-                if start_t[i] <= t + 1e-15 {
-                    active.push(i);
-                    pending.pop();
-                } else {
-                    break;
-                }
-            }
-            if active.is_empty() {
-                t = start_t[*pending.last().unwrap()];
-                continue;
-            }
-            self.max_min_rates(&constraints, &flow_cons, &rate_cap, &active, &mut rates);
-            // next event: earliest completion or next arrival
-            let mut dt = f64::INFINITY;
-            for &i in &active {
-                if rates[i] > 0.0 {
-                    dt = dt.min(remaining[i] / rates[i]);
-                }
-            }
-            if let Some(&i) = pending.last() {
-                dt = dt.min(start_t[i] - t);
-            }
-            assert!(dt.is_finite(), "stuck: no progress possible (all rates zero)");
-            // advance
-            for &i in &active {
-                let moved = rates[i] * dt;
-                remaining[i] -= moved;
-                for &h in &flows[i].path.hops {
-                    link_bytes[h] += moved;
-                }
-            }
-            t += dt;
-            // retire completions
-            active.retain(|&i| {
-                if remaining[i] <= 1e-6 {
-                    finish_t[i] = t;
-                    false
-                } else {
-                    true
-                }
-            });
-        }
-
-        let makespan = finish_t.iter().cloned().fold(0.0, f64::max);
-        SimResult {
-            flows: (0..n)
-                .map(|i| FlowResult {
-                    start_t: start_t[i],
-                    finish_t: finish_t[i],
-                    bytes: flows[i].bytes,
-                })
-                .collect(),
-            link_bytes,
-            makespan,
-        }
+        let mut engine = SimEngine::new(self.topo, self.params.clone(), flows);
+        engine.run_to_completion();
+        engine.result()
     }
 
     /// Assemble every capacity constraint touching any flow.
@@ -363,6 +285,283 @@ impl<'a> FluidSim<'a> {
     }
 }
 
+/// Resumable fluid-simulation engine: the mechanism under the
+/// execution-time re-planning loop.
+///
+/// The engine owns the event loop of [`FluidSim::run`] but exposes it
+/// incrementally:
+///
+/// * [`SimEngine::advance_to`] runs events up to a virtual-time bound
+///   (a replan epoch boundary);
+/// * [`SimEngine::take_window`] drains the per-link byte counters
+///   accumulated since the previous call (the monitor's sampling
+///   window);
+/// * [`SimEngine::preempt`] stops a flow mid-transfer and returns its
+///   residual bytes so the coordinator can re-issue them on new paths
+///   via [`SimEngine::add_flows`].
+///
+/// With no preemptions or additions, `run_to_completion` reproduces
+/// [`FluidSim::run`] event-for-event (bit-identical results) — the
+/// guarantee behind "replanning disabled ⇒ byte-identical to the
+/// static path".
+pub struct SimEngine<'a> {
+    sim: FluidSim<'a>,
+    flows: Vec<Flow>,
+    start_t: Vec<f64>,
+    remaining: Vec<f64>,
+    moved: Vec<f64>,
+    finish_t: Vec<f64>,
+    link_bytes: Vec<f64>,
+    window_bytes: Vec<f64>,
+    t: f64,
+    active: Vec<usize>,
+    /// Sorted by start time, descending (pop from the back = earliest).
+    pending: Vec<usize>,
+    constraints: Vec<Constraint>,
+    flow_cons: Vec<Vec<usize>>,
+    rate_cap: Vec<f64>,
+    rates: Vec<f64>,
+    /// Flows preempted before completing (residual re-issued elsewhere).
+    preempted: Vec<bool>,
+}
+
+impl<'a> SimEngine<'a> {
+    pub fn new(topo: &'a Topology, params: FabricParams, flows: &[Flow]) -> Self {
+        let mut e = SimEngine {
+            sim: FluidSim { topo, params },
+            flows: Vec::new(),
+            start_t: Vec::new(),
+            remaining: Vec::new(),
+            moved: Vec::new(),
+            finish_t: Vec::new(),
+            link_bytes: vec![0.0; topo.links.len()],
+            window_bytes: vec![0.0; topo.links.len()],
+            t: 0.0,
+            active: Vec::new(),
+            pending: Vec::new(),
+            constraints: Vec::new(),
+            flow_cons: Vec::new(),
+            rate_cap: Vec::new(),
+            rates: Vec::new(),
+            preempted: Vec::new(),
+        };
+        e.add_flows(flows);
+        e
+    }
+
+    /// Current virtual time (seconds).
+    pub fn now(&self) -> f64 {
+        self.t
+    }
+
+    /// All flows delivered or preempted.
+    pub fn is_done(&self) -> bool {
+        self.active.is_empty() && self.pending.is_empty()
+    }
+
+    /// Bytes flow `i` still has to deliver (0 once finished/preempted).
+    pub fn residual_bytes(&self, i: usize) -> f64 {
+        if self.finish_t[i].is_nan() {
+            self.remaining[i].max(0.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Bytes flow `i` has actually moved so far.
+    pub fn moved_bytes(&self, i: usize) -> f64 {
+        self.moved[i]
+    }
+
+    /// Whether flow `i` is still in flight (issued or queued).
+    pub fn is_live(&self, i: usize) -> bool {
+        self.finish_t[i].is_nan()
+    }
+
+    /// The flow registered under index `i` (issue order).
+    pub fn flow(&self, i: usize) -> &Flow {
+        &self.flows[i]
+    }
+
+    /// Register additional flows (re-issued residuals at a replan
+    /// epoch). Their `issue_t` should not precede [`SimEngine::now`].
+    /// Returns the index of the first newly added flow.
+    pub fn add_flows(&mut self, flows: &[Flow]) -> usize {
+        let first = self.flows.len();
+        for f in flows {
+            let i = self.flows.len();
+            self.start_t
+                .push(f.issue_t + self.sim.params.start_latency_s(&f.path, f.mode));
+            self.remaining.push(f.bytes.max(1.0));
+            self.moved.push(0.0);
+            self.finish_t.push(f64::NAN);
+            self.preempted.push(false);
+            self.flows.push(f.clone());
+            self.pending.push(i);
+        }
+        // Rebuild the constraint structure over the full flow set (the
+        // solver only ever raises rates of *active* members, so closed
+        // flows in a membership list are inert).
+        self.constraints = self.sim.build_constraints(&self.flows);
+        self.flow_cons = vec![Vec::new(); self.flows.len()];
+        for (ci, c) in self.constraints.iter().enumerate() {
+            for &m in &c.members {
+                self.flow_cons[m].push(ci);
+            }
+        }
+        self.rate_cap = self
+            .flows
+            .iter()
+            .map(|f| {
+                gbps_to_bps(self.sim.params.flow_rate_cap_gbps(
+                    self.sim.topo,
+                    &f.path,
+                    f.bytes,
+                )) * f.rate_factor
+            })
+            .collect();
+        self.rates = vec![0.0; self.flows.len()];
+        let start_t = &self.start_t;
+        self.pending
+            .sort_by(|&a, &b| start_t[a].partial_cmp(&start_t[b]).unwrap());
+        self.pending.reverse(); // pop from the back = earliest
+        first
+    }
+
+    /// Preempt flow `i`: freeze it at the bytes moved so far and return
+    /// the residual byte count for re-issue on other paths. Finished
+    /// flows return 0. The flow's result records its preemption time as
+    /// `finish_t` and only the bytes it actually carried.
+    pub fn preempt(&mut self, i: usize) -> f64 {
+        if !self.finish_t[i].is_nan() {
+            return 0.0;
+        }
+        let residual = self.remaining[i].max(0.0);
+        if let Some(pos) = self.active.iter().position(|&x| x == i) {
+            self.active.swap_remove(pos);
+        } else if let Some(pos) = self.pending.iter().position(|&x| x == i) {
+            self.pending.remove(pos);
+        }
+        self.finish_t[i] = self.t;
+        self.remaining[i] = 0.0;
+        self.preempted[i] = true;
+        residual
+    }
+
+    /// Per-link bytes moved since the previous `take_window` call (the
+    /// monitor's sampling window); resets the window counters.
+    pub fn take_window(&mut self) -> Vec<f64> {
+        std::mem::replace(&mut self.window_bytes, vec![0.0; self.link_bytes.len()])
+    }
+
+    /// Advance the event loop until `t_stop` (a replan epoch boundary)
+    /// or until every flow completes, whichever comes first.
+    pub fn advance_to(&mut self, t_stop: f64) {
+        while !self.is_done() {
+            // admit arrivals at the current time
+            while let Some(&i) = self.pending.last() {
+                if self.start_t[i] <= self.t + 1e-15 {
+                    self.active.push(i);
+                    self.pending.pop();
+                } else {
+                    break;
+                }
+            }
+            if self.active.is_empty() {
+                let next = self.start_t[*self.pending.last().unwrap()];
+                if next > t_stop {
+                    self.t = self.t.max(t_stop);
+                    return;
+                }
+                self.t = next;
+                continue;
+            }
+            self.sim.max_min_rates(
+                &self.constraints,
+                &self.flow_cons,
+                &self.rate_cap,
+                &self.active,
+                &mut self.rates,
+            );
+            // next event: earliest completion or next arrival
+            let mut dt = f64::INFINITY;
+            for &i in &self.active {
+                if self.rates[i] > 0.0 {
+                    dt = dt.min(self.remaining[i] / self.rates[i]);
+                }
+            }
+            if let Some(&i) = self.pending.last() {
+                dt = dt.min(self.start_t[i] - self.t);
+            }
+            assert!(dt.is_finite(), "stuck: no progress possible (all rates zero)");
+            // clamp at the epoch boundary
+            let stopping = self.t + dt > t_stop;
+            let dt = if stopping { (t_stop - self.t).max(0.0) } else { dt };
+            // advance
+            for &i in &self.active {
+                let moved = self.rates[i] * dt;
+                self.remaining[i] -= moved;
+                self.moved[i] += moved;
+                for &h in &self.flows[i].path.hops {
+                    self.link_bytes[h] += moved;
+                    self.window_bytes[h] += moved;
+                }
+            }
+            self.t += dt;
+            // retire completions
+            let t = self.t;
+            let remaining = &self.remaining;
+            let finish_t = &mut self.finish_t;
+            self.active.retain(|&i| {
+                if remaining[i] <= 1e-6 {
+                    finish_t[i] = t;
+                    false
+                } else {
+                    true
+                }
+            });
+            if stopping {
+                return;
+            }
+        }
+        if t_stop.is_finite() && t_stop > self.t {
+            self.t = t_stop;
+        }
+    }
+
+    /// Run every remaining event (no epoch bound).
+    pub fn run_to_completion(&mut self) {
+        self.advance_to(f64::INFINITY);
+    }
+
+    /// Snapshot the outcome. `FlowResult::bytes` is the bytes a flow
+    /// actually carried, so preempted flows and their re-issued
+    /// residuals sum to the original payload without double counting.
+    pub fn result(&self) -> SimResult {
+        let makespan = self
+            .finish_t
+            .iter()
+            .cloned()
+            .filter(|t| !t.is_nan())
+            .fold(0.0, f64::max);
+        SimResult {
+            flows: (0..self.flows.len())
+                .map(|i| FlowResult {
+                    start_t: self.start_t[i],
+                    finish_t: self.finish_t[i],
+                    bytes: if self.preempted[i] {
+                        self.moved[i]
+                    } else {
+                        self.flows[i].bytes
+                    },
+                })
+                .collect(),
+            link_bytes: self.link_bytes.clone(),
+            makespan,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -482,6 +681,104 @@ mod tests {
         let bw = r.aggregate_gbps();
         // far from peak: overhead + unsaturated curve
         assert!(bw < 10.0, "bw={bw}");
+    }
+
+    /// With no preemptions/additions, engine == closed-form run,
+    /// bit for bit (run() IS the engine, but guard the equivalence).
+    #[test]
+    fn engine_matches_run_bit_identically() {
+        let t = Topology::paper();
+        let s = sim(&t);
+        let cands = candidates(&t, 0, 1, true);
+        let flows = vec![
+            Flow::new(cands[0].clone(), 96.0 * MB),
+            Flow::new(cands[1].clone(), 64.0 * MB).at(0.0005),
+            Flow::new(cands[2].clone(), 32.0 * MB).at(0.001),
+        ];
+        let r1 = s.run(&flows);
+        let mut e = SimEngine::new(&t, FabricParams::default(), &flows);
+        e.run_to_completion();
+        let r2 = e.result();
+        assert_eq!(r1.makespan.to_bits(), r2.makespan.to_bits());
+        for (a, b) in r1.flows.iter().zip(&r2.flows) {
+            assert_eq!(a.finish_t.to_bits(), b.finish_t.to_bits());
+        }
+        assert_eq!(r1.link_bytes, r2.link_bytes);
+    }
+
+    /// Epoch-sliced advancement only splits integration intervals; the
+    /// trajectory stays the same up to float noise.
+    #[test]
+    fn engine_epoch_slicing_preserves_trajectory() {
+        let t = Topology::paper();
+        let s = sim(&t);
+        let p = candidates(&t, 0, 1, false).remove(0);
+        let flows = vec![
+            Flow::new(p.clone(), 256.0 * MB),
+            Flow::new(p.clone(), 128.0 * MB).at(0.002),
+        ];
+        let whole = s.run(&flows);
+        let mut e = SimEngine::new(&t, FabricParams::default(), &flows);
+        let mut epoch = 0.0005;
+        while !e.is_done() {
+            e.advance_to(epoch);
+            epoch += 0.0005;
+        }
+        let sliced = e.result();
+        assert!((whole.makespan - sliced.makespan).abs() < 1e-9);
+        for (a, b) in whole.link_bytes.iter().zip(&sliced.link_bytes) {
+            assert!((a - b).abs() < 1.0, "link bytes drifted: {a} vs {b}");
+        }
+    }
+
+    /// Preempting a flow and re-issuing its residual on another path
+    /// conserves payload bytes and still finishes everything.
+    #[test]
+    fn engine_preempt_and_reissue_conserves_bytes() {
+        let t = Topology::paper();
+        let cands = candidates(&t, 0, 1, true);
+        let bytes = 256.0 * MB;
+        let initial = [Flow::new(cands[0].clone(), bytes)];
+        let mut e = SimEngine::new(&t, FabricParams::default(), &initial);
+        // run a third of the nominal drain, then reroute the rest
+        e.advance_to(0.0008);
+        assert!(!e.is_done());
+        let residual = e.preempt(0);
+        assert!(residual > 0.0 && residual < bytes);
+        let moved = e.moved_bytes(0);
+        assert!((moved + residual - bytes).abs() < 1.0);
+        e.add_flows(&[Flow::new(cands[1].clone(), residual).at(e.now())]);
+        e.run_to_completion();
+        let r = e.result();
+        let delivered: f64 = r.flows.iter().map(|f| f.bytes).sum();
+        assert!((delivered - bytes).abs() < 1.0, "delivered {delivered}");
+        assert!(r.flows[1].finish_t > r.flows[0].finish_t);
+        // the relay path actually carried the residual
+        for &h in &cands[1].hops {
+            assert!((r.link_bytes[h] - residual).abs() < 1.0);
+        }
+    }
+
+    /// Window sampling partitions the cumulative per-link byte counts.
+    #[test]
+    fn engine_windows_partition_link_bytes() {
+        let t = Topology::paper();
+        let p = candidates(&t, 0, 4, false).remove(0);
+        let mut e =
+            SimEngine::new(&t, FabricParams::default(), &[Flow::new(p, 64.0 * MB)]);
+        let mut summed = vec![0.0; t.links.len()];
+        let mut epoch = 0.0004;
+        while !e.is_done() {
+            e.advance_to(epoch);
+            for (s, w) in summed.iter_mut().zip(e.take_window()) {
+                *s += w;
+            }
+            epoch += 0.0004;
+        }
+        let r = e.result();
+        for (i, (&s, &tot)) in summed.iter().zip(&r.link_bytes).enumerate() {
+            assert!((s - tot).abs() < 1.0, "link {i}: windows {s} vs total {tot}");
+        }
     }
 
     #[test]

@@ -8,13 +8,69 @@
 //!
 //! * **L3 (this crate)** — the paper's orchestration contribution:
 //!   the MWU minimum-congestion planner (Algorithm 1), the NIMBLE
-//!   coordinator (monitoring, channels, reassembly, thresholds),
-//!   collectives, baselines, workload generators — all running against
-//!   a calibrated fabric simulator standing in for the H100/NDR
-//!   testbed (see DESIGN.md §2 for the substitution table).
+//!   coordinator (monitoring, channels, reassembly, thresholds), the
+//!   closed execution-time re-planning loop, collectives, baselines,
+//!   workload generators — all running against a calibrated fabric
+//!   simulator standing in for the H100/NDR testbed (see DESIGN.md §2
+//!   for the substitution table).
 //! * **L2/L1 (python/compile)** — JAX MoE model with Pallas kernels,
 //!   AOT-lowered to HLO text + manifest and executed from [`runtime`]
 //!   (offline CPU interpreter; see DESIGN.md §6).
+//!
+//! ## Module map (code → paper)
+//!
+//! | module | paper | role |
+//! |---|---|---|
+//! | [`topology`] | §IV-B, §V-A | NVLink mesh + rail-matched NICs, candidate paths |
+//! | [`planner`] | Algorithm 1, §IV-B | MWU min-congestion routing + incremental [`planner::Planner::replan`] |
+//! | [`fabric`] | §V-B | calibrated fluid + chunk-pipeline simulators, resumable [`fabric::fluid::SimEngine`] |
+//! | [`coordinator`] | §IV | monitor / channels / reassembly, [`coordinator::Orchestrator`] and the mid-flight [`coordinator::ReplanExecutor`] |
+//! | [`collectives`] | §IV-E | All-to-Allv, async Send/Recv, ring collectives |
+//! | [`baselines`] | §II-B, §V | NCCL-like (PXN), MPI/UCX-like, single-path |
+//! | [`workloads`] | §III-A, §V-C/D | skew generators incl. time-varying [`workloads::dynamic`] |
+//! | [`exp`] | §V tables/figures | one driver per paper artifact + `exp::replan` |
+//! | [`moe`] | §V-D, Fig 8 | MoE expert-parallel step driver |
+//! | [`runtime`] | DESIGN.md §6 | AOT artifact interpreter (L2/L1 bridge) |
+//! | [`metrics`], [`util`], [`config`] | — | reports, std-only substrates, TOML config |
+//!
+//! ARCHITECTURE.md walks the planner ↔ fabric ↔ coordinator data flow,
+//! including the replan feedback edge; EXPERIMENTS.md maps every CLI
+//! subcommand to its paper artifact.
+//!
+//! ## Quickstart
+//!
+//! Plan a skewed transfer with Algorithm 1, then let the
+//! execution-time loop rescue a stale plan mid-flight:
+//!
+//! ```
+//! use nimble::coordinator::ReplanExecutor;
+//! use nimble::fabric::FabricParams;
+//! use nimble::planner::{Demand, Planner, PlannerCfg, ReplanCfg};
+//! use nimble::topology::Topology;
+//!
+//! let topo = Topology::paper(); // 2 nodes × (4× H100 + 4× NDR NIC)
+//! let mb = 1024.0 * 1024.0;
+//!
+//! // Algorithm 1 spreads a heavy pair across direct + relay paths
+//! let demands = vec![Demand::new(0, 1, 512.0 * mb)];
+//! let plan = Planner::new(&topo, PlannerCfg::default()).plan(&demands);
+//! assert!(plan.assignments[&(0, 1)].path_count() > 1);
+//!
+//! // Execution-time loop: the incumbent was planned when (2→1) was
+//! // tiny; once the pair turns heavy, the monitor → replan → reroute
+//! // loop preempts the single-path residual and goes multi-path.
+//! let stale = Planner::new(&topo, PlannerCfg::default())
+//!     .plan(&[Demand::new(2, 1, 2.0 * mb)]);
+//! let rcfg = ReplanCfg { enable: true, cadence_s: 2.0e-4, ..ReplanCfg::default() };
+//! let mut exec = ReplanExecutor::new(
+//!     &topo,
+//!     FabricParams::default(),
+//!     PlannerCfg::default(),
+//!     rcfg,
+//! );
+//! let run = exec.execute(&stale, &[Demand::new(2, 1, 512.0 * mb)]);
+//! assert!(run.replans >= 1, "the loop should have rerouted mid-flight");
+//! ```
 //!
 //! Entry points: the `nimble` binary (`nimble --help`), the
 //! `examples/`, and the per-figure benches under `benches/`.

@@ -10,12 +10,13 @@
 //! nimble fig8
 //! nimble sendrecv          async p2p imbalance sweep
 //! nimble ablate            design-choice ablations
+//! nimble replan            execution-time re-planning vs static plan
 //! nimble plan --src 0 --dst 1 --mb 256   show a routing plan
 //! nimble moe-compute       run the AOT FFN artifacts (offline interpreter)
 //! nimble info              topology + fabric calibration summary
 //! ```
 
-use nimble::exp::{ablate, fig6, fig7, fig8, interference, sendrecv, table1, MB};
+use nimble::exp::{ablate, fig6, fig7, fig8, interference, replan, sendrecv, table1, MB};
 use nimble::fabric::FabricParams;
 use nimble::planner::{CostModel, Demand, Planner};
 use nimble::runtime::Runtime;
@@ -76,6 +77,52 @@ fn main() {
             println!("{}", interference::render(&topo, &params));
             Ok(())
         }
+        "replan" => Args::new(
+            "nimble replan",
+            "execution-time re-planning loop vs the static plan",
+        )
+        .flag("workload", "hotrows", "hotrows|moe (time-varying skew pattern)")
+        .flag("rounds", "6", "rounds to fly (hot spot shifts between them)")
+        .flag("row-mb", "64", "hot-row bytes per peer in MB")
+        .flag("cadence-ms", "-1", "replan epoch cadence in ms (-1: from config)")
+        .flag("margin", "-1", "challenger hysteresis margin (-1: from config)")
+        .switch("no-replan", "disable re-planning (shows the byte-identical static path)")
+        .parse(rest)
+        .map(|p| {
+            let mut rcfg = cfg.replan.clone();
+            rcfg.enable = !p.get_bool("no-replan");
+            if p.get_f64("cadence-ms") > 0.0 {
+                rcfg.cadence_s = p.get_f64("cadence-ms") * 1e-3;
+            }
+            let margin = p.get_f64("margin");
+            if margin >= 0.0 {
+                // same validity range config.rs enforces for [replan]
+                if margin >= 1.0 {
+                    eprintln!("--margin out of [0,1): {margin}");
+                    std::process::exit(2);
+                }
+                rcfg.margin = margin;
+            }
+            let workload = match p.get("workload") {
+                "moe" => replan::Workload::MoeDrift,
+                "hotrows" => replan::Workload::HotRows,
+                other => {
+                    eprintln!("--workload must be hotrows|moe, got '{other}'");
+                    std::process::exit(2);
+                }
+            };
+            println!(
+                "{}",
+                replan::render(
+                    &topo,
+                    &params,
+                    &rcfg,
+                    workload,
+                    p.get_usize("rounds"),
+                    p.get_f64("row-mb"),
+                )
+            );
+        }),
         "plan" => Args::new("nimble plan", "show the routing plan for one demand")
             .flag("src", "0", "source GPU")
             .flag("dst", "1", "destination GPU")
@@ -124,7 +171,7 @@ fn main() {
 
 fn usage() -> String {
     "nimble — NIMBLE (skew-to-symmetry multi-path balancing) reproduction\n\
-     commands: table1 | fig6 | fig7 | fig8 | sendrecv | ablate | interference | plan | moe-compute | info\n\
+     commands: table1 | fig6 | fig7 | fig8 | sendrecv | ablate | interference | replan | plan | moe-compute | info\n\
      run `nimble <cmd> --help` for flags"
         .to_string()
 }

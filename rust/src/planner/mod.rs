@@ -1,14 +1,18 @@
 //! The NIMBLE planner (paper §IV-B): capacity-normalized
 //! minimum-congestion routing via multiplicative-weights iterative
-//! approximation, plus the validators used to check it — a Dinic
-//! max-flow bound and a brute-force exact IP for tiny instances.
+//! approximation (Algorithm 1), the incremental execution-time
+//! [`replan`] entry point driving the monitor → replan → reroute loop,
+//! plus the validators used to check it — a Dinic max-flow bound and a
+//! brute-force exact IP for tiny instances.
 
 pub mod cost;
 pub mod exact;
 pub mod maxflow;
 pub mod mwu;
 pub mod plan;
+pub mod replan;
 
 pub use cost::{CostModel, CostShape};
 pub use mwu::{lower_bound_norm_load, Planner, PlannerCfg};
 pub use plan::{Assignment, Demand, Plan};
+pub use replan::{carry_plan, DrainCaps, ReplanCfg, ReplanOutcome};

@@ -18,7 +18,7 @@
 use super::cost::CostModel;
 use super::plan::{Assignment, Demand, Plan};
 use crate::topology::path::candidates;
-use crate::topology::{GpuId, Path, Topology};
+use crate::topology::{GpuId, Path, PathKind, Topology};
 use std::collections::BTreeMap;
 use std::time::Instant;
 
@@ -63,6 +63,11 @@ impl<'a> Planner<'a> {
         &self.cfg
     }
 
+    /// The topology this planner routes over.
+    pub fn topo(&self) -> &'a Topology {
+        self.topo
+    }
+
     fn candidates_for(&mut self, s: GpuId, d: GpuId, msg_bytes: f64) -> &[Path] {
         let multipath =
             self.cfg.multipath && msg_bytes > self.cfg.cost.multipath_min_bytes;
@@ -85,6 +90,21 @@ impl<'a> Planner<'a> {
     /// already pressing on). `Plan::link_load` reports only the load
     /// *added* by this plan, keeping `validate()` exact.
     pub fn plan_with_initial(&mut self, demands: &[Demand], initial: Option<&[f64]>) -> Plan {
+        self.plan_seeded(demands, initial, None)
+    }
+
+    /// Full warm start for the execution-time re-planning loop: besides
+    /// the observed initial loads, seed each pair's hysteresis
+    /// *incumbent* with the path it is already flying on (identified by
+    /// [`PathKind`], which is unique per pair). A seeded pair keeps its
+    /// current path unless a challenger beats it by the configured
+    /// hysteresis margin — the anti-churn property §I asks for.
+    pub fn plan_seeded(
+        &mut self,
+        demands: &[Demand],
+        initial: Option<&[f64]>,
+        incumbent_kinds: Option<&BTreeMap<(GpuId, GpuId), PathKind>>,
+    ) -> Plan {
         let t0 = Instant::now();
         let cfg = self.cfg.clone();
         let eps = cfg.epsilon_bytes.max(1.0);
@@ -153,8 +173,20 @@ impl<'a> Planner<'a> {
         // allocation or path cloning).
         let mut flows_by_pair: Vec<Vec<f64>> =
             info_by_pair.iter().map(|c| vec![0.0; c.len()]).collect();
-        // hysteresis state: incumbent candidate per pair
+        // hysteresis state: incumbent candidate per pair (optionally
+        // seeded from the paths currently in flight)
         let mut incumbent: Vec<usize> = vec![usize::MAX; order.len()];
+        if let Some(seed) = incumbent_kinds {
+            for (pi, key) in order.iter().enumerate() {
+                if let Some(kind) = seed.get(key) {
+                    if let Some(ci) =
+                        cands_by_pair[pi].iter().position(|p| p.kind == *kind)
+                    {
+                        incumbent[pi] = ci;
+                    }
+                }
+            }
+        }
         // active pair list (swap-removed as pairs drain)
         let mut active: Vec<usize> = (0..order.len()).collect();
 

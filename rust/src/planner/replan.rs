@@ -1,0 +1,532 @@
+//! Incremental execution-time re-planning (paper §I / §IV: NIMBLE
+//! "performs execution-time planning" instead of replaying a static
+//! plan).
+//!
+//! [`Planner::replan`] is the planner half of the monitor → replan →
+//! reroute loop: given the **incumbent** residual routing (what is
+//! currently in flight), the monitor's **observed** per-link loads and
+//! the **residual demands** still to deliver, it decides — with
+//! hysteresis, so stable traffic does not churn — whether to keep the
+//! incumbent or to adopt a challenger plan produced by a warm-started
+//! MWU run ([`Planner::plan_seeded`]).
+//!
+//! Decision rule (deterministic):
+//! 1. scale the incumbent's per-pair path splits onto the residual
+//!    demands ([`carry_plan`]); when the residual demands equal the
+//!    incumbent's exactly, the carry IS the incumbent, byte for byte;
+//! 2. estimate external pressure as the observed load in excess of
+//!    what the incumbent predicts ([`excess_over_plan`]);
+//! 3. run Algorithm 1 on the residual demands, warm-started from the
+//!    excess loads and with each pair's hysteresis incumbent seeded to
+//!    its in-flight path;
+//! 4. adopt the challenger only if it improves the bottleneck drain
+//!    time `Z` by more than the relative hysteresis `margin`;
+//!    otherwise return the carry unchanged (`replanned = false`).
+
+use super::mwu::Planner;
+use super::plan::{Assignment, Demand, Plan};
+use crate::fabric::FabricParams;
+use crate::topology::path::candidates;
+use crate::topology::{GpuId, LinkKind, Path, PathKind, Topology};
+use std::collections::BTreeMap;
+
+/// Endpoint capacity anchors for the replan accept metric: the same
+/// per-GPU injection/receive and per-node NIC aggregates the dataplane
+/// enforces ([`FabricParams`]). Without them, a link-level reshuffle of
+/// endpoint-bound traffic would claim drain-time improvements that are
+/// not physically available — the classic plan-churn failure mode.
+#[derive(Clone, Copy, Debug)]
+pub struct DrainCaps {
+    pub inject_gbps: f64,
+    pub recv_gbps: f64,
+    pub node_net_gbps: f64,
+}
+
+impl From<&FabricParams> for DrainCaps {
+    fn from(p: &FabricParams) -> Self {
+        DrainCaps {
+            inject_gbps: p.inject_cap_gbps,
+            recv_gbps: p.recv_cap_gbps,
+            node_net_gbps: p.node_net_cap_gbps,
+        }
+    }
+}
+
+impl Default for DrainCaps {
+    fn default() -> Self {
+        // single source of truth: the fabric calibration defaults
+        DrainCaps::from(&FabricParams::default())
+    }
+}
+
+/// Execution-time re-planning configuration (`[replan]` in the TOML
+/// config; see `configs/paper.toml`). Disabled by default so every
+/// static experiment reproduces bit-identically.
+#[derive(Clone, Debug)]
+pub struct ReplanCfg {
+    /// Master switch: when false the coordinator never preempts and the
+    /// execution path is byte-identical to the static plan.
+    pub enable: bool,
+    /// Monitor sampling / replan-epoch cadence in virtual seconds.
+    pub cadence_s: f64,
+    /// Relative improvement in bottleneck drain time a challenger must
+    /// deliver before the incumbent is abandoned (plan-churn
+    /// hysteresis), and the deviation level reported as significant.
+    pub margin: f64,
+    /// Endpoint anchors for the accept metric; the executor syncs these
+    /// from its `FabricParams` so planner and dataplane agree on what
+    /// is endpoint-bound.
+    pub caps: DrainCaps,
+}
+
+impl Default for ReplanCfg {
+    fn default() -> Self {
+        ReplanCfg {
+            enable: false,
+            cadence_s: 5.0e-4,
+            margin: 0.1,
+            caps: DrainCaps::default(),
+        }
+    }
+}
+
+/// Outcome of one replan decision.
+#[derive(Clone, Debug)]
+pub struct ReplanOutcome {
+    /// The plan to fly for the residual demands: either the carry of
+    /// the incumbent (`replanned == false`) or the adopted challenger.
+    pub plan: Plan,
+    /// True iff the challenger was adopted and some pair rerouted.
+    pub replanned: bool,
+    /// Max normalized gap between the observed and the planned
+    /// link-load shapes: 0 when observation matches the plan in the
+    /// same byte units. (Fed window-rate estimates, as the executor
+    /// does, it reads as a traffic-*drift* indicator instead.)
+    pub deviation: f64,
+    /// Pairs whose path set or byte split materially changed.
+    pub changed_pairs: Vec<(GpuId, GpuId)>,
+}
+
+/// Scale the incumbent's per-pair path splits onto the residual
+/// demands. Pairs the incumbent does not cover ride their default
+/// single path. When a pair's residual equals its incumbent total the
+/// split is reused exactly (scale factor 1.0 ⇒ byte-identical parts).
+pub fn carry_plan(topo: &Topology, incumbent: &Plan, residual: &[Demand]) -> Plan {
+    let mut pairs: BTreeMap<(GpuId, GpuId), f64> = BTreeMap::new();
+    for d in residual {
+        if d.bytes > 0.0 {
+            *pairs.entry((d.src, d.dst)).or_insert(0.0) += d.bytes;
+        }
+    }
+    let mut assignments = BTreeMap::new();
+    let mut link_load = vec![0.0f64; topo.links.len()];
+    for (key, bytes) in pairs {
+        let parts: Vec<(Path, f64)> = match incumbent.assignments.get(&key) {
+            Some(a) if a.total_bytes() > 0.0 => {
+                let scale = bytes / a.total_bytes();
+                a.parts
+                    .iter()
+                    .map(|(p, b)| (p.clone(), if scale == 1.0 { *b } else { b * scale }))
+                    .filter(|(_, b)| *b > 0.0)
+                    .collect()
+            }
+            _ => vec![(candidates(topo, key.0, key.1, false).remove(0), bytes)],
+        };
+        for (p, b) in &parts {
+            for &h in &p.hops {
+                link_load[h] += *b;
+            }
+        }
+        assignments.insert(key, Assignment { parts });
+    }
+    Plan { assignments, link_load, plan_time_s: 0.0 }
+}
+
+/// Capacity-normalize a per-link byte vector and rescale it to peak 1,
+/// returning `None` when it carries no load at all.
+fn unit_shape(topo: &Topology, loads: &[f64]) -> Option<Vec<f64>> {
+    let norm: Vec<f64> = loads
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| l / (topo.link(i).cap_gbps * 1e9))
+        .collect();
+    let peak = norm.iter().cloned().fold(0.0f64, f64::max);
+    if peak <= 0.0 {
+        return None;
+    }
+    Some(norm.iter().map(|n| n / peak).collect())
+}
+
+/// Max normalized gap between the observed and predicted link-load
+/// shapes: 0 when execution matches the plan (up to a common scale),
+/// 1 when load appears where none was planned (or vice versa).
+pub fn shape_deviation(topo: &Topology, observed: &[f64], predicted: &[f64]) -> f64 {
+    match (unit_shape(topo, observed), unit_shape(topo, predicted)) {
+        (None, None) => 0.0,
+        (None, Some(_)) | (Some(_), None) => 1.0,
+        (Some(o), Some(p)) => o
+            .iter()
+            .zip(&p)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max),
+    }
+}
+
+/// Observed load in excess of what the plan predicts, expressed in the
+/// plan's byte magnitude (external pressure the challenger should route
+/// around). Zero wherever execution matches the plan.
+///
+/// The observed vector is in *window* bytes while the plan is in
+/// *residual* bytes, so a unit conversion is needed: the median of the
+/// per-link `planned / observed` ratios over links carrying both. The
+/// median is robust — a minority of pressured links cannot drag the
+/// scale and hide their own excess (a peak-based scale would cancel
+/// pressure landing exactly on the planned bottleneck).
+pub fn excess_over_plan(observed: &[f64], predicted: &[f64]) -> Vec<f64> {
+    let obs_any = observed.iter().any(|&o| o > 0.0);
+    if !obs_any {
+        return vec![0.0; observed.len()];
+    }
+    if !predicted.iter().any(|&p| p > 0.0) {
+        // nothing was planned: everything observed is external
+        return observed.to_vec();
+    }
+    let mut ratios: Vec<f64> = observed
+        .iter()
+        .zip(predicted)
+        .filter(|(&o, &p)| o > 0.0 && p > 0.0)
+        .map(|(&o, &p)| p / o)
+        .collect();
+    let scale = if ratios.is_empty() {
+        1.0 // disjoint supports: compare raw magnitudes
+    } else {
+        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ratios[ratios.len() / 2]
+    };
+    observed
+        .iter()
+        .zip(predicted)
+        .map(|(&o, &p)| (o * scale - p).max(0.0))
+        .collect()
+}
+
+/// Bottleneck drain-time estimate of `loads` stacked on `background`
+/// (seconds): max over per-link drain, per-GPU in/out aggregates and
+/// per-node rail aggregates — the aggregates of
+/// [`super::lower_bound_norm_load`] further capped by the fabric's
+/// endpoint anchors ([`DrainCaps`]). Including the endpoint bounds is
+/// the churn guard: a reshuffle of endpoint-bound traffic shows no
+/// improvement here because none is physically available.
+fn drain_time_z(topo: &Topology, caps: &DrainCaps, loads: &[f64], background: &[f64]) -> f64 {
+    let g = topo.num_gpus();
+    let mut z = 0.0f64;
+    let mut out = vec![0.0f64; g];
+    let mut inb = vec![0.0f64; g];
+    let mut out_cap = vec![0.0f64; g];
+    let mut in_cap = vec![0.0f64; g];
+    let mut node_out = vec![0.0f64; topo.nodes];
+    let mut node_in = vec![0.0f64; topo.nodes];
+    for (i, l) in topo.links.iter().enumerate() {
+        let load = loads[i] + background[i];
+        let cap = l.cap_gbps * 1e9;
+        z = z.max(load / cap);
+        if !matches!(l.kind, LinkKind::CrossRail { .. }) {
+            out[l.src] += load;
+            out_cap[l.src] += cap;
+            inb[l.dst] += load;
+            in_cap[l.dst] += cap;
+        }
+        if matches!(l.kind, LinkKind::Rail { .. }) {
+            node_out[topo.node_of(l.src)] += load;
+            node_in[topo.node_of(l.dst)] += load;
+        }
+    }
+    for gi in 0..g {
+        if out_cap[gi] > 0.0 {
+            z = z.max(out[gi] / out_cap[gi].min(caps.inject_gbps * 1e9));
+        }
+        if in_cap[gi] > 0.0 {
+            z = z.max(inb[gi] / in_cap[gi].min(caps.recv_gbps * 1e9));
+        }
+    }
+    let rails_cap = (topo.nics_per_node as f64 * topo.rail_gbps * 1e9)
+        .min(caps.node_net_gbps * 1e9);
+    for n in 0..topo.nodes {
+        z = z.max(node_out[n] / rails_cap).max(node_in[n] / rails_cap);
+    }
+    z
+}
+
+/// Pairs whose routing materially differs between two plans over the
+/// same pair set: a path kind appears/disappears, or a path's byte
+/// share moves by more than 1% of the pair total.
+fn diff_pairs(a: &Plan, b: &Plan) -> Vec<(GpuId, GpuId)> {
+    let mut out = Vec::new();
+    for (key, aa) in &a.assignments {
+        let total = aa.total_bytes().max(1.0);
+        let tol = total * 0.01;
+        let to_map = |x: &Assignment| -> BTreeMap<PathKind, f64> {
+            let mut m = BTreeMap::new();
+            for (p, bytes) in &x.parts {
+                *m.entry(p.kind).or_insert(0.0) += *bytes;
+            }
+            m
+        };
+        let ma = to_map(aa);
+        match b.assignments.get(key) {
+            None => out.push(*key),
+            Some(ab) => {
+                let mb = to_map(ab);
+                let kinds: Vec<PathKind> =
+                    ma.keys().chain(mb.keys()).cloned().collect();
+                if kinds.iter().any(|k| {
+                    (ma.get(k).unwrap_or(&0.0) - mb.get(k).unwrap_or(&0.0)).abs() > tol
+                }) {
+                    out.push(*key);
+                }
+            }
+        }
+    }
+    for key in b.assignments.keys() {
+        if !a.assignments.contains_key(key) {
+            out.push(*key);
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+impl<'a> Planner<'a> {
+    /// One replan decision of the execution-time loop. Deterministic:
+    /// identical inputs yield an identical outcome, and when the
+    /// residual demands and observed loads match the incumbent plan the
+    /// result is the incumbent itself, byte for byte.
+    pub fn replan(
+        &mut self,
+        incumbent: &Plan,
+        observed_loads: &[f64],
+        residual: &[Demand],
+        rcfg: &ReplanCfg,
+    ) -> ReplanOutcome {
+        let topo = self.topo();
+        assert_eq!(observed_loads.len(), topo.links.len());
+        let deviation = shape_deviation(topo, observed_loads, &incumbent.link_load);
+
+        // residual totals per pair, to detect the exact no-op case
+        let mut pairs: BTreeMap<(GpuId, GpuId), f64> = BTreeMap::new();
+        for d in residual {
+            if d.bytes > 0.0 {
+                *pairs.entry((d.src, d.dst)).or_insert(0.0) += d.bytes;
+            }
+        }
+        // no-op fast path: residuals still match the incumbent (up to
+        // float noise from the fluid integration) ⇒ reuse it verbatim
+        let exact_match = pairs.len() == incumbent.assignments.len()
+            && pairs.iter().all(|(k, &b)| {
+                incumbent
+                    .assignments
+                    .get(k)
+                    .map_or(false, |a| (a.total_bytes() - b).abs() <= b * 1e-9)
+            });
+        let carry = if exact_match {
+            incumbent.clone()
+        } else {
+            carry_plan(topo, incumbent, residual)
+        };
+        if !rcfg.enable {
+            return ReplanOutcome {
+                plan: carry,
+                replanned: false,
+                deviation,
+                changed_pairs: Vec::new(),
+            };
+        }
+
+        // external pressure, with a deadband of margin × the plan's
+        // peak link load: unit-conversion noise between the monitor's
+        // window shape and the residual shape must not read as pressure
+        let mut excess = excess_over_plan(observed_loads, &incumbent.link_load);
+        let deadband =
+            rcfg.margin * incumbent.link_load.iter().cloned().fold(0.0f64, f64::max);
+        for e in excess.iter_mut() {
+            *e = (*e - deadband).max(0.0);
+        }
+        // challenger: Algorithm 1 on the residuals, warm-started from
+        // the external pressure and the in-flight (dominant) paths
+        let seeds: BTreeMap<(GpuId, GpuId), PathKind> = incumbent
+            .assignments
+            .iter()
+            .filter_map(|(k, a)| {
+                a.parts
+                    .iter()
+                    .max_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+                    .map(|(p, _)| (*k, p.kind))
+            })
+            .collect();
+        let challenger = self.plan_seeded(residual, Some(&excess), Some(&seeds));
+
+        let z_carry = drain_time_z(topo, &rcfg.caps, &carry.link_load, &excess);
+        let z_challenger = drain_time_z(topo, &rcfg.caps, &challenger.link_load, &excess);
+        if z_challenger < z_carry * (1.0 - rcfg.margin) {
+            let changed_pairs = diff_pairs(&carry, &challenger);
+            if !changed_pairs.is_empty() {
+                return ReplanOutcome {
+                    plan: challenger,
+                    replanned: true,
+                    deviation,
+                    changed_pairs,
+                };
+            }
+        }
+        ReplanOutcome { plan: carry, replanned: false, deviation, changed_pairs: Vec::new() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::PlannerCfg;
+
+    const MB: f64 = 1024.0 * 1024.0;
+
+    fn enabled() -> ReplanCfg {
+        ReplanCfg { enable: true, ..ReplanCfg::default() }
+    }
+
+    /// Observed loads matching the incumbent + unchanged residuals ⇒
+    /// the replan returns the incumbent byte-identically, twice.
+    #[test]
+    fn noop_when_execution_matches_plan() {
+        let t = Topology::paper();
+        let demands = vec![
+            Demand::new(0, 1, 192.0 * MB),
+            Demand::new(2, 1, 96.0 * MB),
+            Demand::new(0, 5, 64.0 * MB),
+        ];
+        let mut planner = Planner::new(&t, PlannerCfg::default());
+        let incumbent = planner.plan(&demands);
+        // observed = exactly the plan's own loads (any common scale)
+        let observed: Vec<f64> = incumbent.link_load.iter().map(|l| l * 0.25).collect();
+        for _ in 0..2 {
+            let out = planner.replan(&incumbent, &observed, &demands, &enabled());
+            assert!(!out.replanned, "no-op case replanned");
+            assert!(out.deviation < 1e-12, "deviation {}", out.deviation);
+            assert_eq!(out.plan.link_load, incumbent.link_load);
+            assert_eq!(out.plan.assignments.len(), incumbent.assignments.len());
+            for (key, a) in &incumbent.assignments {
+                let b = &out.plan.assignments[key];
+                assert_eq!(a.parts.len(), b.parts.len());
+                for ((pa, ba), (pb, bb)) in a.parts.iter().zip(&b.parts) {
+                    assert_eq!(pa, pb);
+                    assert_eq!(ba.to_bits(), bb.to_bits(), "bytes differ on {key:?}");
+                }
+            }
+        }
+    }
+
+    /// Determinism: identical inputs produce identical decisions and
+    /// byte-identical plans, including when a replan fires.
+    #[test]
+    fn replan_is_deterministic() {
+        let t = Topology::paper();
+        // incumbent routes a now-heavy pair on a single default path
+        let stale = vec![Demand::new(2, 1, 2.0 * MB)];
+        let mut planner = Planner::new(&t, PlannerCfg::default());
+        let incumbent = planner.plan(&stale);
+        let residual = vec![Demand::new(2, 1, 512.0 * MB)];
+        let observed = incumbent.link_load.clone();
+        let a = planner.replan(&incumbent, &observed, &residual, &enabled());
+        let b = planner.replan(&incumbent, &observed, &residual, &enabled());
+        assert_eq!(a.replanned, b.replanned);
+        assert_eq!(a.changed_pairs, b.changed_pairs);
+        assert_eq!(a.plan.link_load, b.plan.link_load);
+        assert!(a.replanned, "heavy residual on one path should replan");
+        assert!(
+            a.plan.assignments[&(2, 1)].path_count() > 1,
+            "challenger should go multi-path"
+        );
+    }
+
+    /// Disabled replanning always carries the incumbent forward.
+    #[test]
+    fn disabled_never_replans() {
+        let t = Topology::paper();
+        let stale = vec![Demand::new(2, 1, 2.0 * MB)];
+        let mut planner = Planner::new(&t, PlannerCfg::default());
+        let incumbent = planner.plan(&stale);
+        let residual = vec![Demand::new(2, 1, 512.0 * MB)];
+        let out = planner.replan(
+            &incumbent,
+            &incumbent.link_load.clone(),
+            &residual,
+            &ReplanCfg::default(),
+        );
+        assert!(!out.replanned);
+        assert_eq!(out.plan.assignments[&(2, 1)].path_count(), 1);
+    }
+
+    /// Carry scales splits onto residuals and defaults unknown pairs.
+    #[test]
+    fn carry_scales_and_defaults() {
+        let t = Topology::paper();
+        let mut planner = Planner::new(&t, PlannerCfg::default());
+        let incumbent = planner.plan(&[Demand::new(0, 1, 512.0 * MB)]);
+        let residual =
+            vec![Demand::new(0, 1, 256.0 * MB), Demand::new(3, 2, 64.0 * MB)];
+        let carry = carry_plan(&t, &incumbent, &residual);
+        carry.validate(&t, &residual).unwrap();
+        // splits preserved: each part halves with the pair total
+        let inc = &incumbent.assignments[&(0, 1)];
+        let car = &carry.assignments[&(0, 1)];
+        assert_eq!(inc.parts.len(), car.parts.len());
+        for ((pi, bi), (pc, bc)) in inc.parts.iter().zip(&car.parts) {
+            assert_eq!(pi.kind, pc.kind);
+            assert!((bc - bi * 0.5).abs() < 1e-6);
+        }
+        // unknown pair rides its default single path
+        assert_eq!(carry.assignments[&(3, 2)].path_count(), 1);
+    }
+
+    /// External pressure on the planned bottleneck link triggers a
+    /// reroute away from it.
+    #[test]
+    fn external_pressure_moves_traffic_away() {
+        let t = Topology::paper();
+        let demands = vec![Demand::new(0, 1, 256.0 * MB)];
+        let mut planner = Planner::new(&t, PlannerCfg::default());
+        let incumbent = planner.plan(&demands);
+        let direct = t.nvlink(0, 1).unwrap();
+        let planned_direct = incumbent.link_load[direct];
+        assert!(planned_direct > 0.0);
+        // observe the direct link at 4× its planned share
+        let mut observed = incumbent.link_load.clone();
+        observed[direct] *= 4.0;
+        let out = planner.replan(&incumbent, &observed, &demands, &enabled());
+        assert!(out.deviation > 0.1, "deviation {}", out.deviation);
+        assert!(out.replanned, "pressure should force a reroute");
+        let direct_bytes: f64 = out.plan.assignments[&(0, 1)]
+            .parts
+            .iter()
+            .filter(|(p, _)| p.hops == vec![direct])
+            .map(|(_, b)| *b)
+            .sum();
+        assert!(
+            direct_bytes < planned_direct,
+            "challenger kept {direct_bytes} on the pressured link (was {planned_direct})"
+        );
+    }
+
+    #[test]
+    fn shape_deviation_basics() {
+        let t = Topology::paper();
+        let zero = vec![0.0; t.links.len()];
+        assert_eq!(shape_deviation(&t, &zero, &zero), 0.0);
+        let mut a = zero.clone();
+        a[0] = 5e8;
+        assert_eq!(shape_deviation(&t, &a, &zero), 1.0);
+        // same shape at a different scale ⇒ zero deviation
+        let b: Vec<f64> = a.iter().map(|x| x * 3.0).collect();
+        assert!(shape_deviation(&t, &a, &b) < 1e-12);
+    }
+}

@@ -15,7 +15,7 @@
 
 use super::{GpuId, LinkId, Topology};
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum PathKind {
     IntraDirect,
     /// via intermediate GPU (global id)

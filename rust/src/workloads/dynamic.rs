@@ -1,0 +1,273 @@
+//! Time-varying skew generators for the execution-time re-planning
+//! experiments (`exp::replan` / `nimble replan`).
+//!
+//! Two drift patterns the paper motivates:
+//!
+//! * [`PhasedHotRows`] — a *hot row* of the traffic matrix (one source
+//!   bursting to every peer, §III-A irregular p2p) that shifts to a
+//!   different GPU every `period` rounds. A plan computed for one
+//!   phase routes the next phase's burst over whatever single paths the
+//!   then-light pairs were given — the static-plan failure mode §I
+//!   describes, and exactly what mid-flight re-planning recovers.
+//! * [`MoeDrift`] — MoE expert-popularity drift (§V-D): the hot expert
+//!   wanders and the gate's concentration changes smoothly; each round
+//!   emits the dispatch All-to-Allv plus its combine transpose.
+
+use crate::planner::Demand;
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+use crate::workloads::moe_traffic::MoeConfig;
+
+/// Phase-shifting hot-row workload: every round, `hot_at(round)` sends
+/// `row_bytes` to each peer while all other pairs exchange
+/// `background_bytes` (uniform all-to-all floor so every pair exists in
+/// every phase).
+#[derive(Clone, Debug)]
+pub struct PhasedHotRows {
+    /// Bytes the hot source sends to EACH peer per round.
+    pub row_bytes: f64,
+    /// Uniform background bytes for every other ordered pair.
+    pub background_bytes: f64,
+    /// Rounds between hot-row shifts.
+    pub period: usize,
+    /// Hot-source schedule, cycled; alternates nodes by default.
+    pub hot_rows: Vec<usize>,
+}
+
+impl PhasedHotRows {
+    /// Default schedule used by `nimble replan`: the hot row hops
+    /// between the two nodes so both intra- and inter-node re-routing
+    /// are exercised.
+    pub fn paper_default(topo: &Topology, row_bytes: f64) -> Self {
+        let g = topo.num_gpus();
+        // 0, then a GPU on the far node, then staggered locals
+        let hot_rows = vec![
+            0,
+            topo.gpu(topo.nodes - 1, 0),
+            topo.gpu(0, 2usize.min(topo.gpus_per_node - 1)),
+            topo.gpu(topo.nodes - 1, 3usize.min(topo.gpus_per_node - 1)),
+        ]
+        .into_iter()
+        .map(|x| x % g)
+        .collect();
+        PhasedHotRows {
+            row_bytes,
+            background_bytes: row_bytes / 16.0,
+            period: 1,
+            hot_rows,
+        }
+    }
+
+    /// The hot source active in `round`.
+    pub fn hot_at(&self, round: usize) -> usize {
+        self.hot_rows[(round / self.period.max(1)) % self.hot_rows.len()]
+    }
+
+    /// Demand set for `round`.
+    pub fn demands_at(&self, topo: &Topology, round: usize) -> Vec<Demand> {
+        let hot = self.hot_at(round);
+        let n = topo.num_gpus();
+        let mut out = Vec::new();
+        for s in 0..n {
+            for d in 0..n {
+                if s == d {
+                    continue;
+                }
+                let bytes =
+                    if s == hot { self.row_bytes } else { self.background_bytes };
+                if bytes > 0.0 {
+                    out.push(Demand::new(s, d, bytes));
+                }
+            }
+        }
+        out
+    }
+
+    /// Jittered variant for soak/property tests (±10% per demand).
+    pub fn demands_at_jittered(
+        &self,
+        topo: &Topology,
+        round: usize,
+        rng: &mut Rng,
+    ) -> Vec<Demand> {
+        let mut demands = self.demands_at(topo, round);
+        for d in demands.iter_mut() {
+            d.bytes *= rng.range_f64(0.9, 1.1);
+        }
+        demands
+    }
+}
+
+/// MoE expert-popularity drift: the hot expert wanders over a schedule
+/// and the per-round popularity vector is a linear blend between the
+/// outgoing and incoming hot experts, so popularity *drifts* instead of
+/// snapping. Each round's traffic is dispatch + combine (the transpose:
+/// hot-expert rounds produce both a hot column and a hot row).
+#[derive(Clone, Debug)]
+pub struct MoeDrift {
+    /// Base MoE shape (tokens, d_model, hotspot ratio); its
+    /// `hot_expert` field is overridden by the schedule.
+    pub cfg: MoeConfig,
+    /// Rounds each expert stays hot before drifting onward.
+    pub period: usize,
+    /// Hot-expert schedule, cycled.
+    pub experts: Vec<usize>,
+}
+
+impl MoeDrift {
+    pub fn paper_default(topo: &Topology, global_tokens: usize) -> Self {
+        let g = topo.num_gpus();
+        MoeDrift {
+            cfg: MoeConfig::paper(global_tokens, 0.8),
+            period: 2,
+            experts: vec![4 % g, 1 % g, 6 % g, 3 % g],
+        }
+    }
+
+    /// Popularity vector at `round`: the hot expert holds
+    /// `hotspot_ratio`, blended linearly into the next hot expert over
+    /// the phase, remainder uniform.
+    pub fn popularity_at(&self, topo: &Topology, round: usize) -> Vec<f64> {
+        let n = topo.num_gpus();
+        let period = self.period.max(1);
+        let phase = (round / period) % self.experts.len();
+        let next = (phase + 1) % self.experts.len();
+        let alpha = (round % period) as f64 / period as f64;
+        let (cur, nxt) = (self.experts[phase] % n, self.experts[next] % n);
+        let hot_w = self.cfg.hotspot_ratio;
+        let rest = (1.0 - hot_w) / (n as f64 - 1.0).max(1.0);
+        let mut p = vec![rest; n];
+        p[cur] += (hot_w - rest) * (1.0 - alpha);
+        p[nxt] += (hot_w - rest) * alpha;
+        // renormalize (cur == nxt keeps the vector a distribution)
+        let sum: f64 = p.iter().sum();
+        p.iter_mut().for_each(|x| *x /= sum);
+        p
+    }
+
+    /// Dispatch + combine demands for `round`.
+    pub fn demands_at(&self, topo: &Topology, round: usize) -> Vec<Demand> {
+        let n = topo.num_gpus();
+        let pop = self.popularity_at(topo, round);
+        let per_rank = self.cfg.global_tokens as f64 / n as f64;
+        let token_bytes = self.cfg.token_bytes();
+        let mut out = Vec::new();
+        for s in 0..n {
+            for (d, &share) in pop.iter().enumerate() {
+                if s == d {
+                    continue; // self-routed tokens stay local
+                }
+                let bytes = per_rank * share * token_bytes;
+                if bytes > 0.0 {
+                    out.push(Demand::new(s, d, bytes)); // dispatch
+                    out.push(Demand::new(d, s, bytes)); // combine (transpose)
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: f64 = 1024.0 * 1024.0;
+
+    #[test]
+    fn hot_row_shifts_with_period() {
+        let t = Topology::paper();
+        let mut w = PhasedHotRows::paper_default(&t, 64.0 * MB);
+        w.period = 2;
+        assert_eq!(w.hot_at(0), w.hot_at(1));
+        assert_ne!(w.hot_at(1), w.hot_at(2));
+        // schedule cycles
+        let cycle = w.hot_rows.len() * w.period;
+        assert_eq!(w.hot_at(0), w.hot_at(cycle));
+        // both nodes appear in the default schedule
+        let nodes: Vec<usize> = w.hot_rows.iter().map(|&h| t.node_of(h)).collect();
+        assert!(nodes.contains(&0) && nodes.contains(&1));
+    }
+
+    #[test]
+    fn hot_row_dominates_its_round() {
+        let t = Topology::paper();
+        let w = PhasedHotRows::paper_default(&t, 64.0 * MB);
+        for round in 0..4 {
+            let hot = w.hot_at(round);
+            let demands = w.demands_at(&t, round);
+            // every ordered pair present
+            assert_eq!(demands.len(), 8 * 7);
+            let sent = |s: usize| -> f64 {
+                demands.iter().filter(|d| d.src == s).map(|d| d.bytes).sum()
+            };
+            for s in 0..8 {
+                if s == hot {
+                    assert!((sent(s) - 7.0 * 64.0 * MB).abs() < 1.0);
+                } else {
+                    assert!(sent(s) < sent(hot) / 4.0, "row {s} too heavy");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn moe_popularity_is_distribution_and_drifts() {
+        let t = Topology::paper();
+        let w = MoeDrift::paper_default(&t, 16_384);
+        let mut prev_hot = usize::MAX;
+        let mut shifts = 0;
+        for round in 0..(w.period * w.experts.len()) {
+            let p = w.popularity_at(&t, round);
+            let sum: f64 = p.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+            let hot = p
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if hot != prev_hot {
+                shifts += 1;
+                prev_hot = hot;
+            }
+        }
+        assert!(shifts >= 3, "popularity never drifted: {shifts} shifts");
+    }
+
+    #[test]
+    fn moe_demands_conserve_tokens_both_ways() {
+        let t = Topology::paper();
+        let w = MoeDrift::paper_default(&t, 16_384);
+        let demands = w.demands_at(&t, 1);
+        let total: f64 = demands.iter().map(|d| d.bytes).sum();
+        // dispatch + combine move the same bytes; the self-routed share
+        // stays local, so the total is below 2 × global payload
+        let payload =
+            w.cfg.global_tokens as f64 * w.cfg.token_bytes();
+        assert!(total < 2.0 * payload);
+        assert!(total > 1.5 * payload, "too much traffic stayed local");
+        // transpose symmetry: bytes(s→d) appears as bytes(d→s) too
+        let find = |s: usize, d: usize| -> f64 {
+            demands.iter().filter(|x| x.src == s && x.dst == d).map(|x| x.bytes).sum()
+        };
+        for s in 0..8 {
+            for d in 0..8 {
+                if s != d {
+                    assert!((find(s, d) - find(d, s)).abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn jitter_stays_close() {
+        let t = Topology::paper();
+        let w = PhasedHotRows::paper_default(&t, 32.0 * MB);
+        let mut rng = Rng::new(11);
+        let base: f64 = w.demands_at(&t, 0).iter().map(|d| d.bytes).sum();
+        let jit: f64 =
+            w.demands_at_jittered(&t, 0, &mut rng).iter().map(|d| d.bytes).sum();
+        assert!((jit / base - 1.0).abs() < 0.1);
+    }
+}

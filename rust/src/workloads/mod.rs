@@ -2,12 +2,15 @@
 //! classifies in §III-A: skewed All-to-Allv (a), many-to-few
 //! aggregation (b), stencil neighbor exchange with boundary hotspots
 //! (c), and irregular point-to-point (d), plus the MoE token-routing
-//! traffic used in §V-D.
+//! traffic used in §V-D and the *time-varying* drifts ([`dynamic`])
+//! driving the execution-time re-planning experiments.
 
 pub mod aggregator;
+pub mod dynamic;
 pub mod irregular;
 pub mod moe_traffic;
 pub mod skew;
 pub mod stencil;
 
+pub use dynamic::{MoeDrift, PhasedHotRows};
 pub use skew::hotspot_alltoallv;

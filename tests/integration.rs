@@ -3,17 +3,18 @@
 //! model agreement, and bound checks against Dinic max-flow.
 
 use nimble::baselines::{run_round, MpiLike, NcclLike, Router, SinglePath};
-use nimble::coordinator::{NimbleRouter, Orchestrator};
+use nimble::coordinator::{NimbleRouter, Orchestrator, ReplanExecutor};
 use nimble::fabric::fluid::{Flow, FluidSim};
 use nimble::fabric::pipeline::PipelineModel;
 use nimble::fabric::{FabricParams, XferMode};
 use nimble::planner::maxflow::max_rate_to_destination;
-use nimble::planner::{lower_bound_norm_load, Demand, Planner, PlannerCfg};
+use nimble::planner::{lower_bound_norm_load, Demand, Planner, PlannerCfg, ReplanCfg};
 use nimble::prop_assert;
 use nimble::topology::path::candidates;
 use nimble::topology::Topology;
 use nimble::util::quickcheck::{check_seeded, Gen};
 use nimble::util::rng::Rng;
+use nimble::workloads::dynamic::PhasedHotRows;
 use nimble::workloads::skew::hotspot_alltoallv_jittered;
 
 const MB: f64 = 1024.0 * 1024.0;
@@ -247,6 +248,48 @@ fn planner_is_deterministic_cold_and_warm() {
     // sanity: the warm start actually steers routing, so the two legs
     // of this test exercise distinct planner paths
     assert_ne!(w1.link_load, p1.link_load, "warm start had no effect");
+}
+
+/// Execution-time loop soak: many rounds of jittered, phase-shifting
+/// hot rows through the monitor → replan → reroute path. The executor
+/// itself asserts the reassembly ordering invariant on every round
+/// (including across mid-flight reroutes); here we additionally check
+/// that re-planning fires on shifted rounds and never loses to the
+/// static stale plan by more than simulator noise.
+#[test]
+fn replan_loop_soak_over_shifting_hot_rows() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    let mut sched = PhasedHotRows::paper_default(&topo, 48.0 * MB);
+    sched.period = 1;
+    let rcfg =
+        ReplanCfg { enable: true, cadence_s: 4.0e-4, margin: 0.1, ..ReplanCfg::default() };
+    let mut stale = Planner::new(&topo, PlannerCfg::default())
+        .plan(&sched.demands_at(&topo, 0));
+    let mut rng = Rng::new(0x5EED);
+    let mut replans_total = 0usize;
+    let mut exec =
+        ReplanExecutor::new(&topo, params.clone(), PlannerCfg::default(), rcfg.clone());
+    let mut static_exec = ReplanExecutor::new(
+        &topo,
+        params.clone(),
+        PlannerCfg::default(),
+        ReplanCfg { enable: false, ..rcfg },
+    );
+    for round in 0..8 {
+        let demands = sched.demands_at_jittered(&topo, round, &mut rng);
+        let dynamic = exec.execute(&stale, &demands);
+        let static_run = static_exec.execute(&stale, &demands);
+        replans_total += dynamic.replans;
+        assert!(
+            dynamic.report.makespan_s <= static_run.report.makespan_s * 1.05,
+            "round {round}: loop regressed {} vs {}",
+            dynamic.report.makespan_s,
+            static_run.report.makespan_s
+        );
+        stale = dynamic.final_plan.clone();
+    }
+    assert!(replans_total >= 4, "loop barely fired: {replans_total} replans");
 }
 
 /// Balanced-parity integration check across all engines (paper
