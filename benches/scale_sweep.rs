@@ -1,0 +1,42 @@
+//! Cluster-scale hot-path bench: sweep {1, 2, 4, 8} nodes of the
+//! skewed All-to-Allv and report simulated events/sec for the
+//! incremental water-filler vs the from-scratch reference solver
+//! (bit-identical trajectories, so the ratio is a pure solver
+//! speedup), plus planner time and goodput.
+//!
+//! Besides the human-readable table, every config emits one
+//! machine-readable JSON line (`{"exp":"scale","nodes":…}`) so the
+//! perf trajectory can be tracked across PRs by grepping bench logs.
+
+use nimble::exp::scale;
+use nimble::exp::MB;
+use nimble::fabric::FabricParams;
+use nimble::planner::PlannerCfg;
+
+fn main() {
+    let payload = 64.0 * MB;
+    let threads = std::thread::available_parallelism().map_or(1, |n| n.get().min(8));
+    let params = FabricParams::default();
+    let pcfg = PlannerCfg { threads, ..PlannerCfg::default() };
+    println!("== scale sweep: skewed All-to-Allv, {:.0} MB/rank ==", payload / MB);
+    let rows = scale::sweep(&[1, 2, 4, 8], payload, &params, &pcfg, true);
+    println!("{}", scale::render(&rows, payload, threads));
+    // machine-readable perf trajectory (one line per config)
+    for r in &rows {
+        println!("{}", r.json_line());
+    }
+    // the acceptance gate this PR ships under: ≥5x events/sec at 4
+    // nodes over the pre-PR solver, with identical trajectories
+    let four = rows.iter().find(|r| r.nodes == 4).expect("4-node row");
+    let speedup = four.speedup().expect("reference run present");
+    println!(
+        "4-node solver speedup: {speedup:.2}x ({} events, {:.0} ev/s incremental vs {:.0} ev/s reference)",
+        four.events,
+        four.events_per_sec(),
+        four.reference_events_per_sec().unwrap_or(0.0),
+    );
+    assert!(
+        speedup >= 5.0,
+        "hot-path regression: incremental solver only {speedup:.2}x over reference at 4 nodes"
+    );
+}

@@ -99,8 +99,8 @@ impl Router for MpiLike {
                 );
                 continue;
             }
-            let src_rail = topo.local_of(s);
-            let dst_rail = topo.local_of(d);
+            let src_rail = topo.home_rail(s);
+            let dst_rail = topo.home_rail(d);
             if dm.bytes <= self.rndv_bytes {
                 // eager path: single (source) HCA
                 out.push(

@@ -35,8 +35,8 @@ impl NcclLike {
             return candidates(topo, s, d, false).remove(0);
         }
         if self.pxn {
-            // PXN: rail selected by the DESTINATION's local index.
-            let rail = topo.local_of(d);
+            // PXN: rail selected by the DESTINATION's NIC affinity.
+            let rail = topo.home_rail(d);
             candidates(topo, s, d, true)
                 .into_iter()
                 .find(|p| p.kind == PathKind::InterRail { rail })

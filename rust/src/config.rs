@@ -52,6 +52,18 @@ impl Config {
             .unwrap_or(crate::topology::NVLINK_GBPS);
         let rail =
             doc.get_f64("topology", "rail_gbps").unwrap_or(crate::topology::RAIL_GBPS);
+        if nodes == 0 || gpus == 0 || nics == 0 {
+            return Err(format!(
+                "topology: nodes ({nodes}), gpus_per_node ({gpus}) and nics_per_node \
+                 ({nics}) must all be positive"
+            ));
+        }
+        if nics > gpus || gpus % nics != 0 {
+            return Err(format!(
+                "topology: nics_per_node ({nics}) must divide gpus_per_node ({gpus}) \
+                 (NIC r attaches to GPU r)"
+            ));
+        }
         let mut topo = Topology::build(nodes, gpus, nics, nvlink, rail, true);
         if doc.get_bool("topology", "nvswitch").unwrap_or(false) {
             topo.nvswitch = true;
@@ -78,6 +90,7 @@ impl Config {
         p.epsilon_bytes =
             doc.get_f64("planner", "epsilon_bytes").unwrap_or(p.epsilon_bytes);
         p.multipath = doc.get_bool("planner", "multipath").unwrap_or(p.multipath);
+        p.threads = doc.get_usize("planner", "threads").unwrap_or(p.threads);
         let c: &mut CostModel = &mut p.cost;
         c.multipath_min_bytes =
             doc.get_f64("planner", "multipath_min_bytes").unwrap_or(c.multipath_min_bytes);
@@ -103,6 +116,12 @@ impl Config {
         }
         if cfg.fabric.relay_rho <= 0.0 || cfg.fabric.relay_rho > 1.0 {
             return Err(format!("fabric.relay_rho out of (0,1]: {}", cfg.fabric.relay_rho));
+        }
+        if cfg.planner.threads == 0 || cfg.planner.threads > 256 {
+            return Err(format!(
+                "planner.threads out of [1,256]: {}",
+                cfg.planner.threads
+            ));
         }
         if cfg.replan.cadence_s <= 0.0 {
             return Err(format!(
@@ -171,6 +190,28 @@ mod tests {
         assert!(Config::from_toml("garbage without equals\n").is_err());
         assert!(Config::from_toml("[replan]\ncadence_ms = 0.0\n").is_err());
         assert!(Config::from_toml("[replan]\nmargin = 1.0\n").is_err());
+        assert!(Config::from_toml("[planner]\nthreads = 0\n").is_err());
+        // NIC count must divide the GPU count (NIC r ↔ GPU r)
+        assert!(Config::from_toml(
+            "[topology]\ngpus_per_node = 8\nnics_per_node = 3\n"
+        )
+        .is_err());
+    }
+
+    /// The `nimble scale` cluster axis loads from TOML: wide nodes with
+    /// fewer NICs than GPUs, and a parallel planner.
+    #[test]
+    fn scale_axis_config_loads() {
+        let c = Config::from_toml(
+            "[topology]\nnodes = 4\ngpus_per_node = 8\nnics_per_node = 4\n\
+             [planner]\nthreads = 8\n",
+        )
+        .unwrap();
+        assert_eq!(c.topology.num_gpus(), 32);
+        assert_eq!(c.topology.nics_per_node, 4);
+        assert_eq!(c.planner.threads, 8);
+        // default stays serial (the pre-threads code path)
+        assert_eq!(Config::default().planner.threads, 1);
     }
 
     #[test]

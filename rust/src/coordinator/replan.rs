@@ -71,6 +71,11 @@ pub struct ReplanRun {
     pub preemptions: usize,
     /// Peak out-of-order chunks buffered in any reassembly queue.
     pub peak_reassembly: usize,
+    /// Rate solves the fluid engine performed over the round — the
+    /// hot-path volume the round generated. Preemption + re-issue grows
+    /// this relative to the static arm; `nimble replan` reports both
+    /// totals.
+    pub sim_events: u64,
 }
 
 /// Per-path chunk-sequence bookkeeping for one (src, dst) stream.
@@ -331,6 +336,7 @@ impl<'a> ReplanExecutor<'a> {
             );
         }
 
+        let sim_events = engine.events();
         let sim = engine.result();
         let payload: f64 = demands.iter().map(|d| d.bytes).sum();
         let name = if self.rcfg.enable { "nimble-replan" } else { "nimble-static" };
@@ -348,6 +354,7 @@ impl<'a> ReplanExecutor<'a> {
             replans,
             preemptions,
             peak_reassembly,
+            sim_events,
         }
     }
 }

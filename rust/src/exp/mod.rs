@@ -8,6 +8,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod interference;
 pub mod replan;
+pub mod scale;
 pub mod sendrecv;
 pub mod table1;
 

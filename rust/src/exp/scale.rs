@@ -1,0 +1,300 @@
+//! Cluster-scale hot-path experiment (`nimble scale`): sweep the
+//! topology scale axis (N nodes × 8 GPUs, 4 rails — see
+//! [`Topology::cluster`]) with a skewed All-to-Allv and measure the
+//! simulator and planner hot paths directly:
+//!
+//! * **events/sec** of the fluid engine under the incremental water-
+//!   filler vs the pre-PR from-scratch reference solver
+//!   ([`SolverKind`]) — same bit-exact trajectory, so the ratio is a
+//!   pure solver speedup;
+//! * **plan time** of the MWU planner at the configured thread count;
+//! * **goodput** of the planned routing, as a sanity anchor that the
+//!   faster solver still simulates the same physics.
+//!
+//! Every row can also be emitted as a machine-readable JSON line
+//! ([`ScaleRow::json_line`]) so the perf trajectory is trackable across
+//! PRs (`benches/scale_sweep.rs` prints them by default).
+
+use super::MB;
+use crate::coordinator::replan::ReplanExecutor;
+use crate::fabric::fluid::{Flow, FluidSim, SimEngine, SolverKind};
+use crate::fabric::FabricParams;
+use crate::metrics::Table;
+use crate::planner::{Demand, Plan, Planner, PlannerCfg, ReplanCfg};
+use crate::topology::Topology;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workloads::skew::hotspot_alltoallv_jittered;
+use std::time::Instant;
+
+/// Hot fraction of the skewed All-to-Allv driving the sweep.
+pub const HOTSPOT_RATIO: f64 = 0.5;
+/// Fixed jitter seed: per-pair payloads are jittered ±10% so flows
+/// drain at distinct times — the event stream a real skewed collective
+/// produces (uniform payloads collapse into a handful of simultaneous
+/// completions and understate per-event solver cost).
+pub const JITTER_SEED: u64 = 0x5CA1E;
+
+/// The deterministic demand set for one scale point.
+pub fn scale_demands(topo: &Topology, payload_bytes: f64) -> Vec<Demand> {
+    let mut rng = Rng::new(JITTER_SEED);
+    let (_, demands) =
+        hotspot_alltoallv_jittered(topo, payload_bytes, HOTSPOT_RATIO, &mut rng);
+    demands
+}
+
+/// One scale point's measurements.
+#[derive(Clone, Debug)]
+pub struct ScaleRow {
+    pub nodes: usize,
+    pub gpus: usize,
+    pub links: usize,
+    /// Distinct (src, dst) pairs in the demand set.
+    pub pairs: usize,
+    /// Flows the plan issues (pairs × their path splits).
+    pub flows: usize,
+    /// MWU planning wall time (seconds).
+    pub plan_s: f64,
+    /// Fluid-engine events (rate solves) — identical for both solvers.
+    pub events: u64,
+    /// Wall time of the incremental-solver run (seconds).
+    pub incremental_s: f64,
+    /// Wall time of the reference-solver run, when measured.
+    pub reference_s: Option<f64>,
+    /// Simulated makespan (virtual seconds).
+    pub makespan_s: f64,
+    /// Aggregate goodput of the round (GB/s).
+    pub goodput_gbps: f64,
+}
+
+impl ScaleRow {
+    pub fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.incremental_s.max(1e-12)
+    }
+
+    pub fn reference_events_per_sec(&self) -> Option<f64> {
+        self.reference_s.map(|s| self.events as f64 / s.max(1e-12))
+    }
+
+    /// Incremental-solver speedup over the reference solver.
+    pub fn speedup(&self) -> Option<f64> {
+        self.reference_s.map(|s| s / self.incremental_s.max(1e-12))
+    }
+
+    /// Machine-readable record for cross-PR perf tracking.
+    pub fn json_line(&self) -> String {
+        let mut fields = vec![
+            ("exp", Json::str("scale")),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("gpus", Json::num(self.gpus as f64)),
+            ("links", Json::num(self.links as f64)),
+            ("pairs", Json::num(self.pairs as f64)),
+            ("flows", Json::num(self.flows as f64)),
+            ("events", Json::num(self.events as f64)),
+            ("events_per_sec", Json::num(self.events_per_sec())),
+            ("plan_us", Json::num(self.plan_s * 1e6)),
+            ("sim_ms", Json::num(self.incremental_s * 1e3)),
+            ("goodput_gbps", Json::num(self.goodput_gbps)),
+        ];
+        if let (Some(r), Some(sp)) = (self.reference_s, self.speedup()) {
+            fields.push(("reference_sim_ms", Json::num(r * 1e3)));
+            fields.push(("speedup_vs_reference", Json::num(sp)));
+        }
+        Json::obj(fields).to_string_compact()
+    }
+}
+
+/// The flow set a plan's assignments issue (one flow per path split) —
+/// the same construction the disabled replan executor degenerates to.
+pub fn plan_flows(plan: &Plan) -> Vec<Flow> {
+    plan.assignments
+        .values()
+        .flat_map(|a| a.parts.iter().cloned())
+        .map(|(p, bytes)| Flow::new(p, bytes))
+        .collect()
+}
+
+/// Run one scale point: plan and fly a skewed All-to-Allv
+/// (`payload_bytes` per rank, [`HOTSPOT_RATIO`] toward rank 0) on
+/// `nodes` cluster nodes, under the given fabric calibration and
+/// planner configuration (the CLI threads `--config` through, like
+/// every other subcommand). With `with_reference`, the identical flow
+/// set is re-simulated under the reference solver and the two
+/// trajectories are asserted bit-identical before the timing ratio is
+/// reported.
+pub fn run_one(
+    nodes: usize,
+    payload_bytes: f64,
+    params: &FabricParams,
+    planner_cfg: &PlannerCfg,
+    with_reference: bool,
+) -> ScaleRow {
+    let topo = Topology::cluster(nodes);
+    let demands = scale_demands(&topo, payload_bytes);
+    let mut planner = Planner::new(&topo, planner_cfg.clone());
+    let plan = planner.plan(&demands);
+    plan.validate(&topo, &demands).expect("scale plan invalid");
+    let flows = plan_flows(&plan);
+
+    let run = |solver: SolverKind| {
+        let mut engine = SimEngine::new(&topo, params.clone(), &flows);
+        engine.set_solver(solver);
+        let t = Instant::now();
+        engine.run_to_completion();
+        (t.elapsed().as_secs_f64(), engine.events(), engine.result())
+    };
+    let (incremental_s, events, sim) = run(SolverKind::Incremental);
+    let reference_s = if with_reference {
+        let (ref_s, ref_events, ref_sim) = run(SolverKind::Reference);
+        assert_eq!(events, ref_events, "solver event counts diverged");
+        assert_eq!(
+            sim.makespan.to_bits(),
+            ref_sim.makespan.to_bits(),
+            "solver trajectories diverged"
+        );
+        assert_eq!(sim.link_bytes, ref_sim.link_bytes, "solver link bytes diverged");
+        Some(ref_s)
+    } else {
+        None
+    };
+
+    let payload_total: f64 = demands.iter().map(|d| d.bytes).sum();
+    ScaleRow {
+        nodes,
+        gpus: topo.num_gpus(),
+        links: topo.links.len(),
+        pairs: plan.assignments.len(),
+        flows: flows.len(),
+        plan_s: plan.plan_time_s,
+        events,
+        incremental_s,
+        reference_s,
+        makespan_s: sim.makespan,
+        goodput_gbps: payload_total / sim.makespan.max(1e-12) / 1e9,
+    }
+}
+
+/// The scale twin of the replan guarantee: with `[replan]` disabled,
+/// flying the scale workload through the [`ReplanExecutor`] is
+/// bit-identical to the static one-shot fluid run of the same plan.
+/// Returns the shared makespan.
+pub fn check_static_bit_identity(
+    nodes: usize,
+    payload_bytes: f64,
+    params: &FabricParams,
+    planner_cfg: &PlannerCfg,
+) -> f64 {
+    let topo = Topology::cluster(nodes);
+    let demands = scale_demands(&topo, payload_bytes);
+    let plan = Planner::new(&topo, planner_cfg.clone()).plan(&demands);
+    let direct = FluidSim::new(&topo, params.clone()).run(&plan_flows(&plan));
+    let run = ReplanExecutor::new(
+        &topo,
+        params.clone(),
+        planner_cfg.clone(),
+        ReplanCfg::default(),
+    )
+    .execute(&plan, &demands);
+    assert_eq!(run.replans, 0);
+    assert_eq!(
+        run.report.makespan_s.to_bits(),
+        direct.makespan.to_bits(),
+        "replan-disabled run diverged from the static path at {nodes} nodes"
+    );
+    assert_eq!(run.sim.link_bytes, direct.link_bytes);
+    direct.makespan
+}
+
+/// Sweep the scale axis.
+pub fn sweep(
+    node_counts: &[usize],
+    payload_bytes: f64,
+    params: &FabricParams,
+    planner_cfg: &PlannerCfg,
+    with_reference: bool,
+) -> Vec<ScaleRow> {
+    node_counts
+        .iter()
+        .map(|&n| run_one(n, payload_bytes, params, planner_cfg, with_reference))
+        .collect()
+}
+
+pub fn render(rows: &[ScaleRow], payload_bytes: f64, threads: usize) -> String {
+    let mut t = Table::new(&[
+        "nodes",
+        "gpus",
+        "pairs",
+        "flows",
+        "events",
+        "plan (µs)",
+        "sim (ms)",
+        "ref (ms)",
+        "events/s",
+        "speedup",
+        "goodput (GB/s)",
+    ]);
+    for r in rows {
+        t.row(&[
+            format!("{}", r.nodes),
+            format!("{}", r.gpus),
+            format!("{}", r.pairs),
+            format!("{}", r.flows),
+            format!("{}", r.events),
+            format!("{:.1}", r.plan_s * 1e6),
+            format!("{:.2}", r.incremental_s * 1e3),
+            r.reference_s.map_or("-".into(), |s| format!("{:.2}", s * 1e3)),
+            format!("{:.0}", r.events_per_sec()),
+            r.speedup().map_or("-".into(), |s| format!("{s:.2}x")),
+            format!("{:.1}", r.goodput_gbps),
+        ]);
+    }
+    format!(
+        "Cluster-scale hot-path sweep (skewed All-to-Allv, {:.0} MB/rank ±10% jitter, hot ratio {:.0}%, planner threads {})\n{}\
+         speedup = incremental water-filler vs from-scratch reference solver, same bit-exact trajectory\n",
+        payload_bytes / MB,
+        HOTSPOT_RATIO * 100.0,
+        threads,
+        t.render(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The whole scale surface at a small size: plan validates, both
+    /// solvers agree bitwise, and the disabled-replan executor matches
+    /// the static path. The row plans at 2 threads while the executor
+    /// check plans serially — equal makespans double as an end-to-end
+    /// probe of the thread-count byte-identity contract.
+    #[test]
+    fn scale_point_is_consistent() {
+        let params = FabricParams::default();
+        let cfg = PlannerCfg { threads: 2, ..PlannerCfg::default() };
+        let row = run_one(2, 8.0 * MB, &params, &cfg, true);
+        assert_eq!(row.gpus, 16);
+        assert!(row.events > 0);
+        assert!(row.goodput_gbps > 0.0);
+        assert!(row.reference_s.is_some());
+        let makespan =
+            check_static_bit_identity(2, 8.0 * MB, &params, &PlannerCfg::default());
+        assert_eq!(
+            makespan.to_bits(),
+            row.makespan_s.to_bits(),
+            "executor and scale row simulated different rounds"
+        );
+    }
+
+    /// The JSON line parses back and carries the tracked fields.
+    #[test]
+    fn json_line_roundtrips() {
+        let row =
+            run_one(1, 4.0 * MB, &FabricParams::default(), &PlannerCfg::default(), false);
+        let j = Json::parse(&row.json_line()).unwrap();
+        assert_eq!(j.get("exp").as_str(), Some("scale"));
+        assert_eq!(j.get("nodes").as_u64(), Some(1));
+        assert_eq!(j.get("links").as_u64(), Some(row.links as u64));
+        assert!(j.get("events_per_sec").as_f64().unwrap() > 0.0);
+        assert!(j.get("plan_us").as_f64().unwrap() >= 0.0);
+    }
+}

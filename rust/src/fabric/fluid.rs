@@ -25,6 +25,30 @@
 //!   advance virtual time in bounded steps, sample per-link byte
 //!   windows for the monitor, **preempt** a flow's residual bytes and
 //!   re-issue them on different paths at a replan epoch.
+//!
+//! ## Two interchangeable solvers, one trajectory
+//!
+//! The per-event max-min computation exists twice (see [`SolverKind`]):
+//!
+//! * [`SolverKind::Reference`] — the from-scratch water-filler
+//!   (`FluidSim::max_min_rates`): every event rebuilds the live
+//!   member count of every constraint from the full membership lists
+//!   (O(Σ|members|)) and scans every constraint and every flow per
+//!   freeze round. Kept as the equivalence oracle for the property
+//!   suite and as the pre-PR baseline `nimble scale` measures against.
+//! * [`SolverKind::Incremental`] (the default) — [`SimEngine`]
+//!   maintains per-constraint *active-member counts*, the list of
+//!   constraints that currently have active members, and a
+//!   rate-cap-sorted index of active flows **across events**; within a
+//!   solve, the linear "find min headroom" scan is replaced by a lazy
+//!   min-heap over conservative headroom keys, so only the binding
+//!   constraints are ever charged (their exact charge history is
+//!   replayed on demand). Per event it performs the exact same
+//!   floating-point operations as the reference solver (same deltas,
+//!   same charge order, same freeze sets), so the two trajectories are
+//!   **bit-identical** — `prop_incremental_waterfill_matches_reference`
+//!   in `tests/fabric_props.rs` holds this invariant under randomized
+//!   preempt/add_flows sequences.
 
 use super::{gbps_to_bps, FabricParams, XferMode};
 use crate::topology::{LinkKind, Path, Topology};
@@ -191,6 +215,11 @@ impl<'a> FluidSim<'a> {
 
     /// Water-filling max-min fair rates for the active flow set.
     /// `flow_cons[i]` lists the constraints flow `i` belongs to.
+    ///
+    /// This is the **reference** (from-scratch) solver: it derives all
+    /// per-constraint state from the membership lists on every call.
+    /// The engine's default is the incremental solver, which must stay
+    /// bit-identical to this one ([`SolverKind`]).
     fn max_min_rates(
         &self,
         constraints: &[Constraint],
@@ -276,13 +305,32 @@ impl<'a> FluidSim<'a> {
                 frozen[i] = true;
                 n_unfrozen -= 1;
                 for &ci in &flow_cons[i] {
-                    if live[ci] > 0 {
-                        live[ci] -= 1;
-                    }
+                    // an unfrozen member was counted in `live` when the
+                    // solve started, so the count must still cover it —
+                    // a zero here means the freeze accounting skipped
+                    // or double-counted a flow somewhere upstream.
+                    debug_assert!(live[ci] > 0, "double-freeze accounting on constraint {ci}");
+                    live[ci] -= 1;
                 }
             }
         }
     }
+}
+
+/// Which max-min solver drives the engine's event loop.
+///
+/// Both produce bit-identical trajectories; they differ only in how
+/// much per-event work they redo. See the module docs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Incremental water-filler (the default): constraint liveness and
+    /// the flow rate-cap order are maintained across events, so an
+    /// event touches only live state.
+    Incremental,
+    /// From-scratch solver rebuilt from the membership lists on every
+    /// event — the pre-PR behavior, kept as the equivalence oracle and
+    /// as the baseline the `nimble scale` speedup is measured against.
+    Reference,
 }
 
 /// Resumable fluid-simulation engine: the mechanism under the
@@ -323,7 +371,51 @@ pub struct SimEngine<'a> {
     rates: Vec<f64>,
     /// Flows preempted before completing (residual re-issued elsewhere).
     preempted: Vec<bool>,
+    solver: SolverKind,
+    /// Rate solves performed (one per event-loop step with active flows).
+    events: u64,
+    // ---- incremental water-filler state (SolverKind::Incremental) ----
+    /// Constraint capacities, flat (mirrors `constraints[..].cap`).
+    cons_cap: Vec<f64>,
+    /// Currently-active members per constraint, maintained as flows
+    /// are admitted / finish / are preempted.
+    active_count: Vec<u32>,
+    /// Constraints with `active_count > 0` (lazily pruned).
+    hot: Vec<usize>,
+    in_hot: Vec<bool>,
+    /// Persistent freeze flags: true for every flow outside a solve;
+    /// a solve unfreezes the active set and re-freezes it completely.
+    frozen: Vec<bool>,
+    /// Active flows sorted by (rate_cap, index): the per-flow-ceiling
+    /// minimum is the first unfrozen entry, and cap-frozen flows are a
+    /// prefix of the unfrozen subsequence.
+    cap_sorted: Vec<usize>,
+    newly_frozen: Vec<usize>,
+    // per-constraint lazy-replay state (see solve_incremental)
+    cons_residual: Vec<f64>,
+    cons_hist_idx: Vec<u32>,
+    cons_live: Vec<u32>,
+    cons_ev_pos: Vec<Vec<u32>>,
+    cons_ev_cursor: Vec<u32>,
+    cons_eval_round: Vec<u64>,
+    cons_vkey_bits: Vec<u64>,
+    /// Per-solve history of water-level increments (δ per round).
+    history: Vec<f64>,
+    heap_buf: Vec<std::cmp::Reverse<(u64, u32)>>,
+    evaluated_buf: Vec<usize>,
+    round_counter: u64,
 }
+
+/// Conservative window (bytes/s) for the lazy min-headroom heap: must
+/// exceed the accumulated FP drift of the replayed subtraction
+/// sequence (≤ ~1e-2 for realistic round counts) while staying far
+/// below real headroom gaps (~1e8+). Only affects how many constraints
+/// get an exact evaluation per round — never the solution.
+const HEADROOM_SLACK: f64 = 1.0e4;
+
+/// Heap-key sentinel meaning "no live heap entry for this constraint".
+/// Valid keys are finite non-negative f64 bit patterns, always < MAX.
+const NO_KEY: u64 = u64::MAX;
 
 impl<'a> SimEngine<'a> {
     pub fn new(topo: &'a Topology, params: FabricParams, flows: &[Flow]) -> Self {
@@ -344,9 +436,43 @@ impl<'a> SimEngine<'a> {
             rate_cap: Vec::new(),
             rates: Vec::new(),
             preempted: Vec::new(),
+            solver: SolverKind::Incremental,
+            events: 0,
+            cons_cap: Vec::new(),
+            active_count: Vec::new(),
+            hot: Vec::new(),
+            in_hot: Vec::new(),
+            frozen: Vec::new(),
+            cap_sorted: Vec::new(),
+            newly_frozen: Vec::new(),
+            cons_residual: Vec::new(),
+            cons_hist_idx: Vec::new(),
+            cons_live: Vec::new(),
+            cons_ev_pos: Vec::new(),
+            cons_ev_cursor: Vec::new(),
+            cons_eval_round: Vec::new(),
+            cons_vkey_bits: Vec::new(),
+            history: Vec::new(),
+            heap_buf: Vec::new(),
+            evaluated_buf: Vec::new(),
+            round_counter: 0,
         };
         e.add_flows(flows);
         e
+    }
+
+    /// Select the max-min solver (default [`SolverKind::Incremental`]).
+    /// Both solvers produce bit-identical trajectories; the switch
+    /// exists for the equivalence property suite and the `nimble scale`
+    /// baseline measurement.
+    pub fn set_solver(&mut self, solver: SolverKind) {
+        self.solver = solver;
+    }
+
+    /// Number of rate solves performed so far (the event count the
+    /// scale experiments report as events/sec).
+    pub fn events(&self) -> u64 {
+        self.events
     }
 
     /// Current virtual time (seconds).
@@ -425,7 +551,285 @@ impl<'a> SimEngine<'a> {
         self.pending
             .sort_by(|&a, &b| start_t[a].partial_cmp(&start_t[b]).unwrap());
         self.pending.reverse(); // pop from the back = earliest
+        // Re-seed the incremental solver's cross-event state: caps,
+        // active-member counts and the rate-cap order of the flows
+        // already in flight (rate caps are recomputed from the same
+        // inputs, so re-activation reproduces the same keys).
+        let nc = self.constraints.len();
+        self.cons_cap = self.constraints.iter().map(|c| c.cap).collect();
+        self.active_count = vec![0; nc];
+        self.in_hot = vec![false; nc];
+        self.hot.clear();
+        self.frozen = vec![true; self.flows.len()];
+        self.cap_sorted.clear();
+        self.cons_residual = vec![0.0; nc];
+        self.cons_hist_idx = vec![0; nc];
+        self.cons_live = vec![0; nc];
+        self.cons_ev_pos = vec![Vec::new(); nc];
+        self.cons_ev_cursor = vec![0; nc];
+        self.cons_eval_round = vec![0; nc];
+        self.cons_vkey_bits = vec![NO_KEY; nc];
+        for k in 0..self.active.len() {
+            self.activate(self.active[k]);
+        }
         first
+    }
+
+    /// Bookkeeping when flow `i` joins the active set: bump its
+    /// constraints' active-member counts and insert it into the
+    /// rate-cap order.
+    fn activate(&mut self, i: usize) {
+        for k in 0..self.flow_cons[i].len() {
+            let ci = self.flow_cons[i][k];
+            if self.active_count[ci] == 0 && !self.in_hot[ci] {
+                self.in_hot[ci] = true;
+                self.hot.push(ci);
+            }
+            self.active_count[ci] += 1;
+        }
+        let key = (self.rate_cap[i], i);
+        let pos = self
+            .cap_sorted
+            .partition_point(|&j| (self.rate_cap[j], j) < key);
+        self.cap_sorted.insert(pos, i);
+    }
+
+    /// Inverse of [`SimEngine::activate`] (flow finished or preempted).
+    /// Constraints left without active members stay on the `hot` list
+    /// and are pruned lazily by the next solve.
+    fn deactivate(&mut self, i: usize) {
+        for k in 0..self.flow_cons[i].len() {
+            let ci = self.flow_cons[i][k];
+            debug_assert!(self.active_count[ci] > 0, "active-count underflow on {ci}");
+            self.active_count[ci] -= 1;
+        }
+        let key = (self.rate_cap[i], i);
+        let pos = self
+            .cap_sorted
+            .partition_point(|&j| (self.rate_cap[j], j) < key);
+        debug_assert_eq!(self.cap_sorted.get(pos), Some(&i), "cap order lost flow {i}");
+        self.cap_sorted.remove(pos);
+    }
+
+    /// Lazily replay the exact eager subtraction sequence for
+    /// constraint `ci`: water-level increments `history[hist_idx..upto]`
+    /// interleaved with the recorded live-decrement events (positions
+    /// ≤ `upto`), charging `residual -= δ · live` with exactly the same
+    /// operations — in the same order — as the reference solver would
+    /// have. Returns whether the constraint still has live members.
+    fn replay(&mut self, ci: usize, upto: usize) -> bool {
+        let mut idx = self.cons_hist_idx[ci] as usize;
+        let mut live = self.cons_live[ci];
+        let mut r = self.cons_residual[ci];
+        let mut cur = self.cons_ev_cursor[ci] as usize;
+        loop {
+            let nxt = self.cons_ev_pos[ci].get(cur).map(|&p| p as usize);
+            let stop = match nxt {
+                Some(p) if p <= upto => p,
+                _ => upto,
+            };
+            if live > 0 {
+                let lf = live as f64;
+                while idx < stop {
+                    r -= self.history[idx] * lf;
+                    idx += 1;
+                }
+            } else {
+                idx = stop;
+            }
+            match nxt {
+                Some(p) if p <= upto && p == stop => {
+                    while cur < self.cons_ev_pos[ci].len()
+                        && self.cons_ev_pos[ci][cur] as usize == stop
+                    {
+                        debug_assert!(live > 0, "double-freeze accounting on constraint {ci}");
+                        live -= 1;
+                        cur += 1;
+                    }
+                }
+                _ => break,
+            }
+        }
+        self.cons_hist_idx[ci] = idx as u32;
+        self.cons_live[ci] = live;
+        self.cons_residual[ci] = r;
+        self.cons_ev_cursor[ci] = cur as u32;
+        live > 0
+    }
+
+    /// Incremental water-filling solve: identical floating-point
+    /// trajectory to [`FluidSim::max_min_rates`], with the per-event
+    /// work cut three ways:
+    ///
+    /// * constraint liveness comes from the maintained active-member
+    ///   counts instead of rescanning every membership list;
+    /// * the per-flow-ceiling minimum is read off the rate-cap order
+    ///   (`cap_sorted`) instead of scanning every flow — fl(x − level)
+    ///   is monotone in x, so the first unfrozen entry is the minimum
+    ///   and cap-frozen flows form a prefix;
+    /// * per-constraint charging is **lazy**: a min-heap over
+    ///   conservative headroom keys finds the binding constraints; only
+    ///   those are evaluated exactly (replaying their charge history —
+    ///   [`SimEngine::replay`]); all others just record the round in
+    ///   `history` and are never touched. A constraint whose stale key
+    ///   sits more than [`HEADROOM_SLACK`] above the round's minimum
+    ///   provably cannot bind or saturate, because keys only ever
+    ///   *under*-estimate headroom (live decrements raise it) and the
+    ///   replayed FP drift is orders of magnitude below the slack.
+    fn solve_incremental(&mut self) {
+        use std::cmp::Reverse;
+        // prune constraints that lost their last active member; seed
+        // lazy state + heap keys (level = 0 ⇒ key = initial headroom)
+        let mut heap_vec = std::mem::take(&mut self.heap_buf);
+        heap_vec.clear();
+        let mut k = 0;
+        while k < self.hot.len() {
+            let ci = self.hot[k];
+            if self.active_count[ci] == 0 {
+                self.in_hot[ci] = false;
+                self.hot.swap_remove(k);
+                continue;
+            }
+            self.cons_residual[ci] = self.cons_cap[ci];
+            self.cons_hist_idx[ci] = 0;
+            self.cons_live[ci] = self.active_count[ci];
+            self.cons_ev_cursor[ci] = 0;
+            self.cons_ev_pos[ci].clear();
+            let h0 = self.cons_residual[ci] / self.cons_live[ci] as f64;
+            self.cons_vkey_bits[ci] = h0.to_bits();
+            heap_vec.push(Reverse((h0.to_bits(), ci as u32)));
+            k += 1;
+        }
+        let mut heap = std::collections::BinaryHeap::from(heap_vec);
+        for k in 0..self.active.len() {
+            self.frozen[self.active[k]] = false;
+        }
+        self.history.clear();
+        let mut level = 0.0f64;
+        let mut n_unfrozen = self.active.len();
+        // first not-yet-frozen entry of the rate-cap order; only ever
+        // advances within a solve (freezing is permanent per solve)
+        let mut cap_ptr = 0usize;
+        let mut newly = std::mem::take(&mut self.newly_frozen);
+        let mut evaluated = std::mem::take(&mut self.evaluated_buf);
+        while n_unfrozen > 0 {
+            self.round_counter += 1;
+            let stamp = self.round_counter;
+            while cap_ptr < self.cap_sorted.len() && self.frozen[self.cap_sorted[cap_ptr]] {
+                cap_ptr += 1;
+            }
+            let mut cand = f64::INFINITY;
+            if cap_ptr < self.cap_sorted.len() {
+                cand = self.rate_cap[self.cap_sorted[cap_ptr]] - level;
+            }
+            // pop every constraint whose conservative headroom could be
+            // the round minimum and evaluate it exactly
+            evaluated.clear();
+            while let Some(&Reverse((kb, ci32))) = heap.peek() {
+                let ci = ci32 as usize;
+                if self.cons_vkey_bits[ci] != kb || self.cons_eval_round[ci] == stamp {
+                    heap.pop(); // stale or duplicate entry
+                    continue;
+                }
+                if f64::from_bits(kb) - level > cand + HEADROOM_SLACK {
+                    break;
+                }
+                heap.pop();
+                let upto = self.history.len();
+                if !self.replay(ci, upto) {
+                    self.cons_vkey_bits[ci] = NO_KEY; // dead: drop entries
+                    continue;
+                }
+                let h = self.cons_residual[ci] / self.cons_live[ci] as f64;
+                self.cons_eval_round[ci] = stamp;
+                self.cons_vkey_bits[ci] = (level + h).to_bits();
+                evaluated.push(ci);
+                if h < cand {
+                    cand = h;
+                }
+            }
+            let mut delta = cand;
+            if !delta.is_finite() {
+                // no binding constraint: everyone rides their own cap
+                delta = 0.0;
+            }
+            let delta = delta.max(0.0);
+            level += delta;
+            self.history.push(delta);
+            newly.clear();
+            // flows at their cap: a prefix of the unfrozen subsequence
+            // of the rate-cap order
+            let mut p = cap_ptr;
+            while p < self.cap_sorted.len() {
+                let i = self.cap_sorted[p];
+                if !self.frozen[i] {
+                    if self.rate_cap[i] - level <= 1e-9 {
+                        newly.push(i);
+                    } else {
+                        break;
+                    }
+                }
+                p += 1;
+            }
+            // saturated constraints are necessarily among the evaluated
+            // set (everything else sits ≥ SLACK above the minimum);
+            // apply this round's charge to them and test exactly
+            for e in 0..evaluated.len() {
+                let ci = evaluated[e];
+                let upto = self.history.len();
+                self.replay(ci, upto);
+                if self.cons_residual[ci] <= 1e-9 {
+                    // poison the key: a saturated constraint is done
+                    self.cons_vkey_bits[ci] = NO_KEY;
+                    for &m in &self.constraints[ci].members {
+                        if !self.frozen[m] {
+                            newly.push(m);
+                        }
+                    }
+                }
+            }
+            if newly.is_empty() {
+                // numerical corner: freeze everything at current level
+                for k in 0..self.active.len() {
+                    let i = self.active[k];
+                    if !self.frozen[i] {
+                        self.rates[i] = level;
+                        self.frozen[i] = true;
+                    }
+                }
+                break;
+            }
+            newly.sort_unstable();
+            newly.dedup();
+            let pos = self.history.len() as u32;
+            for idx in 0..newly.len() {
+                let i = newly[idx];
+                if self.frozen[i] {
+                    continue;
+                }
+                self.rates[i] = level;
+                self.frozen[i] = true;
+                n_unfrozen -= 1;
+                for k in 0..self.flow_cons[i].len() {
+                    let ci = self.flow_cons[i][k];
+                    self.cons_ev_pos[ci].push(pos);
+                }
+            }
+            // surviving evaluated constraints re-enter the heap with
+            // their refreshed conservative keys
+            for e in 0..evaluated.len() {
+                let ci = evaluated[e];
+                if self.cons_vkey_bits[ci] != NO_KEY {
+                    heap.push(Reverse((self.cons_vkey_bits[ci], ci as u32)));
+                }
+            }
+        }
+        self.newly_frozen = newly;
+        evaluated.clear();
+        self.evaluated_buf = evaluated;
+        let mut buf = heap.into_vec();
+        buf.clear();
+        self.heap_buf = buf;
     }
 
     /// Preempt flow `i`: freeze it at the bytes moved so far and return
@@ -439,6 +843,7 @@ impl<'a> SimEngine<'a> {
         let residual = self.remaining[i].max(0.0);
         if let Some(pos) = self.active.iter().position(|&x| x == i) {
             self.active.swap_remove(pos);
+            self.deactivate(i);
         } else if let Some(pos) = self.pending.iter().position(|&x| x == i) {
             self.pending.remove(pos);
         }
@@ -463,6 +868,7 @@ impl<'a> SimEngine<'a> {
                 if self.start_t[i] <= self.t + 1e-15 {
                     self.active.push(i);
                     self.pending.pop();
+                    self.activate(i);
                 } else {
                     break;
                 }
@@ -476,13 +882,17 @@ impl<'a> SimEngine<'a> {
                 self.t = next;
                 continue;
             }
-            self.sim.max_min_rates(
-                &self.constraints,
-                &self.flow_cons,
-                &self.rate_cap,
-                &self.active,
-                &mut self.rates,
-            );
+            self.events += 1;
+            match self.solver {
+                SolverKind::Incremental => self.solve_incremental(),
+                SolverKind::Reference => self.sim.max_min_rates(
+                    &self.constraints,
+                    &self.flow_cons,
+                    &self.rate_cap,
+                    &self.active,
+                    &mut self.rates,
+                ),
+            }
             // next event: earliest completion or next arrival
             let mut dt = f64::INFINITY;
             for &i in &self.active {
@@ -508,18 +918,19 @@ impl<'a> SimEngine<'a> {
                 }
             }
             self.t += dt;
-            // retire completions
+            // retire completions (order-preserving, like `retain`)
             let t = self.t;
-            let remaining = &self.remaining;
-            let finish_t = &mut self.finish_t;
-            self.active.retain(|&i| {
-                if remaining[i] <= 1e-6 {
-                    finish_t[i] = t;
-                    false
+            let mut pos = 0;
+            while pos < self.active.len() {
+                let i = self.active[pos];
+                if self.remaining[i] <= 1e-6 {
+                    self.finish_t[i] = t;
+                    self.active.remove(pos);
+                    self.deactivate(i);
                 } else {
-                    true
+                    pos += 1;
                 }
-            });
+            }
             if stopping {
                 return;
             }
@@ -779,6 +1190,48 @@ mod tests {
         for (i, (&s, &tot)) in summed.iter().zip(&r.link_bytes).enumerate() {
             assert!((s - tot).abs() < 1.0, "link {i}: windows {s} vs total {tot}");
         }
+    }
+
+    /// The incremental solver retraces the reference solver's exact
+    /// trajectory — including across an epoch-sliced run with a
+    /// mid-flight preemption and re-issued residuals.
+    #[test]
+    fn incremental_solver_matches_reference_bitwise() {
+        let t = Topology::paper();
+        let cands01 = candidates(&t, 0, 1, true);
+        let cands14 = candidates(&t, 1, 4, true);
+        let flows = vec![
+            Flow::new(cands01[0].clone(), 96.0 * MB),
+            Flow::new(cands01[1].clone(), 64.0 * MB).at(0.0005),
+            Flow::new(cands14[0].clone(), 48.0 * MB),
+            Flow::new(cands14[1].clone(), 32.0 * MB).at(0.001),
+        ];
+        let drive = |solver: SolverKind| {
+            let mut e = SimEngine::new(&t, FabricParams::default(), &flows);
+            e.set_solver(solver);
+            let mut epoch = 0.0004;
+            let mut preempted = false;
+            while !e.is_done() {
+                e.advance_to(epoch);
+                epoch += 0.0004;
+                if !preempted && e.is_live(0) && e.now() > 0.0006 {
+                    let residual = e.preempt(0);
+                    e.add_flows(&[Flow::new(cands01[2].clone(), residual).at(e.now())]);
+                    preempted = true;
+                }
+            }
+            assert!(preempted, "scenario never exercised preempt/add_flows");
+            (e.result(), e.events())
+        };
+        let (ri, ei) = drive(SolverKind::Incremental);
+        let (rr, er) = drive(SolverKind::Reference);
+        assert_eq!(ei, er, "event counts diverged");
+        assert_eq!(ri.makespan.to_bits(), rr.makespan.to_bits());
+        for (a, b) in ri.flows.iter().zip(&rr.flows) {
+            assert_eq!(a.finish_t.to_bits(), b.finish_t.to_bits());
+            assert_eq!(a.bytes.to_bits(), b.bytes.to_bits());
+        }
+        assert_eq!(ri.link_bytes, rr.link_bytes);
     }
 
     #[test]

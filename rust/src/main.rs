@@ -11,12 +11,13 @@
 //! nimble sendrecv          async p2p imbalance sweep
 //! nimble ablate            design-choice ablations
 //! nimble replan            execution-time re-planning vs static plan
+//! nimble scale             cluster-scale hot-path sweep (incremental vs reference solver)
 //! nimble plan --src 0 --dst 1 --mb 256   show a routing plan
 //! nimble moe-compute       run the AOT FFN artifacts (offline interpreter)
 //! nimble info              topology + fabric calibration summary
 //! ```
 
-use nimble::exp::{ablate, fig6, fig7, fig8, interference, replan, sendrecv, table1, MB};
+use nimble::exp::{ablate, fig6, fig7, fig8, interference, replan, scale, sendrecv, table1, MB};
 use nimble::fabric::FabricParams;
 use nimble::planner::{CostModel, Demand, Planner};
 use nimble::runtime::Runtime;
@@ -123,6 +124,66 @@ fn main() {
                 )
             );
         }),
+        "scale" => Args::new(
+            "nimble scale",
+            "cluster-scale hot-path sweep: incremental vs reference solver",
+        )
+        .flag("nodes", "4", "cluster nodes (8 GPUs, 4 rails each); 0 = sweep 1,2,4,8")
+        .flag("payload-mb", "64", "All-to-Allv payload per rank in MB")
+        .flag("threads", "0", "planner threads (0: from config)")
+        .switch("no-reference", "skip the (slow) reference-solver baseline run")
+        .switch("json", "emit one machine-readable JSON line per row")
+        .switch("check", "assert solver bit-identity + static-path equivalence (CI perf smoke)")
+        .parse(rest)
+        .map(|p| {
+            let payload = p.get_f64("payload-mb") * MB;
+            let mut pcfg = cfg.planner.clone();
+            if p.get_usize("threads") > 0 {
+                pcfg.threads = p.get_usize("threads");
+            }
+            let with_reference = !p.get_bool("no-reference");
+            let nodes_arg = p.get_usize("nodes");
+            let node_counts: Vec<usize> =
+                if nodes_arg == 0 { vec![1, 2, 4, 8] } else { vec![nodes_arg] };
+            let rows = scale::sweep(&node_counts, payload, &params, &pcfg, with_reference);
+            if p.get_bool("json") {
+                for r in &rows {
+                    println!("{}", r.json_line());
+                }
+            } else {
+                println!("{}", scale::render(&rows, payload, pcfg.threads));
+            }
+            if p.get_bool("check") {
+                for r in &rows {
+                    // run_one already asserted trajectory bit-identity;
+                    // close the loop against the replan executor too
+                    scale::check_static_bit_identity(r.nodes, payload, &params, &pcfg);
+                    if let Some(speedup) = r.speedup() {
+                        // generous floor: the bench harness tracks the
+                        // real ratio; this only catches regressions
+                        // back toward from-scratch behavior
+                        if r.nodes >= 4 && speedup < 2.0 {
+                            eprintln!(
+                                "perf smoke FAILED: {} nodes speedup {speedup:.2}x < 2x",
+                                r.nodes
+                            );
+                            std::process::exit(1);
+                        }
+                    }
+                }
+                // stderr: keep --json stdout purely machine-readable
+                if with_reference {
+                    eprintln!(
+                        "scale check OK: solvers bit-identical, static path preserved"
+                    );
+                } else {
+                    eprintln!(
+                        "scale check OK: static path preserved (solver comparison \
+                         skipped: --no-reference)"
+                    );
+                }
+            }
+        }),
         "plan" => Args::new("nimble plan", "show the routing plan for one demand")
             .flag("src", "0", "source GPU")
             .flag("dst", "1", "destination GPU")
@@ -171,7 +232,7 @@ fn main() {
 
 fn usage() -> String {
     "nimble — NIMBLE (skew-to-symmetry multi-path balancing) reproduction\n\
-     commands: table1 | fig6 | fig7 | fig8 | sendrecv | ablate | interference | replan | plan | moe-compute | info\n\
+     commands: table1 | fig6 | fig7 | fig8 | sendrecv | ablate | interference | replan | scale | plan | moe-compute | info\n\
      run `nimble <cmd> --help` for flags"
         .to_string()
 }

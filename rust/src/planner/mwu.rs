@@ -14,8 +14,34 @@
 //! * **size-aware penalty** in the cost (`CostModel::detour_penalty`)
 //!   so small messages stay single-path;
 //! * candidate caching per pair (the topology is static).
+//!
+//! ## Deterministic parallel sweep (`PlannerCfg::threads`)
+//!
+//! With `threads > 1` the sweep fans out over `std::thread::scope`
+//! (zero new deps) while staying **byte-identical to the serial sweep
+//! for every thread count**. Two observations make that possible:
+//!
+//! 1. The per-visit routed volume `f_route` depends only on the pair's
+//!    residual — never on link loads — so the serial sweep's exact
+//!    visit sequence (which pair, how many bytes, in what order) is a
+//!    *load-independent script* computable by a cheap pre-pass.
+//! 2. A pair's routing decision reads only the links its candidates
+//!    touch, so pairs in different **link-disjoint components** of the
+//!    demand set cannot influence each other.
+//!
+//! The pre-pass replays the serial drain bookkeeping to produce the
+//! script, the script is split per component, and workers execute the
+//! component scripts concurrently (candidate enumeration for uncached
+//! pairs is also fanned out). Results merge in fixed component order;
+//! since components share no links, every merged value has exactly one
+//! contributor and the merge order cannot perturb a single bit. Thread
+//! count only changes which worker replays which script — the plan is
+//! the same. A fully-coupled demand set (e.g. all-to-all over shared
+//! rails) is one component and sweeps serially; parallelism pays on
+//! decomposable traffic (per-node batches, concurrent jobs) and in the
+//! candidate precompute. DESIGN.md §9 records this contract.
 
-use super::cost::CostModel;
+use super::cost::{CostModel, CostShape};
 use super::plan::{Assignment, Demand, Plan};
 use crate::topology::path::candidates;
 use crate::topology::{GpuId, Path, PathKind, Topology};
@@ -34,6 +60,10 @@ pub struct PlannerCfg {
     /// Allow multi-path at all (false ⇒ always the default path —
     /// used for baseline comparisons and tiny messages).
     pub multipath: bool,
+    /// Worker threads for the sweep and the candidate precompute.
+    /// Plans are byte-identical for every value (see the module docs);
+    /// 1 (the default) keeps the fully serial pre-threads code path.
+    pub threads: usize,
 }
 
 impl Default for PlannerCfg {
@@ -43,6 +73,7 @@ impl Default for PlannerCfg {
             epsilon_bytes: 512.0 * 1024.0,
             cost: CostModel::default(),
             multipath: true,
+            threads: 1,
         }
     }
 }
@@ -71,12 +102,97 @@ impl<'a> Planner<'a> {
     fn candidates_for(&mut self, s: GpuId, d: GpuId, msg_bytes: f64) -> &[Path] {
         let multipath =
             self.cfg.multipath && msg_bytes > self.cfg.cost.multipath_min_bytes;
-        // cache key folds the multipath decision in via a sentinel pair
-        // ordering: store both variants under distinct keys.
-        let key = if multipath { (s, d) } else { (s + self.topo.num_gpus(), d) };
+        let key = cache_key(self.topo.num_gpus(), s, d, multipath);
         self.cand_cache
             .entry(key)
             .or_insert_with(|| candidates(self.topo, s, d, multipath))
+    }
+
+    /// Materialize candidate paths and hot-loop info for every pair.
+    /// With `threads > 1`, candidate enumeration for pairs missing from
+    /// the cache fans out over fixed contiguous partitions; the results
+    /// are pure functions of the static topology and merge in partition
+    /// order, so the cache ends up exactly as a serial fill would leave
+    /// it.
+    fn resolve_candidates(
+        &mut self,
+        order: &[(GpuId, GpuId)],
+        totals: &[f64],
+    ) -> (Vec<Vec<Path>>, Vec<Vec<Cand>>) {
+        if self.cfg.threads > 1 {
+            let g = self.topo.num_gpus();
+            let mut seen: std::collections::BTreeSet<(GpuId, GpuId)> = Default::default();
+            let mut missing: Vec<(GpuId, GpuId, bool)> = Vec::new();
+            for (pi, &(s, d)) in order.iter().enumerate() {
+                let multipath =
+                    self.cfg.multipath && totals[pi] > self.cfg.cost.multipath_min_bytes;
+                let key = cache_key(g, s, d, multipath);
+                if !self.cand_cache.contains_key(&key) && seen.insert(key) {
+                    missing.push((s, d, multipath));
+                }
+            }
+            if !missing.is_empty() {
+                let topo = self.topo;
+                let workers = self.cfg.threads.min(missing.len());
+                let chunk = (missing.len() + workers - 1) / workers;
+                let mut parts: Vec<Vec<((GpuId, GpuId), Vec<Path>)>> = Vec::new();
+                std::thread::scope(|sc| {
+                    let mut handles = Vec::new();
+                    for slice in missing.chunks(chunk) {
+                        handles.push(sc.spawn(move || {
+                            slice
+                                .iter()
+                                .map(|&(s, d, multipath)| {
+                                    let key = cache_key(g, s, d, multipath);
+                                    (key, candidates(topo, s, d, multipath))
+                                })
+                                .collect::<Vec<_>>()
+                        }));
+                    }
+                    for h in handles {
+                        parts.push(h.join().expect("candidate worker panicked"));
+                    }
+                });
+                for part in parts {
+                    for (key, paths) in part {
+                        self.cand_cache.insert(key, paths);
+                    }
+                }
+            }
+        }
+        // Precompute per-candidate hot-loop data; the sweep then
+        // touches only flat arrays.
+        let cfg = self.cfg.clone();
+        let mut cands_by_pair: Vec<Vec<Path>> = Vec::with_capacity(order.len());
+        let mut info_by_pair: Vec<Vec<Cand>> = Vec::with_capacity(order.len());
+        for (pi, &(s, d)) in order.iter().enumerate() {
+            let cands = self.candidates_for(s, d, totals[pi]).to_vec();
+            let infos = cands
+                .iter()
+                .map(|p| Cand {
+                    hops: p
+                        .hops
+                        .iter()
+                        .enumerate()
+                        .map(|(hi, &h)| {
+                            let link = self.topo.link(h);
+                            let inflate = if hi > 0
+                                && matches!(link.kind, crate::topology::LinkKind::NvLink)
+                            {
+                                cfg.cost.relay_inflation
+                            } else {
+                                1.0
+                            };
+                            (h, 1.0 / (link.cap_gbps * 1e9), inflate)
+                        })
+                        .collect(),
+                    penalty: cfg.cost.detour_penalty(self.topo, p, totals[pi]),
+                })
+                .collect();
+            cands_by_pair.push(cands);
+            info_by_pair.push(infos);
+        }
+        (cands_by_pair, info_by_pair)
     }
 
     /// Run Algorithm 1 over the demand set (cold start: `L_e ← 0`).
@@ -110,7 +226,7 @@ impl<'a> Planner<'a> {
         let eps = cfg.epsilon_bytes.max(1.0);
 
         // L_e ← initial (cost basis); `added` tracks this plan's own load
-        let mut load = match initial {
+        let load = match initial {
             Some(init) => {
                 assert_eq!(init.len(), self.topo.links.len());
                 init.to_vec()
@@ -128,46 +244,8 @@ impl<'a> Planner<'a> {
         }
         let order: Vec<(GpuId, GpuId)> = pairs.keys().cloned().collect();
         let totals: Vec<f64> = order.iter().map(|k| pairs[k]).collect();
-        let mut remaining = totals.clone();
-        let mut r_tot: f64 = remaining.iter().sum();
 
-        // Precompute per-candidate hot-loop data: hop link ids with
-        // 1/(cap·1e9) and relay inflation factors, plus the (msg-size
-        // dependent but load-independent) detour penalty. The sweep
-        // below then touches only flat arrays.
-        struct Cand {
-            hops: Vec<(usize, f64, f64)>, // (link, inv_cap_bps, inflate)
-            penalty: f64,
-        }
-        let mut cands_by_pair: Vec<Vec<Path>> = Vec::with_capacity(order.len());
-        let mut info_by_pair: Vec<Vec<Cand>> = Vec::with_capacity(order.len());
-        for (pi, &(s, d)) in order.iter().enumerate() {
-            let cands = self.candidates_for(s, d, totals[pi]).to_vec();
-            let infos = cands
-                .iter()
-                .map(|p| Cand {
-                    hops: p
-                        .hops
-                        .iter()
-                        .enumerate()
-                        .map(|(hi, &h)| {
-                            let link = self.topo.link(h);
-                            let inflate = if hi > 0
-                                && matches!(link.kind, crate::topology::LinkKind::NvLink)
-                            {
-                                cfg.cost.relay_inflation
-                            } else {
-                                1.0
-                            };
-                            (h, 1.0 / (link.cap_gbps * 1e9), inflate)
-                        })
-                        .collect(),
-                    penalty: cfg.cost.detour_penalty(self.topo, p, totals[pi]),
-                })
-                .collect();
-            cands_by_pair.push(cands);
-            info_by_pair.push(infos);
-        }
+        let (cands_by_pair, info_by_pair) = self.resolve_candidates(&order, &totals);
 
         // Flows^(s,d): byte volume per candidate index (no per-visit
         // allocation or path cloning).
@@ -187,83 +265,47 @@ impl<'a> Planner<'a> {
                 }
             }
         }
-        // active pair list (swap-removed as pairs drain)
-        let mut active: Vec<usize> = (0..order.len()).collect();
 
-        // F is monotone, so max_e F(norm_e) = F(max_e norm_e): the
-        // inner loop tracks the max normalized load only (the sum_cost
-        // ablation applies F per hop instead).
-        let shape = cfg.cost.shape;
-        let sum_cost = cfg.cost.sum_cost;
-        let path_cost = |load: &[f64], c: &Cand| -> f64 {
-            if sum_cost {
-                let mut agg = 0.0;
-                for &(h, inv, _) in &c.hops {
-                    agg += shape.apply(load[h] * inv);
-                }
-                agg + c.penalty
-            } else {
-                let mut worst = 0.0f64;
-                for &(h, inv, _) in &c.hops {
-                    let n = load[h] * inv;
-                    if n > worst {
-                        worst = n;
-                    }
-                }
-                shape.apply(worst) + c.penalty
-            }
+        // A fully-coupled demand set is one conflict component and
+        // cannot fan out — take the serial path without the script /
+        // worker overhead (the result is byte-identical either way).
+        let components = if cfg.threads > 1 && order.len() > 1 {
+            let comp_of_pair = conflict_components(&info_by_pair, self.topo.links.len());
+            let n_comps =
+                comp_of_pair.iter().copied().max().map_or(0, |m| m as usize + 1);
+            (n_comps > 1).then_some((comp_of_pair, n_comps))
+        } else {
+            None
         };
-
-        while r_tot > 1e-6 && !active.is_empty() {
-            let mut ai = 0;
-            while ai < active.len() {
-                let pi = active[ai];
-                let r = remaining[pi];
-                // select least-cost candidate (bottleneck metric)
-                let infos = &info_by_pair[pi];
-                let mut best_i = 0usize;
-                let mut best_c = f64::INFINITY;
-                for (i, c) in infos.iter().enumerate() {
-                    let cost = path_cost(&load, c);
-                    if cost < best_c {
-                        best_c = cost;
-                        best_i = i;
-                    }
-                }
-                // hysteresis: keep the incumbent unless the challenger
-                // wins by the configured margin
-                let inc = incumbent[pi];
-                if inc != usize::MAX && inc != best_i {
-                    let inc_c = path_cost(&load, &infos[inc]);
-                    if inc_c.is_finite() && best_c >= inc_c * (1.0 - cfg.cost.hysteresis) {
-                        best_i = inc;
-                    }
-                }
-                incumbent[pi] = best_i;
-
-                // f_route: residual if < ε, else ⌊r·λ⌋_ε (≥ ε to
-                // guarantee progress). Single-candidate pairs place
-                // their entire residual at once — every chunk must land
-                // on that path anyway, so the final loads are identical
-                // and the sweep skips their (1−λ)ⁿ tail.
-                let f_route = if r < eps || infos.len() == 1 {
-                    r
-                } else {
-                    ((r * cfg.lambda / eps).floor() * eps).max(eps).min(r)
-                };
-                for &(h, _, inflate) in &infos[best_i].hops {
-                    load[h] += f_route * inflate;
-                    added[h] += f_route;
-                }
-                flows_by_pair[pi][best_i] += f_route;
-                remaining[pi] -= f_route;
-                r_tot -= f_route;
-                if remaining[pi] <= 0.0 {
-                    active.swap_remove(ai);
-                } else {
-                    ai += 1;
-                }
+        match components {
+            None => {
+                // serial sweep: immediate load updates, global drain
+                // state (the pre-threads code path)
+                let mut load = load;
+                drive_drain_schedule(&totals, eps, cfg.lambda, &info_by_pair, |pi, f_route| {
+                    route_visit(
+                        &cfg.cost,
+                        &info_by_pair[pi],
+                        &mut incumbent[pi],
+                        f_route,
+                        &mut load,
+                        &mut added,
+                        &mut flows_by_pair[pi],
+                    );
+                });
             }
+            Some((comp_of_pair, n_comps)) => sweep_parallel(
+                &cfg,
+                eps,
+                &info_by_pair,
+                &totals,
+                &incumbent,
+                &load,
+                &comp_of_pair,
+                n_comps,
+                &mut added,
+                &mut flows_by_pair,
+            ),
         }
 
         let mut assignments = BTreeMap::new();
@@ -284,6 +326,283 @@ impl<'a> Planner<'a> {
             plan_time_s: t0.elapsed().as_secs_f64(),
         }
     }
+}
+
+/// Candidate-cache key: folds the multipath decision in via a sentinel
+/// pair ordering (`s + num_gpus` never collides with a real source id),
+/// so both variants live under distinct keys.
+#[inline]
+fn cache_key(num_gpus: usize, s: GpuId, d: GpuId, multipath: bool) -> (GpuId, GpuId) {
+    if multipath {
+        (s, d)
+    } else {
+        (s + num_gpus, d)
+    }
+}
+
+/// Precomputed per-candidate hot-loop data: hop link ids with
+/// 1/(cap·1e9) and relay inflation factors, plus the (msg-size
+/// dependent but load-independent) detour penalty.
+struct Cand {
+    hops: Vec<(usize, f64, f64)>, // (link, inv_cap_bps, inflate)
+    penalty: f64,
+}
+
+/// F is monotone, so max_e F(norm_e) = F(max_e norm_e): the bottleneck
+/// metric tracks the max normalized load only (the sum_cost ablation
+/// applies F per hop instead).
+#[inline]
+fn path_cost(shape: CostShape, sum_cost: bool, load: &[f64], c: &Cand) -> f64 {
+    if sum_cost {
+        let mut agg = 0.0;
+        for &(h, inv, _) in &c.hops {
+            agg += shape.apply(load[h] * inv);
+        }
+        agg + c.penalty
+    } else {
+        let mut worst = 0.0f64;
+        for &(h, inv, _) in &c.hops {
+            let n = load[h] * inv;
+            if n > worst {
+                worst = n;
+            }
+        }
+        shape.apply(worst) + c.penalty
+    }
+}
+
+/// Algorithm 1's per-visit volume: the full residual below the chunk
+/// granularity ε (and for single-candidate pairs, whose every chunk
+/// must land on that one path anyway), else ⌊r·λ⌋_ε, at least ε so the
+/// sweep always progresses. **Load-independent** — the property the
+/// parallel sweep's visit script rests on.
+#[inline]
+fn next_volume(r: f64, eps: f64, lambda: f64, n_cands: usize) -> f64 {
+    if r < eps || n_cands == 1 {
+        r
+    } else {
+        ((r * lambda / eps).floor() * eps).max(eps).min(r)
+    }
+}
+
+/// Drive Algorithm 1's drain bookkeeping, calling `visit(pi, f_route)`
+/// for every visit in exactly the serial sweep's order (repeated passes
+/// over the active pair list, drained pairs swap-removed). This single
+/// driver is shared by the serial sweep (routing each visit
+/// immediately) and the parallel pre-pass (recording the visit script),
+/// so the two can never diverge operation-for-operation — the
+/// byte-identity contract of `PlannerCfg::threads` rests on it.
+fn drive_drain_schedule<F: FnMut(usize, f64)>(
+    totals: &[f64],
+    eps: f64,
+    lambda: f64,
+    info_by_pair: &[Vec<Cand>],
+    mut visit: F,
+) {
+    let mut remaining = totals.to_vec();
+    let mut r_tot: f64 = remaining.iter().sum();
+    let mut active: Vec<usize> = (0..totals.len()).collect();
+    while r_tot > 1e-6 && !active.is_empty() {
+        let mut ai = 0;
+        while ai < active.len() {
+            let pi = active[ai];
+            let f_route = next_volume(remaining[pi], eps, lambda, info_by_pair[pi].len());
+            visit(pi, f_route);
+            remaining[pi] -= f_route;
+            r_tot -= f_route;
+            if remaining[pi] <= 0.0 {
+                active.swap_remove(ai);
+            } else {
+                ai += 1;
+            }
+        }
+    }
+}
+
+/// One Algorithm-1 visit of a pair: select the least-cost candidate
+/// (bottleneck metric, with hysteresis — the incumbent survives unless
+/// the challenger wins by the configured margin), then place `f_route`
+/// bytes on it. Shared verbatim by the serial sweep and the parallel
+/// per-component script replay, which is what keeps them bit-identical.
+#[inline]
+fn route_visit(
+    cost: &CostModel,
+    infos: &[Cand],
+    incumbent: &mut usize,
+    f_route: f64,
+    load: &mut [f64],
+    added: &mut [f64],
+    flows: &mut [f64],
+) {
+    let mut best_i = 0usize;
+    let mut best_c = f64::INFINITY;
+    for (i, c) in infos.iter().enumerate() {
+        let pc = path_cost(cost.shape, cost.sum_cost, load, c);
+        if pc < best_c {
+            best_c = pc;
+            best_i = i;
+        }
+    }
+    let inc = *incumbent;
+    if inc != usize::MAX && inc != best_i {
+        let inc_c = path_cost(cost.shape, cost.sum_cost, load, &infos[inc]);
+        if inc_c.is_finite() && best_c >= inc_c * (1.0 - cost.hysteresis) {
+            best_i = inc;
+        }
+    }
+    *incumbent = best_i;
+    for &(h, _, inflate) in &infos[best_i].hops {
+        load[h] += f_route * inflate;
+        added[h] += f_route;
+    }
+    flows[best_i] += f_route;
+}
+
+/// Partition pairs into components that share no candidate links
+/// (union-find keyed by first-seen link owner). Deterministic:
+/// component ids are assigned in order of each component's smallest
+/// pair index. Pairs in different components provably cannot read or
+/// write each other's link loads during the sweep.
+fn conflict_components(info_by_pair: &[Vec<Cand>], num_links: usize) -> Vec<u32> {
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        while parent[x as usize] != x {
+            parent[x as usize] = parent[parent[x as usize] as usize];
+            x = parent[x as usize];
+        }
+        x
+    }
+    let n = info_by_pair.len();
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    let mut link_owner: Vec<u32> = vec![u32::MAX; num_links];
+    for pi in 0..n {
+        for c in &info_by_pair[pi] {
+            for &(h, _, _) in &c.hops {
+                if link_owner[h] == u32::MAX {
+                    link_owner[h] = pi as u32;
+                } else {
+                    let a = find(&mut parent, pi as u32);
+                    let b = find(&mut parent, link_owner[h]);
+                    if a != b {
+                        // roots always point at the smaller index, so a
+                        // component's root is its smallest member
+                        parent[a.max(b) as usize] = a.min(b);
+                    }
+                }
+            }
+        }
+    }
+    let mut ids: Vec<u32> = vec![u32::MAX; n];
+    let mut next = 0u32;
+    let mut out = vec![0u32; n];
+    for pi in 0..n {
+        let r = find(&mut parent, pi as u32) as usize;
+        if ids[r] == u32::MAX {
+            ids[r] = next;
+            next += 1;
+        }
+        out[pi] = ids[r];
+    }
+    out
+}
+
+/// The parallel sweep: replay the serial drain bookkeeping
+/// ([`drive_drain_schedule`]) to obtain the exact visit script
+/// (`next_volume` is load-independent), split it across the
+/// link-disjoint components, execute the component scripts on a fixed
+/// worker partition (worker *w* takes components *w*, *w+T*, …) and
+/// merge the results in component order. Every merged entry has
+/// exactly one contributing component, so the outcome is byte-identical
+/// to the serial sweep for any worker count.
+#[allow(clippy::too_many_arguments)]
+fn sweep_parallel(
+    cfg: &PlannerCfg,
+    eps: f64,
+    info_by_pair: &[Vec<Cand>],
+    totals: &[f64],
+    incumbent0: &[usize],
+    base_load: &[f64],
+    comp_of_pair: &[u32],
+    n_comps: usize,
+    added: &mut [f64],
+    flows_by_pair: &mut [Vec<f64>],
+) {
+    // the load-independent visit script, split per component as it is
+    // generated (= the serial visit sequence, in order, per component)
+    let mut scripts: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n_comps];
+    drive_drain_schedule(totals, eps, cfg.lambda, info_by_pair, |pi, f_route| {
+        scripts[comp_of_pair[pi] as usize].push((pi as u32, f_route));
+    });
+    // execute component scripts on the fixed worker partition
+    let workers = cfg.threads.min(n_comps).max(1);
+    type CompOut = (Vec<(usize, f64)>, Vec<(usize, Vec<f64>)>);
+    let mut comp_results: Vec<Option<CompOut>> = (0..n_comps).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let scripts = &scripts;
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            handles.push(s.spawn(move || {
+                let mut out: Vec<(usize, CompOut)> = Vec::new();
+                let mut ci = w;
+                while ci < scripts.len() {
+                    out.push((
+                        ci,
+                        run_component_script(
+                            cfg,
+                            info_by_pair,
+                            incumbent0,
+                            base_load,
+                            &scripts[ci],
+                        ),
+                    ));
+                    ci += workers;
+                }
+                out
+            }));
+        }
+        for h in handles {
+            for (ci, res) in h.join().expect("sweep worker panicked") {
+                comp_results[ci] = Some(res);
+            }
+        }
+    });
+    // merge in component order
+    for res in comp_results.into_iter().flatten() {
+        let (comp_added, comp_flows) = res;
+        for (h, v) in comp_added {
+            added[h] += v;
+        }
+        for (pi, fl) in comp_flows {
+            flows_by_pair[pi] = fl;
+        }
+    }
+}
+
+/// Execute one component's visit script against a private copy of the
+/// warm-start loads. Returns the sparse added-load contributions and
+/// the per-pair flow splits of this component.
+fn run_component_script(
+    cfg: &PlannerCfg,
+    info_by_pair: &[Vec<Cand>],
+    incumbent0: &[usize],
+    base_load: &[f64],
+    script: &[(u32, f64)],
+) -> (Vec<(usize, f64)>, Vec<(usize, Vec<f64>)>) {
+    let mut load = base_load.to_vec();
+    let mut added = vec![0.0f64; base_load.len()];
+    let mut incumbent: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut flows: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+    for &(pi, f_route) in script {
+        let pi = pi as usize;
+        let inc = incumbent.entry(pi).or_insert(incumbent0[pi]);
+        let fl = flows
+            .entry(pi)
+            .or_insert_with(|| vec![0.0; info_by_pair[pi].len()]);
+        route_visit(&cfg.cost, &info_by_pair[pi], inc, f_route, &mut load, &mut added, fl);
+    }
+    (
+        added.into_iter().enumerate().filter(|&(_, v)| v != 0.0).collect(),
+        flows.into_iter().collect(),
+    )
 }
 
 /// Analytic lower bound on the normalized min-max objective `Z`
@@ -471,5 +790,65 @@ mod tests {
         let p1 = Planner::new(&t, PlannerCfg::default()).plan(&demands);
         let p2 = Planner::new(&t, PlannerCfg::default()).plan(&demands);
         assert_eq!(p1.link_load, p2.link_load);
+    }
+
+    /// A demand set that splits into two link-disjoint components (each
+    /// node's intra pairs; no inter-node pair to couple them) routes
+    /// byte-identically at every thread count — this is the workload
+    /// shape that actually executes the component-parallel machinery
+    /// (fully-coupled sets short-circuit to the serial path).
+    #[test]
+    fn thread_count_never_changes_the_plan() {
+        let t = Topology::paper();
+        let demands = vec![
+            Demand::new(0, 1, 512.0 * MB),
+            Demand::new(2, 3, 300.0 * MB),
+            Demand::new(4, 5, 512.0 * MB),
+            Demand::new(6, 7, 96.0 * MB),
+            Demand::new(0, 1, 64.0 * MB),
+        ];
+        let reference = Planner::new(&t, PlannerCfg::default()).plan(&demands);
+        reference.validate(&t, &demands).unwrap();
+        for threads in [2, 3, 8] {
+            let cfg = PlannerCfg { threads, ..PlannerCfg::default() };
+            let plan = Planner::new(&t, cfg).plan(&demands);
+            assert_eq!(
+                plan.canonical_string(),
+                reference.canonical_string(),
+                "threads={threads} diverged from serial"
+            );
+        }
+    }
+
+    /// The same contract holds on the warm-started path the replan
+    /// challenger uses (initial loads + incumbent seeding).
+    #[test]
+    fn thread_count_invariant_with_warm_start() {
+        let t = Topology::paper();
+        let demands = vec![
+            Demand::new(0, 1, 384.0 * MB),
+            Demand::new(2, 1, 128.0 * MB),
+            Demand::new(4, 7, 256.0 * MB),
+        ];
+        let mut initial = vec![0.0; t.links.len()];
+        initial[t.nvlink(0, 1).unwrap()] = 2.5e9;
+        initial[t.nvlink(4, 7).unwrap()] = 1.0e9;
+        let mut seeds = BTreeMap::new();
+        seeds.insert((0usize, 1usize), PathKind::IntraTwoHop { via: 2 });
+        seeds.insert((4usize, 7usize), PathKind::IntraDirect);
+        let reference = Planner::new(&t, PlannerCfg::default()).plan_seeded(
+            &demands,
+            Some(&initial),
+            Some(&seeds),
+        );
+        for threads in [2, 8] {
+            let cfg = PlannerCfg { threads, ..PlannerCfg::default() };
+            let plan = Planner::new(&t, cfg).plan_seeded(&demands, Some(&initial), Some(&seeds));
+            assert_eq!(
+                plan.canonical_string(),
+                reference.canonical_string(),
+                "warm-started threads={threads} diverged"
+            );
+        }
     }
 }

@@ -112,6 +112,32 @@ impl Plan {
     pub fn total_paths(&self) -> usize {
         self.assignments.values().map(|a| a.path_count()).sum()
     }
+
+    /// Canonical lossless serialization of the routing decision: every
+    /// pair, every path (kind + hop list) and every byte volume as raw
+    /// f64 bits, plus the nonzero link loads. Two plans are
+    /// byte-identical iff their canonical strings are equal — the
+    /// comparison the planner determinism tests (thread-count
+    /// invariance, config reproduction) are built on. `plan_time_s` is
+    /// deliberately excluded: it is measurement, not decision.
+    pub fn canonical_string(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        for (&(s, d), a) in &self.assignments {
+            let _ = write!(out, "({s},{d}):");
+            for (p, bytes) in &a.parts {
+                let _ = write!(out, "[{:?}@{:?}={:016x}]", p.kind, p.hops, bytes.to_bits());
+            }
+            out.push('\n');
+        }
+        for (i, l) in self.link_load.iter().enumerate() {
+            if *l != 0.0 {
+                let _ = write!(out, "L{i}={:016x};", l.to_bits());
+            }
+        }
+        out.push('\n');
+        out
+    }
 }
 
 #[cfg(test)]

@@ -47,8 +47,9 @@ pub enum LinkKind {
 pub struct Topology {
     pub nodes: usize,
     pub gpus_per_node: usize,
-    /// NICs per node; must equal `gpus_per_node` for the rail-matched
-    /// layout the paper targets (NIC i attached to GPU i).
+    /// NICs per node. NIC *i* attaches to GPU *i*, so the count must
+    /// divide `gpus_per_node`; the paper's testbed has one NIC per GPU,
+    /// the `nimble scale` cluster axis runs 8 GPUs over 4 NICs.
     pub nics_per_node: usize,
     pub links: Vec<Link>,
     /// NVLink effective capacity (GB/s) per directed edge.
@@ -86,6 +87,16 @@ impl Topology {
         Self::hgx(2, 4, 4)
     }
 
+    /// The cluster-scale axis used by `nimble scale`: `nodes` × (8 GPUs
+    /// + 4 NICs). With fewer NICs than GPUs, NIC *r* stays attached to
+    /// GPU *r* and the NIC-less GPUs reach the network through an
+    /// NVLink hop to their [`Topology::home_rail`] GPU — the same
+    /// PXN-style forwarding the planner's inter-node candidates already
+    /// model.
+    pub fn cluster(nodes: usize) -> Topology {
+        Self::build(nodes, 8, 4, NVLINK_GBPS, RAIL_GBPS, true)
+    }
+
     /// DGX-like NVSwitch variant (paper §VII "Limitations"): same
     /// node/GPU/NIC counts, but intra-node connectivity goes through a
     /// central NVSwitch — direct paths only, no GPU relaying inside a
@@ -109,9 +120,12 @@ impl Topology {
         with_cross_rail: bool,
     ) -> Topology {
         assert!(nodes >= 1 && gpus_per_node >= 1);
-        assert_eq!(
-            nics_per_node, gpus_per_node,
-            "rail-matched layout requires one NIC per GPU (paper §IV-B)"
+        assert!(
+            nics_per_node >= 1
+                && nics_per_node <= gpus_per_node
+                && gpus_per_node % nics_per_node == 0,
+            "rail-matched layout requires NIC count to divide the GPU count \
+             (NIC r attaches to GPU r; paper §IV-B)"
         );
         let mut links = Vec::new();
         let mut nvlink_idx =
@@ -209,6 +223,14 @@ impl Topology {
 
     pub fn same_node(&self, a: GpuId, b: GpuId) -> bool {
         self.node_of(a) == self.node_of(b)
+    }
+
+    /// The rail a GPU has NIC affinity with. On the paper's one-NIC-
+    /// per-GPU layout this is just the local index; on wider nodes
+    /// (e.g. [`Topology::cluster`]'s 8 GPU / 4 NIC) GPUs without their
+    /// own NIC map onto the rails round-robin.
+    pub fn home_rail(&self, g: GpuId) -> usize {
+        self.local_of(g) % self.nics_per_node
     }
 
     /// NVLink edge between two GPUs on the same node.
@@ -332,6 +354,40 @@ mod tests {
         assert_eq!(t.local_of(9), 1);
         assert!(t.same_node(8, 11));
         assert!(!t.same_node(7, 8));
+    }
+
+    /// The `nimble scale` axis: N × (8 GPU + 4 NIC) nodes.
+    #[test]
+    fn cluster_topology_counts_and_home_rails() {
+        let t = Topology::cluster(4);
+        assert_eq!(t.num_gpus(), 32);
+        assert_eq!(t.nics_per_node, 4);
+        let nv = t.links.iter().filter(|l| l.kind == LinkKind::NvLink).count();
+        assert_eq!(nv, 4 * 8 * 7);
+        let rails =
+            t.links.iter().filter(|l| matches!(l.kind, LinkKind::Rail { .. })).count();
+        assert_eq!(rails, 4 * 3 * 4); // ordered node pairs × rails
+        // NIC r attaches to GPU r; GPUs 4..8 share rails round-robin
+        for l in &t.links {
+            if let LinkKind::Rail { rail } = l.kind {
+                assert_eq!(t.local_of(l.src), rail);
+                assert_eq!(t.local_of(l.dst), rail);
+            }
+        }
+        assert_eq!(t.home_rail(0), 0);
+        assert_eq!(t.home_rail(5), 1);
+        assert_eq!(t.home_rail(8 + 7), 3);
+        // on the paper layout home_rail degenerates to the local index
+        let p = Topology::paper();
+        for g in 0..p.num_gpus() {
+            assert_eq!(p.home_rail(g), p.local_of(g));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "rail-matched layout")]
+    fn nic_count_must_divide_gpu_count() {
+        let _ = Topology::build(2, 8, 3, NVLINK_GBPS, RAIL_GBPS, true);
     }
 
     #[test]

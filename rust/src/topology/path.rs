@@ -101,9 +101,9 @@ pub fn candidates(topo: &Topology, s: GpuId, d: GpuId, allow_multipath: bool) ->
         let rails: Vec<usize> = if allow_multipath {
             (0..topo.nics_per_node).collect()
         } else {
-            // single fastest path: the source GPU's own rail (GPU-NIC
+            // single fastest path: the source GPU's home rail (GPU-NIC
             // affinity), like NCCL's default p2p choice.
-            vec![topo.local_of(s)]
+            vec![topo.home_rail(s)]
         };
         for r in rails {
             let mut hops = Vec::with_capacity(3);
@@ -125,21 +125,35 @@ pub fn candidates(topo: &Topology, s: GpuId, d: GpuId, allow_multipath: bool) ->
 /// The baseline cross-rail path (source rail NIC straight to the
 /// destination rail's NIC, no GPU forwarding): what a rail-unaware
 /// library does for an inter-node pair whose endpoints sit on
-/// different rails.
+/// different rails. On wide nodes a NIC-less endpoint enters/exits via
+/// the NVLink hop to its home-rail GPU, mirroring [`candidates`]; on
+/// the paper's one-NIC-per-GPU layout those hops vanish and the path
+/// is the bare mismatched NIC edge, exactly as before.
 pub fn cross_rail_path(topo: &Topology, s: GpuId, d: GpuId) -> Option<Path> {
     if topo.same_node(s, d) {
         return None;
     }
-    let (sr, dr) = (topo.local_of(s), topo.local_of(d));
+    let (sr, dr) = (topo.home_rail(s), topo.home_rail(d));
     if sr == dr {
         return None; // same rail: the matched path exists
     }
-    let link = topo.cross_rail(topo.node_of(s), topo.node_of(d), sr, dr)?;
+    let (na, nb) = (topo.node_of(s), topo.node_of(d));
+    let link = topo.cross_rail(na, nb, sr, dr)?;
+    let mut hops = Vec::with_capacity(3);
+    let g_sr = topo.gpu(na, sr);
+    let g_dr = topo.gpu(nb, dr);
+    if g_sr != s {
+        hops.push(topo.nvlink(s, g_sr).unwrap());
+    }
+    hops.push(link);
+    if g_dr != d {
+        hops.push(topo.nvlink(g_dr, d).unwrap());
+    }
     Some(Path {
         src: s,
         dst: d,
         kind: PathKind::InterCross { src_rail: sr, dst_rail: dr },
-        hops: vec![link],
+        hops,
     })
 }
 
@@ -212,6 +226,33 @@ mod tests {
         assert_eq!(via3.relays(&t), vec![3, 7]);
     }
 
+    /// Wide nodes (8 GPU / 4 NIC): inter-node candidates still come one
+    /// per rail, NIC-less GPUs enter via an NVLink hop to the rail GPU,
+    /// and the single-path choice is the source's home rail.
+    #[test]
+    fn wide_node_candidates_use_home_rails() {
+        let t = Topology::cluster(2);
+        // GPU 6 (node 0, home rail 2) → GPU 13 (node 1, local 5)
+        let c = candidates(&t, 6, 13, true);
+        assert_eq!(c.len(), 4);
+        for p in &c {
+            assert!(p.is_valid(&t), "{:?} invalid", p.kind);
+            match p.kind {
+                PathKind::InterRail { rail } => {
+                    // neither endpoint owns a NIC, so every rail path
+                    // has an NVLink hop on both sides
+                    assert_eq!(p.hops.len(), 3, "rail {rail}");
+                }
+                _ => panic!("unexpected kind"),
+            }
+        }
+        let single = candidates(&t, 6, 13, false);
+        assert_eq!(single.len(), 1);
+        assert_eq!(single[0].kind, PathKind::InterRail { rail: 2 });
+        // intra-node: direct + 6 relays on an 8-GPU mesh
+        assert_eq!(candidates(&t, 0, 7, true).len(), 7);
+    }
+
     #[test]
     fn cross_rail_only_when_mismatched() {
         let t = Topology::paper();
@@ -219,6 +260,13 @@ mod tests {
         let p = cross_rail_path(&t, 0, 5).unwrap(); // rails 0 → 1
         assert!(p.is_valid(&t));
         assert_eq!(p.hops.len(), 1);
+        // wide nodes: NIC-less endpoints stage over NVLink, and the
+        // path stays a valid connected chain
+        let c = Topology::cluster(2);
+        assert!(cross_rail_path(&c, 4, 12).is_none()); // both home rail 0
+        let w = cross_rail_path(&c, 4, 13).unwrap(); // home rails 0 → 1
+        assert!(w.is_valid(&c));
+        assert_eq!(w.hops.len(), 3);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! respect, and monotonicity invariants that must hold for ANY random
 //! flow set — these are the physics the whole evaluation rests on.
 
-use nimble::fabric::fluid::{Flow, FluidSim};
+use nimble::fabric::fluid::{Flow, FluidSim, SimEngine, SolverKind};
 use nimble::fabric::pipeline::PipelineModel;
 use nimble::fabric::{FabricParams, XferMode};
 use nimble::prop_assert;
@@ -146,6 +146,77 @@ fn prop_pipeline_monotone_in_bytes_and_credits() {
             t_small >= t2 - 1e-12,
             "fewer credits finished earlier: {t2} vs {t_small}"
         );
+        Ok(())
+    });
+}
+
+/// The incremental water-filler is the from-scratch solver, bit for
+/// bit: same finish times, same link bytes, same event count — across
+/// epoch-sliced runs with randomized mid-flight `preempt`/`add_flows`
+/// sequences (the execution-time re-planning mechanism).
+#[test]
+fn prop_incremental_waterfill_matches_reference() {
+    let topo = Topology::paper();
+
+    // replay one schedule of flows + preempt/re-issue actions under a
+    // given solver
+    fn drive(
+        topo: &Topology,
+        flows: &[Flow],
+        actions: &[(usize, f64, usize)],
+        solver: SolverKind,
+    ) -> (nimble::fabric::fluid::SimResult, u64) {
+        let mut e = SimEngine::new(topo, FabricParams::default(), flows);
+        e.set_solver(solver);
+        let mut epoch = 0.0003;
+        let mut step = 0;
+        while !e.is_done() {
+            e.advance_to(epoch);
+            epoch += 0.0003;
+            if let Some(&(victim, frac, alt)) = actions.get(step) {
+                step += 1;
+                if victim < flows.len() && e.is_live(victim) {
+                    let residual = e.preempt(victim);
+                    if residual > 1.0 {
+                        let f = e.flow(victim).clone();
+                        let cands = candidates(topo, f.path.src, f.path.dst, true);
+                        let a = cands[alt % cands.len()].clone();
+                        let b = cands[(alt + 1) % cands.len()].clone();
+                        let now = e.now();
+                        e.add_flows(&[
+                            Flow::new(a, residual * frac).at(now),
+                            Flow::new(b, residual * (1.0 - frac)).at(now),
+                        ]);
+                    }
+                }
+            }
+            assert!(epoch < 10.0, "runaway simulation");
+        }
+        (e.result(), e.events())
+    }
+
+    check_seeded(0x17C5, 30, |g| {
+        let flows = random_flows(g, &topo, 16);
+        let n_act = g.usize(0, 3);
+        let actions: Vec<(usize, f64, usize)> = (0..n_act)
+            .map(|_| (g.usize(0, flows.len() - 1), g.f64(0.3, 0.7), g.usize(0, 5)))
+            .collect();
+        let (ra, ea) = drive(&topo, &flows, &actions, SolverKind::Incremental);
+        let (rb, eb) = drive(&topo, &flows, &actions, SolverKind::Reference);
+        prop_assert!(ea == eb, "event counts diverged: {ea} vs {eb}");
+        prop_assert!(
+            ra.makespan.to_bits() == rb.makespan.to_bits(),
+            "makespan diverged: {} vs {}",
+            ra.makespan,
+            rb.makespan
+        );
+        for (i, (a, b)) in ra.flows.iter().zip(&rb.flows).enumerate() {
+            let same = (a.finish_t.is_nan() && b.finish_t.is_nan())
+                || a.finish_t.to_bits() == b.finish_t.to_bits();
+            prop_assert!(same, "flow {i} finish diverged");
+            prop_assert!(a.bytes.to_bits() == b.bytes.to_bits(), "flow {i} bytes diverged");
+        }
+        prop_assert!(ra.link_bytes == rb.link_bytes, "link bytes diverged");
         Ok(())
     });
 }

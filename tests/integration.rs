@@ -250,6 +250,65 @@ fn planner_is_deterministic_cold_and_warm() {
     assert_ne!(w1.link_load, p1.link_load, "warm start had no effect");
 }
 
+/// The parallel-sweep contract, end to end: serializing the `Plan`
+/// produced at thread counts {1, 2, 8} yields byte-identical strings —
+/// on a seeded skewed workload (one fully-coupled component), on a
+/// decomposable multi-component workload, and on the warm-started
+/// challenger path the replan loop uses.
+#[test]
+fn planner_output_byte_identical_across_thread_counts() {
+    let topo = Topology::paper();
+    let mut rng = Rng::new(0xBEEF);
+    let (_, skewed) = hotspot_alltoallv_jittered(&topo, 96.0 * MB, 0.7, &mut rng);
+    let decomposable = vec![
+        Demand::new(0, 1, 512.0 * MB),
+        Demand::new(2, 3, 300.0 * MB),
+        Demand::new(4, 5, 512.0 * MB),
+        Demand::new(6, 7, 96.0 * MB),
+        Demand::new(1, 6, 256.0 * MB),
+    ];
+    let mut initial = vec![0.0; topo.links.len()];
+    initial[topo.nvlink(0, 1).unwrap()] = 2.0e9;
+
+    for demands in [&skewed, &decomposable] {
+        let with_threads = |t: usize| {
+            let cfg = PlannerCfg { threads: t, ..PlannerCfg::default() };
+            let mut planner = Planner::new(&topo, cfg);
+            let cold = planner.plan(demands).canonical_string();
+            let warm = planner
+                .plan_with_initial(demands, Some(&initial))
+                .canonical_string();
+            (cold, warm)
+        };
+        let (cold1, warm1) = with_threads(1);
+        for t in [2, 8] {
+            let (cold, warm) = with_threads(t);
+            assert_eq!(cold, cold1, "cold plan diverged at {t} threads");
+            assert_eq!(warm, warm1, "warm plan diverged at {t} threads");
+        }
+    }
+}
+
+/// `configs/paper.toml` keeps `[planner] threads = 1` and therefore
+/// reproduces the pre-threads seeded plans bitwise: the loaded config
+/// must plan exactly like the built-in defaults (the serial code path).
+#[test]
+fn paper_config_reproduces_seeded_plans_bitwise() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/paper.toml");
+    let cfg = nimble::config::Config::load(path).unwrap();
+    assert_eq!(cfg.planner.threads, 1, "paper config must stay on the serial sweep");
+    let topo = Topology::paper();
+    let mut rng = Rng::new(0xD17E);
+    let (_, demands) = hotspot_alltoallv_jittered(&topo, 96.0 * MB, 0.7, &mut rng);
+    let from_file = Planner::new(&topo, cfg.planner.clone())
+        .plan(&demands)
+        .canonical_string();
+    let builtin = Planner::new(&topo, PlannerCfg::default())
+        .plan(&demands)
+        .canonical_string();
+    assert_eq!(from_file, builtin, "paper.toml drifted from the reference planner");
+}
+
 /// Execution-time loop soak: many rounds of jittered, phase-shifting
 /// hot rows through the monitor → replan → reroute path. The executor
 /// itself asserts the reassembly ordering invariant on every round
