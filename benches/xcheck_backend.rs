@@ -1,0 +1,65 @@
+//! Packet-backend throughput bench: fly the 4-node skewed All-to-Allv
+//! from `nimble scale` (same jitter seed, same planned routing) on the
+//! packet-level discrete-event simulator and report events/sec, plus
+//! the fluid-engine goodput on the identical flow set as the
+//! cross-validation ratio.
+//!
+//! Like `benches/scale_sweep.rs`, every config emits one
+//! machine-readable JSON line (`{"exp":"xcheck_backend",...}`) so the
+//! packet backend's perf trajectory is trackable across PRs.
+
+use nimble::exp::scale::{plan_flows, scale_demands};
+use nimble::exp::MB;
+use nimble::fabric::fluid::FluidSim;
+use nimble::fabric::packet::PacketSim;
+use nimble::fabric::FabricParams;
+use nimble::planner::{Planner, PlannerCfg};
+use nimble::topology::Topology;
+use nimble::util::json::Json;
+use std::time::Instant;
+
+fn main() {
+    let payload = 64.0 * MB;
+    let params = FabricParams::default();
+    println!(
+        "== xcheck backend bench: packet-level DES, skewed All-to-Allv, {:.0} MB/rank ==",
+        payload / MB
+    );
+    for nodes in [1usize, 2, 4] {
+        let topo = Topology::cluster(nodes);
+        let demands = scale_demands(&topo, payload);
+        let plan = Planner::new(&topo, PlannerCfg::default()).plan(&demands);
+        let flows = plan_flows(&plan);
+        let payload_total: f64 = demands.iter().map(|d| d.bytes).sum();
+
+        let mut sim = PacketSim::new(&topo, params.clone(), &flows);
+        let t = Instant::now();
+        sim.run_to_completion();
+        let wall = t.elapsed().as_secs_f64();
+        let r = sim.result();
+        let tail = sim.tail();
+        let goodput = payload_total / r.makespan.max(1e-12) / 1e9;
+
+        let fluid = FluidSim::new(&topo, params.clone()).run(&flows);
+        let fluid_goodput = payload_total / fluid.makespan.max(1e-12) / 1e9;
+
+        let line = Json::obj(vec![
+            ("exp", Json::str("xcheck_backend")),
+            ("nodes", Json::num(nodes as f64)),
+            ("flows", Json::num(flows.len() as f64)),
+            ("chunks", Json::num(tail.delivered_chunks as f64)),
+            ("events", Json::num(sim.events() as f64)),
+            ("events_per_sec", Json::num(sim.events() as f64 / wall.max(1e-12))),
+            ("sim_ms", Json::num(wall * 1e3)),
+            ("goodput_gbps", Json::num(goodput)),
+            ("fluid_goodput_gbps", Json::num(fluid_goodput)),
+            ("ratio_vs_fluid", Json::num(goodput / fluid_goodput.max(1e-12))),
+            (
+                "p99_us",
+                Json::num(nimble::util::stats::p99(&tail.sojourn_s) * 1e6),
+            ),
+        ]);
+        println!("{}", line.to_string_compact());
+    }
+    println!("xcheck backend bench done (agreement asserted by `nimble xcheck --check`)");
+}

@@ -3,7 +3,7 @@
 //! paper's 2×(4 GPU + 4 NIC) testbed are first-class (see
 //! `configs/paper.toml` for the reference file).
 
-use crate::fabric::FabricParams;
+use crate::fabric::{BackendKind, FabricParams};
 use crate::planner::{CostModel, PlannerCfg, ReplanCfg};
 use crate::topology::Topology;
 use crate::util::toml::TomlDoc;
@@ -84,6 +84,31 @@ impl Config {
         f.p2p_buf_bytes = g("p2p_buf_bytes", f.p2p_buf_bytes);
         f.chunk_bytes = g("chunk_bytes", f.chunk_bytes);
 
+        // [fabric.packet] — backend selector + packet-sim calibration.
+        // Defaults to the fluid backend so every pre-existing experiment
+        // and plan output stays bit-identical.
+        let ps = "fabric.packet";
+        if let Some(v) = doc.get(ps, "backend") {
+            f.backend = match v.as_str() {
+                Some("fluid") => BackendKind::Fluid,
+                Some("packet") => BackendKind::Packet,
+                _ => {
+                    return Err(format!(
+                        "fabric.packet.backend must be \"fluid\" or \"packet\", got {v:?}"
+                    ))
+                }
+            };
+        }
+        let pk = &mut f.packet;
+        pk.cell_bytes = doc.get_f64(ps, "cell_bytes").unwrap_or(pk.cell_bytes);
+        pk.buffer_bytes = doc.get_f64(ps, "buffer_bytes").unwrap_or(pk.buffer_bytes);
+        if let Some(l) = doc.get_usize(ps, "latency_ns") {
+            pk.latency_ns = l as u64;
+        }
+        if let Some(s) = doc.get_usize(ps, "seed") {
+            pk.seed = s as u64;
+        }
+
         // [planner]
         let p = &mut cfg.planner;
         p.lambda = doc.get_f64("planner", "lambda").unwrap_or(p.lambda);
@@ -121,6 +146,27 @@ impl Config {
             return Err(format!(
                 "planner.threads out of [1,256]: {}",
                 cfg.planner.threads
+            ));
+        }
+        let pk = &cfg.fabric.packet;
+        // range-contains form so NaN (which the TOML float parser
+        // accepts) fails closed instead of sailing past `<` checks
+        if !(1.0..=64.0 * 1024.0 * 1024.0).contains(&pk.cell_bytes) {
+            return Err(format!(
+                "fabric.packet.cell_bytes out of [1, 64 MiB]: {}",
+                pk.cell_bytes
+            ));
+        }
+        if !pk.buffer_bytes.is_finite() || pk.buffer_bytes < pk.cell_bytes {
+            return Err(format!(
+                "fabric.packet.buffer_bytes ({}) must hold at least one cell ({})",
+                pk.buffer_bytes, pk.cell_bytes
+            ));
+        }
+        if pk.latency_ns > 1_000_000_000 {
+            return Err(format!(
+                "fabric.packet.latency_ns out of [0, 1e9]: {}",
+                pk.latency_ns
             ));
         }
         if cfg.replan.cadence_s <= 0.0 {
@@ -238,5 +284,58 @@ mod tests {
         assert_eq!(c.topology.num_gpus(), 8);
         // [replan] ships disabled so paper experiments replay verbatim
         assert!(!c.replan.enable);
+        // the backend selector ships on fluid for the same reason, and
+        // the packet section mirrors the built-in defaults exactly
+        assert_eq!(c.fabric.backend, BackendKind::Fluid);
+        let d = FabricParams::default().packet;
+        assert_eq!(c.fabric.packet.cell_bytes, d.cell_bytes);
+        assert_eq!(c.fabric.packet.buffer_bytes, d.buffer_bytes);
+        assert_eq!(c.fabric.packet.latency_ns, d.latency_ns);
+        assert_eq!(c.fabric.packet.seed, d.seed);
+    }
+
+    /// `[fabric.packet]` defaults to the fluid backend (bit-identical
+    /// pre-existing experiments) and every knob overrides.
+    #[test]
+    fn packet_section_defaults_and_overrides() {
+        let c = Config::from_toml("").unwrap();
+        assert_eq!(c.fabric.backend, BackendKind::Fluid);
+        assert_eq!(c.fabric.packet.cell_bytes, 256.0 * 1024.0);
+        assert_eq!(c.fabric.packet.buffer_bytes, 10.0 * 1024.0 * 1024.0);
+        assert_eq!(c.fabric.packet.latency_ns, 3_000);
+        let c = Config::from_toml(
+            "[fabric.packet]\nbackend = \"packet\"\ncell_bytes = 65_536\n\
+             buffer_bytes = 1_048_576\nlatency_ns = 500\nseed = 42\n",
+        )
+        .unwrap();
+        assert_eq!(c.fabric.backend, BackendKind::Packet);
+        assert_eq!(c.fabric.packet.cell_bytes, 65_536.0);
+        assert_eq!(c.fabric.packet.buffer_bytes, 1_048_576.0);
+        assert_eq!(c.fabric.packet.latency_ns, 500);
+        assert_eq!(c.fabric.packet.seed, 42);
+    }
+
+    #[test]
+    fn packet_section_invalid_values_rejected() {
+        // unknown backend name
+        assert!(Config::from_toml("[fabric.packet]\nbackend = \"quantum\"\n").is_err());
+        // cell outside [1, 64 MiB]
+        assert!(Config::from_toml("[fabric.packet]\ncell_bytes = 0\n").is_err());
+        assert!(
+            Config::from_toml("[fabric.packet]\ncell_bytes = 134_217_728\n").is_err()
+        );
+        // NaN parses as a float but must fail closed
+        assert!(Config::from_toml("[fabric.packet]\ncell_bytes = nan\n").is_err());
+        assert!(Config::from_toml("[fabric.packet]\nbuffer_bytes = nan\n").is_err());
+        // window smaller than one cell starves the injector
+        assert!(Config::from_toml(
+            "[fabric.packet]\ncell_bytes = 65_536\nbuffer_bytes = 1024\n"
+        )
+        .is_err());
+        // absurd propagation latency
+        assert!(Config::from_toml(
+            "[fabric.packet]\nlatency_ns = 2_000_000_000\n"
+        )
+        .is_err());
     }
 }

@@ -139,7 +139,7 @@ mod tests {
             let mut q = ReassemblyQueue::new();
             let mut delivered = Vec::new();
             for c in arrivals(&order) {
-                delivered.extend(q.push(c).map_err(|e| e)?);
+                delivered.extend(q.push(c)?);
             }
             crate::prop_assert!(q.is_drained(), "queue not drained");
             let seqs: Vec<u64> = delivered.iter().map(|c| c.seq).collect();

@@ -11,5 +11,6 @@ pub mod replan;
 pub mod scale;
 pub mod sendrecv;
 pub mod table1;
+pub mod xcheck;
 
 pub const MB: f64 = 1024.0 * 1024.0;

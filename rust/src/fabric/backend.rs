@@ -1,0 +1,241 @@
+//! The fabric-backend trait behind the execution-time loop.
+//!
+//! [`FabricBackend`] is the exact surface the coordinator's monitor →
+//! replan → reroute loop ([`crate::coordinator::ReplanExecutor`])
+//! drives: issue flows on planned paths, advance virtual time to a
+//! replan epoch, sample per-link byte windows, preempt a flow's
+//! residual bytes and re-issue them on new paths. Extracting it as a
+//! trait makes the loop backend-agnostic:
+//!
+//! * [`SimEngine`] (fluid, [`BackendKind::Fluid`], the default) — the
+//!   resumable max-min engine every pre-existing experiment runs on;
+//!   selecting it routes through the identical code path, so results
+//!   stay **bit-identical** to the pre-trait executor.
+//! * [`PacketSim`] ([`BackendKind::Packet`]) — the chunk-granular
+//!   discrete-event simulator, the only backend that can report
+//!   queueing delay and tail latency ([`FabricBackend::tail`]).
+//!
+//! `nimble xcheck` cross-validates the two (same flows, both backends,
+//! goodput agreement within a stated tolerance — DESIGN.md §10).
+//!
+//! ## Adding a third backend
+//!
+//! Implement the trait (the engine owns its own event representation;
+//! nothing outside the `fabric` module sees events), add a variant to
+//! [`BackendKind`] and a match arm in [`make_backend`], and extend the
+//! `tests/fabric_props.rs` conservation properties to cover it. The
+//! coordinator, monitor and planner need no changes.
+
+use super::fluid::{Flow, SimEngine, SimResult};
+use super::packet::PacketSim;
+use super::{BackendKind, FabricParams};
+use crate::topology::Topology;
+use std::collections::BTreeMap;
+
+/// Queueing/latency observations only a discrete-event backend can
+/// produce ([`FabricBackend::tail`]). All latencies in seconds; the
+/// percentile reduction lives in [`crate::metrics::TailReport`].
+#[derive(Clone, Debug, Default)]
+pub struct TailStats {
+    /// Per delivered chunk: issue (incl. setup latency) → delivery.
+    pub sojourn_s: Vec<f64>,
+    /// Per delivered chunk: first-queue entry → delivery (the pure
+    /// network transit + queueing component).
+    pub transit_s: Vec<f64>,
+    /// Sojourn latencies grouped by (src, dst) pair.
+    pub per_pair_sojourn_s: BTreeMap<(usize, usize), Vec<f64>>,
+    /// Peak queued bytes per link (excludes the cell in service).
+    pub peak_queue_bytes: Vec<f64>,
+    /// Peak queued bytes per destination GPU's receive stage.
+    pub peak_recv_queue_bytes: Vec<f64>,
+    /// Chunks delivered end-to-end.
+    pub delivered_chunks: u64,
+}
+
+/// The surface [`crate::coordinator::ReplanExecutor`] needs from a
+/// fabric simulation engine. Flow indices are issue order, exactly as
+/// [`SimEngine`] numbers them.
+pub trait FabricBackend {
+    /// Register additional flows (initial issue or re-issued residuals
+    /// at a replan epoch); returns the index of the first new flow.
+    fn add_flows(&mut self, flows: &[Flow]) -> usize;
+    /// Advance the event loop until `t_stop` (a replan epoch boundary)
+    /// or until every flow completes, whichever comes first.
+    fn advance_to(&mut self, t_stop: f64);
+    /// Run every remaining event (no epoch bound).
+    fn run_to_completion(&mut self) {
+        self.advance_to(f64::INFINITY);
+    }
+    /// All flows delivered or preempted.
+    fn is_done(&self) -> bool;
+    /// Current virtual time (seconds).
+    fn now(&self) -> f64;
+    /// Events processed so far (the unit of `events/sec` throughput).
+    fn events(&self) -> u64;
+    /// Bytes flow `i` still has to deliver (0 once finished/preempted).
+    fn residual_bytes(&self, i: usize) -> f64;
+    /// Bytes flow `i` has delivered so far.
+    fn moved_bytes(&self, i: usize) -> f64;
+    /// Whether flow `i` is still in flight (issued or queued).
+    fn is_live(&self, i: usize) -> bool;
+    /// The flow registered under index `i`.
+    fn flow(&self, i: usize) -> &Flow;
+    /// Preempt flow `i` mid-transfer; returns its residual bytes for
+    /// re-issue on other paths via [`FabricBackend::add_flows`].
+    fn preempt(&mut self, i: usize) -> f64;
+    /// Per-link bytes moved since the previous call (the monitor's
+    /// sampling window); resets the window counters.
+    fn take_window(&mut self) -> Vec<f64>;
+    /// Snapshot the outcome (same shape for every backend).
+    fn result(&self) -> SimResult;
+    /// Latency/queue-depth observations, when the backend records them
+    /// (the packet backend does; the fluid backend cannot).
+    fn tail(&self) -> Option<TailStats> {
+        None
+    }
+}
+
+/// Instantiate the backend `params.backend` selects, seeded with
+/// `flows`. [`BackendKind::Fluid`] constructs the same [`SimEngine`]
+/// the pre-trait executor did — byte-for-byte the same trajectory.
+pub fn make_backend<'a>(
+    topo: &'a Topology,
+    params: FabricParams,
+    flows: &[Flow],
+) -> Box<dyn FabricBackend + 'a> {
+    match params.backend {
+        BackendKind::Fluid => Box::new(SimEngine::new(topo, params, flows)),
+        BackendKind::Packet => Box::new(PacketSim::new(topo, params, flows)),
+    }
+}
+
+impl<'a> FabricBackend for SimEngine<'a> {
+    fn add_flows(&mut self, flows: &[Flow]) -> usize {
+        SimEngine::add_flows(self, flows)
+    }
+    fn advance_to(&mut self, t_stop: f64) {
+        SimEngine::advance_to(self, t_stop)
+    }
+    fn is_done(&self) -> bool {
+        SimEngine::is_done(self)
+    }
+    fn now(&self) -> f64 {
+        SimEngine::now(self)
+    }
+    fn events(&self) -> u64 {
+        SimEngine::events(self)
+    }
+    fn residual_bytes(&self, i: usize) -> f64 {
+        SimEngine::residual_bytes(self, i)
+    }
+    fn moved_bytes(&self, i: usize) -> f64 {
+        SimEngine::moved_bytes(self, i)
+    }
+    fn is_live(&self, i: usize) -> bool {
+        SimEngine::is_live(self, i)
+    }
+    fn flow(&self, i: usize) -> &Flow {
+        SimEngine::flow(self, i)
+    }
+    fn preempt(&mut self, i: usize) -> f64 {
+        SimEngine::preempt(self, i)
+    }
+    fn take_window(&mut self) -> Vec<f64> {
+        SimEngine::take_window(self)
+    }
+    fn result(&self) -> SimResult {
+        SimEngine::result(self)
+    }
+}
+
+impl<'a> FabricBackend for PacketSim<'a> {
+    fn add_flows(&mut self, flows: &[Flow]) -> usize {
+        PacketSim::add_flows(self, flows)
+    }
+    fn advance_to(&mut self, t_stop: f64) {
+        PacketSim::advance_to(self, t_stop)
+    }
+    fn is_done(&self) -> bool {
+        PacketSim::is_done(self)
+    }
+    fn now(&self) -> f64 {
+        PacketSim::now(self)
+    }
+    fn events(&self) -> u64 {
+        PacketSim::events(self)
+    }
+    fn residual_bytes(&self, i: usize) -> f64 {
+        PacketSim::residual_bytes(self, i)
+    }
+    fn moved_bytes(&self, i: usize) -> f64 {
+        PacketSim::moved_bytes(self, i)
+    }
+    fn is_live(&self, i: usize) -> bool {
+        PacketSim::is_live(self, i)
+    }
+    fn flow(&self, i: usize) -> &Flow {
+        PacketSim::flow(self, i)
+    }
+    fn preempt(&mut self, i: usize) -> f64 {
+        PacketSim::preempt(self, i)
+    }
+    fn take_window(&mut self) -> Vec<f64> {
+        PacketSim::take_window(self)
+    }
+    fn result(&self) -> SimResult {
+        PacketSim::result(self)
+    }
+    fn tail(&self) -> Option<TailStats> {
+        Some(PacketSim::tail(self))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::path::candidates;
+
+    const MB: f64 = 1024.0 * 1024.0;
+
+    /// Driving the fluid engine through the trait object is the same
+    /// code path as driving it directly — bit-identical results (the
+    /// guarantee that keeps every pre-trait experiment unchanged).
+    #[test]
+    fn fluid_backend_matches_direct_engine_bitwise() {
+        let topo = Topology::paper();
+        let cands = candidates(&topo, 0, 1, true);
+        let flows = vec![
+            Flow::new(cands[0].clone(), 96.0 * MB),
+            Flow::new(cands[1].clone(), 48.0 * MB).at(0.0004),
+        ];
+        let mut direct = SimEngine::new(&topo, FabricParams::default(), &flows);
+        direct.run_to_completion();
+        let a = direct.result();
+
+        let mut boxed = make_backend(&topo, FabricParams::default(), &flows);
+        boxed.run_to_completion();
+        let b = boxed.result();
+
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.link_bytes, b.link_bytes);
+        for (x, y) in a.flows.iter().zip(&b.flows) {
+            assert_eq!(x.finish_t.to_bits(), y.finish_t.to_bits());
+        }
+        assert!(boxed.tail().is_none(), "fluid backend cannot observe tails");
+    }
+
+    /// The selector actually switches implementations.
+    #[test]
+    fn selector_picks_packet_backend() {
+        let topo = Topology::paper();
+        let p = candidates(&topo, 0, 1, false).remove(0);
+        let mut params = FabricParams { backend: BackendKind::Packet, ..Default::default() };
+        params.packet.cell_bytes = 64.0 * 1024.0;
+        let mut be = make_backend(&topo, params, &[Flow::new(p, 4.0 * MB)]);
+        be.run_to_completion();
+        assert!(be.is_done());
+        let tail = be.tail().expect("packet backend records tails");
+        assert_eq!(tail.delivered_chunks, 64, "4 MB / 64 KB cells");
+        assert_eq!(tail.sojourn_s.len(), 64);
+    }
+}

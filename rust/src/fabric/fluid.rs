@@ -352,6 +352,12 @@ pub enum SolverKind {
 /// [`FluidSim::run`] event-for-event (bit-identical results) — the
 /// guarantee behind "replanning disabled ⇒ byte-identical to the
 /// static path".
+///
+/// `SimEngine` is the default [`crate::fabric::FabricBackend`]
+/// implementation (`[fabric.packet] backend = "fluid"`); the trait impl
+/// in `fabric::backend` delegates to the inherent methods below, so
+/// driving the engine through the trait object is the same code path,
+/// operation for operation.
 pub struct SimEngine<'a> {
     sim: FluidSim<'a>,
     flows: Vec<Flow>,

@@ -1,18 +1,27 @@
 //! The simulated hardware fabric (DESIGN.md §5).
 //!
 //! The paper's testbed (H100 NVLink mesh + 4× NDR400 rails) is not
-//! available here, so the fabric is replaced by two complementary
+//! available here, so the fabric is replaced by three complementary
 //! models calibrated to the paper's own §V-B measurements:
 //!
 //! * [`fluid`] — flow-level progressive-filling simulator with max-min
 //!   fair sharing over link/endpoint/node capacity constraints. This is
 //!   the workhorse for Figs 6a/6b/7/8 and Table I (steady-state
 //!   bandwidth sharing under contention).
-//! * [`pipeline`] — chunk-level discrete model of the paper's §IV-C
+//! * [`packet`] — chunk-granular discrete-event simulator (per-link
+//!   FIFO queues, store-and-forward serialization, per-hop propagation
+//!   latency, seeded round-robin injection). The only model that can
+//!   express queueing delay, incast and tail latency; cross-validated
+//!   against [`fluid`] by `nimble xcheck` (DESIGN.md §10).
+//! * [`pipeline`] — chunk-level closed-form model of the paper's §IV-C
 //!   kernel pipeline (P2P buffer credits, per-hop chunk movement),
 //!   used for the transient/overhead studies (Figs 6c/6d) and to
 //!   property-check that its steady-state throughput equals the fluid
 //!   model's bottleneck rate.
+//!
+//! [`backend`] defines the [`FabricBackend`] trait the coordinator's
+//! execution-time loop drives, with [`fluid::SimEngine`] (default) and
+//! [`packet::PacketSim`] as the two swappable implementations.
 //!
 //! Calibration anchors (from the paper):
 //! * direct NVLink path: 120 GB/s effective, saturating ≳64 MB
@@ -24,8 +33,12 @@
 //!   aggregate ⇒ per-node network injection cap A_net = 170.0 GB/s
 //! * multi-path disabled ≤1 MB (kernel-pipeline overhead dominates)
 
+pub mod backend;
 pub mod fluid;
+pub mod packet;
 pub mod pipeline;
+
+pub use backend::{make_backend, FabricBackend, TailStats};
 
 use crate::topology::{LinkKind, Path, Topology};
 
@@ -71,6 +84,60 @@ pub struct FabricParams {
     pub chunk_ovh_us: f64,
     /// Per-chunk RDMA post overhead (CPU thread issues ibv_post).
     pub rdma_post_us: f64,
+    /// Which simulation backend the coordinator's execution-time loop
+    /// flies on ([`backend::make_backend`]). Defaults to the fluid
+    /// engine so every pre-existing experiment reproduces bit-identically.
+    pub backend: BackendKind,
+    /// Packet-backend knobs (`[fabric.packet]` in the TOML config).
+    pub packet: PacketParams,
+}
+
+/// Selects the [`FabricBackend`] implementation flown by the
+/// coordinator ([`backend::make_backend`]). `[fabric.packet] backend`
+/// in the TOML config.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Flow-level max-min fluid engine ([`fluid::SimEngine`]) — the
+    /// default, and the only backend the static experiments use.
+    Fluid,
+    /// Chunk-granular discrete-event simulator
+    /// ([`packet::PacketSim`]): adds queueing/tail-latency fidelity at
+    /// higher event cost.
+    Packet,
+}
+
+/// Calibration of the packet-level backend (`[fabric.packet]`). The
+/// defaults derive from the same paper measurements as the rest of
+/// [`FabricParams`]: the per-hop wire latency is `hop_lat_us` restated
+/// in nanoseconds, and the sender window is the §IV-C 10 MB P2P
+/// staging-buffer credit.
+#[derive(Clone, Copy, Debug)]
+pub struct PacketParams {
+    /// MTU of the simulator: payloads are carved into cells of at most
+    /// this many bytes (each flow uses equal-size cells so byte
+    /// conservation is exact).
+    pub cell_bytes: f64,
+    /// Per-flow in-flight window (injected but undelivered bytes) —
+    /// the credit-return backpressure bound, default the 10 MB P2P
+    /// staging buffer.
+    pub buffer_bytes: f64,
+    /// Per-hop propagation latency in nanoseconds (default: the
+    /// `hop_lat_us` handshake latency, 3 µs).
+    pub latency_ns: u64,
+    /// Arbitration seed: rotates each endpoint's initial round-robin
+    /// pointer. Identical seeds ⇒ byte-identical event traces.
+    pub seed: u64,
+}
+
+impl Default for PacketParams {
+    fn default() -> Self {
+        PacketParams {
+            cell_bytes: 256.0 * 1024.0,
+            buffer_bytes: 10.0 * 1024.0 * 1024.0,
+            latency_ns: 3_000,
+            seed: 0x9AC4E7,
+        }
+    }
 }
 
 impl Default for FabricParams {
@@ -89,6 +156,8 @@ impl Default for FabricParams {
             chunk_bytes: 512.0 * 1024.0,
             chunk_ovh_us: 0.3,
             rdma_post_us: 1.0,
+            backend: BackendKind::Fluid,
+            packet: PacketParams::default(),
         }
     }
 }

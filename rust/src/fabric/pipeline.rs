@@ -213,8 +213,9 @@ mod tests {
     #[test]
     fn tiny_credits_still_complete() {
         let t = Topology::paper();
-        let mut params = FabricParams::default();
-        params.p2p_buf_bytes = params.chunk_bytes; // 1 credit
+        let defaults = FabricParams::default();
+        // 1 credit: staging buffer holds exactly one chunk
+        let params = FabricParams { p2p_buf_bytes: defaults.chunk_bytes, ..defaults };
         let m = PipelineModel::new(&t, params);
         let p = candidates(&t, 0, 1, true).remove(1); // 2-hop
         let r = m.transfer(&p, 16.0 * MB, XferMode::Kernel);

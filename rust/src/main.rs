@@ -12,12 +12,15 @@
 //! nimble ablate            design-choice ablations
 //! nimble replan            execution-time re-planning vs static plan
 //! nimble scale             cluster-scale hot-path sweep (incremental vs reference solver)
+//! nimble xcheck            fluid ↔ packet backend cross-validation + tail latency
 //! nimble plan --src 0 --dst 1 --mb 256   show a routing plan
 //! nimble moe-compute       run the AOT FFN artifacts (offline interpreter)
 //! nimble info              topology + fabric calibration summary
 //! ```
 
-use nimble::exp::{ablate, fig6, fig7, fig8, interference, replan, scale, sendrecv, table1, MB};
+use nimble::exp::{
+    ablate, fig6, fig7, fig8, interference, replan, scale, sendrecv, table1, xcheck, MB,
+};
 use nimble::fabric::FabricParams;
 use nimble::planner::{CostModel, Demand, Planner};
 use nimble::runtime::Runtime;
@@ -184,6 +187,40 @@ fn main() {
                 }
             }
         }),
+        "xcheck" => Args::new(
+            "nimble xcheck",
+            "fluid ↔ packet backend cross-validation + tail-latency report",
+        )
+        .flag("payload-mb", "64", "anchor payload per flow/rank in MB (agreement is calibrated ≥ 64)")
+        .flag("rounds", "4", "PhasedHotRows rounds on the packet backend")
+        .flag("row-mb", "48", "hot-row bytes per peer in MB")
+        .switch("quick", "CI-sized run (3 rounds of 24 MB rows)")
+        .switch("check", "enforce the agreement tolerance + p99 acceptance gate")
+        .parse(rest)
+        .map(|p| {
+            let quick = p.get_bool("quick");
+            let payload_mb = p.get_f64("payload-mb");
+            let rounds = if quick { 3 } else { p.get_usize("rounds") };
+            let row_mb = if quick { 24.0 } else { p.get_f64("row-mb") };
+            let rep = xcheck::run(&topo, &params, payload_mb, rounds, row_mb);
+            println!("{}", xcheck::render(&rep));
+            if p.get_bool("check") {
+                match xcheck::check(&rep) {
+                    // stderr, like the scale smoke: stdout stays a report
+                    Ok(()) => eprintln!(
+                        "xcheck OK: backends agree within ±{:.0}%, replanned p99 \
+                         {:.1} µs < static {:.1} µs",
+                        xcheck::GOODPUT_TOL * 100.0,
+                        rep.replan.replanned_p99_us,
+                        rep.replan.static_p99_us,
+                    ),
+                    Err(e) => {
+                        eprintln!("xcheck FAILED: {e}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+        }),
         "plan" => Args::new("nimble plan", "show the routing plan for one demand")
             .flag("src", "0", "source GPU")
             .flag("dst", "1", "destination GPU")
@@ -232,7 +269,7 @@ fn main() {
 
 fn usage() -> String {
     "nimble — NIMBLE (skew-to-symmetry multi-path balancing) reproduction\n\
-     commands: table1 | fig6 | fig7 | fig8 | sendrecv | ablate | interference | replan | scale | plan | moe-compute | info\n\
+     commands: table1 | fig6 | fig7 | fig8 | sendrecv | ablate | interference | replan | scale | xcheck | plan | moe-compute | info\n\
      run `nimble <cmd> --help` for flags"
         .to_string()
 }

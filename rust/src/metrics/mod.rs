@@ -1,10 +1,14 @@
-//! Communication run reports: latency summaries, link utilization,
+//! Communication run reports: latency summaries, tail-latency /
+//! queue-depth reports from the packet backend, link utilization,
 //! imbalance metrics, and fixed-width table rendering used by the
 //! experiment drivers and benches.
 
 use crate::fabric::fluid::SimResult;
+use crate::fabric::TailStats;
 use crate::topology::Topology;
-use crate::util::stats::{jain_index, Summary};
+use crate::util::stats::{
+    jain_index, percentile_nearest_rank, percentile_nearest_rank_sorted, Summary,
+};
 
 /// Outcome of one communication round under some engine.
 #[derive(Clone, Debug)]
@@ -46,6 +50,74 @@ impl CommReport {
 
     pub fn latency_summary(&self) -> Summary {
         Summary::of(&self.latencies_s)
+    }
+}
+
+/// Tail-latency and queue-depth report reduced from the packet
+/// backend's raw observations ([`TailStats`]) with **nearest-rank**
+/// percentiles ([`crate::util::stats::percentile_nearest_rank`]) —
+/// every reported figure is a latency some chunk actually saw.
+/// Latencies in microseconds.
+#[derive(Clone, Debug)]
+pub struct TailReport {
+    /// Chunks delivered end-to-end.
+    pub chunks: u64,
+    /// Sojourn (issue → delivery) percentiles.
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    /// Worst sojourn observed.
+    pub max_us: f64,
+    /// p99 of the pure transit component (first-queue entry →
+    /// delivery): the congestion signal with source-side backlog
+    /// excluded.
+    pub transit_p99_us: f64,
+    /// Deepest link queue observed anywhere, in bytes.
+    pub peak_queue_bytes: f64,
+    /// Link that saw it (index into `Topology::links`).
+    pub peak_queue_link: usize,
+    /// Deepest receive-stage (incast) queue observed, in bytes.
+    pub peak_recv_queue_bytes: f64,
+}
+
+impl TailReport {
+    pub fn from_stats(tail: &TailStats) -> Option<TailReport> {
+        if tail.sojourn_s.is_empty() {
+            return None;
+        }
+        let us = 1e6;
+        let (peak_queue_link, peak_queue_bytes) = tail
+            .peak_queue_bytes
+            .iter()
+            .enumerate()
+            .fold((0, 0.0), |best, (i, &b)| if b > best.1 { (i, b) } else { best });
+        // one sort serves every sojourn percentile (chunk counts run
+        // into the hundreds of thousands on cluster-scale runs)
+        let mut sojourn = tail.sojourn_s.clone();
+        sojourn.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(TailReport {
+            chunks: tail.delivered_chunks,
+            p50_us: percentile_nearest_rank_sorted(&sojourn, 50.0) * us,
+            p95_us: percentile_nearest_rank_sorted(&sojourn, 95.0) * us,
+            p99_us: percentile_nearest_rank_sorted(&sojourn, 99.0) * us,
+            max_us: *sojourn.last().expect("non-empty") * us,
+            transit_p99_us: percentile_nearest_rank(&tail.transit_s, 99.0) * us,
+            peak_queue_bytes,
+            peak_queue_link,
+            peak_recv_queue_bytes: tail
+                .peak_recv_queue_bytes
+                .iter()
+                .cloned()
+                .fold(0.0, f64::max),
+        })
+    }
+
+    /// Nearest-rank p99 sojourn for one (src, dst) pair, when observed.
+    pub fn pair_p99_us(tail: &TailStats, pair: (usize, usize)) -> Option<f64> {
+        tail.per_pair_sojourn_s
+            .get(&pair)
+            .filter(|v| !v.is_empty())
+            .map(|v| percentile_nearest_rank(v, 99.0) * 1e6)
     }
 }
 
@@ -139,5 +211,32 @@ mod tests {
         assert_eq!(fmt_time(2.5), "2.500 s");
         assert_eq!(fmt_time(0.0032), "3.200 ms");
         assert_eq!(fmt_time(42e-6), "42.0 µs");
+    }
+
+    #[test]
+    fn tail_report_reduces_nearest_rank() {
+        let sojourn: Vec<f64> = (1..=100).map(|i| i as f64 * 1e-6).collect();
+        let mut per_pair = std::collections::BTreeMap::new();
+        per_pair.insert((0usize, 1usize), vec![5e-6, 9e-6, 1e-6]);
+        let tail = TailStats {
+            sojourn_s: sojourn.clone(),
+            transit_s: sojourn,
+            per_pair_sojourn_s: per_pair,
+            peak_queue_bytes: vec![0.0, 4096.0, 512.0],
+            peak_recv_queue_bytes: vec![128.0, 0.0],
+            delivered_chunks: 100,
+        };
+        let r = TailReport::from_stats(&tail).unwrap();
+        assert!((r.p50_us - 50.0).abs() < 1e-9);
+        assert!((r.p99_us - 99.0).abs() < 1e-9);
+        assert!((r.max_us - 100.0).abs() < 1e-9);
+        assert_eq!(r.peak_queue_link, 1);
+        assert_eq!(r.peak_queue_bytes, 4096.0);
+        assert_eq!(r.peak_recv_queue_bytes, 128.0);
+        // per-pair p99 is the worst observed sample of that pair
+        assert!((TailReport::pair_p99_us(&tail, (0, 1)).unwrap() - 9.0).abs() < 1e-9);
+        assert!(TailReport::pair_p99_us(&tail, (3, 4)).is_none());
+        // no chunks → no report
+        assert!(TailReport::from_stats(&TailStats::default()).is_none());
     }
 }

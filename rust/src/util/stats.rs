@@ -28,6 +28,41 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     percentile_sorted(&v, q)
 }
 
+/// Exact **nearest-rank** percentile over a *sorted* slice: the
+/// smallest element such that at least `ceil(q/100 · n)` samples are ≤
+/// it (q = 0 returns the minimum). No interpolation — the result is
+/// always an observed sample, which is what tail-latency reporting
+/// wants (an interpolated "p99" can be a latency no chunk ever saw).
+pub fn percentile_nearest_rank_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "nearest-rank percentile of empty slice");
+    assert!((0.0..=100.0).contains(&q), "quantile {q} out of [0,100]");
+    let n = sorted.len();
+    let rank = (q / 100.0 * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// Nearest-rank percentile over an unsorted slice (copies + sorts).
+pub fn percentile_nearest_rank(xs: &[f64], q: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_nearest_rank_sorted(&v, q)
+}
+
+/// Nearest-rank p50 (median sample) of an unsorted slice.
+pub fn p50(xs: &[f64]) -> f64 {
+    percentile_nearest_rank(xs, 50.0)
+}
+
+/// Nearest-rank p95 of an unsorted slice.
+pub fn p95(xs: &[f64]) -> f64 {
+    percentile_nearest_rank(xs, 95.0)
+}
+
+/// Nearest-rank p99 of an unsorted slice.
+pub fn p99(xs: &[f64]) -> f64 {
+    percentile_nearest_rank(xs, 99.0)
+}
+
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
@@ -170,6 +205,37 @@ mod tests {
     fn percentile_interpolates() {
         let v = [0.0, 10.0];
         assert!((percentile(&v, 75.0) - 7.5).abs() < 1e-12);
+    }
+
+    /// Textbook nearest-rank example (ISO 2602 style): ranks are exact
+    /// samples, never interpolations.
+    #[test]
+    fn nearest_rank_textbook() {
+        let v = [15.0, 20.0, 35.0, 40.0, 50.0];
+        assert_eq!(percentile_nearest_rank(&v, 30.0), 20.0); // ceil(1.5) = rank 2
+        assert_eq!(percentile_nearest_rank(&v, 40.0), 20.0); // ceil(2.0) = rank 2
+        assert_eq!(percentile_nearest_rank(&v, 50.0), 35.0); // ceil(2.5) = rank 3
+        assert_eq!(percentile_nearest_rank(&v, 100.0), 50.0);
+        assert_eq!(percentile_nearest_rank(&v, 0.0), 15.0); // clamp to min
+    }
+
+    /// The convenience wrappers are nearest-rank (exact samples) and
+    /// ordered; on n = 100 distinct values pXX is exactly the XXth.
+    #[test]
+    fn nearest_rank_wrappers_on_100() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(p50(&v), 50.0);
+        assert_eq!(p95(&v), 95.0);
+        assert_eq!(p99(&v), 99.0);
+        assert!(p50(&v) <= p95(&v) && p95(&v) <= p99(&v));
+        // members of the sample set even for awkward sizes
+        let odd: Vec<f64> = (0..7).map(|i| 10.0 + i as f64 * 3.0).collect();
+        for q in [1.0, 33.0, 50.0, 95.0, 99.0] {
+            let x = percentile_nearest_rank(&odd, q);
+            assert!(odd.contains(&x), "p{q} = {x} not an observed sample");
+        }
+        // singleton
+        assert_eq!(p99(&[7.5]), 7.5);
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //! respect, and monotonicity invariants that must hold for ANY random
 //! flow set — these are the physics the whole evaluation rests on.
 
+use nimble::coordinator::reassembly::{ChunkArrival, ReassemblyTable};
 use nimble::fabric::fluid::{Flow, FluidSim, SimEngine, SolverKind};
+use nimble::fabric::packet::{PacketSim, TRACE_DELIVER};
 use nimble::fabric::pipeline::PipelineModel;
 use nimble::fabric::{FabricParams, XferMode};
 use nimble::prop_assert;
@@ -10,6 +12,7 @@ use nimble::topology::path::candidates;
 use nimble::topology::Topology;
 use nimble::util::quickcheck::{check_seeded, Gen};
 use nimble::util::rng::Rng;
+use std::collections::BTreeMap;
 
 const MB: f64 = 1024.0 * 1024.0;
 
@@ -138,8 +141,11 @@ fn prop_pipeline_monotone_in_bytes_and_credits() {
         let t2 = m.transfer(&path, b2, XferMode::Kernel).finish_s;
         prop_assert!(t2 >= t1, "more bytes finished earlier: {t1} vs {t2}");
 
-        let mut small = FabricParams::default();
-        small.p2p_buf_bytes = small.chunk_bytes * g.f64(1.0, 3.0);
+        let defaults = FabricParams::default();
+        let small = FabricParams {
+            p2p_buf_bytes: defaults.chunk_bytes * g.f64(1.0, 3.0),
+            ..defaults
+        };
         let m_small = PipelineModel::new(&topo, small);
         let t_small = m_small.transfer(&path, b2, XferMode::Kernel).finish_s;
         prop_assert!(
@@ -215,6 +221,177 @@ fn prop_incremental_waterfill_matches_reference() {
                 || a.finish_t.to_bits() == b.finish_t.to_bits();
             prop_assert!(same, "flow {i} finish diverged");
             prop_assert!(a.bytes.to_bits() == b.bytes.to_bits(), "flow {i} bytes diverged");
+        }
+        prop_assert!(ra.link_bytes == rb.link_bytes, "link bytes diverged");
+        Ok(())
+    });
+}
+
+/// Smaller flow sets for the packet backend (cells × hops × events):
+/// same shape as [`random_flows`], tighter byte range.
+fn random_packet_flows(g: &mut Gen, topo: &Topology, max_flows: usize) -> Vec<Flow> {
+    let n = g.usize(1, max_flows);
+    let mut rng = Rng::new(g.u64(0, u64::MAX - 1));
+    (0..n)
+        .map(|_| {
+            let s = rng.below(topo.num_gpus() as u64) as usize;
+            let mut d = rng.below(topo.num_gpus() as u64) as usize;
+            if d == s {
+                d = (d + 1) % topo.num_gpus();
+            }
+            let cands = candidates(topo, s, d, true);
+            let path = rng.choose(&cands).clone();
+            let bytes = g.size_log(256 * 1024, 24 * 1024 * 1024) as f64;
+            Flow::new(path, bytes).at(g.f64(0.0, 1e-3))
+        })
+        .collect()
+}
+
+/// Packet backend conserves bytes end-to-end: every flow finishes and
+/// deposits exactly `bytes` on every hop of its path — store-and-
+/// forward serialization re-sends the full payload per hop, nothing is
+/// lost in a queue and nothing is duplicated.
+#[test]
+fn prop_packet_conserves_bytes_end_to_end() {
+    let topo = Topology::paper();
+    check_seeded(0x9AC1, 25, |g| {
+        let flows = random_packet_flows(g, &topo, 12);
+        let mut sim = PacketSim::new(&topo, FabricParams::default(), &flows);
+        sim.run_to_completion();
+        let r = sim.result();
+        for (i, fr) in r.flows.iter().enumerate() {
+            prop_assert!(fr.finish_t.is_finite(), "flow {i} never delivered");
+            prop_assert!(
+                (sim.moved_bytes(i) - flows[i].bytes).abs()
+                    <= flows[i].bytes * 1e-9 + 1.0,
+                "flow {i} delivered {} of {}",
+                sim.moved_bytes(i),
+                flows[i].bytes
+            );
+        }
+        let mut expect = vec![0.0f64; topo.links.len()];
+        for f in &flows {
+            for &h in &f.path.hops {
+                expect[h] += f.bytes;
+            }
+        }
+        for (i, (&got, &want)) in r.link_bytes.iter().zip(&expect).enumerate() {
+            prop_assert!(
+                (got - want).abs() <= want.max(1.0) * 1e-6 + 16.0,
+                "link {i}: carried {got}, expected {want}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Per-pair chunk sequence numbers survive multi-path delivery: with
+/// each pair's payload split across candidate paths (contiguous seq
+/// blocks per path, the executor's layout), every path delivers its
+/// own seqs in ascending order, and pushing the arrivals into the real
+/// [`ReassemblyTable`] in delivery order reassembles every stream
+/// completely, with no duplicate/stale rejections.
+#[test]
+fn prop_packet_chunk_streams_reassemble() {
+    let topo = Topology::paper();
+    check_seeded(0x9AC2, 15, |g| {
+        let mut rng = Rng::new(g.u64(0, u64::MAX - 1));
+        let mut flows: Vec<Flow> = Vec::new();
+        let mut pair_of_flow: Vec<(usize, usize)> = Vec::new();
+        let mut pairs: Vec<(usize, usize)> = Vec::new();
+        for _ in 0..g.usize(1, 4) {
+            let s = rng.below(topo.num_gpus() as u64) as usize;
+            let mut d = rng.below(topo.num_gpus() as u64) as usize;
+            if d == s {
+                d = (d + 1) % topo.num_gpus();
+            }
+            if pairs.contains(&(s, d)) {
+                continue;
+            }
+            pairs.push((s, d));
+            let cands = candidates(&topo, s, d, true);
+            let k = g.usize(1, cands.len().min(3));
+            for path in cands.into_iter().take(k) {
+                flows.push(Flow::new(path, g.f64(2.0, 10.0) * MB));
+                pair_of_flow.push((s, d));
+            }
+        }
+        let mut sim = PacketSim::new(&topo, FabricParams::default(), &flows);
+        sim.set_trace(true);
+        sim.run_to_completion();
+        // contiguous seq block per flow, concatenated in flow order
+        // within each pair (the replan executor's chunk layout)
+        let mut next_base: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+        let mut flow_base: Vec<u64> = Vec::new();
+        let mut pair_chunks: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+        for (i, &pair) in pair_of_flow.iter().enumerate() {
+            let base = next_base.entry(pair).or_insert(0);
+            flow_base.push(*base);
+            *base += sim.cells_of(i) as u64;
+            *pair_chunks.entry(pair).or_insert(0) = *base;
+        }
+        let mut reass = ReassemblyTable::default();
+        let mut last_idx: Vec<Option<u32>> = vec![None; flows.len()];
+        for &(_, code, f, idx) in sim.trace() {
+            if code != TRACE_DELIVER {
+                continue;
+            }
+            let f = f as usize;
+            // per-path in-order delivery (the §IV ordering promise)
+            if let Some(prev) = last_idx[f] {
+                prop_assert!(idx == prev + 1, "flow {f} delivered {idx} after {prev}");
+            } else {
+                prop_assert!(idx == 0, "flow {f} started at chunk {idx}");
+            }
+            last_idx[f] = Some(idx);
+            let (s, d) = pair_of_flow[f];
+            reass
+                .push(s, d, ChunkArrival { seq: flow_base[f] + idx as u64, bytes: 1 })
+                .map_err(|e| format!("reassembly rejected a chunk: {e}"))?;
+        }
+        prop_assert!(reass.all_drained(), "a stream never fully reassembled");
+        for (&(s, d), &chunks) in &pair_chunks {
+            let q = reass.stream(s, d).expect("stream exists");
+            prop_assert!(
+                q.delivered_bytes() == chunks,
+                "pair ({s},{d}) delivered {} of {chunks} chunks",
+                q.delivered_bytes()
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Identical seeds ⇒ byte-identical event traces (and therefore
+/// bit-identical results) on randomized flow sets — the packet
+/// backend's determinism contract.
+#[test]
+fn prop_packet_identical_seeds_identical_traces() {
+    let topo = Topology::paper();
+    check_seeded(0x9AC3, 12, |g| {
+        let flows = random_packet_flows(g, &topo, 8);
+        let seed = g.u64(0, u64::MAX - 1);
+        let drive = |seed: u64| {
+            let mut params = FabricParams::default();
+            params.packet.seed = seed;
+            let mut sim = PacketSim::new(&topo, params, &flows);
+            sim.set_trace(true);
+            sim.run_to_completion();
+            (sim.trace().to_vec(), sim.result(), sim.events())
+        };
+        let (ta, ra, ea) = drive(seed);
+        let (tb, rb, eb) = drive(seed);
+        prop_assert!(ta == tb, "same seed produced different event traces");
+        prop_assert!(ea == eb, "event counts diverged");
+        prop_assert!(
+            ra.makespan.to_bits() == rb.makespan.to_bits(),
+            "makespan diverged"
+        );
+        for (a, b) in ra.flows.iter().zip(&rb.flows) {
+            prop_assert!(
+                a.finish_t.to_bits() == b.finish_t.to_bits(),
+                "finish times diverged"
+            );
         }
         prop_assert!(ra.link_bytes == rb.link_bytes, "link bytes diverged");
         Ok(())

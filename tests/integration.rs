@@ -45,7 +45,7 @@ fn prop_plans_always_valid_and_bounded() {
         let demands = random_demands(g, &topo);
         let mut planner = Planner::new(&topo, PlannerCfg::default());
         let plan = planner.plan(&demands);
-        plan.validate(&topo, &demands).map_err(|e| e)?;
+        plan.validate(&topo, &demands)?;
         let z = plan.max_norm_load(&topo);
         let lb = lower_bound_norm_load(&topo, &demands);
         prop_assert!(z >= lb - 1e-9, "plan beat the lower bound: z={z} lb={lb}");
