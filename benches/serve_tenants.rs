@@ -1,0 +1,63 @@
+//! Multi-tenant serve bench: fly the default seeded 8-job stream on
+//! the shared fluid fabric, joint orchestrator vs independent per-job
+//! plans, and report wall-clock serving throughput plus the
+//! quality-of-service metrics.
+//!
+//! Like `benches/scale_sweep.rs`, every arm emits one machine-readable
+//! JSON line (`{"exp":"serve_tenants",...}`) so the orchestrator's
+//! perf trajectory is trackable across PRs: jobs/sec (wall), aggregate
+//! goodput, weighted fairness, replans, preemptions, sim events.
+
+use nimble::exp::serve::run_arm;
+use nimble::fabric::FabricParams;
+use nimble::orchestrator::TenancyCfg;
+use nimble::planner::{PlannerCfg, ReplanCfg};
+use nimble::topology::Topology;
+use nimble::util::json::Json;
+use std::time::Instant;
+
+fn main() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    let pcfg = PlannerCfg::default();
+    let rcfg = ReplanCfg::default();
+    println!("== serve bench: multi-tenant orchestrator on the shared fluid fabric ==");
+    for joint in [true, false] {
+        let tcfg = TenancyCfg { joint, ..TenancyCfg::default() };
+        // warm-up pass, then the measured pass
+        let _ = run_arm(&topo, &params, &pcfg, &rcfg, &tcfg);
+        let t = Instant::now();
+        let run = run_arm(&topo, &params, &pcfg, &rcfg, &tcfg);
+        let wall = t.elapsed().as_secs_f64();
+        let line = Json::obj(vec![
+            ("exp", Json::str("serve_tenants")),
+            ("arm", Json::str(if joint { "joint" } else { "independent" })),
+            ("jobs", Json::num(run.tenants.len() as f64)),
+            ("jobs_per_sec", Json::num(run.tenants.len() as f64 / wall.max(1e-12))),
+            ("wall_ms", Json::num(wall * 1e3)),
+            ("makespan_ms", Json::num(run.makespan_s * 1e3)),
+            ("aggregate_goodput_gbps", Json::num(run.aggregate_goodput_gbps)),
+            ("weighted_fairness", Json::num(run.weighted_fairness)),
+            ("replans", Json::num(run.replans as f64)),
+            ("preemptions", Json::num(run.preemptions as f64)),
+            ("sim_events", Json::num(run.sim_events as f64)),
+        ]);
+        println!("{}", line.to_string_compact());
+        // per-tenant goodput lines (the fairness trajectory)
+        for t in &run.tenants {
+            let line = Json::obj(vec![
+                ("exp", Json::str("serve_tenants.tenant")),
+                ("arm", Json::str(if joint { "joint" } else { "independent" })),
+                ("tenant", Json::num(t.id as f64)),
+                ("kind", Json::str(t.kind.name())),
+                ("weight", Json::num(t.weight)),
+                ("goodput_gbps", Json::num(t.goodput_gbps)),
+                ("p99_lat_ms", Json::num(t.p99_lat_s * 1e3)),
+            ]);
+            println!("{}", line.to_string_compact());
+        }
+    }
+    println!(
+        "serve bench done (acceptance asserted by `nimble serve --jobs 8 --check`)"
+    );
+}

@@ -4,6 +4,7 @@
 //! `configs/paper.toml` for the reference file).
 
 use crate::fabric::{BackendKind, FabricParams};
+use crate::orchestrator::TenancyCfg;
 use crate::planner::{CostModel, PlannerCfg, ReplanCfg};
 use crate::topology::Topology;
 use crate::util::toml::TomlDoc;
@@ -18,6 +19,10 @@ pub struct Config {
     /// Execution-time re-planning loop (`[replan]`): disabled by
     /// default so every static experiment reproduces bit-identically.
     pub replan: ReplanCfg,
+    /// Multi-tenant serving (`[tenancy]`): only `nimble serve` / the
+    /// orchestrator consume it, so the section is inert for every
+    /// other experiment.
+    pub tenancy: TenancyCfg,
 }
 
 impl Default for Config {
@@ -27,6 +32,7 @@ impl Default for Config {
             fabric: FabricParams::default(),
             planner: PlannerCfg::default(),
             replan: ReplanCfg::default(),
+            tenancy: TenancyCfg::default(),
         }
     }
 }
@@ -134,6 +140,34 @@ impl Config {
             .unwrap_or(r.cadence_s);
         r.margin = doc.get_f64("replan", "margin").unwrap_or(r.margin);
         r.caps = crate::planner::DrainCaps::from(&cfg.fabric);
+
+        // [tenancy] (consumed only by `nimble serve`; inert otherwise)
+        let t = &mut cfg.tenancy;
+        t.jobs = doc.get_usize("tenancy", "jobs").unwrap_or(t.jobs);
+        if let Some(s) = doc.get_usize("tenancy", "seed") {
+            t.seed = s as u64;
+        }
+        t.max_live = doc.get_usize("tenancy", "max_live").unwrap_or(t.max_live);
+        t.mean_gap_ms =
+            doc.get_f64("tenancy", "mean_gap_ms").unwrap_or(t.mean_gap_ms);
+        t.joint = doc.get_bool("tenancy", "joint").unwrap_or(t.joint);
+        if let Some(v) = doc.get("tenancy", "weights") {
+            let Some(s) = v.as_str() else {
+                return Err(format!(
+                    "tenancy.weights must be a comma-separated string, got {v:?}"
+                ));
+            };
+            let mut weights = Vec::new();
+            for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+                let w: f64 = part
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("tenancy.weights: bad number '{part}'"))?;
+                weights.push(w);
+            }
+            t.weights = weights;
+        }
+        cfg.tenancy.validate()?;
 
         // sanity
         if cfg.planner.lambda <= 0.0 || cfg.planner.lambda > 1.0 {
@@ -277,6 +311,47 @@ mod tests {
         assert!((c.replan.margin - 0.25).abs() < 1e-12);
     }
 
+    /// `[tenancy]` defaults mirror the built-ins, every knob
+    /// overrides, and invalid values fail closed. The section is only
+    /// consumed by `nimble serve`, so defaults are inert elsewhere.
+    #[test]
+    fn tenancy_section_defaults_and_overrides() {
+        let c = Config::from_toml("").unwrap();
+        assert_eq!(c.tenancy.jobs, 8);
+        assert_eq!(c.tenancy.seed, 3);
+        assert_eq!(c.tenancy.weights, vec![1.0, 2.0, 1.0, 4.0]);
+        assert_eq!(c.tenancy.max_live, 6);
+        assert!((c.tenancy.mean_gap_ms - 0.5).abs() < 1e-12);
+        assert!(c.tenancy.joint);
+        let c = Config::from_toml(
+            "[tenancy]\njobs = 12\nseed = 99\nweights = \"2, 3\"\n\
+             max_live = 3\nmean_gap_ms = 1.25\njoint = false\n",
+        )
+        .unwrap();
+        assert_eq!(c.tenancy.jobs, 12);
+        assert_eq!(c.tenancy.seed, 99);
+        assert_eq!(c.tenancy.weights, vec![2.0, 3.0]);
+        assert_eq!(c.tenancy.max_live, 3);
+        assert!((c.tenancy.mean_gap_ms - 1.25).abs() < 1e-12);
+        assert!(!c.tenancy.joint);
+    }
+
+    #[test]
+    fn tenancy_invalid_values_rejected() {
+        // job count must be >= 1
+        assert!(Config::from_toml("[tenancy]\njobs = 0\n").is_err());
+        // weights must be finite and positive
+        assert!(Config::from_toml("[tenancy]\nweights = \"1, -2\"\n").is_err());
+        assert!(Config::from_toml("[tenancy]\nweights = \"nan\"\n").is_err());
+        assert!(Config::from_toml("[tenancy]\nweights = \"\"\n").is_err());
+        assert!(Config::from_toml("[tenancy]\nweights = \"1, oops\"\n").is_err());
+        // weights must be the comma-string form (no TOML arrays here)
+        assert!(Config::from_toml("[tenancy]\nweights = 2\n").is_err());
+        // admission cap and arrival gap must be positive
+        assert!(Config::from_toml("[tenancy]\nmax_live = 0\n").is_err());
+        assert!(Config::from_toml("[tenancy]\nmean_gap_ms = 0.0\n").is_err());
+    }
+
     #[test]
     fn reference_config_file_parses() {
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/paper.toml");
@@ -292,6 +367,15 @@ mod tests {
         assert_eq!(c.fabric.packet.buffer_bytes, d.buffer_bytes);
         assert_eq!(c.fabric.packet.latency_ns, d.latency_ns);
         assert_eq!(c.fabric.packet.seed, d.seed);
+        // [tenancy] mirrors the built-in defaults exactly (inert
+        // unless `nimble serve` is invoked)
+        let td = TenancyCfg::default();
+        assert_eq!(c.tenancy.jobs, td.jobs);
+        assert_eq!(c.tenancy.seed, td.seed);
+        assert_eq!(c.tenancy.weights, td.weights);
+        assert_eq!(c.tenancy.max_live, td.max_live);
+        assert_eq!(c.tenancy.mean_gap_ms, td.mean_gap_ms);
+        assert_eq!(c.tenancy.joint, td.joint);
     }
 
     /// `[fabric.packet]` defaults to the fluid backend (bit-identical

@@ -12,11 +12,18 @@
 //! workload on a DGX-style NVSwitch topology, where intra-node
 //! forwarding is structurally unavailable and only inter-node
 //! multi-rail balancing remains.
+//!
+//! The rounds fly on whatever [`FabricBackend`] the config selects
+//! (`[fabric.packet] backend`): the fluid engine by default —
+//! bit-identical to the pre-trait runs — or the packet-level
+//! discrete-event simulator, so §V-E queueing behavior is observable
+//! too. This was the last experiment constructing `FluidSim` directly.
 
 use super::MB;
 use crate::baselines::{NcclLike, Router};
 use crate::coordinator::NimbleRouter;
-use crate::fabric::fluid::{Flow, FluidSim};
+use crate::fabric::backend::make_backend;
+use crate::fabric::fluid::{Flow, SimResult};
 use crate::fabric::FabricParams;
 use crate::metrics::Table;
 use crate::topology::path::candidates;
@@ -24,6 +31,13 @@ use crate::topology::Topology;
 use crate::util::stats::percentile;
 use crate::workloads::skew::hotspot_alltoallv;
 use crate::workloads::stencil::stencil_1d;
+
+/// Fly one round's flow set to completion on the configured backend.
+fn run_round_flows(topo: &Topology, params: &FabricParams, flows: &[Flow]) -> SimResult {
+    let mut backend = make_backend(topo, params.clone(), flows);
+    backend.run_to_completion();
+    backend.result()
+}
 
 /// One engine's foreground latency stats under background load.
 #[derive(Clone, Debug)]
@@ -60,7 +74,7 @@ pub fn run_interference(
             let mut flows = nccl.route_flows(topo, &fg);
             let n_fg = flows.len();
             flows.extend(bg_flows(nccl.mode()));
-            let sim = FluidSim::new(topo, params.clone()).run(&flows);
+            let sim = run_round_flows(topo, params, &flows);
             let fg_finish = sim.flows[..n_fg]
                 .iter()
                 .map(|f| f.finish_t)
@@ -79,7 +93,7 @@ pub fn run_interference(
             let mut flows = nim.route_flows(topo, &fg);
             let n_fg = flows.len();
             flows.extend(bg_flows(nim.mode()));
-            let sim = FluidSim::new(topo, params.clone()).run(&flows);
+            let sim = run_round_flows(topo, params, &flows);
             nim.monitor.observe(&sim.link_bytes);
             let fg_finish = sim.flows[..n_fg]
                 .iter()

@@ -10,6 +10,7 @@ pub mod interference;
 pub mod replan;
 pub mod scale;
 pub mod sendrecv;
+pub mod serve;
 pub mod table1;
 pub mod xcheck;
 

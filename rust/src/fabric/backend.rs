@@ -44,6 +44,10 @@ pub struct TailStats {
     pub transit_s: Vec<f64>,
     /// Sojourn latencies grouped by (src, dst) pair.
     pub per_pair_sojourn_s: BTreeMap<(usize, usize), Vec<f64>>,
+    /// Sojourn latencies grouped by [`Flow::tag`] (the multi-tenant
+    /// orchestrator stamps the tenant/job id; untagged flows land
+    /// under 0).
+    pub per_tag_sojourn_s: BTreeMap<u64, Vec<f64>>,
     /// Peak queued bytes per link (excludes the cell in service).
     pub peak_queue_bytes: Vec<f64>,
     /// Peak queued bytes per destination GPU's receive stage.

@@ -64,11 +64,23 @@ pub struct Flow {
     /// Extra per-flow rate derating (e.g. non-affine GPU↔HCA access
     /// over the PCIe host bridge in the UCX baseline). 1.0 = none.
     pub rate_factor: f64,
+    /// Opaque owner tag (the multi-tenant orchestrator stamps the
+    /// tenant/job id). Never affects simulation dynamics; backends
+    /// that record per-chunk observations group them by it
+    /// ([`crate::fabric::TailStats::per_tag_sojourn_s`]). 0 = untagged.
+    pub tag: u64,
 }
 
 impl Flow {
     pub fn new(path: Path, bytes: f64) -> Flow {
-        Flow { path, bytes, issue_t: 0.0, mode: XferMode::Kernel, rate_factor: 1.0 }
+        Flow {
+            path,
+            bytes,
+            issue_t: 0.0,
+            mode: XferMode::Kernel,
+            rate_factor: 1.0,
+            tag: 0,
+        }
     }
     pub fn with_rate_factor(mut self, f: f64) -> Flow {
         self.rate_factor = f;
@@ -80,6 +92,11 @@ impl Flow {
     }
     pub fn with_mode(mut self, m: XferMode) -> Flow {
         self.mode = m;
+        self
+    }
+    /// Stamp the owner tag (tenant/job id).
+    pub fn tagged(mut self, tag: u64) -> Flow {
+        self.tag = tag;
         self
     }
 }

@@ -149,6 +149,7 @@ pub struct PacketSim<'a> {
     sojourn_s: Vec<f64>,
     transit_s: Vec<f64>,
     per_pair: BTreeMap<(usize, usize), Vec<f64>>,
+    per_tag: BTreeMap<u64, Vec<f64>>,
     // ---- event core ----
     heap: BinaryHeap<Reverse<(u64, u64, Ev)>>,
     seq: u64,
@@ -226,6 +227,7 @@ impl<'a> PacketSim<'a> {
             sojourn_s: Vec::new(),
             transit_s: Vec::new(),
             per_pair: BTreeMap::new(),
+            per_tag: BTreeMap::new(),
             heap: BinaryHeap::new(),
             seq: 0,
             t_ns: 0,
@@ -423,6 +425,7 @@ impl<'a> PacketSim<'a> {
             sojourn_s: self.sojourn_s.clone(),
             transit_s: self.transit_s.clone(),
             per_pair_sojourn_s: self.per_pair.clone(),
+            per_tag_sojourn_s: self.per_tag.clone(),
             peak_queue_bytes: self.peak_lq_bytes.clone(),
             peak_recv_queue_bytes: self.peak_rq_bytes.clone(),
             delivered_chunks: self.sojourn_s.len() as u64,
@@ -625,6 +628,7 @@ impl<'a> PacketSim<'a> {
                 self.transit_s.push(transit);
                 let pair = (self.flows[f].path.src, self.flows[f].path.dst);
                 self.per_pair.entry(pair).or_default().push(sojourn);
+                self.per_tag.entry(self.flows[f].tag).or_default().push(sojourn);
                 self.push_trace(t, TRACE_DELIVER, fu, idx);
                 // credit return: the source may inject again
                 let src = self.flows[f].path.src;

@@ -25,6 +25,7 @@
 //! | [`planner`] | Algorithm 1, §IV-B | MWU min-congestion routing + incremental [`planner::Planner::replan`] |
 //! | [`fabric`] | §V-B | calibrated fluid + packet + chunk-pipeline simulators behind the [`fabric::FabricBackend`] trait: resumable [`fabric::fluid::SimEngine`] (incremental + reference water-fillers, [`fabric::fluid::SolverKind`]) and the discrete-event [`fabric::packet::PacketSim`] (queueing + tail latency) |
 //! | [`coordinator`] | §IV | monitor / channels / reassembly, [`coordinator::Orchestrator`] and the mid-flight [`coordinator::ReplanExecutor`] |
+//! | [`orchestrator`] | beyond §V-E | multi-tenant serving: seeded job stream → admission → joint planning ([`planner::Planner::plan_joint`]) → one shared fabric, weighted fairness via channel allocation, per-tenant reassembly (`nimble serve`) |
 //! | [`collectives`] | §IV-E | All-to-Allv, async Send/Recv, ring collectives |
 //! | [`baselines`] | §II-B, §V | NCCL-like (PXN), MPI/UCX-like, single-path |
 //! | [`workloads`] | §III-A, §V-C/D | skew generators incl. time-varying [`workloads::dynamic`] |
@@ -89,6 +90,7 @@ pub mod exp;
 pub mod fabric;
 pub mod metrics;
 pub mod moe;
+pub mod orchestrator;
 pub mod planner;
 pub mod runtime;
 pub mod topology;

@@ -13,13 +13,15 @@
 //! nimble replan            execution-time re-planning vs static plan
 //! nimble scale             cluster-scale hot-path sweep (incremental vs reference solver)
 //! nimble xcheck            fluid ↔ packet backend cross-validation + tail latency
+//! nimble serve [--jobs N --seed S --no-joint]   multi-tenant orchestrator on one shared fabric
 //! nimble plan --src 0 --dst 1 --mb 256   show a routing plan
 //! nimble moe-compute       run the AOT FFN artifacts (offline interpreter)
 //! nimble info              topology + fabric calibration summary
 //! ```
 
 use nimble::exp::{
-    ablate, fig6, fig7, fig8, interference, replan, scale, sendrecv, table1, xcheck, MB,
+    ablate, fig6, fig7, fig8, interference, replan, scale, sendrecv, serve, table1,
+    xcheck, MB,
 };
 use nimble::fabric::FabricParams;
 use nimble::planner::{CostModel, Demand, Planner};
@@ -187,6 +189,78 @@ fn main() {
                 }
             }
         }),
+        "serve" => Args::new(
+            "nimble serve",
+            "multi-tenant orchestrator: seeded job stream on one shared fabric",
+        )
+        .flag("jobs", "0", "jobs in the stream (0: from config [tenancy])")
+        .flag("seed", "-1", "arrival/workload seed (-1: from config)")
+        .flag("max-live", "0", "admission concurrency cap (0: from config)")
+        .flag("gap-ms", "-1", "mean inter-arrival gap in ms (-1: from config)")
+        .switch("no-joint", "independent per-job plans (the baseline arm only)")
+        .switch("check", "assert joint beats independent + determinism + 1-job PR-2 anchor")
+        .parse(rest)
+        .map(|p| {
+            let mut tcfg = cfg.tenancy.clone();
+            if p.get_usize("jobs") > 0 {
+                tcfg.jobs = p.get_usize("jobs");
+            }
+            if p.get("seed") != "-1" {
+                tcfg.seed = p.get_u64("seed");
+            }
+            if p.get_usize("max-live") > 0 {
+                tcfg.max_live = p.get_usize("max-live");
+            }
+            if p.get_f64("gap-ms") > 0.0 {
+                tcfg.mean_gap_ms = p.get_f64("gap-ms");
+            }
+            if p.get_bool("no-joint") {
+                tcfg.joint = false;
+            }
+            if let Err(e) = tcfg.validate() {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+            let checking = p.get_bool("check");
+            let check_result = if checking && tcfg.joint {
+                // run each arm exactly once: the gates reuse the same
+                // runs the report renders
+                let (joint, indep) =
+                    serve::run_comparison(&topo, &params, &cfg.planner, &cfg.replan, &tcfg);
+                print!("{}", serve::render_stream(&topo, &params, &tcfg));
+                println!("{}", serve::render_runs(&cfg.replan, &joint, &indep));
+                Some(serve::check_runs(
+                    &topo,
+                    &params,
+                    &cfg.planner,
+                    &cfg.replan,
+                    &tcfg,
+                    &joint,
+                    &indep,
+                ))
+            } else {
+                println!(
+                    "{}",
+                    serve::render(&topo, &params, &cfg.planner, &cfg.replan, &tcfg)
+                );
+                checking.then(|| {
+                    serve::check(&topo, &params, &cfg.planner, &cfg.replan, &tcfg)
+                })
+            };
+            match check_result {
+                // stderr, like the other smokes: stdout stays a report
+                Some(Ok(())) => eprintln!(
+                    "serve check OK: joint beats independent on goodput and \
+                     weighted fairness; deterministic; 1-job --no-joint matches \
+                     ReplanExecutor byte-for-byte"
+                ),
+                Some(Err(e)) => {
+                    eprintln!("serve check FAILED: {e}");
+                    std::process::exit(1);
+                }
+                None => {}
+            }
+        }),
         "xcheck" => Args::new(
             "nimble xcheck",
             "fluid ↔ packet backend cross-validation + tail-latency report",
@@ -269,7 +343,7 @@ fn main() {
 
 fn usage() -> String {
     "nimble — NIMBLE (skew-to-symmetry multi-path balancing) reproduction\n\
-     commands: table1 | fig6 | fig7 | fig8 | sendrecv | ablate | interference | replan | scale | xcheck | plan | moe-compute | info\n\
+     commands: table1 | fig6 | fig7 | fig8 | sendrecv | ablate | interference | replan | scale | xcheck | serve | plan | moe-compute | info\n\
      run `nimble <cmd> --help` for flags"
         .to_string()
 }

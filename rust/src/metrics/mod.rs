@@ -225,6 +225,7 @@ mod tests {
             peak_queue_bytes: vec![0.0, 4096.0, 512.0],
             peak_recv_queue_bytes: vec![128.0, 0.0],
             delivered_chunks: 100,
+            ..TailStats::default()
         };
         let r = TailReport::from_stats(&tail).unwrap();
         assert!((r.p50_us - 50.0).abs() < 1e-9);

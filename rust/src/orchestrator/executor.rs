@@ -1,0 +1,969 @@
+//! The multi-tenant executor: every admitted job's flows fly on ONE
+//! shared [`FabricBackend`], and the orchestrator plans, rebalances
+//! and accounts across all of them.
+//!
+//! Per replan epoch (cadence from `[replan]`):
+//!
+//! 1. advance the shared engine to the epoch boundary;
+//! 2. retire finished tenants, admit arrivals
+//!    ([`super::admission::AdmissionQueue`]) — in **joint** mode the
+//!    admission batch is planned by [`Planner::plan_joint`]
+//!    warm-started from the exact residual routing in flight, in
+//!    **independent** mode each job gets a cold per-job plan (the
+//!    `--no-joint` baseline);
+//! 3. sample the monitor window and rebalance: joint mode solves one
+//!    joint challenger over every live tenant's residuals and accepts
+//!    it **per tenant** against the other tenants' in-flight routing
+//!    as exact background; independent mode runs the PR-2
+//!    [`Planner::replan`] per tenant (only when `[replan]` is
+//!    enabled — disabled keeps the byte-identical static path);
+//! 4. accepted reroutes preempt only the changed pairs of the
+//!    accepting tenant and replay through that tenant's own
+//!    [`ReassemblyTable`]; the per-tenant ordering invariant is
+//!    asserted on every push, exactly as in the single-job executor.
+//!
+//! **Weighted fairness** is enforced by channel allocation
+//! ([`channel_count`]): a tenant's path parts are issued as `k`
+//! parallel sub-flows (k from its weight), and on a per-flow max-min
+//! fabric k parallel flows on a contended constraint draw k fair
+//! shares. Sub-flows keep the PARENT transfer's saturation efficiency
+//! via `rate_factor` (the channels pipeline one message, they are not
+//! k small messages). The independent baseline is weight-blind: one
+//! flow per part, the PR-2 layout — which is what makes a 1-job
+//! `--no-joint` stream bit-identical to
+//! [`crate::coordinator::ReplanExecutor`].
+
+use super::admission::AdmissionQueue;
+use super::job::{JobKind, JobSpec, TenancyCfg};
+use crate::coordinator::monitor::WindowedMonitor;
+use crate::coordinator::reassembly::{ChunkArrival, ReassemblyTable};
+use crate::fabric::backend::{make_backend, FabricBackend, TailStats};
+use crate::fabric::fluid::{Flow, SimResult};
+use crate::fabric::FabricParams;
+use crate::planner::replan::{diff_pairs, drain_time_z, excess_over_plan, shape_deviation};
+use crate::planner::{
+    carry_plan, Assignment, Demand, DrainCaps, Plan, Planner, PlannerCfg, ReplanCfg,
+    TenantDemands,
+};
+use crate::topology::{GpuId, Path, PathKind, Topology};
+use crate::util::stats::{jain_index, percentile_nearest_rank};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Tenant weight → parallel channels (sub-flows) per path part, capped
+/// at 3 (stretching light tenants further mostly extends the makespan
+/// tail for no fairness gain). Weight 1.0 = one channel.
+pub fn channel_count(weight: f64) -> usize {
+    ((weight + 0.5).floor() as i64).clamp(1, 3) as usize
+}
+
+/// A part split into `k` channels keeps the PARENT transfer's
+/// saturation efficiency: `rate_factor` restores the parent-size rate
+/// ceiling on each sub-flow.
+fn channel_rate_factor(
+    topo: &Topology,
+    params: &FabricParams,
+    path: &Path,
+    part_bytes: f64,
+    k: usize,
+) -> f64 {
+    if k <= 1 {
+        return 1.0;
+    }
+    let parent = params.flow_rate_cap_gbps(topo, path, part_bytes);
+    let sub = params.flow_rate_cap_gbps(topo, path, part_bytes / k as f64);
+    if sub > 0.0 {
+        parent / sub
+    } else {
+        1.0
+    }
+}
+
+/// Per-path chunk-sequence bookkeeping for one (src, dst) stream part
+/// (same invariants as the single-job executor's part state).
+struct PartState {
+    flow: usize,
+    seqs: Vec<u64>,
+    delivered: usize,
+}
+
+struct TenantState {
+    job: JobSpec,
+    streams: BTreeMap<(GpuId, GpuId), Vec<PartState>>,
+    chunks_per_pair: BTreeMap<(GpuId, GpuId), u64>,
+    payload: f64,
+    admit_s: f64,
+    done: bool,
+}
+
+/// One epoch of the serve loop.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeEpoch {
+    pub t_s: f64,
+    /// Peak traffic-drift indicator (joint mode: against the combined
+    /// residual routing; independent mode: max over tenants).
+    pub deviation: f64,
+    /// Whether any tenant rerouted this epoch.
+    pub replanned: bool,
+    /// Flows preempted this epoch.
+    pub preempted: usize,
+}
+
+/// Per-tenant outcome of a serve run.
+#[derive(Clone, Debug)]
+pub struct TenantResult {
+    pub id: usize,
+    pub kind: JobKind,
+    pub weight: f64,
+    pub arrival_s: f64,
+    /// When the job's flows were issued (epoch-quantized admission).
+    pub admit_s: f64,
+    pub finish_s: f64,
+    pub payload_bytes: f64,
+    /// payload / (finish − admit).
+    pub goodput_gbps: f64,
+    /// Nearest-rank p99 over the tenant's *completed* flow latencies
+    /// (issue → last byte; flows aborted by preemption are excluded —
+    /// their residual continues in the re-issued flows, whose
+    /// latencies ARE counted). Defined on every backend.
+    pub p99_lat_s: f64,
+    /// Nearest-rank p99 chunk sojourn from the packet backend's
+    /// per-tag tail records; `None` on the fluid backend.
+    pub p99_chunk_s: Option<f64>,
+    /// Peak out-of-order chunks buffered in this tenant's reassembly.
+    pub peak_reassembly: usize,
+}
+
+/// Outcome of one serve run (the whole job stream).
+pub struct ServeRun {
+    pub tenants: Vec<TenantResult>,
+    /// Virtual time when the last byte of the last tenant landed.
+    pub makespan_s: f64,
+    pub payload_bytes: f64,
+    /// Total payload / makespan.
+    pub aggregate_goodput_gbps: f64,
+    /// Jain's index over per-tenant goodput normalized by weight —
+    /// 1.0 when every tenant's goodput is exactly proportional to its
+    /// weight (the weighted max-min fairness target).
+    pub weighted_fairness: f64,
+    pub replans: usize,
+    pub preemptions: usize,
+    pub epochs: Vec<ServeEpoch>,
+    pub peak_reassembly: usize,
+    pub sim: SimResult,
+    pub sim_events: u64,
+    /// Packet-backend tail observations (per-tag groups included).
+    pub tail: Option<TailStats>,
+}
+
+/// Drives a seeded job stream through admission → (joint | per-job)
+/// planning → shared fabric → per-tenant reassembly. See the module
+/// docs for the epoch structure and the two modes.
+pub struct MultiTenantExecutor<'a> {
+    pub topo: &'a Topology,
+    pub params: FabricParams,
+    pub planner_cfg: PlannerCfg,
+    pub rcfg: ReplanCfg,
+    pub tcfg: TenancyCfg,
+}
+
+struct Reissue {
+    pair: (GpuId, GpuId),
+    /// Absolute offset of the pair's first flow in the epoch batch.
+    batch_off: usize,
+    counts: Vec<usize>,
+    pool: Vec<u64>,
+}
+
+impl<'a> MultiTenantExecutor<'a> {
+    pub fn new(
+        topo: &'a Topology,
+        params: FabricParams,
+        planner_cfg: PlannerCfg,
+        mut rcfg: ReplanCfg,
+        tcfg: TenancyCfg,
+    ) -> Self {
+        // planner and dataplane must agree on what is endpoint-bound
+        rcfg.caps = DrainCaps::from(&params);
+        MultiTenantExecutor { topo, params, planner_cfg, rcfg, tcfg }
+    }
+
+    /// Fly the whole job stream. Deterministic: same topology, params
+    /// and stream ⇒ byte-identical results at any thread count.
+    pub fn execute(&mut self, jobs: Vec<JobSpec>) -> ServeRun {
+        let topo = self.topo;
+        let tcfg = self.tcfg.clone();
+        let chunk = self.params.chunk_bytes.max(1.0);
+        let cadence = self.rcfg.cadence_s.max(1e-6);
+        let loop_on = tcfg.joint || self.rcfg.enable;
+
+        let mut queue = AdmissionQueue::new(jobs, tcfg.max_live);
+        let mut tenants: BTreeMap<usize, TenantState> = BTreeMap::new();
+        let mut planners: BTreeMap<usize, Planner<'a>> = BTreeMap::new();
+        let mut joint_planner = Planner::new(topo, self.planner_cfg.clone());
+        let mut engine: Option<Box<dyn FabricBackend + 'a>> = None;
+        let mut n_flows = 0usize;
+        let mut reass: BTreeMap<usize, ReassemblyTable> = BTreeMap::new();
+        // flows aborted mid-transfer (their finish_t is the preemption
+        // time, not a delivery) — excluded from the latency samples
+        let mut preempted_flows: BTreeSet<usize> = BTreeSet::new();
+        let mut monitor = WindowedMonitor::new(topo, cadence);
+        let mut epochs: Vec<ServeEpoch> = Vec::new();
+        let mut replans = 0usize;
+        let mut preemptions = 0usize;
+
+        // ---- initial admission (job 0 arrives at t = 0) ----
+        self.admit(
+            0.0,
+            &mut queue,
+            &mut tenants,
+            &mut planners,
+            &mut joint_planner,
+            &mut engine,
+            &mut n_flows,
+            chunk,
+        );
+        assert!(engine.is_some(), "no job arrives at t = 0");
+
+        if !loop_on {
+            // no execution-time loop: hop from admission to admission,
+            // then run the remainder in one shot (the byte-identical
+            // static path for a 1-job stream)
+            let mut t_next = cadence;
+            loop {
+                let eng = engine.as_mut().expect("engine exists");
+                if eng.is_done() {
+                    refresh_done(&mut tenants, eng.as_ref());
+                }
+                if queue.is_empty() {
+                    eng.run_to_completion();
+                    refresh_done(&mut tenants, eng.as_ref());
+                    if eng.is_done() && queue.is_empty() {
+                        break;
+                    }
+                } else {
+                    eng.advance_to(t_next);
+                    let t_now = t_next;
+                    t_next += cadence;
+                    refresh_done(&mut tenants, eng.as_ref());
+                    self.admit(
+                        t_now,
+                        &mut queue,
+                        &mut tenants,
+                        &mut planners,
+                        &mut joint_planner,
+                        &mut engine,
+                        &mut n_flows,
+                        chunk,
+                    );
+                }
+            }
+        } else {
+            let mut t_next = cadence;
+            loop {
+                {
+                    let eng = engine.as_mut().expect("engine exists");
+                    if eng.is_done() && queue.is_empty() {
+                        break;
+                    }
+                    eng.advance_to(t_next);
+                }
+                let t_now = t_next;
+                t_next += cadence;
+                refresh_done(&mut tenants, engine.as_ref().expect("engine").as_ref());
+                self.admit(
+                    t_now,
+                    &mut queue,
+                    &mut tenants,
+                    &mut planners,
+                    &mut joint_planner,
+                    &mut engine,
+                    &mut n_flows,
+                    chunk,
+                );
+                let eng = engine.as_mut().expect("engine exists");
+                if eng.is_done() && queue.is_empty() {
+                    break;
+                }
+                monitor.observe(&eng.take_window());
+
+                // residuals per live tenant
+                let live_ids: Vec<usize> = tenants
+                    .iter()
+                    .filter(|(_, st)| !st.done)
+                    .map(|(&id, _)| id)
+                    .collect();
+                let mut res: BTreeMap<
+                    usize,
+                    (Vec<Demand>, BTreeMap<(GpuId, GpuId), Assignment>, Vec<f64>),
+                > = BTreeMap::new();
+                let mut any_residual = false;
+                for &tid in &live_ids {
+                    let r = tenant_residuals(&tenants[&tid], eng.as_ref(), topo);
+                    if !r.0.is_empty() {
+                        any_residual = true;
+                    }
+                    res.insert(tid, r);
+                }
+                if !any_residual {
+                    epochs.push(ServeEpoch {
+                        t_s: t_now,
+                        deviation: 0.0,
+                        replanned: false,
+                        preempted: 0,
+                    });
+                    continue;
+                }
+
+                let mut replanned_here = false;
+                let mut preempted_here = 0usize;
+                let mut epoch_batch: Vec<Flow> = Vec::new();
+                let mut staged: Vec<(usize, Vec<Reissue>)> = Vec::new();
+                let mut deviation = 0.0f64;
+
+                if tcfg.joint {
+                    let mut combined_ll = vec![0.0f64; topo.links.len()];
+                    let mut tds: Vec<TenantDemands> = Vec::new();
+                    let mut in_flight: BTreeMap<usize, Plan> = BTreeMap::new();
+                    for &tid in &live_ids {
+                        let (rd, asg, ll) = &res[&tid];
+                        if rd.is_empty() {
+                            continue;
+                        }
+                        for (c, l) in combined_ll.iter_mut().zip(ll) {
+                            *c += *l;
+                        }
+                        let mut seeds: BTreeMap<(GpuId, GpuId), PathKind> = BTreeMap::new();
+                        for (k, a) in asg {
+                            // first-maximal part seeds the hysteresis
+                            let mut best: Option<(&Path, f64)> = None;
+                            for (p, b) in &a.parts {
+                                let better = match best {
+                                    None => true,
+                                    Some((_, bb)) => *b > bb,
+                                };
+                                if better {
+                                    best = Some((p, *b));
+                                }
+                            }
+                            if let Some((p, _)) = best {
+                                seeds.insert(*k, p.kind);
+                            }
+                        }
+                        let mut td =
+                            TenantDemands::new(tid, tenants[&tid].job.weight, rd.clone());
+                        td.incumbent_kinds = Some(seeds);
+                        tds.push(td);
+                        in_flight.insert(
+                            tid,
+                            Plan {
+                                assignments: asg.clone(),
+                                link_load: ll.clone(),
+                                plan_time_s: 0.0,
+                            },
+                        );
+                    }
+                    let observed = monitor.load_estimates().to_vec();
+                    deviation = shape_deviation(topo, &observed, &combined_ll);
+                    // pressure NOT explained by the tenants' own
+                    // residual routing is external background
+                    let mut excess = excess_over_plan(&observed, &combined_ll);
+                    let deadband = self.rcfg.margin
+                        * combined_ll.iter().cloned().fold(0.0f64, f64::max);
+                    for e in excess.iter_mut() {
+                        *e = (*e - deadband).max(0.0);
+                    }
+                    let joint =
+                        joint_planner.plan_joint(&tds, Some(&excess), &self.rcfg.caps, None);
+                    // per-tenant acceptance: the challenger is evaluated
+                    // against the OTHER tenants' in-flight routing as
+                    // exact background (the information advantage over
+                    // the independent arm's noisy monitor estimate)
+                    for td in &tds {
+                        let own = &in_flight[&td.tenant].link_load;
+                        let bg: Vec<f64> = combined_ll
+                            .iter()
+                            .zip(own)
+                            .zip(&excess)
+                            .map(|((c, o), e)| c - o + e)
+                            .collect();
+                        let ch = &joint.per_tenant[&td.tenant];
+                        let z_carry = drain_time_z(topo, &self.rcfg.caps, own, &bg);
+                        let z_ch = drain_time_z(topo, &self.rcfg.caps, &ch.link_load, &bg);
+                        if z_ch >= z_carry * (1.0 - self.rcfg.margin) {
+                            continue;
+                        }
+                        let changed = diff_pairs(&in_flight[&td.tenant], ch);
+                        if changed.is_empty() {
+                            continue;
+                        }
+                        replanned_here = true;
+                        let st = tenants.get_mut(&td.tenant).expect("live tenant");
+                        let k = channel_count(st.job.weight);
+                        preempted_here += reroute(
+                            st,
+                            eng.as_mut(),
+                            reass.entry(td.tenant).or_default(),
+                            ch,
+                            &changed,
+                            k,
+                            chunk,
+                            topo,
+                            &self.params,
+                            &mut epoch_batch,
+                            &mut staged,
+                            &mut preempted_flows,
+                        );
+                    }
+                } else {
+                    for &tid in &live_ids {
+                        let (rd, asg, ll) = &res[&tid];
+                        if rd.is_empty() {
+                            continue;
+                        }
+                        let in_flight = Plan {
+                            assignments: asg.clone(),
+                            link_load: ll.clone(),
+                            plan_time_s: 0.0,
+                        };
+                        let planner = planners.get_mut(&tid).expect("tenant planner");
+                        let observed = monitor.load_estimates().to_vec();
+                        let out = planner.replan(&in_flight, &observed, rd, &self.rcfg);
+                        deviation = deviation.max(out.deviation);
+                        if out.replanned {
+                            replanned_here = true;
+                            let st = tenants.get_mut(&tid).expect("live tenant");
+                            preempted_here += reroute(
+                                st,
+                                eng.as_mut(),
+                                reass.entry(tid).or_default(),
+                                &out.plan,
+                                &out.changed_pairs,
+                                1,
+                                chunk,
+                                topo,
+                                &self.params,
+                                &mut epoch_batch,
+                                &mut staged,
+                                &mut preempted_flows,
+                            );
+                        }
+                    }
+                }
+                if replanned_here {
+                    replans += 1;
+                    preemptions += preempted_here;
+                    let first = eng.add_flows(&epoch_batch);
+                    n_flows = first + epoch_batch.len();
+                    for (tid, reissues) in staged {
+                        let st = tenants.get_mut(&tid).expect("staged tenant");
+                        for r in reissues {
+                            let parts = st.streams.get_mut(&r.pair).expect("pair staged");
+                            let mut off = 0usize;
+                            for (j, &n) in r.counts.iter().enumerate() {
+                                parts.push(PartState {
+                                    flow: first + r.batch_off + j,
+                                    seqs: r.pool[off..off + n].to_vec(),
+                                    delivered: 0,
+                                });
+                                off += n;
+                            }
+                        }
+                    }
+                }
+                epochs.push(ServeEpoch {
+                    t_s: t_now,
+                    deviation,
+                    replanned: replanned_here,
+                    preempted: preempted_here,
+                });
+            }
+        }
+        {
+            let eng = engine.as_ref().expect("engine exists");
+            refresh_done(&mut tenants, eng.as_ref());
+        }
+
+        // ---- per-tenant drain through reassembly + results ----
+        let eng = engine.expect("engine exists");
+        let sim_events = eng.events();
+        let tail = eng.tail();
+        let sim = eng.result();
+        let mut results: Vec<TenantResult> = Vec::new();
+        let mut peak_reass_all = 0usize;
+        let mut payload_total = 0.0f64;
+        for (&tid, st) in tenants.iter_mut() {
+            let table = reass.entry(tid).or_default();
+            for (&pair, parts) in st.streams.iter_mut() {
+                let mut live = true;
+                while live {
+                    live = false;
+                    for ps in parts.iter_mut() {
+                        if ps.delivered < ps.seqs.len() {
+                            table
+                                .push(
+                                    pair.0,
+                                    pair.1,
+                                    ChunkArrival {
+                                        seq: ps.seqs[ps.delivered],
+                                        bytes: chunk as u64,
+                                    },
+                                )
+                                .expect("ordering invariant violated");
+                            ps.delivered += 1;
+                            live = true;
+                        }
+                    }
+                }
+                let q = table.stream(pair.0, pair.1).expect("stream exists");
+                assert!(
+                    q.is_drained(),
+                    "tenant {tid} stream {pair:?} not fully reassembled"
+                );
+                assert_eq!(
+                    q.delivered_bytes(),
+                    st.chunks_per_pair[&pair] * chunk as u64,
+                    "tenant {tid} stream {pair:?} lost chunks across reroutes"
+                );
+            }
+            let mut finish = 0.0f64;
+            let mut lat: Vec<f64> = Vec::new();
+            for parts in st.streams.values() {
+                for ps in parts {
+                    let f = &sim.flows[ps.flow];
+                    if f.finish_t.is_nan() {
+                        continue;
+                    }
+                    finish = finish.max(f.finish_t);
+                    if !preempted_flows.contains(&ps.flow) {
+                        lat.push(f.finish_t - eng.flow(ps.flow).issue_t);
+                    }
+                }
+            }
+            let peak = st
+                .streams
+                .keys()
+                .filter_map(|&(s, d)| table.stream(s, d).map(|q| q.peak_pending))
+                .max()
+                .unwrap_or(0);
+            peak_reass_all = peak_reass_all.max(peak);
+            payload_total += st.payload;
+            results.push(TenantResult {
+                id: tid,
+                kind: st.job.kind,
+                weight: st.job.weight,
+                arrival_s: st.job.arrival_s,
+                admit_s: st.admit_s,
+                finish_s: finish,
+                payload_bytes: st.payload,
+                goodput_gbps: st.payload / (finish - st.admit_s).max(1e-12) / 1e9,
+                p99_lat_s: if lat.is_empty() {
+                    0.0
+                } else {
+                    percentile_nearest_rank(&lat, 99.0)
+                },
+                p99_chunk_s: tail.as_ref().and_then(|t| {
+                    t.per_tag_sojourn_s
+                        .get(&(tid as u64))
+                        .filter(|v| !v.is_empty())
+                        .map(|v| percentile_nearest_rank(v, 99.0))
+                }),
+                peak_reassembly: peak,
+            });
+        }
+        let g_over_w: Vec<f64> = results.iter().map(|t| t.goodput_gbps / t.weight).collect();
+        let makespan = sim.makespan;
+        ServeRun {
+            weighted_fairness: if g_over_w.is_empty() {
+                1.0
+            } else {
+                jain_index(&g_over_w)
+            },
+            tenants: results,
+            makespan_s: makespan,
+            payload_bytes: payload_total,
+            aggregate_goodput_gbps: payload_total / makespan.max(1e-12) / 1e9,
+            replans,
+            preemptions,
+            epochs,
+            peak_reassembly: peak_reass_all,
+            sim,
+            sim_events,
+            tail,
+        }
+    }
+
+    /// Admit every job arriving by `t_now` that fits under the
+    /// concurrency cap, plan the batch (jointly or per job) and issue
+    /// its flows at the epoch boundary.
+    #[allow(clippy::too_many_arguments)]
+    fn admit(
+        &self,
+        t_now: f64,
+        queue: &mut AdmissionQueue,
+        tenants: &mut BTreeMap<usize, TenantState>,
+        planners: &mut BTreeMap<usize, Planner<'a>>,
+        joint_planner: &mut Planner<'a>,
+        engine: &mut Option<Box<dyn FabricBackend + 'a>>,
+        n_flows: &mut usize,
+        chunk: f64,
+    ) {
+        let topo = self.topo;
+        let live = tenants.values().filter(|st| !st.done).count();
+        let batch = queue.pop_admissible(t_now, live);
+        if batch.is_empty() {
+            return;
+        }
+        let start = t_now;
+        let mut plans: BTreeMap<usize, Plan> = BTreeMap::new();
+        if self.tcfg.joint {
+            // plan the admission batch jointly, warm-started from the
+            // exact residual routing already in flight (the monitor
+            // would only re-measure the same flows, noisily)
+            let (init, ep_init) = match engine {
+                Some(eng) => residual_link_load(topo, tenants, eng.as_ref()),
+                None => (
+                    vec![0.0; topo.links.len()],
+                    vec![0.0; crate::planner::joint::joint_endpoint_slots(topo)],
+                ),
+            };
+            let tds: Vec<TenantDemands> = batch
+                .iter()
+                .map(|j| TenantDemands::new(j.id, j.weight, j.demands(topo)))
+                .collect();
+            let joint =
+                joint_planner.plan_joint(&tds, Some(&init), &self.rcfg.caps, Some(&ep_init));
+            plans = joint.per_tenant;
+        } else {
+            for j in &batch {
+                let mut planner = Planner::new(topo, self.planner_cfg.clone());
+                let d = j.demands(topo);
+                let plan = carry_plan(topo, &planner.plan(&d), &d);
+                planners.insert(j.id, planner);
+                plans.insert(j.id, plan);
+            }
+        }
+        let mut batch_flows: Vec<Flow> = Vec::new();
+        for j in &batch {
+            let d = j.demands(topo);
+            let payload: f64 = d.iter().map(|x| x.bytes).sum();
+            let mut st = TenantState {
+                job: j.clone(),
+                streams: BTreeMap::new(),
+                chunks_per_pair: BTreeMap::new(),
+                payload,
+                admit_s: start,
+                done: false,
+            };
+            let k = if self.tcfg.joint { channel_count(j.weight) } else { 1 };
+            let mut idx = *n_flows + batch_flows.len();
+            let plan = &plans[&j.id];
+            for (&pair, a) in &plan.assignments {
+                let mut base = *st.chunks_per_pair.get(&pair).unwrap_or(&0);
+                let parts = st.streams.entry(pair).or_default();
+                for (path, bytes) in &a.parts {
+                    let rf = channel_rate_factor(topo, &self.params, path, *bytes, k);
+                    for _ in 0..k {
+                        let sub = bytes / k as f64;
+                        let n = (sub / chunk).ceil().max(1.0) as u64;
+                        parts.push(PartState {
+                            flow: idx,
+                            seqs: (base..base + n).collect(),
+                            delivered: 0,
+                        });
+                        batch_flows.push(
+                            Flow::new(path.clone(), sub)
+                                .at(start)
+                                .with_rate_factor(rf)
+                                .tagged(j.id as u64),
+                        );
+                        idx += 1;
+                        base += n;
+                    }
+                }
+                st.chunks_per_pair.insert(pair, base);
+            }
+            tenants.insert(j.id, st);
+        }
+        match engine {
+            Some(eng) => {
+                let first = eng.add_flows(&batch_flows);
+                *n_flows = first + batch_flows.len();
+            }
+            None => {
+                *n_flows = batch_flows.len();
+                *engine = Some(make_backend(topo, self.params.clone(), &batch_flows));
+            }
+        }
+    }
+}
+
+/// Mark tenants whose every flow has left the fabric as done (their
+/// admission slot frees).
+fn refresh_done(tenants: &mut BTreeMap<usize, TenantState>, engine: &dyn FabricBackend) {
+    for st in tenants.values_mut() {
+        if st.done {
+            continue;
+        }
+        let alive = st
+            .streams
+            .values()
+            .any(|parts| parts.iter().any(|ps| engine.is_live(ps.flow)));
+        if !alive {
+            st.done = true;
+        }
+    }
+}
+
+/// Exact residual routing of every live tenant, as link loads plus the
+/// joint planner's virtual endpoint loads (the admission warm start).
+fn residual_link_load(
+    topo: &Topology,
+    tenants: &BTreeMap<usize, TenantState>,
+    engine: &dyn FabricBackend,
+) -> (Vec<f64>, Vec<f64>) {
+    let mut ll = vec![0.0f64; topo.links.len()];
+    let mut ep = vec![0.0f64; crate::planner::joint::joint_endpoint_slots(topo)];
+    for st in tenants.values() {
+        if st.done {
+            continue;
+        }
+        for parts in st.streams.values() {
+            for ps in parts {
+                let r = engine.residual_bytes(ps.flow);
+                if r > 1.0 {
+                    let path = &engine.flow(ps.flow).path;
+                    for &h in &path.hops {
+                        ll[h] += r;
+                    }
+                    for e in crate::planner::joint::path_relay_endpoints(topo, path) {
+                        ep[e] += r;
+                    }
+                }
+            }
+        }
+    }
+    (ll, ep)
+}
+
+/// One tenant's residual demands and in-flight routing.
+fn tenant_residuals(
+    st: &TenantState,
+    engine: &dyn FabricBackend,
+    topo: &Topology,
+) -> (Vec<Demand>, BTreeMap<(GpuId, GpuId), Assignment>, Vec<f64>) {
+    let mut residual_demands: Vec<Demand> = Vec::new();
+    let mut assignments = BTreeMap::new();
+    let mut link_load = vec![0.0f64; topo.links.len()];
+    for (&pair, parts) in &st.streams {
+        let mut pr: Vec<(Path, f64)> = Vec::new();
+        let mut total = 0.0f64;
+        for ps in parts {
+            let r = engine.residual_bytes(ps.flow);
+            if r > 1.0 {
+                pr.push((engine.flow(ps.flow).path.clone(), r));
+                total += r;
+            }
+        }
+        if total > 1.0 {
+            residual_demands.push(Demand::new(pair.0, pair.1, total));
+            for (p, b) in &pr {
+                for &h in &p.hops {
+                    link_load[h] += *b;
+                }
+            }
+            assignments.insert(pair, Assignment { parts: pr });
+        }
+    }
+    (residual_demands, assignments, link_load)
+}
+
+/// Preempt the changed pairs of one tenant and stage their residuals
+/// on the new plan's paths (k channels per part); returns the number
+/// of flows preempted. The re-issued flows are appended to the shared
+/// epoch batch; `staged` records how the pooled chunk sequences map
+/// onto them once the batch registers.
+#[allow(clippy::too_many_arguments)]
+fn reroute(
+    st: &mut TenantState,
+    engine: &mut dyn FabricBackend,
+    reass: &mut ReassemblyTable,
+    newplan: &Plan,
+    changed: &[(GpuId, GpuId)],
+    k: usize,
+    chunk: f64,
+    topo: &Topology,
+    params: &FabricParams,
+    epoch_batch: &mut Vec<Flow>,
+    staged: &mut Vec<(usize, Vec<Reissue>)>,
+    preempted_flows: &mut BTreeSet<usize>,
+) -> usize {
+    let mut preempted_here = 0usize;
+    let mut reissues: Vec<Reissue> = Vec::new();
+    let now = engine.now();
+    let tag = st.job.id as u64;
+    for &pair in changed {
+        let Some(newa) = newplan.assignments.get(&pair) else { continue };
+        let Some(parts) = st.streams.get_mut(&pair) else { continue };
+        // preempt live parts; release their completed chunk prefixes;
+        // pool the undelivered seqs
+        let mut pool: Vec<u64> = Vec::new();
+        for ps in parts.iter_mut() {
+            if !engine.is_live(ps.flow) {
+                continue;
+            }
+            let moved = engine.moved_bytes(ps.flow);
+            engine.preempt(ps.flow);
+            preempted_flows.insert(ps.flow);
+            preempted_here += 1;
+            let done = ((moved / chunk).floor() as usize).clamp(ps.delivered, ps.seqs.len());
+            for &s in &ps.seqs[ps.delivered..done] {
+                reass
+                    .push(pair.0, pair.1, ChunkArrival { seq: s, bytes: chunk as u64 })
+                    .expect("ordering invariant violated");
+            }
+            pool.extend_from_slice(&ps.seqs[done..]);
+            ps.seqs.truncate(done);
+            ps.delivered = done;
+        }
+        // stage the residual on the new paths (k channels per part);
+        // the pooled seqs split across the sub-flows by byte share
+        let mut subparts: Vec<(Path, f64, f64)> = Vec::new();
+        for (path, bytes) in &newa.parts {
+            let rf = channel_rate_factor(topo, params, path, *bytes, k);
+            for _ in 0..k {
+                subparts.push((path.clone(), *bytes / k as f64, rf));
+            }
+        }
+        let total_new: f64 = {
+            let mut t = 0.0;
+            for (_, b, _) in &subparts {
+                t += *b;
+            }
+            t.max(1.0)
+        };
+        let n_pool = pool.len();
+        let batch_off = epoch_batch.len();
+        let mut counts: Vec<usize> = Vec::new();
+        let mut allotted = 0usize;
+        for (path, bytes, rf) in &subparts {
+            epoch_batch.push(
+                Flow::new(path.clone(), *bytes)
+                    .at(now)
+                    .with_rate_factor(*rf)
+                    .tagged(tag),
+            );
+            let want = ((bytes / total_new) * n_pool as f64).round() as usize;
+            let n = want.min(n_pool - allotted);
+            counts.push(n);
+            allotted += n;
+        }
+        if let Some(last) = counts.last_mut() {
+            *last += n_pool - allotted;
+        }
+        reissues.push(Reissue { pair, batch_off, counts, pool });
+    }
+    staged.push((st.job.id, reissues));
+    preempted_here
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orchestrator::job::job_stream;
+
+    fn exec<'a>(
+        topo: &'a Topology,
+        joint: bool,
+        enable: bool,
+    ) -> MultiTenantExecutor<'a> {
+        let tcfg = TenancyCfg { joint, ..TenancyCfg::default() };
+        let rcfg = ReplanCfg { enable, ..ReplanCfg::default() };
+        MultiTenantExecutor::new(topo, FabricParams::default(), PlannerCfg::default(), rcfg, tcfg)
+    }
+
+    #[test]
+    fn channel_count_maps_weights() {
+        assert_eq!(channel_count(1.0), 1);
+        assert_eq!(channel_count(2.0), 2);
+        assert_eq!(channel_count(4.0), 3, "capped at 3");
+        assert_eq!(channel_count(0.4), 1, "floor clamps up to 1");
+    }
+
+    /// The default 8-job stream completes on the shared fabric with
+    /// every tenant's payload conserved through its own reassembly
+    /// (asserted inside execute) and sane per-tenant accounting.
+    #[test]
+    fn serve_stream_completes_and_accounts() {
+        let topo = Topology::paper();
+        let tcfg = TenancyCfg::default();
+        let jobs = job_stream(&topo, &tcfg);
+        let run = exec(&topo, true, false).execute(jobs.clone());
+        assert_eq!(run.tenants.len(), jobs.len());
+        for (t, j) in run.tenants.iter().zip(&jobs) {
+            assert_eq!(t.id, j.id);
+            assert!(t.goodput_gbps > 0.0, "tenant {} starved", t.id);
+            assert!(t.finish_s > t.admit_s);
+            assert!(t.admit_s >= j.arrival_s - 1e-15, "admitted before arrival");
+        }
+        assert!(run.makespan_s > 0.0);
+        assert!(run.weighted_fairness > 0.0 && run.weighted_fairness <= 1.0);
+        // the stream overlaps: rebalancing fired at least once
+        assert!(run.replans >= 1, "no joint rebalance on the default stream");
+        assert!(run.preemptions >= 1);
+        assert!(run.peak_reassembly >= 1, "no out-of-order buffering");
+    }
+
+    /// Same seed ⇒ byte-identical serve outcome, run to run.
+    #[test]
+    fn serve_is_deterministic() {
+        let topo = Topology::paper();
+        let tcfg = TenancyCfg { jobs: 4, ..TenancyCfg::default() };
+        let jobs = job_stream(&topo, &tcfg);
+        let run = |jobs: Vec<JobSpec>| {
+            let mut ex = exec(&topo, true, false);
+            ex.tcfg = tcfg.clone();
+            ex.execute(jobs)
+        };
+        let a = run(jobs.clone());
+        let b = run(jobs);
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.replans, b.replans);
+        assert_eq!(a.preemptions, b.preemptions);
+        for (x, y) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(x.goodput_gbps.to_bits(), y.goodput_gbps.to_bits());
+            assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits());
+            assert_eq!(x.p99_lat_s.to_bits(), y.p99_lat_s.to_bits());
+        }
+        for (x, y) in a.sim.link_bytes.iter().zip(&b.sim.link_bytes) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    /// The packet backend serves the stream too (backend-agnostic loop)
+    /// and groups tail observations by tenant tag.
+    #[test]
+    fn serve_runs_on_packet_backend_with_per_tenant_tails() {
+        let topo = Topology::paper();
+        let params = FabricParams {
+            backend: crate::fabric::BackendKind::Packet,
+            ..FabricParams::default()
+        };
+        let tcfg = TenancyCfg { jobs: 3, ..TenancyCfg::default() };
+        let jobs = job_stream(&topo, &tcfg);
+        let mut ex = MultiTenantExecutor::new(
+            &topo,
+            params,
+            PlannerCfg::default(),
+            ReplanCfg::default(),
+            tcfg,
+        );
+        let run = ex.execute(jobs);
+        let tail = run.tail.expect("packet backend records tails");
+        assert!(tail.delivered_chunks > 0);
+        for t in &run.tenants {
+            assert!(t.goodput_gbps > 0.0);
+            let p99 = t.p99_chunk_s.expect("per-tenant chunk tail");
+            assert!(p99 > 0.0);
+        }
+    }
+}

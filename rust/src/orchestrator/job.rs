@@ -1,0 +1,277 @@
+//! Seeded multi-tenant job stream: who arrives when, with what weight,
+//! flying which collective.
+//!
+//! A [`JobSpec`] is one collective job — arrival time, fairness weight
+//! and a workload drawn from the existing generators (skewed
+//! All-to-Allv, phased hot rows, MoE drift, boundary-hotspot stencil,
+//! imbalanced Send/Recv). [`job_stream`] derives the whole stream from
+//! one [`TenancyCfg`] seed, so a serve run is a pure function of its
+//! config: same seed ⇒ byte-identical jobs ⇒ byte-identical schedule
+//! and results (the determinism contract of DESIGN.md §9 extended to
+//! multi-tenancy).
+
+use crate::collectives::sendrecv::imbalanced_batch;
+use crate::planner::Demand;
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+use crate::workloads::skew::hotspot_alltoallv;
+use crate::workloads::stencil::stencil_1d_hotspot;
+use crate::workloads::{MoeDrift, PhasedHotRows};
+
+const MB: f64 = 1024.0 * 1024.0;
+
+/// Workload family of one job. The per-kind parameters live in
+/// [`JobSpec::a`]/[`JobSpec::b`]/[`JobSpec::c`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    /// §V-C skewed All-to-Allv: a = payload/rank, b = hotspot ratio,
+    /// c = hot destination.
+    SkewedAlltoall,
+    /// Phase-shifting hot rows: a = row bytes, c = phase round.
+    HotRows,
+    /// MoE expert-popularity drift: a = global tokens, c = drift round.
+    MoeDrift,
+    /// Boundary-hotspot stencil: a = halo bytes, b = hot factor.
+    Stencil,
+    /// Imbalanced async Send/Recv batch: a = base bytes, b = imbalance.
+    SendRecv,
+}
+
+impl JobKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobKind::SkewedAlltoall => "skewed-a2a",
+            JobKind::HotRows => "hot-rows",
+            JobKind::MoeDrift => "moe-drift",
+            JobKind::Stencil => "stencil",
+            JobKind::SendRecv => "sendrecv",
+        }
+    }
+}
+
+/// One tenant job of the serve stream.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Stable id (stream position); doubles as the flow tag and the
+    /// joint-planner tenant id.
+    pub id: usize,
+    /// Virtual arrival time in seconds (job 0 arrives at 0).
+    pub arrival_s: f64,
+    /// Fairness weight (drives the MWU λ scaling and the channel
+    /// allocation; the weighted fairness index normalizes by it).
+    pub weight: f64,
+    pub kind: JobKind,
+    /// First per-kind parameter (bytes or tokens; see [`JobKind`]).
+    pub a: f64,
+    /// Second per-kind parameter (ratio / factor; see [`JobKind`]).
+    pub b: f64,
+    /// Third per-kind parameter (hot destination / round).
+    pub c: f64,
+}
+
+impl JobSpec {
+    /// Materialize the job's demand set on `topo`. Pure: every call
+    /// returns byte-identical demands.
+    pub fn demands(&self, topo: &Topology) -> Vec<Demand> {
+        match self.kind {
+            JobKind::SkewedAlltoall => {
+                hotspot_alltoallv(topo, self.a, self.b, self.c as usize)
+            }
+            JobKind::HotRows => {
+                PhasedHotRows::paper_default(topo, self.a).demands_at(topo, self.c as usize)
+            }
+            JobKind::MoeDrift => MoeDrift::paper_default(topo, self.a as usize)
+                .demands_at(topo, self.c as usize),
+            JobKind::Stencil => stencil_1d_hotspot(topo, self.a, self.b),
+            JobKind::SendRecv => imbalanced_batch(topo, self.a, self.b),
+        }
+    }
+
+    /// Total payload bytes of the job.
+    pub fn payload(&self, topo: &Topology) -> f64 {
+        self.demands(topo).iter().map(|d| d.bytes).sum()
+    }
+}
+
+/// `[tenancy]` configuration (see `configs/paper.toml`). Only consumed
+/// by `nimble serve` / the orchestrator, so the section is inert for
+/// every other experiment.
+#[derive(Clone, Debug)]
+pub struct TenancyCfg {
+    /// Jobs in the stream (≥ 1).
+    pub jobs: usize,
+    /// Arrival/workload seed; the whole stream derives from it.
+    pub seed: u64,
+    /// Fairness weights, cycled over the stream (finite, positive).
+    pub weights: Vec<f64>,
+    /// Admission cap: jobs concurrently in flight (FIFO beyond it).
+    pub max_live: usize,
+    /// Mean inter-arrival gap in milliseconds (jittered ±75%).
+    pub mean_gap_ms: f64,
+    /// Joint planning + weighted channels + cross-tenant rebalancing;
+    /// `false` = independent per-job plans (the `--no-joint` baseline,
+    /// bit-identical to [`crate::coordinator::ReplanExecutor`] on a
+    /// 1-job stream).
+    pub joint: bool,
+}
+
+impl Default for TenancyCfg {
+    fn default() -> Self {
+        TenancyCfg {
+            jobs: 8,
+            seed: 3,
+            weights: vec![1.0, 2.0, 1.0, 4.0],
+            max_live: 6,
+            mean_gap_ms: 0.5,
+            joint: true,
+        }
+    }
+}
+
+impl TenancyCfg {
+    /// Validate the knobs (the config loader and CLI both call this).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.jobs == 0 {
+            return Err("tenancy.jobs must be >= 1".into());
+        }
+        if self.jobs > 4096 {
+            return Err(format!("tenancy.jobs out of [1, 4096]: {}", self.jobs));
+        }
+        if self.weights.is_empty() {
+            return Err("tenancy.weights must not be empty".into());
+        }
+        for w in &self.weights {
+            if !w.is_finite() || *w <= 0.0 {
+                return Err(format!(
+                    "tenancy.weights must be finite and positive, got {w}"
+                ));
+            }
+        }
+        if self.max_live == 0 {
+            return Err("tenancy.max_live must be >= 1".into());
+        }
+        if !self.mean_gap_ms.is_finite() || self.mean_gap_ms <= 0.0 {
+            return Err(format!(
+                "tenancy.mean_gap_ms must be positive: {}",
+                self.mean_gap_ms
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Generate the seeded job stream: job 0 arrives at t = 0, later
+/// arrivals are jittered around the mean gap; kinds and per-kind
+/// parameters all come from one [`Rng`]. The kind mix skews toward
+/// link-bound patterns (p2p, stencil, skewed A2A) where routing choice
+/// matters; the endpoint-bound full-coverage patterns (hot rows, MoE)
+/// appear but do not dominate.
+pub fn job_stream(topo: &Topology, tcfg: &TenancyCfg) -> Vec<JobSpec> {
+    let mut rng = Rng::new(tcfg.seed);
+    let n = topo.num_gpus();
+    let mut jobs = Vec::with_capacity(tcfg.jobs);
+    let mut t = 0.0f64;
+    for i in 0..tcfg.jobs {
+        if i > 0 {
+            t += tcfg.mean_gap_ms * 1e-3 * rng.range_f64(0.25, 1.75);
+        }
+        let weight = tcfg.weights[i % tcfg.weights.len()];
+        let draw = rng.below(8) as usize;
+        let kind = [
+            JobKind::SkewedAlltoall,
+            JobKind::SkewedAlltoall,
+            JobKind::HotRows,
+            JobKind::MoeDrift,
+            JobKind::Stencil,
+            JobKind::Stencil,
+            JobKind::SendRecv,
+            JobKind::SendRecv,
+        ][draw];
+        let (a, b, c) = match kind {
+            JobKind::SkewedAlltoall => (
+                rng.range_f64(24.0, 56.0) * MB,
+                rng.range_f64(0.6, 0.9),
+                rng.below(n as u64) as f64,
+            ),
+            JobKind::HotRows => {
+                (rng.range_f64(24.0, 56.0) * MB, 0.0, rng.below(4) as f64)
+            }
+            JobKind::MoeDrift => {
+                ((16384u64 << rng.below(2)) as f64, 0.0, rng.below(8) as f64)
+            }
+            JobKind::Stencil => (rng.range_f64(32.0, 96.0) * MB, rng.range_f64(2.0, 4.0), 0.0),
+            JobKind::SendRecv => (rng.range_f64(16.0, 48.0) * MB, rng.range_f64(2.0, 8.0), 0.0),
+        };
+        jobs.push(JobSpec { id: i, arrival_s: t, weight, kind, a, b, c });
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_is_seeded_and_ordered() {
+        let t = Topology::paper();
+        let cfg = TenancyCfg::default();
+        let a = job_stream(&t, &cfg);
+        let b = job_stream(&t, &cfg);
+        assert_eq!(a.len(), cfg.jobs);
+        assert_eq!(a[0].arrival_s, 0.0, "job 0 must arrive at t = 0");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.a.to_bits(), y.a.to_bits());
+        }
+        // strictly increasing arrivals
+        for w in a.windows(2) {
+            assert!(w[0].arrival_s < w[1].arrival_s);
+        }
+        // a different seed changes the stream
+        let cfg2 = TenancyCfg { seed: 1234, ..TenancyCfg::default() };
+        let c = job_stream(&t, &cfg2);
+        assert!(a
+            .iter()
+            .zip(&c)
+            .any(|(x, y)| x.kind != y.kind || x.a.to_bits() != y.a.to_bits()));
+    }
+
+    #[test]
+    fn demands_are_pure_and_nonempty() {
+        let t = Topology::paper();
+        let jobs = job_stream(&t, &TenancyCfg::default());
+        for j in &jobs {
+            let d1 = j.demands(&t);
+            let d2 = j.demands(&t);
+            assert!(!d1.is_empty(), "job {} ({}) empty", j.id, j.kind.name());
+            assert_eq!(d1.len(), d2.len());
+            for (x, y) in d1.iter().zip(&d2) {
+                assert_eq!(x.bytes.to_bits(), y.bytes.to_bits());
+            }
+            assert!(j.payload(&t) > 0.0);
+        }
+    }
+
+    #[test]
+    fn weights_cycle_and_validation_rejects_bad_knobs() {
+        let t = Topology::paper();
+        let cfg = TenancyCfg::default();
+        let jobs = job_stream(&t, &cfg);
+        for j in &jobs {
+            assert_eq!(j.weight, cfg.weights[j.id % cfg.weights.len()]);
+        }
+        assert!(cfg.validate().is_ok());
+        let bad = |f: &dyn Fn(&mut TenancyCfg)| {
+            let mut c = TenancyCfg::default();
+            f(&mut c);
+            c.validate().is_err()
+        };
+        assert!(bad(&|c| c.jobs = 0));
+        assert!(bad(&|c| c.weights = vec![]));
+        assert!(bad(&|c| c.weights = vec![1.0, -2.0]));
+        assert!(bad(&|c| c.weights = vec![f64::NAN]));
+        assert!(bad(&|c| c.max_live = 0));
+        assert!(bad(&|c| c.mean_gap_ms = 0.0));
+    }
+}

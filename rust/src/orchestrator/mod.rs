@@ -1,0 +1,52 @@
+//! Multi-tenant orchestrator: concurrent collective jobs sharing one
+//! fabric, with joint planning, weighted fairness and per-tenant
+//! execution-time rebalancing.
+//!
+//! The §V-E interference experiment re-slices *one* job around opaque
+//! background load; this subsystem is the cross-job scheduler it
+//! explicitly was not. Data flow:
+//!
+//! ```text
+//!   job stream ──► admission ──► joint plan ──► shared fabric backend
+//!  ([job_stream])  ([admission])  ([`Planner::plan_joint`])   (fluid | packet)
+//!        ▲              │                ▲                        │
+//!        seed           └─ slot frees ◄──┼── monitor window ◄─────┤
+//!                                        │                        ▼
+//!                            per-tenant accept + preempt   per-tenant
+//!                            ([executor] epoch loop)       reassembly
+//! ```
+//!
+//! * [`job::job_stream`] derives a whole job stream (arrivals, weights,
+//!   workload kinds and parameters) from one seed — the determinism
+//!   contract extends to multi-tenancy: same seed + config ⇒
+//!   byte-identical schedule and results at any thread count.
+//! * [`admission::AdmissionQueue`] holds jobs between arrival and
+//!   admission (FIFO, concurrency-capped, epoch-quantized).
+//! * [`executor::MultiTenantExecutor`] flies every admitted tenant on
+//!   one shared [`crate::fabric::FabricBackend`] — fluid or packet, the
+//!   loop is backend-agnostic — planning admissions and epoch
+//!   challengers jointly ([`crate::planner::Planner::plan_joint`]),
+//!   enforcing tenant weights via channel allocation, and replaying
+//!   every reroute through the owning tenant's own
+//!   [`crate::coordinator::reassembly::ReassemblyTable`].
+//!
+//! `--no-joint` (or `[tenancy] joint = false`) degrades to independent
+//! per-job plans with the PR-2 semantics: a 1-job stream is then
+//! bit-identical to [`crate::coordinator::ReplanExecutor`] — enabled
+//! or disabled `[replan]`, both anchors hold (see
+//! `tests/integration.rs`). `nimble serve` drives the whole thing;
+//! DESIGN.md §11 states what joint planning does and does not
+//! guarantee.
+//!
+//! [`Planner::plan_joint`]: crate::planner::Planner::plan_joint
+//! [`job_stream`]: job::job_stream
+//! [admission]: admission::AdmissionQueue
+//! [executor]: executor::MultiTenantExecutor
+
+pub mod admission;
+pub mod executor;
+pub mod job;
+
+pub use admission::AdmissionQueue;
+pub use executor::{channel_count, MultiTenantExecutor, ServeEpoch, ServeRun, TenantResult};
+pub use job::{job_stream, JobKind, JobSpec, TenancyCfg};

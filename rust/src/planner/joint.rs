@@ -1,0 +1,472 @@
+//! Joint multi-tenant planning: Algorithm 1 over the **union** of all
+//! live tenants' demands on one shared load table.
+//!
+//! [`Planner::plan_joint`] is the planner half of the multi-tenant
+//! orchestrator ([`crate::orchestrator`]): it solves the
+//! capacity-normalized min-congestion problem across every tenant at
+//! once instead of per job, so tenants route around each other's
+//! *planned* residuals rather than rediscovering them through the
+//! monitor. Three deliberate differences from the per-job sweep
+//! ([`Planner::plan_seeded`]):
+//!
+//! * **Shared cost basis** — all tenants' visits accumulate into one
+//!   link-load table (plus the optional warm-start `initial`, used for
+//!   pressure *external* to the planned tenants).
+//! * **Per-tenant MWU weight scaling** — a tenant's per-visit routed
+//!   fraction is `λ · weight / max_weight`, so heavier tenants claim
+//!   their paths in fewer, earlier, larger chunks (planning-time
+//!   priority; the execution-time share enforcement is the channel
+//!   allocation in [`crate::orchestrator::executor`]).
+//! * **Differential endpoint costs** — every candidate's cost also
+//!   tracks the *relay* GPUs' injection/receive aggregates
+//!   ([`path_relay_endpoints`]). Only differential terms enter: a
+//!   pair's source/destination/node aggregates are common to all of
+//!   its candidates, and a saturated common constraint would flatten
+//!   every candidate cost and pile the residual onto the first
+//!   candidate. Relaying through an endpoint-busy GPU, by contrast, is
+//!   a choice the joint solve can and does avoid.
+//!
+//! The solve is serial and deterministic for every
+//! [`PlannerCfg::threads`] value (the orchestrator's byte-identity
+//! contract needs no parallel variant here; the per-tenant challengers
+//! of the independent arm keep the PR-3 parallel sweep). The
+//! bottleneck cost metric is always used — `CostModel::sum_cost` is a
+//! single-job ablation knob and is ignored by the joint solve.
+
+use super::mwu::{next_volume, Planner, PlannerCfg};
+use super::plan::{Assignment, Demand, Plan};
+use super::replan::DrainCaps;
+use crate::topology::{GpuId, LinkKind, Path, PathKind, Topology};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// One tenant's slice of a joint planning problem.
+#[derive(Clone, Debug)]
+pub struct TenantDemands {
+    /// Stable tenant id (the orchestrator uses the job id).
+    pub tenant: usize,
+    /// Fairness weight (≥ 0, finite); scales the tenant's MWU λ.
+    pub weight: f64,
+    pub demands: Vec<Demand>,
+    /// Hysteresis seeds: the path kind each pair currently flies on.
+    pub incumbent_kinds: Option<BTreeMap<(GpuId, GpuId), PathKind>>,
+}
+
+impl TenantDemands {
+    pub fn new(tenant: usize, weight: f64, demands: Vec<Demand>) -> Self {
+        TenantDemands { tenant, weight, demands, incumbent_kinds: None }
+    }
+}
+
+/// Outcome of one joint solve.
+#[derive(Clone, Debug)]
+pub struct JointPlan {
+    /// Per-tenant plans, keyed by [`TenantDemands::tenant`]. Each
+    /// plan's `link_load` is only that tenant's own added load.
+    pub per_tenant: BTreeMap<usize, Plan>,
+    /// Sum of all tenants' added link loads (the accept metric's view).
+    pub combined_link_load: Vec<f64>,
+}
+
+/// Number of virtual endpoint slots ([`joint_endpoint_inv_caps`]).
+pub fn joint_endpoint_slots(topo: &Topology) -> usize {
+    2 * topo.num_gpus()
+}
+
+/// Inverse capacities of the virtual endpoint constraints: per-GPU
+/// injection (slots `0..G`) and per-GPU receive (slots `G..2G`), from
+/// the same [`DrainCaps`] anchors the replan accept metric uses.
+pub fn joint_endpoint_inv_caps(topo: &Topology, caps: &DrainCaps) -> Vec<f64> {
+    let g = topo.num_gpus();
+    let mut inv = Vec::with_capacity(2 * g);
+    for _ in 0..g {
+        inv.push(1.0 / (caps.inject_gbps * 1e9));
+    }
+    for _ in 0..g {
+        inv.push(1.0 / (caps.recv_gbps * 1e9));
+    }
+    inv
+}
+
+/// Virtual-endpoint slots a path *differentially* consumes: every
+/// interior (relay) GPU's injection and receive aggregate. Source
+/// injection, destination receive and node-rail aggregates are common
+/// to every candidate of a pair and deliberately excluded (they cannot
+/// inform a routing choice — see the module docs).
+pub fn path_relay_endpoints(topo: &Topology, path: &Path) -> Vec<usize> {
+    let g = topo.num_gpus();
+    let mut out = Vec::new();
+    for &h in &path.hops {
+        let nxt = topo.link(h).dst;
+        if nxt != path.dst {
+            out.push(nxt); // relay injects onward
+            out.push(g + nxt); // relay receives
+        }
+    }
+    out
+}
+
+/// Per-candidate hot-loop data for the joint sweep: real hops plus the
+/// differential endpoint slots.
+struct JointCand {
+    hops: Vec<(usize, f64, f64)>, // (link, inv_cap_bps, inflate)
+    endpoints: Vec<usize>,
+    penalty: f64,
+}
+
+#[inline]
+fn joint_path_cost(
+    cfg: &PlannerCfg,
+    load: &[f64],
+    ep_load: &[f64],
+    ep_inv: &[f64],
+    c: &JointCand,
+) -> f64 {
+    let mut worst = 0.0f64;
+    for &(h, inv, _) in &c.hops {
+        let n = load[h] * inv;
+        if n > worst {
+            worst = n;
+        }
+    }
+    for &e in &c.endpoints {
+        let n = ep_load[e] * ep_inv[e];
+        if n > worst {
+            worst = n;
+        }
+    }
+    cfg.cost.shape.apply(worst) + c.penalty
+}
+
+impl<'a> Planner<'a> {
+    /// One joint solve over `tenants` (see the module docs).
+    ///
+    /// `initial` warm-starts the link costs with pressure *external* to
+    /// the planned tenants (the orchestrator passes the monitor's
+    /// deadbanded excess, or the in-flight residual routing at
+    /// admission time); `ep_initial` does the same for the virtual
+    /// endpoint slots. Deterministic: identical inputs yield
+    /// byte-identical plans for every thread count (the solve is
+    /// serial by construction).
+    pub fn plan_joint(
+        &mut self,
+        tenants: &[TenantDemands],
+        initial: Option<&[f64]>,
+        caps: &DrainCaps,
+        ep_initial: Option<&[f64]>,
+    ) -> JointPlan {
+        let t0 = Instant::now();
+        let topo = self.topo();
+        let cfg = self.cfg().clone();
+        let eps = cfg.epsilon_bytes.max(1.0);
+
+        let mut load = match initial {
+            Some(init) => {
+                assert_eq!(init.len(), topo.links.len());
+                init.to_vec()
+            }
+            None => vec![0.0f64; topo.links.len()],
+        };
+        let ep_inv = joint_endpoint_inv_caps(topo, caps);
+        let mut ep_load = match ep_initial {
+            Some(init) => {
+                assert_eq!(init.len(), ep_inv.len());
+                init.to_vec()
+            }
+            None => vec![0.0f64; ep_inv.len()],
+        };
+        let w_max = if tenants.is_empty() {
+            1.0
+        } else {
+            tenants.iter().map(|t| t.weight).fold(f64::NEG_INFINITY, f64::max)
+        };
+
+        // tenant-major, pair-sorted entry list
+        let mut order: Vec<(usize, (GpuId, GpuId))> = Vec::new();
+        let mut totals: Vec<f64> = Vec::new();
+        let mut lambdas: Vec<f64> = Vec::new();
+        for (ti, t) in tenants.iter().enumerate() {
+            let mut pairs: BTreeMap<(GpuId, GpuId), f64> = BTreeMap::new();
+            for d in &t.demands {
+                if d.bytes > 0.0 {
+                    assert_ne!(d.src, d.dst, "self-demand ({}, {})", d.src, d.dst);
+                    *pairs.entry((d.src, d.dst)).or_insert(0.0) += d.bytes;
+                }
+            }
+            let lam = cfg.lambda * (t.weight / w_max);
+            for (key, bytes) in pairs {
+                order.push((ti, key));
+                totals.push(bytes);
+                lambdas.push(lam);
+            }
+        }
+
+        let mut cands_by_entry: Vec<Vec<Path>> = Vec::with_capacity(order.len());
+        let mut info_by_entry: Vec<Vec<JointCand>> = Vec::with_capacity(order.len());
+        for (ei, &(_, (s, d))) in order.iter().enumerate() {
+            let cands = self.candidates_for(s, d, totals[ei]).to_vec();
+            let infos = cands
+                .iter()
+                .map(|p| JointCand {
+                    hops: p
+                        .hops
+                        .iter()
+                        .enumerate()
+                        .map(|(hi, &h)| {
+                            let link = topo.link(h);
+                            let inflate = if hi > 0
+                                && matches!(link.kind, LinkKind::NvLink)
+                            {
+                                cfg.cost.relay_inflation
+                            } else {
+                                1.0
+                            };
+                            (h, 1.0 / (link.cap_gbps * 1e9), inflate)
+                        })
+                        .collect(),
+                    endpoints: path_relay_endpoints(topo, p),
+                    penalty: cfg.cost.detour_penalty(topo, p, totals[ei]),
+                })
+                .collect();
+            cands_by_entry.push(cands);
+            info_by_entry.push(infos);
+        }
+
+        let mut flows_by_entry: Vec<Vec<f64>> =
+            info_by_entry.iter().map(|c| vec![0.0; c.len()]).collect();
+        let mut incumbent: Vec<usize> = vec![usize::MAX; order.len()];
+        for (ei, &(ti, key)) in order.iter().enumerate() {
+            if let Some(seed) = &tenants[ti].incumbent_kinds {
+                if let Some(kind) = seed.get(&key) {
+                    if let Some(ci) =
+                        cands_by_entry[ei].iter().position(|p| p.kind == *kind)
+                    {
+                        incumbent[ei] = ci;
+                    }
+                }
+            }
+        }
+
+        let mut added = vec![0.0f64; topo.links.len()];
+        let mut added_by_tenant: Vec<Vec<f64>> =
+            tenants.iter().map(|_| vec![0.0f64; topo.links.len()]).collect();
+
+        // the serial drain sweep, with per-entry λ
+        let mut remaining = totals.clone();
+        let mut r_tot = 0.0f64;
+        for r in &remaining {
+            r_tot += r;
+        }
+        let mut active: Vec<usize> = (0..order.len()).collect();
+        while r_tot > 1e-6 && !active.is_empty() {
+            let mut ai = 0;
+            while ai < active.len() {
+                let ei = active[ai];
+                let infos = &info_by_entry[ei];
+                let f_route =
+                    next_volume(remaining[ei], eps, lambdas[ei], infos.len());
+                let mut best_i = 0usize;
+                let mut best_c = f64::INFINITY;
+                for (i, c) in infos.iter().enumerate() {
+                    let pc = joint_path_cost(&cfg, &load, &ep_load, &ep_inv, c);
+                    if pc < best_c {
+                        best_c = pc;
+                        best_i = i;
+                    }
+                }
+                let inc = incumbent[ei];
+                if inc != usize::MAX && inc != best_i {
+                    let inc_c =
+                        joint_path_cost(&cfg, &load, &ep_load, &ep_inv, &infos[inc]);
+                    if inc_c.is_finite() && best_c >= inc_c * (1.0 - cfg.cost.hysteresis)
+                    {
+                        best_i = inc;
+                    }
+                }
+                incumbent[ei] = best_i;
+                let ti = order[ei].0;
+                for &(h, _, inflate) in &infos[best_i].hops {
+                    load[h] += f_route * inflate;
+                    added[h] += f_route;
+                    added_by_tenant[ti][h] += f_route;
+                }
+                for &e in &infos[best_i].endpoints {
+                    ep_load[e] += f_route;
+                }
+                flows_by_entry[ei][best_i] += f_route;
+                remaining[ei] -= f_route;
+                r_tot -= f_route;
+                if remaining[ei] <= 0.0 {
+                    active.swap_remove(ai);
+                } else {
+                    ai += 1;
+                }
+            }
+        }
+
+        let plan_time_s = t0.elapsed().as_secs_f64();
+        let mut per_tenant: BTreeMap<usize, Plan> = BTreeMap::new();
+        for (ti, t) in tenants.iter().enumerate() {
+            per_tenant.insert(
+                t.tenant,
+                Plan {
+                    assignments: BTreeMap::new(),
+                    link_load: added_by_tenant[ti].clone(),
+                    plan_time_s,
+                },
+            );
+        }
+        for (ei, &(ti, key)) in order.iter().enumerate() {
+            let parts: Vec<(Path, f64)> = flows_by_entry[ei]
+                .iter()
+                .enumerate()
+                .filter(|(_, &b)| b > 0.0)
+                .map(|(ci, &b)| (cands_by_entry[ei][ci].clone(), b))
+                .collect();
+            if !parts.is_empty() {
+                per_tenant
+                    .get_mut(&tenants[ti].tenant)
+                    .expect("tenant plan staged")
+                    .assignments
+                    .insert(key, Assignment { parts });
+            }
+        }
+        JointPlan { per_tenant, combined_link_load: added }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::PlannerCfg;
+
+    const MB: f64 = 1024.0 * 1024.0;
+
+    fn caps() -> DrainCaps {
+        DrainCaps::default()
+    }
+
+    /// Joint plans conserve every tenant's demand and are
+    /// deterministic, byte for byte.
+    #[test]
+    fn joint_conserves_and_is_deterministic() {
+        let t = Topology::paper();
+        let a = vec![Demand::new(0, 1, 384.0 * MB), Demand::new(2, 1, 128.0 * MB)];
+        let b = vec![Demand::new(4, 7, 256.0 * MB), Demand::new(2, 3, 96.0 * MB)];
+        let tenants = vec![
+            TenantDemands::new(10, 1.0, a.clone()),
+            TenantDemands::new(11, 4.0, b.clone()),
+        ];
+        let run = |_: usize| {
+            Planner::new(&t, PlannerCfg::default()).plan_joint(&tenants, None, &caps(), None)
+        };
+        let j1 = run(0);
+        let j2 = run(1);
+        j1.per_tenant[&10].validate(&t, &a).unwrap();
+        j1.per_tenant[&11].validate(&t, &b).unwrap();
+        assert_eq!(j1.per_tenant[&10].canonical_string(), j2.per_tenant[&10].canonical_string());
+        assert_eq!(j1.per_tenant[&11].canonical_string(), j2.per_tenant[&11].canonical_string());
+        // combined load is the sum of the per-tenant loads
+        for (i, &c) in j1.combined_link_load.iter().enumerate() {
+            let s = j1.per_tenant[&10].link_load[i] + j1.per_tenant[&11].link_load[i];
+            assert!((c - s).abs() < 1e-6, "link {i}: {c} vs {s}");
+        }
+    }
+
+    /// Two tenants hammering the same destination from different
+    /// sources end up routed *around* each other: the joint bottleneck
+    /// is no worse than either tenant planning alone on top of the
+    /// other's load.
+    #[test]
+    fn joint_routes_tenants_around_each_other() {
+        let t = Topology::paper();
+        let a = vec![Demand::new(0, 1, 512.0 * MB)];
+        let b = vec![Demand::new(2, 1, 512.0 * MB)];
+        let tenants =
+            vec![TenantDemands::new(0, 1.0, a.clone()), TenantDemands::new(1, 1.0, b)];
+        let joint = Planner::new(&t, PlannerCfg::default())
+            .plan_joint(&tenants, None, &caps(), None);
+        // sequential baseline: tenant 0 alone, then tenant 1 on top
+        let mut p = Planner::new(&t, PlannerCfg::default());
+        let p0 = p.plan(&a);
+        let p1 = p.plan_with_initial(&[Demand::new(2, 1, 512.0 * MB)], Some(&p0.link_load));
+        let mut seq = vec![0.0; t.links.len()];
+        for (i, s) in seq.iter_mut().enumerate() {
+            *s = p0.link_load[i] + p1.link_load[i];
+        }
+        let max_norm = |loads: &[f64]| {
+            loads
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| l / (t.link(i).cap_gbps * 1e9))
+                .fold(0.0f64, f64::max)
+        };
+        assert!(
+            max_norm(&joint.combined_link_load) <= max_norm(&seq) * 1.01,
+            "joint bottleneck {} worse than sequential {}",
+            max_norm(&joint.combined_link_load),
+            max_norm(&seq)
+        );
+        // both tenants spread multi-path
+        assert!(joint.per_tenant[&0].assignments[&(0, 1)].path_count() > 1);
+        assert!(joint.per_tenant[&1].assignments[&(2, 1)].path_count() > 1);
+    }
+
+    /// Weight scaling: λ is scaled per tenant, and conservation still
+    /// holds for extreme weight ratios.
+    #[test]
+    fn joint_weight_scaling_conserves() {
+        let t = Topology::paper();
+        let a = vec![Demand::new(0, 1, 512.0 * MB)];
+        let b = vec![Demand::new(2, 3, 512.0 * MB)];
+        let tenants = vec![
+            TenantDemands::new(0, 1.0, a.clone()),
+            TenantDemands::new(1, 4.0, b.clone()),
+        ];
+        let j = Planner::new(&t, PlannerCfg::default())
+            .plan_joint(&tenants, None, &caps(), None);
+        j.per_tenant[&0].validate(&t, &a).unwrap();
+        j.per_tenant[&1].validate(&t, &b).unwrap();
+    }
+
+    /// Incumbent seeding: a seeded pair keeps its current path unless a
+    /// challenger clearly wins (the anti-churn hysteresis).
+    #[test]
+    fn joint_respects_incumbent_seeds() {
+        let t = Topology::paper();
+        let demands = vec![Demand::new(0, 1, 8.0 * MB)];
+        let mut seeds = BTreeMap::new();
+        seeds.insert((0usize, 1usize), PathKind::IntraTwoHop { via: 2 });
+        let mut td = TenantDemands::new(0, 1.0, demands);
+        td.incumbent_kinds = Some(seeds);
+        let j = Planner::new(&t, PlannerCfg::default())
+            .plan_joint(&[td], None, &caps(), None);
+        let a = &j.per_tenant[&0].assignments[&(0, 1)];
+        // the seeded relay path carries bytes (it was not abandoned)
+        assert!(a
+            .parts
+            .iter()
+            .any(|(p, b)| p.kind == PathKind::IntraTwoHop { via: 2 } && *b > 0.0));
+    }
+
+    /// Differential endpoint bookkeeping: relay endpoints are the only
+    /// virtual slots a path consumes.
+    #[test]
+    fn relay_endpoints_are_differential() {
+        let t = Topology::paper();
+        let direct = crate::topology::path::candidates(&t, 0, 1, false).remove(0);
+        assert!(path_relay_endpoints(&t, &direct).is_empty());
+        let cands = crate::topology::path::candidates(&t, 0, 1, true);
+        let relay = cands
+            .iter()
+            .find(|p| matches!(p.kind, PathKind::IntraTwoHop { .. }))
+            .expect("relay candidate");
+        let eps = path_relay_endpoints(&t, relay);
+        assert_eq!(eps.len(), 2, "relay consumes its in and out aggregate");
+        let g = t.num_gpus();
+        assert!(eps[0] < g && eps[1] >= g);
+        // inter-node rail path: the rail-adjacent GPUs are relays
+        let inter = crate::topology::path::candidates(&t, 0, 5, true);
+        assert!(inter.iter().any(|p| !path_relay_endpoints(&t, p).is_empty()));
+    }
+}

@@ -2,17 +2,22 @@
 //! minimum-congestion routing via multiplicative-weights iterative
 //! approximation (Algorithm 1), the incremental execution-time
 //! [`replan`] entry point driving the monitor → replan → reroute loop,
-//! plus the validators used to check it — a Dinic max-flow bound and a
-//! brute-force exact IP for tiny instances.
+//! the multi-tenant [`joint`] solve (one shared load table across all
+//! live tenants, with per-tenant MWU weight scaling — the planner half
+//! of [`crate::orchestrator`]), plus the validators used to check it —
+//! a Dinic max-flow bound and a brute-force exact IP for tiny
+//! instances.
 
 pub mod cost;
 pub mod exact;
+pub mod joint;
 pub mod maxflow;
 pub mod mwu;
 pub mod plan;
 pub mod replan;
 
 pub use cost::{CostModel, CostShape};
+pub use joint::{JointPlan, TenantDemands};
 pub use mwu::{lower_bound_norm_load, Planner, PlannerCfg};
 pub use plan::{Assignment, Demand, Plan};
 pub use replan::{carry_plan, DrainCaps, ReplanCfg, ReplanOutcome};

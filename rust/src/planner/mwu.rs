@@ -99,7 +99,7 @@ impl<'a> Planner<'a> {
         self.topo
     }
 
-    fn candidates_for(&mut self, s: GpuId, d: GpuId, msg_bytes: f64) -> &[Path] {
+    pub(crate) fn candidates_for(&mut self, s: GpuId, d: GpuId, msg_bytes: f64) -> &[Path] {
         let multipath =
             self.cfg.multipath && msg_bytes > self.cfg.cost.multipath_min_bytes;
         let key = cache_key(self.topo.num_gpus(), s, d, multipath);
@@ -377,7 +377,7 @@ fn path_cost(shape: CostShape, sum_cost: bool, load: &[f64], c: &Cand) -> f64 {
 /// sweep always progresses. **Load-independent** — the property the
 /// parallel sweep's visit script rests on.
 #[inline]
-fn next_volume(r: f64, eps: f64, lambda: f64, n_cands: usize) -> f64 {
+pub(crate) fn next_volume(r: f64, eps: f64, lambda: f64, n_cands: usize) -> f64 {
     if r < eps || n_cands == 1 {
         r
     } else {

@@ -217,7 +217,12 @@ pub fn excess_over_plan(observed: &[f64], predicted: &[f64]) -> Vec<f64> {
 /// endpoint anchors ([`DrainCaps`]). Including the endpoint bounds is
 /// the churn guard: a reshuffle of endpoint-bound traffic shows no
 /// improvement here because none is physically available.
-fn drain_time_z(topo: &Topology, caps: &DrainCaps, loads: &[f64], background: &[f64]) -> f64 {
+pub(crate) fn drain_time_z(
+    topo: &Topology,
+    caps: &DrainCaps,
+    loads: &[f64],
+    background: &[f64],
+) -> f64 {
     let g = topo.num_gpus();
     let mut z = 0.0f64;
     let mut out = vec![0.0f64; g];
@@ -260,7 +265,7 @@ fn drain_time_z(topo: &Topology, caps: &DrainCaps, loads: &[f64], background: &[
 /// Pairs whose routing materially differs between two plans over the
 /// same pair set: a path kind appears/disappears, or a path's byte
 /// share moves by more than 1% of the pair total.
-fn diff_pairs(a: &Plan, b: &Plan) -> Vec<(GpuId, GpuId)> {
+pub(crate) fn diff_pairs(a: &Plan, b: &Plan) -> Vec<(GpuId, GpuId)> {
     let mut out = Vec::new();
     for (key, aa) in &a.assignments {
         let total = aa.total_bytes().max(1.0);

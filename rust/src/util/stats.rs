@@ -2,30 +2,21 @@
 //! index, and a fixed-bucket latency histogram. Used by the metrics
 //! layer, the bench harness, and the experiment drivers.
 
-/// Percentile with linear interpolation over a *sorted* slice.
-/// `q` in [0,100].
+/// Percentile over a *sorted* slice; `q` in [0,100].
+///
+/// Delegates to [`percentile_nearest_rank_sorted`]: since PR 5 the
+/// repo has ONE percentile semantics — exact nearest rank — so the
+/// interference report, the tail reports and the bench harness all
+/// agree on what "p99" means (an observed sample, never an
+/// interpolation). The pre-PR-4 linear-interpolation variant is gone.
 pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty(), "percentile of empty slice");
-    assert!((0.0..=100.0).contains(&q));
-    if sorted.len() == 1 {
-        return sorted[0];
-    }
-    let pos = q / 100.0 * (sorted.len() - 1) as f64;
-    let lo = pos.floor() as usize;
-    let hi = pos.ceil() as usize;
-    if lo == hi {
-        sorted[lo]
-    } else {
-        let frac = pos - lo as f64;
-        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
-    }
+    percentile_nearest_rank_sorted(sorted, q)
 }
 
-/// Percentile over an unsorted slice (copies + sorts).
+/// Percentile over an unsorted slice (copies + sorts); nearest-rank,
+/// like every other percentile in the repo ([`percentile_sorted`]).
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    percentile_sorted(&v, q)
+    percentile_nearest_rank(xs, q)
 }
 
 /// Exact **nearest-rank** percentile over a *sorted* slice: the
@@ -201,10 +192,26 @@ mod tests {
         assert!((percentile(&v, 25.0) - 2.0).abs() < 1e-12);
     }
 
+    /// The unification contract: `percentile` / `percentile_sorted`
+    /// ARE the nearest-rank helpers, for every rank and input — the
+    /// interference report and the tail reports share one semantics.
     #[test]
-    fn percentile_interpolates() {
+    fn percentile_is_nearest_rank_everywhere() {
         let v = [0.0, 10.0];
-        assert!((percentile(&v, 75.0) - 7.5).abs() < 1e-12);
+        // nearest rank returns an observed sample, never 7.5
+        assert_eq!(percentile(&v, 75.0), 10.0);
+        let samples: Vec<f64> = (0..37).map(|i| (i * 7 % 37) as f64 * 1.5).collect();
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 1.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0] {
+            let p = percentile(&samples, q);
+            assert_eq!(p.to_bits(), percentile_nearest_rank(&samples, q).to_bits());
+            assert_eq!(
+                percentile_sorted(&sorted, q).to_bits(),
+                percentile_nearest_rank_sorted(&sorted, q).to_bits()
+            );
+            assert!(samples.contains(&p), "p{q} = {p} not an observed sample");
+        }
     }
 
     /// Textbook nearest-rank example (ISO 2602 style): ranks are exact

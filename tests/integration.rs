@@ -351,6 +351,143 @@ fn replan_loop_soak_over_shifting_hot_rows() {
     assert!(replans_total >= 4, "loop barely fired: {replans_total} replans");
 }
 
+/// PR-5 anchor: a 1-job stream with joint planning disabled is
+/// bit-identical to the PR-2 `ReplanExecutor` — with the per-tenant
+/// replan loop ENABLED as well as on the static (disabled) path. The
+/// orchestrator generalizes the single-job executor; this pins that it
+/// never diverges from it.
+#[test]
+fn single_tenant_stream_matches_replan_executor_bitwise() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    let tcfg = nimble::orchestrator::TenancyCfg {
+        jobs: 1,
+        joint: false,
+        ..nimble::orchestrator::TenancyCfg::default()
+    };
+    for enable in [false, true] {
+        let rcfg = ReplanCfg { enable, cadence_s: 5.0e-4, ..ReplanCfg::default() };
+        let jobs = nimble::orchestrator::job_stream(&topo, &tcfg);
+        let run = nimble::orchestrator::MultiTenantExecutor::new(
+            &topo,
+            params.clone(),
+            PlannerCfg::default(),
+            rcfg.clone(),
+            tcfg.clone(),
+        )
+        .execute(jobs.clone());
+        let demands = jobs[0].demands(&topo);
+        let incumbent = Planner::new(&topo, PlannerCfg::default()).plan(&demands);
+        let reference =
+            ReplanExecutor::new(&topo, params.clone(), PlannerCfg::default(), rcfg)
+                .execute(&incumbent, &demands);
+        assert_eq!(
+            run.makespan_s.to_bits(),
+            reference.report.makespan_s.to_bits(),
+            "makespan diverged (enable={enable})"
+        );
+        assert_eq!(run.sim.link_bytes.len(), reference.sim.link_bytes.len());
+        for (i, (a, b)) in
+            run.sim.link_bytes.iter().zip(&reference.sim.link_bytes).enumerate()
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "link {i} bytes (enable={enable})");
+        }
+        assert_eq!(run.sim.flows.len(), reference.sim.flows.len());
+        for (a, b) in run.sim.flows.iter().zip(&reference.sim.flows) {
+            assert_eq!(a.start_t.to_bits(), b.start_t.to_bits());
+            assert_eq!(a.finish_t.to_bits(), b.finish_t.to_bits());
+            assert_eq!(a.bytes.to_bits(), b.bytes.to_bits());
+        }
+        assert_eq!(run.replans, reference.replans, "replans (enable={enable})");
+        assert_eq!(run.preemptions, reference.preemptions);
+    }
+}
+
+/// PR-5 determinism: the full 8-job serve stream is byte-identical run
+/// to run AND across planner thread counts {1, 8}, in both joint and
+/// independent modes (the acceptance criterion's thread clause).
+#[test]
+fn serve_stream_byte_identical_across_runs_and_threads() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    for joint in [true, false] {
+        let tcfg = nimble::orchestrator::TenancyCfg {
+            joint,
+            ..nimble::orchestrator::TenancyCfg::default()
+        };
+        let rcfg = ReplanCfg { enable: true, ..ReplanCfg::default() };
+        let run = |threads: usize| {
+            let pcfg = PlannerCfg { threads, ..PlannerCfg::default() };
+            let jobs = nimble::orchestrator::job_stream(&topo, &tcfg);
+            nimble::orchestrator::MultiTenantExecutor::new(
+                &topo,
+                params.clone(),
+                pcfg,
+                rcfg.clone(),
+                tcfg.clone(),
+            )
+            .execute(jobs)
+        };
+        let a = run(1);
+        let b = run(1);
+        let c = run(8);
+        for (name, other) in [("rerun", &b), ("threads=8", &c)] {
+            assert_eq!(
+                a.makespan_s.to_bits(),
+                other.makespan_s.to_bits(),
+                "{name} makespan diverged (joint={joint})"
+            );
+            assert_eq!(a.replans, other.replans, "{name} (joint={joint})");
+            assert_eq!(a.preemptions, other.preemptions);
+            for (x, y) in a.sim.link_bytes.iter().zip(&other.sim.link_bytes) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{name} link bytes");
+            }
+            assert_eq!(a.tenants.len(), other.tenants.len());
+            for (x, y) in a.tenants.iter().zip(&other.tenants) {
+                assert_eq!(x.goodput_gbps.to_bits(), y.goodput_gbps.to_bits());
+                assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits());
+                assert_eq!(x.p99_lat_s.to_bits(), y.p99_lat_s.to_bits());
+                assert_eq!(x.peak_reassembly, y.peak_reassembly);
+            }
+        }
+    }
+}
+
+/// PR-5 reroute-under-contention: the default joint stream preempts
+/// mid-flight (the executor asserts every tenant's reassembly ordering
+/// on each push — reaching the end IS the invariant check), buffers
+/// out-of-order chunks, and every tenant's stream drains completely.
+#[test]
+fn serve_reroutes_under_contention_keep_tenant_ordering() {
+    let topo = Topology::paper();
+    let tcfg = nimble::orchestrator::TenancyCfg::default();
+    let jobs = nimble::orchestrator::job_stream(&topo, &tcfg);
+    let run = nimble::orchestrator::MultiTenantExecutor::new(
+        &topo,
+        FabricParams::default(),
+        PlannerCfg::default(),
+        ReplanCfg::default(),
+        tcfg,
+    )
+    .execute(jobs);
+    assert!(run.replans >= 1, "joint rebalance never fired");
+    assert!(run.preemptions >= 1, "no flow was preempted");
+    assert!(run.peak_reassembly >= 1, "no out-of-order buffering observed");
+    for t in &run.tenants {
+        assert!(t.goodput_gbps > 0.0, "tenant {} starved", t.id);
+        assert!(t.finish_s > t.admit_s, "tenant {} never flew", t.id);
+    }
+    // payload conservation across the shared fabric: every tenant's
+    // delivered flow bytes sum to its payload (reassembly already
+    // asserted chunk-exactness inside execute)
+    let delivered: f64 = run.sim.flows.iter().map(|f| f.bytes).sum();
+    assert!(
+        (delivered - run.payload_bytes).abs() < 64.0,
+        "delivered {delivered} vs payload {}",
+        run.payload_bytes
+    );
+}
+
 /// Balanced-parity integration check across all engines (paper
 /// abstract: "matching baseline performance under balanced traffic").
 #[test]
