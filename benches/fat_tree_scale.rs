@@ -1,0 +1,53 @@
+//! Tiered-fabric scale bench: fly the seeded cross-pod skewed
+//! All-to-Allv (per-rank hot peers half the cluster away — the skew
+//! that stresses the oversubscribed core, DESIGN.md §12) on two-tier
+//! fat-trees and report planner/simulator hot-path numbers plus the
+//! planned-vs-ECMP goodput ratio — the adversary comparison the
+//! tiered generalization ships under.
+//!
+//! Every row emits one machine-readable JSON line
+//! (`{"exp":"scale","topo":"fat-tree",…}`) so the trajectory is
+//! trackable across PRs by grepping bench logs.
+
+use nimble::exp::scale;
+use nimble::exp::MB;
+use nimble::fabric::FabricParams;
+use nimble::planner::PlannerCfg;
+
+fn main() {
+    let payload = 16.0 * MB;
+    let oversub = 2.0;
+    let threads = std::thread::available_parallelism().map_or(1, |n| n.get().min(8));
+    let params = FabricParams::default();
+    let pcfg = PlannerCfg { threads, ..PlannerCfg::default() };
+    println!(
+        "== fat-tree scale sweep: skewed All-to-Allv, {:.0} MB/rank, {oversub}:1 core ==",
+        payload / MB
+    );
+    let rows = scale::sweep(
+        &[8, 16, 32, 64],
+        payload,
+        &params,
+        &pcfg,
+        false,
+        scale::ScaleTopo::FatTree { oversub },
+    );
+    println!("{}", scale::render(&rows, payload, threads));
+    for r in &rows {
+        println!("{}", r.json_line());
+    }
+    // the acceptance gate of the tiered generalization: at 64 nodes the
+    // planned multi-path routing must not lose to hash striping
+    let big = rows.iter().find(|r| r.nodes == 64).expect("64-node row");
+    let ratio = big.planned_over_ecmp().expect("ecmp run present");
+    println!(
+        "64-node planned vs ECMP: {ratio:.2}x ({:.1} vs {:.1} GB/s, core uplink util {:.2})",
+        big.goodput_gbps,
+        big.ecmp_goodput_gbps.unwrap_or(0.0),
+        big.core_uplink_util.unwrap_or(0.0),
+    );
+    assert!(
+        ratio >= 1.0,
+        "tiered regression: planned routing only {ratio:.2}x of ECMP at 64 nodes"
+    );
+}

@@ -19,7 +19,8 @@ fn main() {
     let params = FabricParams::default();
     let pcfg = PlannerCfg { threads, ..PlannerCfg::default() };
     println!("== scale sweep: skewed All-to-Allv, {:.0} MB/rank ==", payload / MB);
-    let rows = scale::sweep(&[1, 2, 4, 8], payload, &params, &pcfg, true);
+    let rows =
+        scale::sweep(&[1, 2, 4, 8], payload, &params, &pcfg, true, scale::ScaleTopo::Flat);
     println!("{}", scale::render(&rows, payload, threads));
     // machine-readable perf trajectory (one line per config)
     for r in &rows {

@@ -4,6 +4,7 @@
 //! timing, so engines differ *only* in routing policy and transfer
 //! mode — exactly the paper's experimental control.
 
+pub mod ecmp_hash;
 pub mod mpi_like;
 pub mod nccl_like;
 pub mod single_path;
@@ -49,6 +50,7 @@ pub fn run_round(
     CommReport::from_sim(router.name(), topo, &sim, payload)
 }
 
+pub use ecmp_hash::EcmpHash;
 pub use mpi_like::MpiLike;
 pub use nccl_like::NcclLike;
 pub use single_path::SinglePath;

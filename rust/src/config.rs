@@ -70,7 +70,36 @@ impl Config {
                  (NIC r attaches to GPU r)"
             ));
         }
-        let mut topo = Topology::build(nodes, gpus, nics, nvlink, rail, true);
+        let kind = doc
+            .get("topology", "kind")
+            .map(|v| v.as_str().map(str::to_string))
+            .unwrap_or(Some("flat".to_string()));
+        let oversub = doc.get_f64("topology", "oversubscription").unwrap_or(2.0);
+        let spines = doc
+            .get_usize("topology", "spines_per_rail")
+            .unwrap_or(crate::topology::SPINES_PER_RAIL);
+        let mut topo = match kind.as_deref() {
+            Some("flat") => Topology::build(nodes, gpus, nics, nvlink, rail, true),
+            Some("fat-tree") => {
+                if !(oversub.is_finite() && oversub >= 1.0) {
+                    return Err(format!(
+                        "topology.oversubscription must be a finite ratio >= 1.0: {oversub}"
+                    ));
+                }
+                if spines == 0 || spines > 64 {
+                    return Err(format!(
+                        "topology.spines_per_rail out of [1,64]: {spines}"
+                    ));
+                }
+                Topology::build_fat_tree(nodes, gpus, nics, nvlink, rail, oversub, spines)
+            }
+            _ => {
+                return Err(format!(
+                    "topology.kind must be \"flat\" or \"fat-tree\", got {:?}",
+                    doc.get("topology", "kind")
+                ))
+            }
+        };
         if doc.get_bool("topology", "nvswitch").unwrap_or(false) {
             topo.nvswitch = true;
         }
@@ -292,6 +321,45 @@ mod tests {
         assert_eq!(c.planner.threads, 8);
         // default stays serial (the pre-threads code path)
         assert_eq!(Config::default().planner.threads, 1);
+    }
+
+    /// `[topology] kind` selects the fabric shape; flat stays the
+    /// inert default so every existing config replays bit-identically.
+    #[test]
+    fn topology_kind_section() {
+        // default + explicit flat: no tier, no switches
+        for text in ["", "[topology]\nkind = \"flat\"\n"] {
+            let c = Config::from_toml(text).unwrap();
+            assert!(c.topology.tier.is_none());
+            assert_eq!(c.topology.num_switches(), 0);
+        }
+        let c = Config::from_toml(
+            "[topology]\nkind = \"fat-tree\"\nnodes = 8\ngpus_per_node = 8\n\
+             nics_per_node = 4\noversubscription = 2.0\nspines_per_rail = 2\n",
+        )
+        .unwrap();
+        let tier = c.topology.tier.as_ref().expect("tiered");
+        assert_eq!(tier.pods, 2);
+        assert_eq!(tier.spines_per_rail, 2);
+        assert!((tier.oversub - 2.0).abs() < 1e-12);
+        assert_eq!(c.topology.num_gpus(), 64);
+    }
+
+    #[test]
+    fn topology_kind_invalid_values_rejected() {
+        assert!(Config::from_toml("[topology]\nkind = \"torus\"\n").is_err());
+        assert!(Config::from_toml(
+            "[topology]\nkind = \"fat-tree\"\noversubscription = 0.5\n"
+        )
+        .is_err());
+        assert!(Config::from_toml(
+            "[topology]\nkind = \"fat-tree\"\noversubscription = nan\n"
+        )
+        .is_err());
+        assert!(Config::from_toml(
+            "[topology]\nkind = \"fat-tree\"\nspines_per_rail = 0\n"
+        )
+        .is_err());
     }
 
     #[test]

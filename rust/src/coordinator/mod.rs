@@ -14,6 +14,7 @@ pub mod channels;
 pub mod monitor;
 pub mod reassembly;
 pub mod replan;
+pub(crate) mod reroute;
 
 pub use replan::{ReplanExecutor, ReplanRun};
 
@@ -134,7 +135,14 @@ impl<'a> Orchestrator<'a> {
             // one send channel per destination peer; relays get forward
             // channels — exercising §IV-D exclusivity
             for (path, bytes) in &a.parts {
-                let first_peer = self.topo.link(path.hops[0]).dst;
+                // first GPU the stream lands on: switch vertices on
+                // tiered fabrics are not channel peers (no SM there)
+                let first_peer = path
+                    .hops
+                    .iter()
+                    .map(|&h| self.topo.link(h).dst)
+                    .find(|&v| !self.topo.is_switch(v))
+                    .unwrap_or(path.dst);
                 self.channels.enqueue(
                     s,
                     first_peer,

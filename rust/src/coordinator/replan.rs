@@ -34,6 +34,9 @@
 
 use super::monitor::WindowedMonitor;
 use super::reassembly::{ChunkArrival, ReassemblyTable};
+use super::reroute::{
+    attach_reissues, pool_split_counts, preempt_and_pool, PartState, Reissue,
+};
 use crate::fabric::backend::{make_backend, FabricBackend, TailStats};
 use crate::fabric::fluid::{Flow, SimResult};
 use crate::fabric::FabricParams;
@@ -83,16 +86,6 @@ pub struct ReplanRun {
     /// Tail-latency / queue-depth observations, when the backend
     /// records them (packet backend only; `None` on the fluid engine).
     pub tail: Option<TailStats>,
-}
-
-/// Per-path chunk-sequence bookkeeping for one (src, dst) stream.
-struct PartState {
-    /// Engine flow index carrying this part.
-    flow: usize,
-    /// Chunk sequence numbers assigned to this path (ascending).
-    seqs: Vec<u64>,
-    /// Prefix of `seqs` already pushed into the reassembly queue.
-    delivered: usize,
 }
 
 /// Drives rounds of demands through the monitor → replan → reroute
@@ -216,12 +209,6 @@ impl<'a> ReplanExecutor<'a> {
                     // changed pair's re-issued flows, then add_flows once
                     // (each call rebuilds the full constraint structure)
                     let mut epoch_batch: Vec<Flow> = Vec::new();
-                    struct Reissue {
-                        pair: (GpuId, GpuId),
-                        batch_off: usize,
-                        counts: Vec<usize>,
-                        pool: Vec<u64>,
-                    }
                     let mut reissues: Vec<Reissue> = Vec::new();
                     for &pair in &out.changed_pairs {
                         let Some(newa) = out.plan.assignments.get(&pair) else {
@@ -230,62 +217,29 @@ impl<'a> ReplanExecutor<'a> {
                         let Some(parts) = streams.get_mut(&pair) else { continue };
                         // preempt live parts; release their completed
                         // chunk prefixes; pool the undelivered seqs
-                        let mut pool: Vec<u64> = Vec::new();
-                        for ps in parts.iter_mut() {
-                            if !engine.is_live(ps.flow) {
-                                continue;
-                            }
-                            let moved = engine.moved_bytes(ps.flow);
-                            engine.preempt(ps.flow);
-                            preempted_here += 1;
-                            let done = ((moved / chunk).floor() as usize)
-                                .clamp(ps.delivered, ps.seqs.len());
-                            for &s in &ps.seqs[ps.delivered..done] {
-                                reass
-                                    .push(
-                                        pair.0,
-                                        pair.1,
-                                        ChunkArrival { seq: s, bytes: chunk as u64 },
-                                    )
-                                    .expect("ordering invariant violated");
-                            }
-                            pool.extend_from_slice(&ps.seqs[done..]);
-                            ps.seqs.truncate(done);
-                            ps.delivered = done;
-                        }
+                        let (pool, n_pre) = preempt_and_pool(
+                            engine.as_mut(),
+                            &mut reass,
+                            pair,
+                            parts,
+                            chunk,
+                            &mut |_| {},
+                        );
+                        preempted_here += n_pre;
                         // stage the residual on the new paths; the pooled
                         // seqs are split across them by byte share
                         let total_new = newa.total_bytes().max(1.0);
-                        let n_pool = pool.len();
                         let batch_off = epoch_batch.len();
-                        let mut counts: Vec<usize> = Vec::new();
-                        let mut allotted = 0usize;
+                        let mut shares: Vec<f64> = Vec::new();
                         for (path, bytes) in &newa.parts {
                             epoch_batch.push(Flow::new(path.clone(), *bytes).at(now));
-                            let want =
-                                ((bytes / total_new) * n_pool as f64).round() as usize;
-                            let n = want.min(n_pool - allotted);
-                            counts.push(n);
-                            allotted += n;
+                            shares.push(*bytes);
                         }
-                        if let Some(last) = counts.last_mut() {
-                            *last += n_pool - allotted;
-                        }
+                        let counts = pool_split_counts(&shares, total_new, pool.len());
                         reissues.push(Reissue { pair, batch_off, counts, pool });
                     }
                     let first = engine.add_flows(&epoch_batch);
-                    for r in reissues {
-                        let parts = streams.get_mut(&r.pair).expect("pair staged");
-                        let mut off = 0usize;
-                        for (j, &n) in r.counts.iter().enumerate() {
-                            parts.push(PartState {
-                                flow: first + r.batch_off + j,
-                                seqs: r.pool[off..off + n].to_vec(),
-                                delivered: 0,
-                            });
-                            off += n;
-                        }
-                    }
+                    attach_reissues(&mut streams, first, reissues);
                     preemptions += preempted_here;
                     // merge the adopted splits into the full-round plan:
                     // pairs that already drained keep their original

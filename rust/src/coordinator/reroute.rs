@@ -1,0 +1,152 @@
+//! Shared mid-flight chunk-reroute bookkeeping, used by both the
+//! single-job [`super::replan::ReplanExecutor`] and the multi-tenant
+//! [`crate::orchestrator`] executor (which previously carried a
+//! duplicated copy of this logic).
+//!
+//! The ordering contract across a reroute (paper §IV): a pair's chunks
+//! keep their original sequence numbers; a preempted path's
+//! *undelivered* sequence numbers are pooled and redistributed over
+//! the new paths by byte share; every path still delivers its own
+//! chunks in ascending order; the receiver's [`ReassemblyTable`]
+//! releases data strictly in sequence. These helpers implement exactly
+//! the three steps both executors perform — preempt-and-pool, split
+//! the pool, attach the re-issued parts — with float/int arithmetic in
+//! the original order so both call sites stay bit-identical.
+
+use crate::coordinator::reassembly::{ChunkArrival, ReassemblyTable};
+use crate::fabric::backend::FabricBackend;
+use crate::topology::GpuId;
+use std::collections::BTreeMap;
+
+/// Per-path chunk-sequence bookkeeping for one (src, dst) stream part.
+pub(crate) struct PartState {
+    /// Engine flow index carrying this part.
+    pub flow: usize,
+    /// Chunk sequence numbers assigned to this path (ascending).
+    pub seqs: Vec<u64>,
+    /// Prefix of `seqs` already pushed into the reassembly queue.
+    pub delivered: usize,
+}
+
+/// One pair's staged re-issue: where its flows sit in the shared epoch
+/// batch and how the pooled sequence numbers split across them.
+pub(crate) struct Reissue {
+    pub pair: (GpuId, GpuId),
+    /// Absolute offset of the pair's first flow in the epoch batch.
+    pub batch_off: usize,
+    /// Pool slice sizes per re-issued flow (sums to `pool.len()`).
+    pub counts: Vec<usize>,
+    pub pool: Vec<u64>,
+}
+
+/// Preempt a pair's live parts: release each part's *completed* chunk
+/// prefix into reassembly, pool the undelivered sequence numbers, and
+/// report every preempted engine flow through `on_preempt`. Returns
+/// `(pooled seqs, flows preempted)`.
+pub(crate) fn preempt_and_pool(
+    engine: &mut dyn FabricBackend,
+    reass: &mut ReassemblyTable,
+    pair: (GpuId, GpuId),
+    parts: &mut [PartState],
+    chunk: f64,
+    on_preempt: &mut dyn FnMut(usize),
+) -> (Vec<u64>, usize) {
+    let mut pool: Vec<u64> = Vec::new();
+    let mut preempted = 0usize;
+    for ps in parts.iter_mut() {
+        if !engine.is_live(ps.flow) {
+            continue;
+        }
+        let moved = engine.moved_bytes(ps.flow);
+        engine.preempt(ps.flow);
+        on_preempt(ps.flow);
+        preempted += 1;
+        let done = ((moved / chunk).floor() as usize).clamp(ps.delivered, ps.seqs.len());
+        for &s in &ps.seqs[ps.delivered..done] {
+            reass
+                .push(pair.0, pair.1, ChunkArrival { seq: s, bytes: chunk as u64 })
+                .expect("ordering invariant violated");
+        }
+        pool.extend_from_slice(&ps.seqs[done..]);
+        ps.seqs.truncate(done);
+        ps.delivered = done;
+    }
+    (pool, preempted)
+}
+
+/// Split `n_pool` pooled sequence numbers across re-issued flows in
+/// proportion to their byte shares (round-to-nearest, clamped to the
+/// remainder; the last flow absorbs any residue so the counts always
+/// sum to `n_pool`).
+pub(crate) fn pool_split_counts(byte_shares: &[f64], total: f64, n_pool: usize) -> Vec<usize> {
+    let mut counts: Vec<usize> = Vec::with_capacity(byte_shares.len());
+    let mut allotted = 0usize;
+    for bytes in byte_shares {
+        let want = ((bytes / total) * n_pool as f64).round() as usize;
+        let n = want.min(n_pool - allotted);
+        counts.push(n);
+        allotted += n;
+    }
+    if let Some(last) = counts.last_mut() {
+        *last += n_pool - allotted;
+    }
+    counts
+}
+
+/// Once the epoch batch has registered with the engine at base index
+/// `first`, attach each staged re-issue's parts to its stream.
+pub(crate) fn attach_reissues(
+    streams: &mut BTreeMap<(GpuId, GpuId), Vec<PartState>>,
+    first: usize,
+    reissues: Vec<Reissue>,
+) {
+    for r in reissues {
+        let parts = streams.get_mut(&r.pair).expect("pair staged");
+        let mut off = 0usize;
+        for (j, &n) in r.counts.iter().enumerate() {
+            parts.push(PartState {
+                flow: first + r.batch_off + j,
+                seqs: r.pool[off..off + n].to_vec(),
+                delivered: 0,
+            });
+            off += n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_split_matches_byte_shares() {
+        // 10 seqs over shares 60/30/10 of 100 → 6/3/1
+        assert_eq!(pool_split_counts(&[60.0, 30.0, 10.0], 100.0, 10), vec![6, 3, 1]);
+        // rounding residue lands on the last flow
+        assert_eq!(pool_split_counts(&[1.0, 1.0, 1.0], 3.0, 10), vec![3, 3, 4]);
+        // empty pool → all zeros
+        assert_eq!(pool_split_counts(&[5.0, 5.0], 10.0, 0), vec![0, 0]);
+        // a single share takes everything
+        assert_eq!(pool_split_counts(&[7.0], 7.0, 4), vec![4]);
+    }
+
+    #[test]
+    fn attach_appends_in_batch_order() {
+        let mut streams: BTreeMap<(GpuId, GpuId), Vec<PartState>> = BTreeMap::new();
+        streams.insert((0, 1), Vec::new());
+        let r = Reissue {
+            pair: (0, 1),
+            batch_off: 2,
+            counts: vec![2, 1],
+            pool: vec![7, 8, 9],
+        };
+        attach_reissues(&mut streams, 10, vec![r]);
+        let parts = &streams[&(0, 1)];
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].flow, 12);
+        assert_eq!(parts[0].seqs, vec![7, 8]);
+        assert_eq!(parts[1].flow, 13);
+        assert_eq!(parts[1].seqs, vec![9]);
+        assert!(parts.iter().all(|p| p.delivered == 0));
+    }
+}

@@ -16,16 +16,44 @@
 //! PRs (`benches/scale_sweep.rs` prints them by default).
 
 use super::MB;
+use crate::baselines::{EcmpHash, Router};
 use crate::coordinator::replan::ReplanExecutor;
 use crate::fabric::fluid::{Flow, FluidSim, SimEngine, SolverKind};
 use crate::fabric::FabricParams;
 use crate::metrics::Table;
-use crate::planner::{Demand, Plan, Planner, PlannerCfg, ReplanCfg};
+use crate::planner::{Demand, Plan, Planner, PlannerCfg, ReplanCfg, SharedConstraints};
 use crate::topology::Topology;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::workloads::skew::hotspot_alltoallv_jittered;
+use crate::workloads::skew::{hotspot_alltoallv_jittered, shifted_hotspot_alltoallv};
 use std::time::Instant;
+
+/// Which fabric shape the sweep instantiates at each node count.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScaleTopo {
+    /// Flat rail-only cluster ([`Topology::cluster`]) — the historical
+    /// sweep, kept bit-identical.
+    Flat,
+    /// Two-tier leaf–spine fat-tree ([`Topology::fat_tree`]) with the
+    /// given core oversubscription ratio.
+    FatTree { oversub: f64 },
+}
+
+impl ScaleTopo {
+    pub fn build(&self, nodes: usize) -> Topology {
+        match *self {
+            ScaleTopo::Flat => Topology::cluster(nodes),
+            ScaleTopo::FatTree { oversub } => Topology::fat_tree(nodes, oversub),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScaleTopo::Flat => "flat",
+            ScaleTopo::FatTree { .. } => "fat-tree",
+        }
+    }
+}
 
 /// Hot fraction of the skewed All-to-Allv driving the sweep.
 pub const HOTSPOT_RATIO: f64 = 0.5;
@@ -35,12 +63,38 @@ pub const HOTSPOT_RATIO: f64 = 0.5;
 /// completions and understate per-event solver cost).
 pub const JITTER_SEED: u64 = 0x5CA1E;
 
-/// The deterministic demand set for one scale point.
+/// The deterministic demand set for one flat scale point.
 pub fn scale_demands(topo: &Topology, payload_bytes: f64) -> Vec<Demand> {
     let mut rng = Rng::new(JITTER_SEED);
     let (_, demands) =
         hotspot_alltoallv_jittered(topo, payload_bytes, HOTSPOT_RATIO, &mut rng);
     demands
+}
+
+/// The deterministic demand set for one tiered scale point: the skew
+/// puts every rank's hot column on the same-local GPU half the cluster
+/// away, so the hot traffic crosses the oversubscribed core instead of
+/// piling onto one receiver NIC. A single-sink hotspot is bounded by
+/// the hot node's ingress — a constraint no routing scheme can steer
+/// around, which makes planned and ECMP goodput tie within noise and
+/// tells us nothing about the core (DESIGN.md §12). Same
+/// [`JITTER_SEED`] ±10% jitter as the flat sweep.
+pub fn scale_demands_tiered(topo: &Topology, payload_bytes: f64) -> Vec<Demand> {
+    let mut rng = Rng::new(JITTER_SEED);
+    let mut demands =
+        shifted_hotspot_alltoallv(topo, payload_bytes, HOTSPOT_RATIO, topo.nodes / 2);
+    for d in demands.iter_mut() {
+        d.bytes *= rng.range_f64(0.9, 1.1);
+    }
+    demands
+}
+
+/// Demand selection shared by [`run_one`] and the `--check` anchors.
+pub fn demands_for(topo_kind: ScaleTopo, topo: &Topology, payload_bytes: f64) -> Vec<Demand> {
+    match topo_kind {
+        ScaleTopo::Flat => scale_demands(topo, payload_bytes),
+        ScaleTopo::FatTree { .. } => scale_demands_tiered(topo, payload_bytes),
+    }
 }
 
 /// One scale point's measurements.
@@ -65,6 +119,14 @@ pub struct ScaleRow {
     pub makespan_s: f64,
     /// Aggregate goodput of the round (GB/s).
     pub goodput_gbps: f64,
+    /// Fabric shape label ("flat" | "fat-tree").
+    pub topo: &'static str,
+    /// Goodput of the ECMP hash-striping adversary on the identical
+    /// demand set (tiered sweeps only).
+    pub ecmp_goodput_gbps: Option<f64>,
+    /// Fraction of the planned round the busiest leaf's core-uplink
+    /// aggregate is busy (tiered sweeps only).
+    pub core_uplink_util: Option<f64>,
 }
 
 impl ScaleRow {
@@ -81,6 +143,11 @@ impl ScaleRow {
         self.reference_s.map(|s| s / self.incremental_s.max(1e-12))
     }
 
+    /// Planned-over-ECMP goodput ratio (tiered sweeps only).
+    pub fn planned_over_ecmp(&self) -> Option<f64> {
+        self.ecmp_goodput_gbps.map(|e| self.goodput_gbps / e.max(1e-12))
+    }
+
     /// Machine-readable record for cross-PR perf tracking.
     pub fn json_line(&self) -> String {
         let mut fields = vec![
@@ -95,10 +162,19 @@ impl ScaleRow {
             ("plan_us", Json::num(self.plan_s * 1e6)),
             ("sim_ms", Json::num(self.incremental_s * 1e3)),
             ("goodput_gbps", Json::num(self.goodput_gbps)),
+            ("topo", Json::str(self.topo)),
         ];
         if let (Some(r), Some(sp)) = (self.reference_s, self.speedup()) {
             fields.push(("reference_sim_ms", Json::num(r * 1e3)));
             fields.push(("speedup_vs_reference", Json::num(sp)));
+        }
+        if let (Some(e), Some(ratio)) = (self.ecmp_goodput_gbps, self.planned_over_ecmp())
+        {
+            fields.push(("ecmp_goodput_gbps", Json::num(e)));
+            fields.push(("planned_over_ecmp", Json::num(ratio)));
+        }
+        if let Some(u) = self.core_uplink_util {
+            fields.push(("core_uplink_util", Json::num(u)));
         }
         Json::obj(fields).to_string_compact()
     }
@@ -115,22 +191,24 @@ pub fn plan_flows(plan: &Plan) -> Vec<Flow> {
 }
 
 /// Run one scale point: plan and fly a skewed All-to-Allv
-/// (`payload_bytes` per rank, [`HOTSPOT_RATIO`] toward rank 0) on
-/// `nodes` cluster nodes, under the given fabric calibration and
-/// planner configuration (the CLI threads `--config` through, like
-/// every other subcommand). With `with_reference`, the identical flow
-/// set is re-simulated under the reference solver and the two
-/// trajectories are asserted bit-identical before the timing ratio is
-/// reported.
+/// (`payload_bytes` per rank, [`HOTSPOT_RATIO`] hot fraction; one
+/// seeded hot sink on flat sweeps, cross-pod hot peers on tiered
+/// sweeps — see [`demands_for`]) on `nodes` cluster nodes, under the
+/// given fabric calibration and planner configuration (the CLI threads
+/// `--config` through, like every other subcommand). With
+/// `with_reference`, the identical flow set is re-simulated under the
+/// reference solver and the two trajectories are asserted
+/// bit-identical before the timing ratio is reported.
 pub fn run_one(
     nodes: usize,
     payload_bytes: f64,
     params: &FabricParams,
     planner_cfg: &PlannerCfg,
     with_reference: bool,
+    topo_kind: ScaleTopo,
 ) -> ScaleRow {
-    let topo = Topology::cluster(nodes);
-    let demands = scale_demands(&topo, payload_bytes);
+    let topo = topo_kind.build(nodes);
+    let demands = demands_for(topo_kind, &topo, payload_bytes);
     let mut planner = Planner::new(&topo, planner_cfg.clone());
     let plan = planner.plan(&demands);
     plan.validate(&topo, &demands).expect("scale plan invalid");
@@ -159,6 +237,25 @@ pub fn run_one(
     };
 
     let payload_total: f64 = demands.iter().map(|d| d.bytes).sum();
+    // tiered rows carry the adversary comparison: the ECMP hash-striper
+    // flies the identical demand set through the identical fluid fabric
+    let (ecmp_goodput_gbps, core_uplink_util) = match topo_kind {
+        ScaleTopo::Flat => (None, None),
+        ScaleTopo::FatTree { .. } => {
+            let ecmp_flows = EcmpHash::new().route_flows(&topo, &demands);
+            let ecmp_sim = FluidSim::new(&topo, params.clone()).run(&ecmp_flows);
+            let shared = SharedConstraints::of(&topo);
+            let util = shared
+                .uplink_norm_loads(&plan.link_load)
+                .into_iter()
+                .fold(0.0f64, f64::max)
+                / sim.makespan.max(1e-12);
+            (
+                Some(payload_total / ecmp_sim.makespan.max(1e-12) / 1e9),
+                Some(util),
+            )
+        }
+    };
     ScaleRow {
         nodes,
         gpus: topo.num_gpus(),
@@ -171,6 +268,9 @@ pub fn run_one(
         reference_s,
         makespan_s: sim.makespan,
         goodput_gbps: payload_total / sim.makespan.max(1e-12) / 1e9,
+        topo: topo_kind.label(),
+        ecmp_goodput_gbps,
+        core_uplink_util,
     }
 }
 
@@ -183,9 +283,10 @@ pub fn check_static_bit_identity(
     payload_bytes: f64,
     params: &FabricParams,
     planner_cfg: &PlannerCfg,
+    topo_kind: ScaleTopo,
 ) -> f64 {
-    let topo = Topology::cluster(nodes);
-    let demands = scale_demands(&topo, payload_bytes);
+    let topo = topo_kind.build(nodes);
+    let demands = demands_for(topo_kind, &topo, payload_bytes);
     let plan = Planner::new(&topo, planner_cfg.clone()).plan(&demands);
     let direct = FluidSim::new(&topo, params.clone()).run(&plan_flows(&plan));
     let run = ReplanExecutor::new(
@@ -205,6 +306,39 @@ pub fn check_static_bit_identity(
     direct.makespan
 }
 
+/// The tiered acceptance anchor (`--check` on fat-tree sweeps): under
+/// the seeded cross-pod skewed All-to-Allv, planned multi-path routing
+/// must deliver at least the ECMP hash-striper's aggregate goodput.
+/// The margin comes from the core: the planner balances spine links
+/// exactly while ECMP's hashed spine picks collide. Payloads well
+/// above the multipath threshold (≥ 16 MB/rank; the CLI default is
+/// 64 MB) keep the hot columns multi-path eligible — far below it the
+/// comparison degenerates into per-flow saturation-efficiency noise.
+/// Returns `(planned_gbps, ecmp_gbps)`.
+pub fn check_planned_beats_ecmp(
+    nodes: usize,
+    payload_bytes: f64,
+    oversub: f64,
+    params: &FabricParams,
+    planner_cfg: &PlannerCfg,
+) -> (f64, f64) {
+    let row = run_one(
+        nodes,
+        payload_bytes,
+        params,
+        planner_cfg,
+        false,
+        ScaleTopo::FatTree { oversub },
+    );
+    let ecmp = row.ecmp_goodput_gbps.expect("tiered row carries ecmp");
+    assert!(
+        row.goodput_gbps >= ecmp,
+        "planned routing lost to ECMP at {nodes} nodes: {:.2} vs {ecmp:.2} GB/s",
+        row.goodput_gbps,
+    );
+    (row.goodput_gbps, ecmp)
+}
+
 /// Sweep the scale axis.
 pub fn sweep(
     node_counts: &[usize],
@@ -212,15 +346,17 @@ pub fn sweep(
     params: &FabricParams,
     planner_cfg: &PlannerCfg,
     with_reference: bool,
+    topo_kind: ScaleTopo,
 ) -> Vec<ScaleRow> {
     node_counts
         .iter()
-        .map(|&n| run_one(n, payload_bytes, params, planner_cfg, with_reference))
+        .map(|&n| run_one(n, payload_bytes, params, planner_cfg, with_reference, topo_kind))
         .collect()
 }
 
 pub fn render(rows: &[ScaleRow], payload_bytes: f64, threads: usize) -> String {
-    let mut t = Table::new(&[
+    let tiered = rows.iter().any(|r| r.ecmp_goodput_gbps.is_some());
+    let mut headers = vec![
         "nodes",
         "gpus",
         "pairs",
@@ -232,9 +368,13 @@ pub fn render(rows: &[ScaleRow], payload_bytes: f64, threads: usize) -> String {
         "events/s",
         "speedup",
         "goodput (GB/s)",
-    ]);
+    ];
+    if tiered {
+        headers.extend(["ecmp (GB/s)", "vs ecmp", "core util"]);
+    }
+    let mut t = Table::new(&headers);
     for r in rows {
-        t.row(&[
+        let mut cells = vec![
             format!("{}", r.nodes),
             format!("{}", r.gpus),
             format!("{}", r.pairs),
@@ -246,10 +386,20 @@ pub fn render(rows: &[ScaleRow], payload_bytes: f64, threads: usize) -> String {
             format!("{:.0}", r.events_per_sec()),
             r.speedup().map_or("-".into(), |s| format!("{s:.2}x")),
             format!("{:.1}", r.goodput_gbps),
-        ]);
+        ];
+        if tiered {
+            cells.push(
+                r.ecmp_goodput_gbps.map_or("-".into(), |g| format!("{g:.1}")),
+            );
+            cells.push(r.planned_over_ecmp().map_or("-".into(), |x| format!("{x:.2}x")));
+            cells.push(r.core_uplink_util.map_or("-".into(), |u| format!("{u:.2}")));
+        }
+        t.row(&cells);
     }
+    let topo_label = rows.first().map_or("flat", |r| r.topo);
+    let skew_label = if tiered { "cross-pod hot peers" } else { "seeded hot sink" };
     format!(
-        "Cluster-scale hot-path sweep (skewed All-to-Allv, {:.0} MB/rank ±10% jitter, hot ratio {:.0}%, planner threads {})\n{}\
+        "Cluster-scale hot-path sweep ({topo_label} fabric, skewed All-to-Allv with {skew_label}, {:.0} MB/rank ±10% jitter, hot ratio {:.0}%, planner threads {})\n{}\
          speedup = incremental water-filler vs from-scratch reference solver, same bit-exact trajectory\n",
         payload_bytes / MB,
         HOTSPOT_RATIO * 100.0,
@@ -271,13 +421,20 @@ mod tests {
     fn scale_point_is_consistent() {
         let params = FabricParams::default();
         let cfg = PlannerCfg { threads: 2, ..PlannerCfg::default() };
-        let row = run_one(2, 8.0 * MB, &params, &cfg, true);
+        let row = run_one(2, 8.0 * MB, &params, &cfg, true, ScaleTopo::Flat);
         assert_eq!(row.gpus, 16);
         assert!(row.events > 0);
         assert!(row.goodput_gbps > 0.0);
         assert!(row.reference_s.is_some());
-        let makespan =
-            check_static_bit_identity(2, 8.0 * MB, &params, &PlannerCfg::default());
+        assert_eq!(row.topo, "flat");
+        assert!(row.ecmp_goodput_gbps.is_none());
+        let makespan = check_static_bit_identity(
+            2,
+            8.0 * MB,
+            &params,
+            &PlannerCfg::default(),
+            ScaleTopo::Flat,
+        );
         assert_eq!(
             makespan.to_bits(),
             row.makespan_s.to_bits(),
@@ -288,13 +445,54 @@ mod tests {
     /// The JSON line parses back and carries the tracked fields.
     #[test]
     fn json_line_roundtrips() {
-        let row =
-            run_one(1, 4.0 * MB, &FabricParams::default(), &PlannerCfg::default(), false);
+        let row = run_one(
+            1,
+            4.0 * MB,
+            &FabricParams::default(),
+            &PlannerCfg::default(),
+            false,
+            ScaleTopo::Flat,
+        );
         let j = Json::parse(&row.json_line()).unwrap();
         assert_eq!(j.get("exp").as_str(), Some("scale"));
         assert_eq!(j.get("nodes").as_u64(), Some(1));
         assert_eq!(j.get("links").as_u64(), Some(row.links as u64));
         assert!(j.get("events_per_sec").as_f64().unwrap() > 0.0);
         assert!(j.get("plan_us").as_f64().unwrap() >= 0.0);
+        assert_eq!(j.get("topo").as_str(), Some("flat"));
+    }
+
+    /// A tiered scale point: the row carries the ECMP comparison and
+    /// core-uplink utilization, and under the cross-pod skew the
+    /// planned routing does not lose to the hash-striping adversary.
+    /// 16 MB/rank keeps the hot columns multi-path eligible — the
+    /// regime the gate is about (see [`check_planned_beats_ecmp`]).
+    #[test]
+    fn fat_tree_point_beats_ecmp() {
+        let params = FabricParams::default();
+        let cfg = PlannerCfg::default();
+        let row = run_one(
+            8,
+            16.0 * MB,
+            &params,
+            &cfg,
+            false,
+            ScaleTopo::FatTree { oversub: 2.0 },
+        );
+        assert_eq!(row.topo, "fat-tree");
+        assert_eq!(row.gpus, 64);
+        let ecmp = row.ecmp_goodput_gbps.expect("tiered row carries ecmp");
+        assert!(ecmp > 0.0);
+        assert!(
+            row.goodput_gbps >= ecmp,
+            "planned {:.2} GB/s lost to ecmp {ecmp:.2} GB/s",
+            row.goodput_gbps
+        );
+        let util = row.core_uplink_util.expect("tiered row carries core util");
+        assert!(util > 0.0 && util <= 1.0 + 1e-9, "util={util}");
+        let j = Json::parse(&row.json_line()).unwrap();
+        assert!(j.get("planned_over_ecmp").as_f64().unwrap() >= 1.0);
+        // the --check entry point agrees
+        check_planned_beats_ecmp(8, 16.0 * MB, 2.0, &params, &cfg);
     }
 }

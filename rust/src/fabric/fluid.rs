@@ -51,7 +51,7 @@
 //!   preempt/add_flows sequences.
 
 use super::{gbps_to_bps, FabricParams, XferMode};
-use crate::topology::{LinkKind, Path, Topology};
+use crate::topology::{Path, Topology};
 
 /// One transfer request routed over a fixed path.
 #[derive(Clone, Debug)]
@@ -196,9 +196,14 @@ impl<'a> FluidSim<'a> {
             for &h in &f.path.hops {
                 link_members[h].push(i);
                 let l = self.topo.link(h);
-                if !matches!(l.kind, LinkKind::NvLink) {
-                    net_out[self.topo.node_of(l.src)].push(i);
-                    net_in[self.topo.node_of(l.dst)].push(i);
+                // a hop consumes its nodes' NIC budget only where it
+                // actually crosses a NIC (on flat fabrics: every
+                // non-NVLink hop at both ends, exactly the old rule)
+                if let Some(n) = self.topo.nic_out_node(l) {
+                    net_out[n].push(i);
+                }
+                if let Some(n) = self.topo.nic_in_node(l) {
+                    net_in[n].push(i);
                 }
             }
             inj[f.path.src].push(i);

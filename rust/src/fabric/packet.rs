@@ -45,7 +45,7 @@
 use super::backend::TailStats;
 use super::fluid::{Flow, FlowResult, SimResult};
 use super::FabricParams;
-use crate::topology::{LinkKind, Topology};
+use crate::topology::Topology;
 use crate::util::rng::Rng;
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
@@ -132,9 +132,14 @@ pub struct PacketSim<'a> {
     /// `(flow, cell idx, completion time)` of the cell in service.
     in_service: Vec<Option<(u32, u32, u64)>>,
     link_rate: Vec<f64>,
-    is_net: Vec<bool>,
-    link_src_node: Vec<u32>,
-    link_dst_node: Vec<u32>,
+    /// Node whose NIC-out (resp. NIC-in) aggregate a cell on this link
+    /// charges; `u32::MAX` = none. On flat fabrics every non-NVLink
+    /// link charges both endpoints' nodes (the old `is_net` rule); on
+    /// tiered fabrics leaf uplinks charge the source node's out clock,
+    /// leaf downlinks the destination node's in clock, and spine links
+    /// neither (switch-to-switch hops cross no host NIC).
+    charge_out_node: Vec<u32>,
+    charge_in_node: Vec<u32>,
     // ---- per-node NIC-aggregate token clocks ----
     net_out_free: Vec<u64>,
     net_in_free: Vec<u64>,
@@ -201,20 +206,15 @@ impl<'a> PacketSim<'a> {
             peak_lq_bytes: vec![0.0; nl],
             in_service: vec![None; nl],
             link_rate: topo.links.iter().map(|l| l.cap_gbps).collect(),
-            is_net: topo
+            charge_out_node: topo
                 .links
                 .iter()
-                .map(|l| !matches!(l.kind, LinkKind::NvLink))
+                .map(|l| topo.nic_out_node(l).map_or(u32::MAX, |n| n as u32))
                 .collect(),
-            link_src_node: topo
+            charge_in_node: topo
                 .links
                 .iter()
-                .map(|l| topo.node_of(l.src) as u32)
-                .collect(),
-            link_dst_node: topo
-                .links
-                .iter()
-                .map(|l| topo.node_of(l.dst) as u32)
+                .map(|l| topo.nic_in_node(l).map_or(u32::MAX, |n| n as u32))
                 .collect(),
             net_out_free: vec![0; nn],
             net_in_free: vec![0; nn],
@@ -564,10 +564,13 @@ impl<'a> PacketSim<'a> {
                 continue;
             }
             let mut s = t;
-            if self.is_net[l] {
-                let sn = self.link_src_node[l] as usize;
-                let dn = self.link_dst_node[l] as usize;
-                s = s.max(self.net_out_free[sn]).max(self.net_in_free[dn]);
+            let co = self.charge_out_node[l];
+            let ci = self.charge_in_node[l];
+            if co != u32::MAX {
+                s = s.max(self.net_out_free[co as usize]);
+            }
+            if ci != u32::MAX {
+                s = s.max(self.net_in_free[ci as usize]);
             }
             if s > t {
                 // NIC-aggregate tokens not yet available: retry then
@@ -580,12 +583,16 @@ impl<'a> PacketSim<'a> {
             let rate = self.link_rate[l].min(self.flow_cap_gbps[f]);
             let done = t + dur_ns(cell, rate);
             self.in_service[l] = Some((fu, idx, done));
-            if self.is_net[l] {
-                let sn = self.link_src_node[l] as usize;
-                let dn = self.link_dst_node[l] as usize;
+            if co != u32::MAX || ci != u32::MAX {
                 let agg = dur_ns(cell, self.params.node_net_cap_gbps);
-                self.net_out_free[sn] = self.net_out_free[sn].max(t) + agg;
-                self.net_in_free[dn] = self.net_in_free[dn].max(t) + agg;
+                if co != u32::MAX {
+                    let sn = co as usize;
+                    self.net_out_free[sn] = self.net_out_free[sn].max(t) + agg;
+                }
+                if ci != u32::MAX {
+                    let dn = ci as usize;
+                    self.net_in_free[dn] = self.net_in_free[dn].max(t) + agg;
+                }
             }
             self.schedule(done, Ev::LinkTick(l as u32));
             return;

@@ -60,9 +60,14 @@ impl<'a> PipelineModel<'a> {
                 };
                 chunk / gbps_to_bps(cap) + p.chunk_ovh_us * 1e-6
             }
-            LinkKind::Rail { .. } | LinkKind::CrossRail { .. } => {
+            LinkKind::Rail { .. } | LinkKind::CrossRail { .. } | LinkKind::LeafUp { .. } => {
                 chunk / gbps_to_bps(link.cap_gbps) + p.rdma_post_us * 1e-6
             }
+            // switch-internal forwarding: store-and-forward
+            // serialization only, no per-chunk CPU posting
+            LinkKind::LeafDown { .. }
+            | LinkKind::SpineUp { .. }
+            | LinkKind::SpineDown { .. } => chunk / gbps_to_bps(link.cap_gbps),
         }
     }
 

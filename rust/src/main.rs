@@ -136,6 +136,8 @@ fn main() {
         .flag("nodes", "4", "cluster nodes (8 GPUs, 4 rails each); 0 = sweep 1,2,4,8")
         .flag("payload-mb", "64", "All-to-Allv payload per rank in MB")
         .flag("threads", "0", "planner threads (0: from config)")
+        .flag("topo", "flat", "fabric shape: flat | fat-tree (leaf-spine core tier)")
+        .flag("oversub", "2.0", "fat-tree core oversubscription ratio (>= 1.0)")
         .switch("no-reference", "skip the (slow) reference-solver baseline run")
         .switch("json", "emit one machine-readable JSON line per row")
         .switch("check", "assert solver bit-identity + static-path equivalence (CI perf smoke)")
@@ -146,11 +148,33 @@ fn main() {
             if p.get_usize("threads") > 0 {
                 pcfg.threads = p.get_usize("threads");
             }
+            let topo_kind = match p.get("topo") {
+                "flat" => scale::ScaleTopo::Flat,
+                "fat-tree" => {
+                    let oversub = p.get_f64("oversub");
+                    if !(oversub.is_finite() && oversub >= 1.0) {
+                        eprintln!("--oversub must be a finite ratio >= 1.0, got {oversub}");
+                        std::process::exit(2);
+                    }
+                    scale::ScaleTopo::FatTree { oversub }
+                }
+                other => {
+                    eprintln!("--topo must be flat|fat-tree, got '{other}'");
+                    std::process::exit(2);
+                }
+            };
             let with_reference = !p.get_bool("no-reference");
             let nodes_arg = p.get_usize("nodes");
             let node_counts: Vec<usize> =
                 if nodes_arg == 0 { vec![1, 2, 4, 8] } else { vec![nodes_arg] };
-            let rows = scale::sweep(&node_counts, payload, &params, &pcfg, with_reference);
+            let rows = scale::sweep(
+                &node_counts,
+                payload,
+                &params,
+                &pcfg,
+                with_reference,
+                topo_kind,
+            );
             if p.get_bool("json") {
                 for r in &rows {
                     println!("{}", r.json_line());
@@ -162,7 +186,9 @@ fn main() {
                 for r in &rows {
                     // run_one already asserted trajectory bit-identity;
                     // close the loop against the replan executor too
-                    scale::check_static_bit_identity(r.nodes, payload, &params, &pcfg);
+                    scale::check_static_bit_identity(
+                        r.nodes, payload, &params, &pcfg, topo_kind,
+                    );
                     if let Some(speedup) = r.speedup() {
                         // generous floor: the bench harness tracks the
                         // real ratio; this only catches regressions
@@ -174,6 +200,19 @@ fn main() {
                             );
                             std::process::exit(1);
                         }
+                    }
+                    // tiered acceptance anchor: planned multi-path must
+                    // not lose to the ECMP hash-striping adversary
+                    if let scale::ScaleTopo::FatTree { oversub } = topo_kind {
+                        let (planned, ecmp) = scale::check_planned_beats_ecmp(
+                            r.nodes, payload, oversub, &params, &pcfg,
+                        );
+                        eprintln!(
+                            "  {} nodes: planned {planned:.1} GB/s vs ecmp {ecmp:.1} GB/s \
+                             ({:.2}x)",
+                            r.nodes,
+                            planned / ecmp.max(1e-12),
+                        );
                     }
                 }
                 // stderr: keep --json stdout purely machine-readable

@@ -37,6 +37,9 @@ use super::admission::AdmissionQueue;
 use super::job::{JobKind, JobSpec, TenancyCfg};
 use crate::coordinator::monitor::WindowedMonitor;
 use crate::coordinator::reassembly::{ChunkArrival, ReassemblyTable};
+use crate::coordinator::reroute::{
+    attach_reissues, pool_split_counts, preempt_and_pool, PartState, Reissue,
+};
 use crate::fabric::backend::{make_backend, FabricBackend, TailStats};
 use crate::fabric::fluid::{Flow, SimResult};
 use crate::fabric::FabricParams;
@@ -76,14 +79,6 @@ fn channel_rate_factor(
     } else {
         1.0
     }
-}
-
-/// Per-path chunk-sequence bookkeeping for one (src, dst) stream part
-/// (same invariants as the single-job executor's part state).
-struct PartState {
-    flow: usize,
-    seqs: Vec<u64>,
-    delivered: usize,
 }
 
 struct TenantState {
@@ -166,14 +161,6 @@ pub struct MultiTenantExecutor<'a> {
     pub tcfg: TenancyCfg,
 }
 
-struct Reissue {
-    pair: (GpuId, GpuId),
-    /// Absolute offset of the pair's first flow in the epoch batch.
-    batch_off: usize,
-    counts: Vec<usize>,
-    pool: Vec<u64>,
-}
-
 impl<'a> MultiTenantExecutor<'a> {
     pub fn new(
         topo: &'a Topology,
@@ -196,6 +183,7 @@ impl<'a> MultiTenantExecutor<'a> {
         let cadence = self.rcfg.cadence_s.max(1e-6);
         let loop_on = tcfg.joint || self.rcfg.enable;
 
+        let shared = crate::planner::SharedConstraints::of(topo);
         let mut queue = AdmissionQueue::new(jobs, tcfg.max_live);
         let mut tenants: BTreeMap<usize, TenantState> = BTreeMap::new();
         let mut planners: BTreeMap<usize, Planner<'a>> = BTreeMap::new();
@@ -387,8 +375,9 @@ impl<'a> MultiTenantExecutor<'a> {
                             .map(|((c, o), e)| c - o + e)
                             .collect();
                         let ch = &joint.per_tenant[&td.tenant];
-                        let z_carry = drain_time_z(topo, &self.rcfg.caps, own, &bg);
-                        let z_ch = drain_time_z(topo, &self.rcfg.caps, &ch.link_load, &bg);
+                        let z_carry = drain_time_z(topo, &self.rcfg.caps, &shared, own, &bg);
+                        let z_ch =
+                            drain_time_z(topo, &self.rcfg.caps, &shared, &ch.link_load, &bg);
                         if z_ch >= z_carry * (1.0 - self.rcfg.margin) {
                             continue;
                         }
@@ -456,18 +445,7 @@ impl<'a> MultiTenantExecutor<'a> {
                     n_flows = first + epoch_batch.len();
                     for (tid, reissues) in staged {
                         let st = tenants.get_mut(&tid).expect("staged tenant");
-                        for r in reissues {
-                            let parts = st.streams.get_mut(&r.pair).expect("pair staged");
-                            let mut off = 0usize;
-                            for (j, &n) in r.counts.iter().enumerate() {
-                                parts.push(PartState {
-                                    flow: first + r.batch_off + j,
-                                    seqs: r.pool[off..off + n].to_vec(),
-                                    delivered: 0,
-                                });
-                                off += n;
-                            }
-                        }
+                        attach_reissues(&mut st.streams, first, reissues);
                     }
                 }
                 epochs.push(ServeEpoch {
@@ -806,25 +784,10 @@ fn reroute(
         let Some(parts) = st.streams.get_mut(&pair) else { continue };
         // preempt live parts; release their completed chunk prefixes;
         // pool the undelivered seqs
-        let mut pool: Vec<u64> = Vec::new();
-        for ps in parts.iter_mut() {
-            if !engine.is_live(ps.flow) {
-                continue;
-            }
-            let moved = engine.moved_bytes(ps.flow);
-            engine.preempt(ps.flow);
-            preempted_flows.insert(ps.flow);
-            preempted_here += 1;
-            let done = ((moved / chunk).floor() as usize).clamp(ps.delivered, ps.seqs.len());
-            for &s in &ps.seqs[ps.delivered..done] {
-                reass
-                    .push(pair.0, pair.1, ChunkArrival { seq: s, bytes: chunk as u64 })
-                    .expect("ordering invariant violated");
-            }
-            pool.extend_from_slice(&ps.seqs[done..]);
-            ps.seqs.truncate(done);
-            ps.delivered = done;
-        }
+        let (pool, n_pre) = preempt_and_pool(&mut *engine, reass, pair, parts, chunk, &mut |f| {
+            preempted_flows.insert(f);
+        });
+        preempted_here += n_pre;
         // stage the residual on the new paths (k channels per part);
         // the pooled seqs split across the sub-flows by byte share
         let mut subparts: Vec<(Path, f64, f64)> = Vec::new();
@@ -841,10 +804,8 @@ fn reroute(
             }
             t.max(1.0)
         };
-        let n_pool = pool.len();
         let batch_off = epoch_batch.len();
-        let mut counts: Vec<usize> = Vec::new();
-        let mut allotted = 0usize;
+        let mut shares: Vec<f64> = Vec::with_capacity(subparts.len());
         for (path, bytes, rf) in &subparts {
             epoch_batch.push(
                 Flow::new(path.clone(), *bytes)
@@ -852,14 +813,9 @@ fn reroute(
                     .with_rate_factor(*rf)
                     .tagged(tag),
             );
-            let want = ((bytes / total_new) * n_pool as f64).round() as usize;
-            let n = want.min(n_pool - allotted);
-            counts.push(n);
-            allotted += n;
+            shares.push(*bytes);
         }
-        if let Some(last) = counts.last_mut() {
-            *last += n_pool - allotted;
-        }
+        let counts = pool_split_counts(&shares, total_new, pool.len());
         reissues.push(Reissue { pair, batch_off, counts, pool });
     }
     staged.push((st.job.id, reissues));

@@ -1,0 +1,197 @@
+//! Shared-constraint sets: aggregate capacity terms the planner prices
+//! alongside individual links.
+//!
+//! The flat planner's congestion terms were hard-coded to the
+//! src→rail→dst shape: per-link loads plus per-GPU / per-node endpoint
+//! aggregates. Tiered fabrics add resources that are *shared across
+//! links without being endpoints* — most importantly a leaf switch's
+//! total core uplink (and downlink) bandwidth, which is what
+//! oversubscription actually rations. This module generalizes those
+//! into an explicit constraint set: each [`SharedTerm`] is a capacity
+//! with a set of member links, and the MWU load table gains one
+//! virtual entry per term (indices `links.len()..links.len()+terms`)
+//! so Algorithm 1 prices them exactly like links — `F(load/cap)` with
+//! the same monotone cost shape.
+//!
+//! **Flat topologies produce an empty set**, so every flat plan,
+//! conflict-component split, and parallel-sweep script is bit-identical
+//! to the pre-tier planner — the anchor the refactor is certified
+//! against.
+
+use crate::topology::{LinkId, LinkKind, Topology};
+
+/// One aggregate capacity shared by several links.
+#[derive(Clone, Debug)]
+pub struct SharedTerm {
+    /// Aggregate capacity in bytes/second.
+    pub cap_bps: f64,
+    /// Links whose load draws down this term.
+    pub members: Vec<LinkId>,
+}
+
+/// The topology's full shared-constraint set plus a link → terms
+/// reverse index for candidate resolution.
+#[derive(Clone, Debug, Default)]
+pub struct SharedConstraints {
+    pub terms: Vec<SharedTerm>,
+    /// `member_terms[link]` = indices of the terms `link` belongs to.
+    member_terms: Vec<Vec<u32>>,
+}
+
+impl SharedConstraints {
+    /// Derive the constraint set from the topology. Flat fabrics have
+    /// no shared terms beyond what per-link caps and the endpoint
+    /// bounds already express; tiered fabrics get one uplink and one
+    /// downlink aggregate per leaf switch, coupling the spine links a
+    /// leaf fans out to so the planner levels load across *leaves*,
+    /// not just across individual spine edges.
+    pub fn of(topo: &Topology) -> SharedConstraints {
+        let Some(tier) = &topo.tier else {
+            return SharedConstraints::default();
+        };
+        let mut terms: Vec<SharedTerm> = Vec::new();
+        let agg_cap = tier.spines_per_rail as f64 * tier.uplink_gbps * 1e9;
+        for pod in 0..tier.pods {
+            for r in 0..topo.nics_per_node {
+                let ups: Vec<LinkId> = (0..tier.spines_per_rail)
+                    .map(|k| topo.spine_up(pod, r, k).expect("leaf uplink"))
+                    .collect();
+                let downs: Vec<LinkId> = (0..tier.spines_per_rail)
+                    .map(|k| topo.spine_down(pod, r, k).expect("leaf downlink"))
+                    .collect();
+                terms.push(SharedTerm { cap_bps: agg_cap, members: ups });
+                terms.push(SharedTerm { cap_bps: agg_cap, members: downs });
+            }
+        }
+        let mut member_terms = vec![Vec::new(); topo.links.len()];
+        for (ti, t) in terms.iter().enumerate() {
+            for &l in &t.members {
+                member_terms[l].push(ti as u32);
+            }
+        }
+        SharedConstraints { terms, member_terms }
+    }
+
+    pub fn len(&self) -> usize {
+        self.terms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    /// Terms link `l` is a member of (empty on flat fabrics).
+    pub fn terms_of(&self, l: LinkId) -> &[u32] {
+        self.member_terms.get(l).map_or(&[], |v| v.as_slice())
+    }
+
+    /// Extend a per-link load vector with the per-term aggregate loads
+    /// (the MWU warm-start shape: physical entries first, then one
+    /// virtual entry per term holding the sum of its members' loads).
+    pub fn extended_loads(&self, link_load: &[f64]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(link_load.len() + self.terms.len());
+        out.extend_from_slice(link_load);
+        for t in &self.terms {
+            out.push(t.members.iter().map(|&l| link_load[l]).sum());
+        }
+        out
+    }
+
+    /// Max normalized term load (drain-time seconds) for a per-link
+    /// load vector — the shared-aggregate part of the bottleneck
+    /// objective `Z`. Zero on flat fabrics.
+    pub fn max_norm_load(&self, link_load: &[f64]) -> f64 {
+        let mut z = 0.0f64;
+        for t in &self.terms {
+            let load: f64 = t.members.iter().map(|&l| link_load[l]).sum();
+            z = z.max(load / t.cap_bps);
+        }
+        z
+    }
+
+    /// Core-uplink utilization report: (term loads, caps) for the
+    /// uplink-direction terms (even indices — see [`SharedConstraints::of`]).
+    /// Used by `nimble scale` to report where tiered congestion lands.
+    pub fn uplink_norm_loads(&self, link_load: &[f64]) -> Vec<f64> {
+        self.terms
+            .iter()
+            .step_by(2)
+            .map(|t| t.members.iter().map(|&l| link_load[l]).sum::<f64>() / t.cap_bps)
+            .collect()
+    }
+}
+
+/// Convenience for experiments: max over both per-link and shared-term
+/// normalized loads — the tier-aware bottleneck objective.
+pub fn bottleneck_norm_load(topo: &Topology, shared: &SharedConstraints, load: &[f64]) -> f64 {
+    let mut z = 0.0f64;
+    for l in &topo.links {
+        z = z.max(load[l.id] / (l.cap_gbps * 1e9));
+    }
+    z.max(shared.max_norm_load(load))
+}
+
+/// Is this a link the shared terms could ever couple (core tier)?
+/// Handy for reporting filters.
+pub fn is_core_link(kind: LinkKind) -> bool {
+    matches!(kind, LinkKind::SpineUp { .. } | LinkKind::SpineDown { .. })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    #[test]
+    fn flat_topologies_have_no_terms() {
+        for t in [Topology::paper(), Topology::cluster(4)] {
+            let s = SharedConstraints::of(&t);
+            assert!(s.is_empty());
+            let load = vec![1.0; t.links.len()];
+            assert_eq!(s.extended_loads(&load), load);
+            assert_eq!(s.max_norm_load(&load), 0.0);
+        }
+    }
+
+    #[test]
+    fn fat_tree_terms_cover_every_core_link_once() {
+        let t = Topology::fat_tree(8, 2.0);
+        let s = SharedConstraints::of(&t);
+        let tier = t.tier.as_ref().unwrap();
+        // one up + one down term per (pod, rail)
+        assert_eq!(s.len(), tier.pods * t.nics_per_node * 2);
+        let mut seen = vec![0usize; t.links.len()];
+        for term in &s.terms {
+            assert_eq!(term.members.len(), tier.spines_per_rail);
+            assert!((term.cap_bps
+                - tier.spines_per_rail as f64 * tier.uplink_gbps * 1e9)
+                .abs()
+                < 1.0);
+            for &l in &term.members {
+                assert!(is_core_link(t.link(l).kind));
+                seen[l] += 1;
+            }
+        }
+        for l in &t.links {
+            let expect = usize::from(is_core_link(l.kind));
+            assert_eq!(seen[l.id], expect, "link {} covered {} times", l.id, seen[l.id]);
+            for &ti in s.terms_of(l.id) {
+                assert!(s.terms[ti as usize].members.contains(&l.id));
+            }
+        }
+    }
+
+    #[test]
+    fn extended_loads_sum_members() {
+        let t = Topology::fat_tree(8, 2.0);
+        let s = SharedConstraints::of(&t);
+        let mut load = vec![0.0; t.links.len()];
+        let term = &s.terms[0];
+        load[term.members[0]] = 3.0;
+        load[term.members[1]] = 4.0;
+        let ext = s.extended_loads(&load);
+        assert_eq!(ext.len(), t.links.len() + s.len());
+        assert_eq!(ext[t.links.len()], 7.0);
+        assert!((s.max_norm_load(&load) - 7.0 / term.cap_bps).abs() < 1e-18);
+    }
+}

@@ -106,14 +106,18 @@ impl CostModel {
         }
         // (amortize/S − 1)+ : 7× scale at 1 MB, 0 beyond amortize.
         let ramp = (self.amortize_bytes / msg_bytes - 1.0).max(0.0);
-        let extra_hops = path.relay_count() as f64;
+        // Only GPU forwarding stops pay pipeline overhead; switch hops
+        // on tiered fabrics forward in hardware and cost nothing here.
+        let extra_hops = path.relays(topo).len() as f64;
         self.penalty_scale * ramp * extra_hops.max(1.0)
     }
 
     /// A path is a detour when it is not the library's default
     /// least-hop choice: intra-node 2-hop, or an inter-node rail other
     /// than the source GPU's own rail (detected by whether the first
-    /// hop is already the rail link — GPU-NIC affinity, §IV-B).
+    /// hop already leaves through the source's own NIC — GPU-NIC
+    /// affinity, §IV-B). On tiered fabrics the same rule reads as "the
+    /// first hop is the source's leaf uplink".
     pub fn is_detour(topo: &Topology, path: &Path) -> bool {
         match path.kind {
             PathKind::IntraDirect => false,
@@ -123,6 +127,10 @@ impl CostModel {
                 crate::topology::LinkKind::Rail { .. }
             ),
             PathKind::InterCross { .. } => true,
+            PathKind::InterLeaf { .. } | PathKind::InterSpine { .. } => !matches!(
+                topo.link(path.hops[0]).kind,
+                crate::topology::LinkKind::LeafUp { .. }
+            ),
         }
     }
 

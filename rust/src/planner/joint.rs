@@ -98,7 +98,9 @@ pub fn path_relay_endpoints(topo: &Topology, path: &Path) -> Vec<usize> {
     let mut out = Vec::new();
     for &h in &path.hops {
         let nxt = topo.link(h).dst;
-        if nxt != path.dst {
+        // switch vertices on tiered fabrics are fixed-function
+        // forwarders, not GPUs — they have no injection/receive budget
+        if nxt != path.dst && !topo.is_switch(nxt) {
             out.push(nxt); // relay injects onward
             out.push(g + nxt); // relay receives
         }
@@ -156,16 +158,21 @@ impl<'a> Planner<'a> {
         ep_initial: Option<&[f64]>,
     ) -> JointPlan {
         let t0 = Instant::now();
+        let shared = self.shared().clone();
         let topo = self.topo();
         let cfg = self.cfg().clone();
         let eps = cfg.epsilon_bytes.max(1.0);
+        let num_links = topo.links.len();
+        let ext_len = num_links + shared.len();
 
+        // like the single-tenant MWU, the load table carries one
+        // virtual entry per shared-constraint term (empty on flat)
         let mut load = match initial {
             Some(init) => {
-                assert_eq!(init.len(), topo.links.len());
-                init.to_vec()
+                assert_eq!(init.len(), num_links);
+                shared.extended_loads(init)
             }
-            None => vec![0.0f64; topo.links.len()],
+            None => vec![0.0f64; ext_len],
         };
         let ep_inv = joint_endpoint_inv_caps(topo, caps);
         let mut ep_load = match ep_initial {
@@ -207,8 +214,8 @@ impl<'a> Planner<'a> {
             let cands = self.candidates_for(s, d, totals[ei]).to_vec();
             let infos = cands
                 .iter()
-                .map(|p| JointCand {
-                    hops: p
+                .map(|p| {
+                    let mut hops: Vec<(usize, f64, f64)> = p
                         .hops
                         .iter()
                         .enumerate()
@@ -223,9 +230,18 @@ impl<'a> Planner<'a> {
                             };
                             (h, 1.0 / (link.cap_gbps * 1e9), inflate)
                         })
-                        .collect(),
-                    endpoints: path_relay_endpoints(topo, p),
-                    penalty: cfg.cost.detour_penalty(topo, p, totals[ei]),
+                        .collect();
+                    for &h in &p.hops {
+                        for &ti in shared.terms_of(h) {
+                            let term = &shared.terms[ti as usize];
+                            hops.push((num_links + ti as usize, 1.0 / term.cap_bps, 1.0));
+                        }
+                    }
+                    JointCand {
+                        hops,
+                        endpoints: path_relay_endpoints(topo, p),
+                        penalty: cfg.cost.detour_penalty(topo, p, totals[ei]),
+                    }
                 })
                 .collect();
             cands_by_entry.push(cands);
@@ -247,9 +263,9 @@ impl<'a> Planner<'a> {
             }
         }
 
-        let mut added = vec![0.0f64; topo.links.len()];
+        let mut added = vec![0.0f64; ext_len];
         let mut added_by_tenant: Vec<Vec<f64>> =
-            tenants.iter().map(|_| vec![0.0f64; topo.links.len()]).collect();
+            tenants.iter().map(|_| vec![0.0f64; ext_len]).collect();
 
         // the serial drain sweep, with per-entry λ
         let mut remaining = totals.clone();
@@ -305,15 +321,14 @@ impl<'a> Planner<'a> {
         }
 
         let plan_time_s = t0.elapsed().as_secs_f64();
+        added.truncate(num_links);
         let mut per_tenant: BTreeMap<usize, Plan> = BTreeMap::new();
         for (ti, t) in tenants.iter().enumerate() {
+            let mut ll = added_by_tenant[ti].clone();
+            ll.truncate(num_links);
             per_tenant.insert(
                 t.tenant,
-                Plan {
-                    assignments: BTreeMap::new(),
-                    link_load: added_by_tenant[ti].clone(),
-                    plan_time_s,
-                },
+                Plan { assignments: BTreeMap::new(), link_load: ll, plan_time_s },
             );
         }
         for (ei, &(ti, key)) in order.iter().enumerate() {

@@ -94,11 +94,12 @@ use crate::topology::{GpuId, LinkKind, Topology};
 
 /// Max deliverable rate (GB/s) from a set of sources (with per-source
 /// demand weights ignored — pure capacity) to a single destination
-/// GPU, over rail-matched links only. Vertices: GPUs + super-source.
+/// GPU, over rail-matched links only. Vertices: GPUs (+ switches on
+/// tiered fabrics) + super-source.
 pub fn max_rate_to_destination(topo: &Topology, sources: &[GpuId], dst: GpuId) -> f64 {
     let g = topo.num_gpus();
-    let s_super = g;
-    let mut net = FlowNet::new(g + 1);
+    let s_super = g + topo.num_switches();
+    let mut net = FlowNet::new(s_super + 1);
     for l in &topo.links {
         if matches!(l.kind, LinkKind::CrossRail { .. }) {
             continue; // NIMBLE never uses mismatched rails

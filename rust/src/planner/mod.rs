@@ -8,6 +8,7 @@
 //! a Dinic max-flow bound and a brute-force exact IP for tiny
 //! instances.
 
+pub mod constraints;
 pub mod cost;
 pub mod exact;
 pub mod joint;
@@ -16,6 +17,7 @@ pub mod mwu;
 pub mod plan;
 pub mod replan;
 
+pub use constraints::{SharedConstraints, SharedTerm};
 pub use cost::{CostModel, CostShape};
 pub use joint::{JointPlan, TenantDemands};
 pub use mwu::{lower_bound_norm_load, Planner, PlannerCfg};

@@ -41,6 +41,7 @@
 //! decomposable traffic (per-node batches, concurrent jobs) and in the
 //! candidate precompute. DESIGN.md §9 records this contract.
 
+use super::constraints::SharedConstraints;
 use super::cost::{CostModel, CostShape};
 use super::plan::{Assignment, Demand, Plan};
 use crate::topology::path::candidates;
@@ -83,11 +84,16 @@ pub struct Planner<'a> {
     cfg: PlannerCfg,
     /// Cached candidate paths per (src,dst) pair.
     cand_cache: BTreeMap<(GpuId, GpuId), Vec<Path>>,
+    /// Shared aggregate terms (leaf uplink/downlink capacity on tiered
+    /// fabrics; empty — and therefore inert — on flat ones). Each term
+    /// is one virtual entry at the tail of the MWU load table.
+    shared: SharedConstraints,
 }
 
 impl<'a> Planner<'a> {
     pub fn new(topo: &'a Topology, cfg: PlannerCfg) -> Self {
-        Planner { topo, cfg, cand_cache: BTreeMap::new() }
+        let shared = SharedConstraints::of(topo);
+        Planner { topo, cfg, cand_cache: BTreeMap::new(), shared }
     }
 
     pub fn cfg(&self) -> &PlannerCfg {
@@ -97,6 +103,11 @@ impl<'a> Planner<'a> {
     /// The topology this planner routes over.
     pub fn topo(&self) -> &'a Topology {
         self.topo
+    }
+
+    /// The shared-constraint set this planner prices (empty on flat).
+    pub fn shared(&self) -> &SharedConstraints {
+        &self.shared
     }
 
     pub(crate) fn candidates_for(&mut self, s: GpuId, d: GpuId, msg_bytes: f64) -> &[Path] {
@@ -165,12 +176,13 @@ impl<'a> Planner<'a> {
         let cfg = self.cfg.clone();
         let mut cands_by_pair: Vec<Vec<Path>> = Vec::with_capacity(order.len());
         let mut info_by_pair: Vec<Vec<Cand>> = Vec::with_capacity(order.len());
+        let num_links = self.topo.links.len();
         for (pi, &(s, d)) in order.iter().enumerate() {
             let cands = self.candidates_for(s, d, totals[pi]).to_vec();
             let infos = cands
                 .iter()
-                .map(|p| Cand {
-                    hops: p
+                .map(|p| {
+                    let mut hops: Vec<(usize, f64, f64)> = p
                         .hops
                         .iter()
                         .enumerate()
@@ -185,8 +197,21 @@ impl<'a> Planner<'a> {
                             };
                             (h, 1.0 / (link.cap_gbps * 1e9), inflate)
                         })
-                        .collect(),
-                    penalty: cfg.cost.detour_penalty(self.topo, p, totals[pi]),
+                        .collect();
+                    // Shared aggregate terms the path draws down become
+                    // virtual hops (indices past the physical links) so
+                    // the sweep prices and charges them like links. Flat
+                    // fabrics emit none — `hops` is exactly the old list.
+                    for &h in &p.hops {
+                        for &ti in self.shared.terms_of(h) {
+                            let term = &self.shared.terms[ti as usize];
+                            hops.push((num_links + ti as usize, 1.0 / term.cap_bps, 1.0));
+                        }
+                    }
+                    Cand {
+                        hops,
+                        penalty: cfg.cost.detour_penalty(self.topo, p, totals[pi]),
+                    }
                 })
                 .collect();
             cands_by_pair.push(cands);
@@ -225,15 +250,19 @@ impl<'a> Planner<'a> {
         let cfg = self.cfg.clone();
         let eps = cfg.epsilon_bytes.max(1.0);
 
-        // L_e ← initial (cost basis); `added` tracks this plan's own load
+        // L_e ← initial (cost basis); `added` tracks this plan's own
+        // load. Both vectors carry the physical links first, then one
+        // virtual entry per shared aggregate term (none on flat, so
+        // this is exactly the pre-tier table there).
+        let ext_len = self.topo.links.len() + self.shared.len();
         let load = match initial {
             Some(init) => {
                 assert_eq!(init.len(), self.topo.links.len());
-                init.to_vec()
+                self.shared.extended_loads(init)
             }
-            None => vec![0.0f64; self.topo.links.len()],
+            None => vec![0.0f64; ext_len],
         };
-        let mut added = vec![0.0f64; self.topo.links.len()];
+        let mut added = vec![0.0f64; ext_len];
         // r_{s,d} ← d_{s,d}; aggregate duplicate pairs
         let mut pairs: BTreeMap<(GpuId, GpuId), f64> = BTreeMap::new();
         for d in demands {
@@ -270,7 +299,9 @@ impl<'a> Planner<'a> {
         // cannot fan out — take the serial path without the script /
         // worker overhead (the result is byte-identical either way).
         let components = if cfg.threads > 1 && order.len() > 1 {
-            let comp_of_pair = conflict_components(&info_by_pair, self.topo.links.len());
+            // components split on the extended table: pairs sharing only
+            // a leaf aggregate (not a physical link) still couple
+            let comp_of_pair = conflict_components(&info_by_pair, ext_len);
             let n_comps =
                 comp_of_pair.iter().copied().max().map_or(0, |m| m as usize + 1);
             (n_comps > 1).then_some((comp_of_pair, n_comps))
@@ -308,6 +339,9 @@ impl<'a> Planner<'a> {
             ),
         }
 
+        // `Plan::link_load` reports physical links only; the virtual
+        // tail was bookkeeping for the sweep's cost basis.
+        added.truncate(self.topo.links.len());
         let mut assignments = BTreeMap::new();
         for (pi, key) in order.iter().enumerate() {
             let parts: Vec<(Path, f64)> = flows_by_pair[pi]
@@ -644,6 +678,28 @@ pub fn lower_bound_norm_load(topo: &Topology, demands: &[Demand]) -> f64 {
     for n in 0..topo.nodes {
         z = z.max(node_out[n] / rails_cap).max(node_in[n] / rails_cap);
     }
+    // Tiered fabrics: inter-pod bytes must cross the pod's core
+    // uplinks, whose aggregate is oversubscribed below the rails. This
+    // is the bound the spine tier adds and the flat terms cannot see.
+    if let Some(tier) = &topo.tier {
+        let mut pod_out = vec![0.0f64; tier.pods];
+        let mut pod_in = vec![0.0f64; tier.pods];
+        for d in demands {
+            let (pa, pb) =
+                (topo.pod_of(topo.node_of(d.src)), topo.pod_of(topo.node_of(d.dst)));
+            if pa != pb {
+                pod_out[pa] += d.bytes;
+                pod_in[pb] += d.bytes;
+            }
+        }
+        let pod_core_cap = topo.nics_per_node as f64
+            * tier.spines_per_rail as f64
+            * tier.uplink_gbps
+            * 1e9;
+        for p in 0..tier.pods {
+            z = z.max(pod_out[p] / pod_core_cap).max(pod_in[p] / pod_core_cap);
+        }
+    }
     z
 }
 
@@ -816,6 +872,61 @@ mod tests {
                 plan.canonical_string(),
                 reference.canonical_string(),
                 "threads={threads} diverged from serial"
+            );
+        }
+    }
+
+    /// Tiered fabric: when several sender nodes contend for a pod's
+    /// shared spine tier, the plan levels load across every core spine
+    /// instead of hammering one. (A single sender node is bound by its
+    /// own leaf uplink, which both spine choices share — there the
+    /// spine pick is cost-neutral and the incumbent sticks, so this
+    /// spreading claim needs pod-wide contention to be observable.)
+    #[test]
+    fn fat_tree_plan_spreads_over_spines() {
+        let t = Topology::fat_tree(8, 2.0);
+        let mut p = planner(&t);
+        // every node of pod 0 → its pod-1 partner, all eight GPUs each
+        let demands: Vec<Demand> = (0..4)
+            .flat_map(|n| {
+                (0..8).map(move |l| Demand::new(n * 8 + l, (n + 4) * 8 + l, 256.0 * MB))
+            })
+            .collect();
+        let plan = p.plan(&demands);
+        plan.validate(&t, &demands).unwrap();
+        let tier = t.tier.as_ref().unwrap();
+        for r in 0..t.nics_per_node {
+            for k in 0..tier.spines_per_rail {
+                let l = t.spine_up(0, r, k).unwrap();
+                assert!(plan.link_load[l] > 0.0, "spine ({r},{k}) unused");
+            }
+        }
+        // the shared-term objective is consistent with the link loads
+        let shared = p.shared().clone();
+        assert!(shared.max_norm_load(&plan.link_load) > 0.0);
+    }
+
+    /// The PR-3 determinism contract survives the constraint-set
+    /// generalization: plans on tiered fabrics are byte-identical for
+    /// every thread count too.
+    #[test]
+    fn fat_tree_thread_count_never_changes_the_plan() {
+        let t = Topology::fat_tree(8, 2.0);
+        let demands = vec![
+            Demand::new(0, 1, 512.0 * MB),   // intra-node, pod 0
+            Demand::new(32, 33, 300.0 * MB), // intra-node, pod 1
+            Demand::new(2, 40, 256.0 * MB),  // cross-pod
+            Demand::new(10, 50, 96.0 * MB),  // cross-pod
+        ];
+        let reference = Planner::new(&t, PlannerCfg::default()).plan(&demands);
+        reference.validate(&t, &demands).unwrap();
+        for threads in [2, 8] {
+            let cfg = PlannerCfg { threads, ..PlannerCfg::default() };
+            let plan = Planner::new(&t, cfg).plan(&demands);
+            assert_eq!(
+                plan.canonical_string(),
+                reference.canonical_string(),
+                "threads={threads} diverged on fat-tree"
             );
         }
     }

@@ -23,6 +23,7 @@
 //!    time `Z` by more than the relative hysteresis `margin`;
 //!    otherwise return the carry unchanged (`replanned = false`).
 
+use super::constraints::SharedConstraints;
 use super::mwu::Planner;
 use super::plan::{Assignment, Demand, Plan};
 use crate::fabric::FabricParams;
@@ -211,15 +212,21 @@ pub fn excess_over_plan(observed: &[f64], predicted: &[f64]) -> Vec<f64> {
 }
 
 /// Bottleneck drain-time estimate of `loads` stacked on `background`
-/// (seconds): max over per-link drain, per-GPU in/out aggregates and
-/// per-node rail aggregates — the aggregates of
+/// (seconds): max over per-link drain, per-GPU in/out aggregates,
+/// per-node NIC aggregates and the topology's shared-constraint terms
+/// (leaf core uplinks on tiered fabrics) — the aggregates of
 /// [`super::lower_bound_norm_load`] further capped by the fabric's
 /// endpoint anchors ([`DrainCaps`]). Including the endpoint bounds is
 /// the churn guard: a reshuffle of endpoint-bound traffic shows no
 /// improvement here because none is physically available.
+///
+/// On flat topologies this computes exactly the pre-tier metric,
+/// accumulation order and all: every link has GPU endpoints, node
+/// aggregates cover the `Rail` links, and `shared` is empty.
 pub(crate) fn drain_time_z(
     topo: &Topology,
     caps: &DrainCaps,
+    shared: &SharedConstraints,
     loads: &[f64],
     background: &[f64],
 ) -> f64 {
@@ -236,14 +243,23 @@ pub(crate) fn drain_time_z(
         let cap = l.cap_gbps * 1e9;
         z = z.max(load / cap);
         if !matches!(l.kind, LinkKind::CrossRail { .. }) {
-            out[l.src] += load;
-            out_cap[l.src] += cap;
-            inb[l.dst] += load;
-            in_cap[l.dst] += cap;
+            if l.src < g {
+                out[l.src] += load;
+                out_cap[l.src] += cap;
+            }
+            if l.dst < g {
+                inb[l.dst] += load;
+                in_cap[l.dst] += cap;
+            }
         }
-        if matches!(l.kind, LinkKind::Rail { .. }) {
-            node_out[topo.node_of(l.src)] += load;
-            node_in[topo.node_of(l.dst)] += load;
+        match l.kind {
+            LinkKind::Rail { .. } => {
+                node_out[topo.node_of(l.src)] += load;
+                node_in[topo.node_of(l.dst)] += load;
+            }
+            LinkKind::LeafUp { .. } => node_out[topo.node_of(l.src)] += load,
+            LinkKind::LeafDown { .. } => node_in[topo.node_of(l.dst)] += load,
+            _ => {}
         }
     }
     for gi in 0..g {
@@ -258,6 +274,10 @@ pub(crate) fn drain_time_z(
         .min(caps.node_net_gbps * 1e9);
     for n in 0..topo.nodes {
         z = z.max(node_out[n] / rails_cap).max(node_in[n] / rails_cap);
+    }
+    for t in &shared.terms {
+        let agg: f64 = t.members.iter().map(|&l| loads[l] + background[l]).sum();
+        z = z.max(agg / t.cap_bps);
     }
     z
 }
@@ -371,8 +391,10 @@ impl<'a> Planner<'a> {
             .collect();
         let challenger = self.plan_seeded(residual, Some(&excess), Some(&seeds));
 
-        let z_carry = drain_time_z(topo, &rcfg.caps, &carry.link_load, &excess);
-        let z_challenger = drain_time_z(topo, &rcfg.caps, &challenger.link_load, &excess);
+        let shared = self.shared();
+        let z_carry = drain_time_z(topo, &rcfg.caps, shared, &carry.link_load, &excess);
+        let z_challenger =
+            drain_time_z(topo, &rcfg.caps, shared, &challenger.link_load, &excess);
         if z_challenger < z_carry * (1.0 - rcfg.margin) {
             let changed_pairs = diff_pairs(&carry, &challenger);
             if !changed_pairs.is_empty() {

@@ -40,6 +40,35 @@ pub enum LinkKind {
     /// only baselines that ignore rail matching use these. Carries a
     /// capacity penalty.
     CrossRail { src_rail: usize, dst_rail: usize },
+    /// Tiered fabrics: NIC uplink from the rail-`rail` GPU of a node
+    /// into its pod's rail-`rail` leaf switch.
+    LeafUp { rail: usize },
+    /// Tiered fabrics: leaf-switch downlink onto a node's rail-`rail`
+    /// NIC.
+    LeafDown { rail: usize },
+    /// Tiered fabrics: leaf → spine core uplink in rail plane `rail`
+    /// (the oversubscribed tier congestion concentrates on).
+    SpineUp { rail: usize, spine: usize },
+    /// Tiered fabrics: spine → leaf core downlink.
+    SpineDown { rail: usize, spine: usize },
+}
+
+/// Parameters of the leaf–spine tier above the rails (None on flat
+/// rail-matched fabrics): nodes group into pods of `pod_size`; each pod
+/// owns one leaf switch per rail, and each rail plane is served by
+/// `spines_per_rail` spine switches shared by all pods.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tier {
+    pub pod_size: usize,
+    pub pods: usize,
+    pub spines_per_rail: usize,
+    /// Oversubscription ratio: leaf down-capacity (towards the nodes)
+    /// divided by leaf up-capacity (towards the spines). 1.0 = full
+    /// bisection; 2.0 = half the core bandwidth.
+    pub oversub: f64,
+    /// Per-edge leaf↔spine capacity (GB/s), derived so the pod's total
+    /// uplink bandwidth is `pod_size · rail_gbps / oversub` per rail.
+    pub uplink_gbps: f64,
 }
 
 /// Static description of the cluster fabric.
@@ -63,10 +92,20 @@ pub struct Topology {
     /// impossible — the only link a relay could use is already taken
     /// by the direct path. Inter-node multi-rail balancing still works.
     pub nvswitch: bool,
+    /// Leaf–spine tier above the rails; `None` on flat fabrics, where
+    /// inter-node rails connect NIC-to-NIC with no switch hops.
+    pub tier: Option<Tier>,
+    /// Switch vertex count (leaves + spines); switch vertices occupy
+    /// ids `num_gpus()..num_gpus()+num_switches` in `Link::src/dst`.
+    num_switches: usize,
     // ---- O(1) link lookup tables ----
     nvlink_idx: Vec<Vec<Vec<Option<LinkId>>>>, // [node][src_local][dst_local]
     rail_idx: Vec<Vec<Vec<Option<LinkId>>>>,   // [src_node][dst_node][rail]
     cross_idx: Vec<Vec<Vec<Vec<Option<LinkId>>>>>, // [src_node][dst_node][sr][dr]
+    leaf_up_idx: Vec<Vec<Option<LinkId>>>,     // [node][rail]
+    leaf_down_idx: Vec<Vec<Option<LinkId>>>,   // [node][rail]
+    spine_up_idx: Vec<Vec<Vec<Option<LinkId>>>>, // [pod][rail][spine]
+    spine_down_idx: Vec<Vec<Vec<Option<LinkId>>>>, // [pod][rail][spine]
 }
 
 /// Effective large-message capacities measured on the paper's testbed
@@ -75,6 +114,10 @@ pub const NVLINK_GBPS: f64 = 120.0;
 pub const RAIL_GBPS: f64 = 45.1;
 /// Switch-tier penalty for rail-mismatched traffic (baselines only).
 pub const CROSS_RAIL_FACTOR: f64 = 0.72;
+/// Default spine switches per rail plane on tiered fabrics: two gives
+/// the planner a real core-path choice (and ECMP something to hash
+/// over) without exploding the candidate count.
+pub const SPINES_PER_RAIL: usize = 2;
 
 impl Topology {
     /// The paper's testbed: `hgx(2, 4, 4)` = 2 nodes × (4 GPU + 4 NIC).
@@ -95,6 +138,16 @@ impl Topology {
     /// model.
     pub fn cluster(nodes: usize) -> Topology {
         Self::build(nodes, 8, 4, NVLINK_GBPS, RAIL_GBPS, true)
+    }
+
+    /// Multi-tier leaf–spine fabric over the same node shape as
+    /// [`Topology::cluster`] (8 GPUs + 4 NICs per node): nodes group
+    /// into pods, each pod has one leaf switch per rail, and every rail
+    /// plane is served by [`SPINES_PER_RAIL`] spines whose uplinks are
+    /// oversubscribed by `oversub`. Inter-node traffic rides
+    /// GPU→leaf(→spine→leaf)→GPU instead of the flat NIC-to-NIC rails.
+    pub fn fat_tree(nodes: usize, oversub: f64) -> Topology {
+        Self::build_fat_tree(nodes, 8, 4, NVLINK_GBPS, RAIL_GBPS, oversub, SPINES_PER_RAIL)
     }
 
     /// DGX-like NVSwitch variant (paper §VII "Limitations"): same
@@ -199,9 +252,158 @@ impl Topology {
             rail_gbps,
             cross_rail_factor: CROSS_RAIL_FACTOR,
             nvswitch: false,
+            tier: None,
+            num_switches: 0,
             nvlink_idx,
             rail_idx,
             cross_idx,
+            leaf_up_idx: Vec::new(),
+            leaf_down_idx: Vec::new(),
+            spine_up_idx: Vec::new(),
+            spine_down_idx: Vec::new(),
+        }
+    }
+
+    /// Fully parametric leaf–spine constructor. Pods are the largest of
+    /// 4/2/1 nodes that divides `nodes`; each pod gets one leaf switch
+    /// per rail and each rail plane `spines_per_rail` spines. Leaf↔spine
+    /// edge capacity is set so a pod's total per-rail uplink bandwidth
+    /// is `pod_size · rail_gbps / oversub`. No flat rail or cross-rail
+    /// edges exist: all inter-node traffic takes switch hops.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_fat_tree(
+        nodes: usize,
+        gpus_per_node: usize,
+        nics_per_node: usize,
+        nvlink_gbps: f64,
+        rail_gbps: f64,
+        oversub: f64,
+        spines_per_rail: usize,
+    ) -> Topology {
+        assert!(nodes >= 1 && gpus_per_node >= 1);
+        assert!(
+            nics_per_node >= 1
+                && nics_per_node <= gpus_per_node
+                && gpus_per_node % nics_per_node == 0,
+            "rail-matched layout requires NIC count to divide the GPU count \
+             (NIC r attaches to GPU r; paper §IV-B)"
+        );
+        assert!(
+            oversub >= 1.0 && oversub.is_finite(),
+            "oversubscription ratio is leaf-down / leaf-up capacity and must be ≥ 1"
+        );
+        assert!(spines_per_rail >= 1, "need at least one spine per rail plane");
+        let pod_size = [4usize, 2, 1]
+            .into_iter()
+            .find(|p| *p <= nodes && nodes % p == 0)
+            .unwrap();
+        let pods = nodes / pod_size;
+        let uplink_gbps = pod_size as f64 * rail_gbps / (spines_per_rail as f64 * oversub);
+        let g = nodes * gpus_per_node;
+        let num_leaves = pods * nics_per_node;
+        let num_switches = num_leaves + nics_per_node * spines_per_rail;
+
+        let mut links = Vec::new();
+        let mut nvlink_idx =
+            vec![vec![vec![None; gpus_per_node]; gpus_per_node]; nodes];
+        let mut leaf_up_idx = vec![vec![None; nics_per_node]; nodes];
+        let mut leaf_down_idx = vec![vec![None; nics_per_node]; nodes];
+        let mut spine_up_idx = vec![vec![vec![None; spines_per_rail]; nics_per_node]; pods];
+        let mut spine_down_idx =
+            vec![vec![vec![None; spines_per_rail]; nics_per_node]; pods];
+
+        // Intra-node all-to-all NVLink mesh — identical to `build`.
+        for n in 0..nodes {
+            for i in 0..gpus_per_node {
+                for j in 0..gpus_per_node {
+                    if i == j {
+                        continue;
+                    }
+                    let id = links.len();
+                    links.push(Link {
+                        id,
+                        kind: LinkKind::NvLink,
+                        src: n * gpus_per_node + i,
+                        dst: n * gpus_per_node + j,
+                        cap_gbps: nvlink_gbps,
+                    });
+                    nvlink_idx[n][i][j] = Some(id);
+                }
+            }
+        }
+        // NIC tier: each node's rail-r NIC attaches up and down to its
+        // pod's rail-r leaf (leaf vertex id = g + pod·nics + rail).
+        for n in 0..nodes {
+            let pod = n / pod_size;
+            for r in 0..nics_per_node {
+                let leaf = g + pod * nics_per_node + r;
+                let nic_gpu = n * gpus_per_node + r;
+                let id = links.len();
+                links.push(Link {
+                    id,
+                    kind: LinkKind::LeafUp { rail: r },
+                    src: nic_gpu,
+                    dst: leaf,
+                    cap_gbps: rail_gbps,
+                });
+                leaf_up_idx[n][r] = Some(id);
+                let id = links.len();
+                links.push(Link {
+                    id,
+                    kind: LinkKind::LeafDown { rail: r },
+                    src: leaf,
+                    dst: nic_gpu,
+                    cap_gbps: rail_gbps,
+                });
+                leaf_down_idx[n][r] = Some(id);
+            }
+        }
+        // Core tier: every leaf connects to all spines of its rail
+        // plane (spine vertex id = g + num_leaves + rail·S + spine).
+        for pod in 0..pods {
+            for r in 0..nics_per_node {
+                let leaf = g + pod * nics_per_node + r;
+                for k in 0..spines_per_rail {
+                    let spine = g + num_leaves + r * spines_per_rail + k;
+                    let id = links.len();
+                    links.push(Link {
+                        id,
+                        kind: LinkKind::SpineUp { rail: r, spine: k },
+                        src: leaf,
+                        dst: spine,
+                        cap_gbps: uplink_gbps,
+                    });
+                    spine_up_idx[pod][r][k] = Some(id);
+                    let id = links.len();
+                    links.push(Link {
+                        id,
+                        kind: LinkKind::SpineDown { rail: r, spine: k },
+                        src: spine,
+                        dst: leaf,
+                        cap_gbps: uplink_gbps,
+                    });
+                    spine_down_idx[pod][r][k] = Some(id);
+                }
+            }
+        }
+        Topology {
+            nodes,
+            gpus_per_node,
+            nics_per_node,
+            links,
+            nvlink_gbps,
+            rail_gbps,
+            cross_rail_factor: CROSS_RAIL_FACTOR,
+            nvswitch: false,
+            tier: Some(Tier { pod_size, pods, spines_per_rail, oversub, uplink_gbps }),
+            num_switches,
+            nvlink_idx,
+            rail_idx: Vec::new(),
+            cross_idx: Vec::new(),
+            leaf_up_idx,
+            leaf_down_idx,
+            spine_up_idx,
+            spine_down_idx,
         }
     }
 
@@ -241,9 +443,10 @@ impl Topology {
         self.nvlink_idx[self.node_of(src)][self.local_of(src)][self.local_of(dst)]
     }
 
-    /// Rail-matched inter-node edge on rail `r`.
+    /// Rail-matched inter-node edge on rail `r` (flat fabrics only —
+    /// tiered fabrics have no NIC-to-NIC rails).
     pub fn rail(&self, src_node: usize, dst_node: usize, r: usize) -> Option<LinkId> {
-        if src_node == dst_node {
+        if src_node == dst_node || self.rail_idx.is_empty() {
             return None;
         }
         self.rail_idx[src_node][dst_node][r]
@@ -257,10 +460,95 @@ impl Topology {
         sr: usize,
         dr: usize,
     ) -> Option<LinkId> {
-        if src_node == dst_node || sr == dr {
+        if src_node == dst_node || sr == dr || self.cross_idx.is_empty() {
             return None;
         }
         self.cross_idx[src_node][dst_node][sr][dr]
+    }
+
+    // ---- tiered-fabric vertices and links ----
+
+    /// Switch vertex count (0 on flat fabrics).
+    pub fn num_switches(&self) -> usize {
+        self.num_switches
+    }
+
+    /// Whether vertex `v` (a `Link::src`/`dst` value) is a switch
+    /// rather than a GPU. Switches forward in hardware: they are never
+    /// relays, endpoints, or NIC owners.
+    pub fn is_switch(&self, v: usize) -> bool {
+        v >= self.num_gpus()
+    }
+
+    /// The pod a node belongs to (0 for every node on flat fabrics).
+    pub fn pod_of(&self, node: usize) -> usize {
+        match &self.tier {
+            Some(t) => node / t.pod_size,
+            None => 0,
+        }
+    }
+
+    /// Vertex id of pod `pod`'s rail-`rail` leaf switch.
+    pub fn leaf_id(&self, pod: usize, rail: usize) -> usize {
+        self.num_gpus() + pod * self.nics_per_node + rail
+    }
+
+    /// Vertex id of rail plane `rail`'s spine `k`.
+    pub fn spine_id(&self, rail: usize, k: usize) -> usize {
+        let t = self.tier.as_ref().expect("spines exist only on tiered fabrics");
+        self.num_gpus() + t.pods * self.nics_per_node + rail * t.spines_per_rail + k
+    }
+
+    /// NIC uplink of `node`'s rail `r` into its pod leaf.
+    pub fn leaf_up(&self, node: usize, r: usize) -> Option<LinkId> {
+        self.leaf_up_idx.get(node).and_then(|v| v.get(r).copied().flatten())
+    }
+
+    /// Leaf downlink onto `node`'s rail-`r` NIC.
+    pub fn leaf_down(&self, node: usize, r: usize) -> Option<LinkId> {
+        self.leaf_down_idx.get(node).and_then(|v| v.get(r).copied().flatten())
+    }
+
+    /// Core uplink from pod `pod`'s rail-`r` leaf to spine `k`.
+    pub fn spine_up(&self, pod: usize, r: usize, k: usize) -> Option<LinkId> {
+        self.spine_up_idx
+            .get(pod)
+            .and_then(|v| v.get(r))
+            .and_then(|v| v.get(k).copied().flatten())
+    }
+
+    /// Core downlink from spine `k` to pod `pod`'s rail-`r` leaf.
+    pub fn spine_down(&self, pod: usize, r: usize, k: usize) -> Option<LinkId> {
+        self.spine_down_idx
+            .get(pod)
+            .and_then(|v| v.get(r))
+            .and_then(|v| v.get(k).copied().flatten())
+    }
+
+    /// The node whose NIC-injection budget link `l` draws from: the
+    /// node-side source of a NIC edge. `None` for NVLink and core
+    /// (leaf↔spine) links, which never touch a node's NIC complex on
+    /// the send side. On flat fabrics this is `Some` exactly for the
+    /// non-NVLink links, which is what the fabric backends' per-node
+    /// aggregate caps were keyed on before the tier existed.
+    pub fn nic_out_node(&self, l: &Link) -> Option<usize> {
+        match l.kind {
+            LinkKind::Rail { .. } | LinkKind::CrossRail { .. } | LinkKind::LeafUp { .. } => {
+                Some(self.node_of(l.src))
+            }
+            _ => None,
+        }
+    }
+
+    /// The node whose NIC-receive budget link `l` draws from (see
+    /// [`Topology::nic_out_node`]).
+    pub fn nic_in_node(&self, l: &Link) -> Option<usize> {
+        match l.kind {
+            LinkKind::Rail { .. } | LinkKind::CrossRail { .. } | LinkKind::LeafDown { .. } => {
+                Some(self.node_of(l.dst))
+            }
+            _ => None,
+        }
     }
 
     pub fn link(&self, id: LinkId) -> &Link {
@@ -320,6 +608,7 @@ mod tests {
                         Some(l.id)
                     );
                 }
+                _ => panic!("no switch links on a flat fabric"),
             }
         }
     }
@@ -342,6 +631,7 @@ mod tests {
                 LinkKind::CrossRail { .. } => {
                     assert!((l.cap_gbps - RAIL_GBPS * CROSS_RAIL_FACTOR).abs() < 1e-9)
                 }
+                _ => panic!("no switch links on a flat fabric"),
             }
         }
     }
@@ -396,5 +686,109 @@ mod tests {
         // GPU 0 on node 0: 3 nvlink out + 1 rail out (to node 1, rail 0)
         // + 3 cross-rail out (to node 1 rails 1..3).
         assert_eq!(t.out_links(0).count(), 7);
+    }
+
+    #[test]
+    fn fat_tree_counts_and_vertices() {
+        let t = Topology::fat_tree(8, 2.0);
+        let tier = t.tier.as_ref().unwrap();
+        assert_eq!((tier.pod_size, tier.pods, tier.spines_per_rail), (4, 2, 2));
+        assert_eq!(t.num_switches(), 2 * 4 + 4 * 2); // 8 leaves + 8 spines
+        assert_eq!(t.num_gpus(), 64);
+        assert!(t.is_switch(64) && !t.is_switch(63));
+        // per-edge uplink cap: pod_size·rail / (S·oversub) = 4·45.1/4
+        assert!((tier.uplink_gbps - RAIL_GBPS).abs() < 1e-9);
+        // no flat rails or cross-rails on a tiered fabric
+        assert!(t.rail(0, 1, 0).is_none());
+        assert!(t.cross_rail(0, 1, 0, 1).is_none());
+        let nic = t
+            .links
+            .iter()
+            .filter(|l| matches!(l.kind, LinkKind::LeafUp { .. } | LinkKind::LeafDown { .. }))
+            .count();
+        assert_eq!(nic, 8 * 4 * 2);
+        let core = t
+            .links
+            .iter()
+            .filter(|l| matches!(l.kind, LinkKind::SpineUp { .. } | LinkKind::SpineDown { .. }))
+            .count();
+        assert_eq!(core, 2 * 4 * 2 * 2); // pods × rails × spines × both dirs
+    }
+
+    #[test]
+    fn fat_tree_lookup_tables_agree_with_links() {
+        let t = Topology::fat_tree(8, 2.0);
+        for l in &t.links {
+            match l.kind {
+                LinkKind::NvLink => assert_eq!(t.nvlink(l.src, l.dst), Some(l.id)),
+                LinkKind::LeafUp { rail } => {
+                    let n = t.node_of(l.src);
+                    assert_eq!(t.local_of(l.src), rail, "NIC r attaches to GPU r");
+                    assert_eq!(t.leaf_up(n, rail), Some(l.id));
+                    assert_eq!(l.dst, t.leaf_id(t.pod_of(n), rail));
+                }
+                LinkKind::LeafDown { rail } => {
+                    let n = t.node_of(l.dst);
+                    assert_eq!(t.leaf_down(n, rail), Some(l.id));
+                    assert_eq!(l.src, t.leaf_id(t.pod_of(n), rail));
+                }
+                LinkKind::SpineUp { rail, spine } => {
+                    let pod = (l.src - t.num_gpus()) / t.nics_per_node;
+                    assert_eq!(t.spine_up(pod, rail, spine), Some(l.id));
+                    assert_eq!(l.dst, t.spine_id(rail, spine));
+                }
+                LinkKind::SpineDown { rail, spine } => {
+                    let pod = (l.dst - t.num_gpus()) / t.nics_per_node;
+                    assert_eq!(t.spine_down(pod, rail, spine), Some(l.id));
+                    assert_eq!(l.src, t.spine_id(rail, spine));
+                }
+                _ => panic!("flat rail link on a tiered fabric"),
+            }
+        }
+    }
+
+    #[test]
+    fn nic_charge_helpers_match_flat_rule() {
+        // Flat: charge both ends of every non-NVLink link — the rule
+        // the fabric backends used before the tier existed.
+        let t = Topology::paper();
+        for l in &t.links {
+            let is_net = !matches!(l.kind, LinkKind::NvLink);
+            assert_eq!(t.nic_out_node(l), is_net.then_some(t.node_of(l.src)));
+            assert_eq!(t.nic_in_node(l), is_net.then_some(t.node_of(l.dst)));
+        }
+        // Tiered: NIC edges charge their node-side end only; core
+        // links charge no node.
+        let ft = Topology::fat_tree(8, 2.0);
+        for l in &ft.links {
+            match l.kind {
+                LinkKind::LeafUp { .. } => {
+                    assert_eq!(ft.nic_out_node(l), Some(ft.node_of(l.src)));
+                    assert_eq!(ft.nic_in_node(l), None);
+                }
+                LinkKind::LeafDown { .. } => {
+                    assert_eq!(ft.nic_out_node(l), None);
+                    assert_eq!(ft.nic_in_node(l), Some(ft.node_of(l.dst)));
+                }
+                LinkKind::SpineUp { .. } | LinkKind::SpineDown { .. } => {
+                    assert_eq!(ft.nic_out_node(l), None);
+                    assert_eq!(ft.nic_in_node(l), None);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn fat_tree_pod_sizes_divide_nodes() {
+        assert_eq!(Topology::fat_tree(64, 2.0).tier.as_ref().unwrap().pods, 16);
+        assert_eq!(Topology::fat_tree(2, 1.0).tier.as_ref().unwrap().pod_size, 2);
+        assert_eq!(Topology::fat_tree(3, 1.0).tier.as_ref().unwrap().pod_size, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "oversubscription")]
+    fn fat_tree_rejects_sub_unit_oversub() {
+        let _ = Topology::fat_tree(8, 0.5);
     }
 }

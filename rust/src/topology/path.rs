@@ -24,6 +24,11 @@ pub enum PathKind {
     InterRail { rail: usize },
     /// rail-mismatched inter-node path (baselines)
     InterCross { src_rail: usize, dst_rail: usize },
+    /// tiered: intra-pod inter-node path through the pod's rail-`rail`
+    /// leaf switch
+    InterLeaf { rail: usize },
+    /// tiered: inter-pod path through rail plane `rail`'s spine `spine`
+    InterSpine { rail: usize, spine: usize },
 }
 
 /// A concrete routed path: an ordered list of directed links.
@@ -36,19 +41,26 @@ pub struct Path {
 }
 
 impl Path {
-    /// Number of GPU-relay forwarding stops (not counting src/dst):
-    /// every interior vertex of the hop chain is a relay GPU.
+    /// Number of GPU-relay forwarding stops (not counting src/dst) on a
+    /// **flat** fabric, where every interior vertex of the hop chain is
+    /// a relay GPU. On tiered fabrics interior vertices may be switches
+    /// (which forward in hardware, not software) — use
+    /// [`Path::relays`]`.len()` there.
     pub fn relay_count(&self) -> usize {
         self.hops.len().saturating_sub(1)
     }
 
-    /// GPUs that forward (interior vertices of the path).
+    /// GPUs that forward (interior vertices of the path). Switch
+    /// vertices are skipped: forwarding there is the fabric's job, not
+    /// a GPU copy engine's.
     pub fn relays(&self, topo: &Topology) -> Vec<GpuId> {
         let mut out = Vec::new();
         for w in self.hops.windows(2) {
             let mid = topo.link(w[0]).dst;
             debug_assert_eq!(mid, topo.link(w[1]).src, "disconnected path");
-            out.push(mid);
+            if !topo.is_switch(mid) {
+                out.push(mid);
+            }
         }
         out
     }
@@ -105,21 +117,77 @@ pub fn candidates(topo: &Topology, s: GpuId, d: GpuId, allow_multipath: bool) ->
             // affinity), like NCCL's default p2p choice.
             vec![topo.home_rail(s)]
         };
+        // Tier-walk: per rail, the staging/landing NVLink hops (PXN
+        // forwarding to/from the rail GPU) are tier-independent; the
+        // fabric segment between the two rail GPUs depends on the tier
+        // — a single flat NIC edge, a leaf bounce inside a pod, or one
+        // candidate per core spine across pods.
         for r in rails {
-            let mut hops = Vec::with_capacity(3);
             let g_ra = topo.gpu(na, r);
             let g_rb = topo.gpu(nb, r);
-            if g_ra != s {
-                hops.push(topo.nvlink(s, g_ra).unwrap());
+            for (kind, seg) in fabric_segments(topo, na, nb, r, allow_multipath) {
+                let mut hops = Vec::with_capacity(seg.len() + 2);
+                if g_ra != s {
+                    hops.push(topo.nvlink(s, g_ra).unwrap());
+                }
+                hops.extend(seg);
+                if g_rb != d {
+                    hops.push(topo.nvlink(g_rb, d).unwrap());
+                }
+                out.push(Path { src: s, dst: d, kind, hops });
             }
-            hops.push(topo.rail(na, nb, r).unwrap());
-            if g_rb != d {
-                hops.push(topo.nvlink(g_rb, d).unwrap());
-            }
-            out.push(Path { src: s, dst: d, kind: PathKind::InterRail { rail: r }, hops });
         }
     }
     out
+}
+
+/// The inter-node fabric segments between the rail-`r` GPUs of nodes
+/// `na` and `nb`, one per distinct route through the fabric tier.
+///
+/// Flat fabrics return exactly the single NIC-to-NIC rail edge —
+/// [`candidates`] therefore reproduces the pre-tier hop lists (and
+/// kinds) bit-identically, which the flat-identity anchor tests pin.
+/// Tiered fabrics return the leaf bounce for intra-pod pairs, and one
+/// segment per spine (`allow_multipath`) or the deterministic
+/// `(na + nb) % spines` spine (single-path mode) across pods.
+fn fabric_segments(
+    topo: &Topology,
+    na: usize,
+    nb: usize,
+    r: usize,
+    allow_multipath: bool,
+) -> Vec<(PathKind, Vec<LinkId>)> {
+    let Some(tier) = &topo.tier else {
+        return vec![(
+            PathKind::InterRail { rail: r },
+            vec![topo.rail(na, nb, r).expect("flat inter-node rail")],
+        )];
+    };
+    let up = topo.leaf_up(na, r).expect("node NIC uplink");
+    let down = topo.leaf_down(nb, r).expect("node NIC downlink");
+    let (pa, pb) = (topo.pod_of(na), topo.pod_of(nb));
+    if pa == pb {
+        return vec![(PathKind::InterLeaf { rail: r }, vec![up, down])];
+    }
+    let spines: Vec<usize> = if allow_multipath {
+        (0..tier.spines_per_rail).collect()
+    } else {
+        vec![(na + nb) % tier.spines_per_rail]
+    };
+    spines
+        .into_iter()
+        .map(|k| {
+            (
+                PathKind::InterSpine { rail: r, spine: k },
+                vec![
+                    up,
+                    topo.spine_up(pa, r, k).expect("leaf uplink"),
+                    topo.spine_down(pb, r, k).expect("leaf downlink"),
+                    down,
+                ],
+            )
+        })
+        .collect()
 }
 
 /// The baseline cross-rail path (source rail NIC straight to the
@@ -267,6 +335,46 @@ mod tests {
         let w = cross_rail_path(&c, 4, 13).unwrap(); // home rails 0 → 1
         assert!(w.is_valid(&c));
         assert_eq!(w.hops.len(), 3);
+    }
+
+    /// Tiered fabrics: intra-pod pairs bounce through the pod leaf (one
+    /// candidate per rail), inter-pod pairs get one candidate per
+    /// (rail, spine), and switch vertices never count as GPU relays.
+    #[test]
+    fn fat_tree_candidates() {
+        let t = Topology::fat_tree(8, 2.0); // pods of 4 nodes
+        // GPU 1 (node 0) → GPU 17 (node 2): same pod
+        let intra_pod = candidates(&t, 1, 17, true);
+        assert_eq!(intra_pod.len(), 4);
+        for p in &intra_pod {
+            assert!(p.is_valid(&t), "{:?} invalid", p.kind);
+            assert!(matches!(p.kind, PathKind::InterLeaf { .. }));
+            // stage + up + down + land: endpoints own no NIC on most rails
+            assert!(p.hops.len() >= 2 && p.hops.len() <= 4);
+        }
+        // GPU 1 (node 0, pod 0) → GPU 33 (node 4, pod 1): cross-pod,
+        // one candidate per rail × spine
+        let inter_pod = candidates(&t, 1, 33, true);
+        assert_eq!(inter_pod.len(), 4 * 2);
+        for p in &inter_pod {
+            assert!(p.is_valid(&t), "{:?} invalid", p.kind);
+            assert!(matches!(p.kind, PathKind::InterSpine { .. }));
+            // GPU relays are only the rail GPUs, never the switches
+            assert!(p.relays(&t).len() <= 2, "{:?}", p.relays(&t));
+        }
+        // single-path mode: home rail + deterministic spine
+        let single = candidates(&t, 1, 33, false);
+        assert_eq!(single.len(), 1);
+        // spine = (na + nb) % S = (0 + 4) % 2
+        assert_eq!(single[0].kind, PathKind::InterSpine { rail: 1, spine: 0 });
+    }
+
+    #[test]
+    fn fat_tree_intra_node_unchanged() {
+        let t = Topology::fat_tree(8, 2.0);
+        let c = candidates(&t, 0, 1, true);
+        assert_eq!(c.len(), 7); // direct + 6 relays on the 8-GPU mesh
+        assert!(c.iter().all(|p| p.is_valid(&t)));
     }
 
     #[test]

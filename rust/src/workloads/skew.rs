@@ -60,6 +60,49 @@ pub fn hotspot_alltoallv_jittered(
     (hot, demands)
 }
 
+/// Skewed All-to-Allv with per-rank hot *peers* instead of one shared
+/// hot sink: rank `s` directs `hotspot_ratio` of its payload to the
+/// same-local-index GPU `shift_nodes` nodes away, the rest evenly to
+/// everyone else. With `shift_nodes >= pod_size` every hot column
+/// crosses the fat-tree core, so the aggregate skew stresses the
+/// oversubscribed spine tier rather than a single receiver NIC (a
+/// one-sink hotspot is ingress-bound at the hot node — every routing
+/// scheme ties there, see DESIGN.md §12).
+pub fn shifted_hotspot_alltoallv(
+    topo: &Topology,
+    payload_bytes: f64,
+    hotspot_ratio: f64,
+    shift_nodes: usize,
+) -> Vec<Demand> {
+    assert!((0.0..=1.0).contains(&hotspot_ratio));
+    let n = topo.num_gpus();
+    let mut out = Vec::new();
+    for s in 0..n {
+        let hot = topo.gpu((topo.node_of(s) + shift_nodes) % topo.nodes, topo.local_of(s));
+        if hot == s {
+            let per = payload_bytes / (n - 1) as f64;
+            for d in 0..n {
+                if d != s {
+                    out.push(Demand::new(s, d, per));
+                }
+            }
+            continue;
+        }
+        let hot_bytes = payload_bytes * hotspot_ratio;
+        let rest = (payload_bytes - hot_bytes) / (n - 2).max(1) as f64;
+        for d in 0..n {
+            if d == s {
+                continue;
+            }
+            let b = if d == hot { hot_bytes } else { rest };
+            if b > 0.0 {
+                out.push(Demand::new(s, d, b));
+            }
+        }
+    }
+    out
+}
+
 /// The uniform (hotspot_ratio = 1/(n-1)) All-to-All used for the
 /// balanced-parity experiments.
 pub fn uniform_alltoall(topo: &Topology, payload_bytes: f64) -> Vec<Demand> {
@@ -115,6 +158,39 @@ mod tests {
         let demands = hotspot_alltoallv(&t, 1e6, 1.0, 0);
         for d in demands.iter().filter(|d| d.src != 0) {
             assert_eq!(d.dst, 0, "all non-hot traffic must target the hotspot");
+        }
+    }
+
+    #[test]
+    fn shifted_hot_peers_are_cross_pod_and_conserve() {
+        let t = Topology::fat_tree(8, 2.0);
+        let payload = 1e8;
+        let demands = shifted_hotspot_alltoallv(&t, payload, 0.5, 4);
+        for s in 0..t.num_gpus() {
+            let sent: f64 =
+                demands.iter().filter(|d| d.src == s).map(|d| d.bytes).sum();
+            assert!((sent - payload).abs() < 1e-3, "rank {s} sent {sent}");
+            // the hot column is the single largest part and crosses pods
+            let hot = demands
+                .iter()
+                .filter(|d| d.src == s)
+                .max_by(|a, b| a.bytes.total_cmp(&b.bytes))
+                .unwrap();
+            assert!((hot.bytes - 0.5 * payload).abs() < 1e-3);
+            assert_eq!(t.local_of(hot.dst), t.local_of(s));
+            assert_ne!(
+                t.pod_of(t.node_of(s)),
+                t.pod_of(t.node_of(hot.dst)),
+                "shift >= pod_size must land in another pod"
+            );
+        }
+        // every rank also receives exactly one hot column: no shared sink
+        for d in 0..t.num_gpus() {
+            let hot_in = demands
+                .iter()
+                .filter(|x| x.dst == d && (x.bytes - 0.5 * payload).abs() < 1e-3)
+                .count();
+            assert_eq!(hot_in, 1, "rank {d}");
         }
     }
 

@@ -1,0 +1,248 @@
+//! Property suite over the topology layer's tier-walk refactor and the
+//! ECMP hash-striping adversary: the flat-identity anchor (the tier
+//! walk must reproduce the pre-tier candidate enumeration byte for
+//! byte on every flat fabric) and the determinism/coverage contracts
+//! of the hash-based baseline.
+
+use nimble::baselines::{EcmpHash, Router};
+use nimble::planner::Demand;
+use nimble::prop_assert;
+use nimble::topology::path::{candidates, Path, PathKind};
+use nimble::topology::Topology;
+use nimble::util::quickcheck::check_seeded;
+
+const MB: f64 = 1024.0 * 1024.0;
+
+/// The candidate enumeration exactly as it existed before the tier
+/// walk: intra-node direct + two-hop relays, inter-node one
+/// rail-matched path per rail over the single flat NIC edge. Kept here
+/// verbatim as the reference the refactored [`candidates`] must
+/// reproduce bit for bit on flat topologies.
+fn legacy_flat_candidates(
+    topo: &Topology,
+    s: usize,
+    d: usize,
+    allow_multipath: bool,
+) -> Vec<Path> {
+    assert!(topo.tier.is_none(), "legacy enumeration is flat-only");
+    let mut out = Vec::new();
+    if topo.same_node(s, d) {
+        let direct = topo.nvlink(s, d).expect("all-to-all NVLink mesh");
+        out.push(Path { src: s, dst: d, kind: PathKind::IntraDirect, hops: vec![direct] });
+        if allow_multipath && !topo.nvswitch {
+            let node = topo.node_of(s);
+            for local in 0..topo.gpus_per_node {
+                let i = topo.gpu(node, local);
+                if i == s || i == d {
+                    continue;
+                }
+                out.push(Path {
+                    src: s,
+                    dst: d,
+                    kind: PathKind::IntraTwoHop { via: i },
+                    hops: vec![topo.nvlink(s, i).unwrap(), topo.nvlink(i, d).unwrap()],
+                });
+            }
+        }
+    } else {
+        let (na, nb) = (topo.node_of(s), topo.node_of(d));
+        let rails: Vec<usize> = if allow_multipath {
+            (0..topo.nics_per_node).collect()
+        } else {
+            vec![topo.home_rail(s)]
+        };
+        for r in rails {
+            let g_ra = topo.gpu(na, r);
+            let g_rb = topo.gpu(nb, r);
+            let mut hops = Vec::new();
+            if g_ra != s {
+                hops.push(topo.nvlink(s, g_ra).unwrap());
+            }
+            hops.push(topo.rail(na, nb, r).expect("flat inter-node rail"));
+            if g_rb != d {
+                hops.push(topo.nvlink(g_rb, d).unwrap());
+            }
+            out.push(Path { src: s, dst: d, kind: PathKind::InterRail { rail: r }, hops });
+        }
+    }
+    out
+}
+
+fn assert_same_paths(topo: &Topology, s: usize, d: usize, mp: bool) -> Result<(), String> {
+    let new = candidates(topo, s, d, mp);
+    let old = legacy_flat_candidates(topo, s, d, mp);
+    prop_assert!(
+        new == old,
+        "tier-walk diverged from legacy flat enumeration for ({s},{d}) mp={mp}:\n  new {new:?}\n  old {old:?}"
+    );
+    Ok(())
+}
+
+/// Flat-identity anchor, exhaustively on the paper topology: every
+/// ordered pair, both multipath modes, full struct equality (kind AND
+/// hop list, in order).
+#[test]
+fn prop_tier_walk_flat_identity_paper_exhaustive() {
+    let topo = Topology::paper();
+    for s in 0..topo.num_gpus() {
+        for d in 0..topo.num_gpus() {
+            if s == d {
+                continue;
+            }
+            for mp in [false, true] {
+                assert_same_paths(&topo, s, d, mp).unwrap();
+            }
+        }
+    }
+}
+
+/// Flat-identity anchor on wide clusters: seeded (s, d) sweeps over
+/// random `cluster(N)` sizes must match the legacy enumeration byte
+/// for byte — this is the guarantee that lets every pre-tier plan /
+/// serve / xcheck anchor stay bit-identical after the refactor.
+#[test]
+fn prop_tier_walk_flat_identity_clusters() {
+    check_seeded(0x70_9071, 60, |g| {
+        let nodes = g.usize(2, 12);
+        let topo = Topology::cluster(nodes);
+        for _ in 0..16 {
+            let s = g.usize(0, topo.num_gpus() - 1);
+            let mut d = g.usize(0, topo.num_gpus() - 1);
+            if d == s {
+                d = (d + 1) % topo.num_gpus();
+            }
+            assert_same_paths(&topo, s, d, g.bool())?;
+        }
+        Ok(())
+    });
+}
+
+/// Tiered enumeration invariants at random sizes: every candidate is a
+/// connected chain, per-rail coverage is complete, cross-pod pairs get
+/// one candidate per (rail, spine), and no candidate ever uses a flat
+/// NIC edge (those links don't exist on tiered fabrics).
+#[test]
+fn prop_tiered_candidates_valid_and_cover_rails() {
+    check_seeded(0x70_9072, 40, |g| {
+        let nodes = *g.pick(&[2usize, 4, 6, 8, 12, 16]);
+        let oversub = *g.pick(&[1.0f64, 2.0, 4.0]);
+        let topo = Topology::fat_tree(nodes, oversub);
+        let tier = topo.tier.as_ref().expect("tiered fabric");
+        let spines = tier.spines_per_rail;
+        for _ in 0..12 {
+            let s = g.usize(0, topo.num_gpus() - 1);
+            let mut d = g.usize(0, topo.num_gpus() - 1);
+            if d == s {
+                d = (d + 1) % topo.num_gpus();
+            }
+            let cands = candidates(&topo, s, d, true);
+            for p in &cands {
+                prop_assert!(p.is_valid(&topo), "invalid path {:?}", p.kind);
+            }
+            if topo.same_node(s, d) {
+                continue;
+            }
+            let cross_pod = topo.pod_of(topo.node_of(s)) != topo.pod_of(topo.node_of(d));
+            let expect = if cross_pod {
+                topo.nics_per_node * spines
+            } else {
+                topo.nics_per_node
+            };
+            prop_assert!(
+                cands.len() == expect,
+                "({s},{d}) cross_pod={cross_pod}: {} candidates, expected {expect}",
+                cands.len()
+            );
+            for rail in 0..topo.nics_per_node {
+                let n_rail = cands
+                    .iter()
+                    .filter(|p| match p.kind {
+                        PathKind::InterLeaf { rail: r } => r == rail,
+                        PathKind::InterSpine { rail: r, .. } => r == rail,
+                        _ => false,
+                    })
+                    .count();
+                let want = if cross_pod { spines } else { 1 };
+                prop_assert!(
+                    n_rail == want,
+                    "rail {rail} has {n_rail} candidates, expected {want}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// ECMP determinism: for any topology (flat or tiered), any demand set
+/// and any hash seed, two routers with the same seed produce identical
+/// stripes — same paths, same byte shares, same order.
+#[test]
+fn prop_ecmp_deterministic_for_fixed_seed() {
+    check_seeded(0xEC_3901, 40, |g| {
+        let topo = if g.bool() {
+            Topology::fat_tree(*g.pick(&[4usize, 8, 12]), 2.0)
+        } else {
+            Topology::cluster(g.usize(2, 6))
+        };
+        let seed = g.u64(0, u64::MAX - 1);
+        let n = g.usize(1, 12);
+        let demands: Vec<Demand> = (0..n)
+            .map(|_| {
+                let s = g.usize(0, topo.num_gpus() - 1);
+                let mut d = g.usize(0, topo.num_gpus() - 1);
+                if d == s {
+                    d = (d + 1) % topo.num_gpus();
+                }
+                Demand::new(s, d, g.f64(0.5, 64.0) * MB)
+            })
+            .collect();
+        let a = EcmpHash::with_seed(seed).route(&topo, &demands);
+        let b = EcmpHash::with_seed(seed).route(&topo, &demands);
+        prop_assert!(a.len() == b.len(), "stripe counts diverged");
+        for (i, ((pa, ba), (pb, bb))) in a.iter().zip(&b).enumerate() {
+            prop_assert!(pa == pb, "stripe {i} path diverged");
+            prop_assert!(ba.to_bits() == bb.to_bits(), "stripe {i} bytes diverged");
+        }
+        Ok(())
+    });
+}
+
+/// ECMP's equal-share invariant: every inter-node demand splits into
+/// exactly `nics_per_node` stripes of bytes/R each, regardless of skew
+/// — the capacity-blindness the planner's comparison exploits.
+#[test]
+fn prop_ecmp_equal_share_invariant() {
+    check_seeded(0xEC_3902, 30, |g| {
+        let topo = if g.bool() {
+            Topology::fat_tree(8, 2.0)
+        } else {
+            Topology::cluster(4)
+        };
+        let s = g.usize(0, topo.num_gpus() - 1);
+        let mut d = g.usize(0, topo.num_gpus() - 1);
+        if d == s {
+            d = (d + 1) % topo.num_gpus();
+        }
+        let bytes = g.f64(1.0, 128.0) * MB;
+        let stripes = EcmpHash::with_seed(g.u64(0, 1 << 48)).route(
+            &topo,
+            &[Demand::new(s, d, bytes)],
+        );
+        if topo.same_node(s, d) {
+            prop_assert!(stripes.len() == 1, "intra-node must be one direct stripe");
+            return Ok(());
+        }
+        prop_assert!(
+            stripes.len() == topo.nics_per_node,
+            "{} stripes for {} rails",
+            stripes.len(),
+            topo.nics_per_node
+        );
+        let share = bytes / topo.nics_per_node as f64;
+        for (p, b) in &stripes {
+            prop_assert!((b - share).abs() < 1e-6, "unequal stripe {b} vs {share}");
+            prop_assert!(p.is_valid(&topo), "invalid stripe path");
+        }
+        Ok(())
+    });
+}
