@@ -1,0 +1,94 @@
+//! Fault-recovery bench: time-to-recover and goodput retention per
+//! fault scenario (`nimble faults` arms) on the flat testbed and a
+//! fat-tree cluster, plus the wall cost of flying the faulted
+//! epoch-driven loop.
+//!
+//! Like `benches/scale_sweep.rs`, every (topo, scenario, arm) emits
+//! one machine-readable JSON line (`{"exp":"fault_recovery",...}`) so
+//! the recovery trajectory is trackable across PRs. The
+//! replanned-beats-static retention floor is asserted here too: a
+//! perf-tracking run must not silently ship a recovery regression.
+
+use nimble::exp::faults::{scenario_rows, CADENCE_S};
+use nimble::fabric::{FabricParams, Scenario, ScenarioParams};
+use nimble::planner::PlannerCfg;
+use nimble::topology::Topology;
+use nimble::util::json::Json;
+use std::time::Instant;
+
+fn main() {
+    let params = FabricParams::default();
+    let pcfg = PlannerCfg::default();
+    let fparams = ScenarioParams::default();
+    println!(
+        "== fault recovery bench: {} scenarios x (static | replan | ecmp), epoch {:.2} ms ==",
+        Scenario::all().len(),
+        CADENCE_S * 1e3
+    );
+    let mb = 1024.0 * 1024.0;
+    let flat = Topology::paper();
+    let fat = Topology::fat_tree(4, 2.0);
+    for (label, topo, per_rank) in
+        [("flat", &flat, 96.0 * mb), ("fat-tree", &fat, 24.0 * mb)]
+    {
+        let t = Instant::now();
+        let (clean, rows) = scenario_rows(
+            label,
+            topo,
+            per_rank,
+            &params,
+            &pcfg,
+            &fparams,
+            &Scenario::all(),
+            true,
+        );
+        let wall = t.elapsed().as_secs_f64();
+        for r in &rows {
+            let line = Json::obj(vec![
+                ("exp", Json::str("fault_recovery")),
+                ("topo", Json::str(r.topo)),
+                ("scenario", Json::str(r.scenario.label())),
+                ("arm", Json::str(r.arm)),
+                ("goodput_gbps", Json::num(r.goodput_gbps)),
+                ("clean_gbps", Json::num(clean.goodput_gbps)),
+                ("retention", Json::num(r.retention)),
+                // -1: the arm never re-reached 90% of steady state
+                (
+                    "ttr_epochs",
+                    Json::num(r.ttr_epochs.map_or(-1.0, |k| k as f64)),
+                ),
+                (
+                    "ttr_ms",
+                    Json::num(
+                        r.ttr_epochs.map_or(-1.0, |k| k as f64 * CADENCE_S * 1e3),
+                    ),
+                ),
+                ("replans", Json::num(r.replans as f64)),
+                ("preemptions", Json::num(r.preemptions as f64)),
+                ("wall_s_all_arms", Json::num(wall)),
+            ]);
+            println!("{}", line.to_string_compact());
+        }
+        // the recovery floor: on every scenario the replanned arm must
+        // retain at least as much goodput as the frozen static plan
+        // (0.1% slack: no-escape scenarios legitimately tie)
+        for sc in Scenario::all() {
+            let get = |arm: &str| {
+                rows.iter()
+                    .find(|r| {
+                        r.arm == arm && r.scenario.label() == sc.label()
+                    })
+                    .expect("arm present")
+            };
+            let (st, re) = (get("static"), get("replan"));
+            assert!(
+                re.retention >= st.retention * 0.999,
+                "{label} {}: replanned retention {:.3} fell below static {:.3}",
+                sc.label(),
+                re.retention,
+                st.retention
+            );
+        }
+    }
+    println!("fault recovery bench done (gates enforced by `nimble faults --check`)");
+}

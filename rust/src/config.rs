@@ -3,6 +3,7 @@
 //! paper's 2×(4 GPU + 4 NIC) testbed are first-class (see
 //! `configs/paper.toml` for the reference file).
 
+use crate::fabric::faults::{scenario_schedule, FaultsCfg, Scenario};
 use crate::fabric::{BackendKind, FabricParams};
 use crate::orchestrator::TenancyCfg;
 use crate::planner::{CostModel, PlannerCfg, ReplanCfg};
@@ -23,6 +24,10 @@ pub struct Config {
     /// orchestrator consume it, so the section is inert for every
     /// other experiment.
     pub tenancy: TenancyCfg,
+    /// Fault injection (`[faults]`): only `nimble faults` consumes it;
+    /// scenario `"none"` (the default) builds no schedule, so the
+    /// section is inert for every other experiment.
+    pub faults: FaultsCfg,
 }
 
 impl Default for Config {
@@ -33,6 +38,7 @@ impl Default for Config {
             planner: PlannerCfg::default(),
             replan: ReplanCfg::default(),
             tenancy: TenancyCfg::default(),
+            faults: FaultsCfg::default(),
         }
     }
 }
@@ -198,6 +204,35 @@ impl Config {
         }
         cfg.tenancy.validate()?;
 
+        // [faults] (consumed only by `nimble faults`; inert otherwise)
+        if let Some(v) = doc.get("faults", "scenario") {
+            let Some(s) = v.as_str() else {
+                return Err(format!("faults.scenario must be a string, got {v:?}"));
+            };
+            cfg.faults.scenario = match s {
+                "none" => None,
+                other => Some(Scenario::parse(other).ok_or_else(|| {
+                    format!(
+                        "faults.scenario must be none|flap|degrade|straggler|mixed, \
+                         got \"{other}\""
+                    )
+                })?),
+            };
+        }
+        let sp = &mut cfg.faults.params;
+        if let Some(s) = doc.get_usize("faults", "seed") {
+            sp.seed = s as u64;
+        }
+        sp.t0_s = doc.get_f64("faults", "t0_ms").map(|ms| ms * 1e-3).unwrap_or(sp.t0_s);
+        sp.flap_period_s = doc
+            .get_f64("faults", "flap_period_ms")
+            .map(|ms| ms * 1e-3)
+            .unwrap_or(sp.flap_period_s);
+        sp.degrade_factor =
+            doc.get_f64("faults", "degrade_factor").unwrap_or(sp.degrade_factor);
+        sp.straggler_factor =
+            doc.get_f64("faults", "straggler_factor").unwrap_or(sp.straggler_factor);
+
         // sanity
         if cfg.planner.lambda <= 0.0 || cfg.planner.lambda > 1.0 {
             return Err(format!("planner.lambda out of (0,1]: {}", cfg.planner.lambda));
@@ -240,6 +275,35 @@ impl Config {
         }
         if !(0.0..1.0).contains(&cfg.replan.margin) {
             return Err(format!("replan.margin out of [0,1): {}", cfg.replan.margin));
+        }
+        // [faults] ranges (negated-compare form so NaN fails closed)
+        let sp = &cfg.faults.params;
+        if !(sp.t0_s.is_finite() && sp.t0_s >= 0.0) {
+            return Err(format!("faults.t0_ms must be finite and >= 0: {}", sp.t0_s * 1e3));
+        }
+        if !(sp.flap_period_s.is_finite() && sp.flap_period_s > 0.0) {
+            return Err(format!(
+                "faults.flap_period_ms must be positive: {}",
+                sp.flap_period_s * 1e3
+            ));
+        }
+        if !(sp.degrade_factor > 0.0 && sp.degrade_factor <= 1.0) {
+            return Err(format!(
+                "faults.degrade_factor out of (0,1]: {}",
+                sp.degrade_factor
+            ));
+        }
+        if !(sp.straggler_factor > 0.0 && sp.straggler_factor <= 1.0) {
+            return Err(format!(
+                "faults.straggler_factor out of (0,1]: {}",
+                sp.straggler_factor
+            ));
+        }
+        // a configured scenario must generate a schedule whose every
+        // link/rail/node reference exists on the configured topology
+        if let Some(sc) = cfg.faults.scenario {
+            scenario_schedule(&cfg.topology, sc, &cfg.faults.params, None)
+                .validate(&cfg.topology)?;
         }
         Ok(cfg)
     }
@@ -420,6 +484,70 @@ mod tests {
         assert!(Config::from_toml("[tenancy]\nmean_gap_ms = 0.0\n").is_err());
     }
 
+    /// `[faults]` defaults to the inert "none" scenario with the
+    /// built-in knobs; every knob overrides; invalid values fail closed.
+    #[test]
+    fn faults_section_defaults_and_overrides() {
+        let c = Config::from_toml("").unwrap();
+        assert!(c.faults.scenario.is_none());
+        assert_eq!(c.faults.params.seed, 0xFA17_5EED);
+        assert!((c.faults.params.t0_s - 1.0e-3).abs() < 1e-12);
+        assert!((c.faults.params.flap_period_s - 2.0e-3).abs() < 1e-12);
+        assert!((c.faults.params.degrade_factor - 0.25).abs() < 1e-12);
+        assert!((c.faults.params.straggler_factor - 0.25).abs() < 1e-12);
+        let c = Config::from_toml(
+            "[faults]\nscenario = \"degrade\"\nseed = 7\nt0_ms = 0.5\n\
+             flap_period_ms = 4.0\ndegrade_factor = 0.5\nstraggler_factor = 0.75\n",
+        )
+        .unwrap();
+        assert_eq!(c.faults.scenario, Some(Scenario::Degrade));
+        assert_eq!(c.faults.params.seed, 7);
+        assert!((c.faults.params.t0_s - 0.5e-3).abs() < 1e-12);
+        assert!((c.faults.params.flap_period_s - 4.0e-3).abs() < 1e-12);
+        assert!((c.faults.params.degrade_factor - 0.5).abs() < 1e-12);
+        assert!((c.faults.params.straggler_factor - 0.75).abs() < 1e-12);
+        // explicit "none" stays inert
+        assert!(Config::from_toml("[faults]\nscenario = \"none\"\n")
+            .unwrap()
+            .faults
+            .scenario
+            .is_none());
+    }
+
+    #[test]
+    fn faults_invalid_values_rejected() {
+        // unknown scenario name
+        assert!(Config::from_toml("[faults]\nscenario = \"meteor\"\n").is_err());
+        assert!(Config::from_toml("[faults]\nscenario = 3\n").is_err());
+        // flap period must be positive; NaN fails closed
+        assert!(Config::from_toml("[faults]\nflap_period_ms = 0.0\n").is_err());
+        assert!(Config::from_toml("[faults]\nflap_period_ms = nan\n").is_err());
+        // factors confined to (0, 1]
+        assert!(Config::from_toml("[faults]\ndegrade_factor = 0.0\n").is_err());
+        assert!(Config::from_toml("[faults]\ndegrade_factor = 1.5\n").is_err());
+        assert!(Config::from_toml("[faults]\nstraggler_factor = -0.5\n").is_err());
+        assert!(Config::from_toml("[faults]\nstraggler_factor = nan\n").is_err());
+        // first fire time must be finite and non-negative
+        assert!(Config::from_toml("[faults]\nt0_ms = -1.0\n").is_err());
+    }
+
+    /// A configured scenario is validated against the configured
+    /// topology — every generated reference must exist on it.
+    #[test]
+    fn faults_scenario_validates_against_topology() {
+        for sc in ["flap", "degrade", "straggler", "mixed"] {
+            let c = Config::from_toml(&format!("[faults]\nscenario = \"{sc}\"\n"))
+                .unwrap();
+            assert!(c.faults.scenario.is_some());
+            let c = Config::from_toml(&format!(
+                "[topology]\nkind = \"fat-tree\"\nnodes = 8\ngpus_per_node = 8\n\
+                 nics_per_node = 4\n[faults]\nscenario = \"{sc}\"\n"
+            ))
+            .unwrap();
+            assert!(c.faults.scenario.is_some());
+        }
+    }
+
     #[test]
     fn reference_config_file_parses() {
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/paper.toml");
@@ -444,6 +572,14 @@ mod tests {
         assert_eq!(c.tenancy.max_live, td.max_live);
         assert_eq!(c.tenancy.mean_gap_ms, td.mean_gap_ms);
         assert_eq!(c.tenancy.joint, td.joint);
+        // [faults] ships inert ("none") with the built-in knobs
+        let fd = FaultsCfg::default();
+        assert!(c.faults.scenario.is_none());
+        assert_eq!(c.faults.params.seed, fd.params.seed);
+        assert_eq!(c.faults.params.t0_s, fd.params.t0_s);
+        assert_eq!(c.faults.params.flap_period_s, fd.params.flap_period_s);
+        assert_eq!(c.faults.params.degrade_factor, fd.params.degrade_factor);
+        assert_eq!(c.faults.params.straggler_factor, fd.params.straggler_factor);
     }
 
     /// `[fabric.packet]` defaults to the fluid backend (bit-identical

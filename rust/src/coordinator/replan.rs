@@ -38,6 +38,7 @@ use super::reroute::{
     attach_reissues, pool_split_counts, preempt_and_pool, PartState, Reissue,
 };
 use crate::fabric::backend::{make_backend, FabricBackend, TailStats};
+use crate::fabric::faults::{self, FaultSchedule};
 use crate::fabric::fluid::{Flow, SimResult};
 use crate::fabric::FabricParams;
 use crate::metrics::CommReport;
@@ -62,6 +63,10 @@ pub struct EpochStat {
     pub replanned: bool,
     /// Flows preempted at this epoch.
     pub preempted: usize,
+    /// Payload bytes delivered over the epoch, as a rate (GB/s) — the
+    /// time series `nimble faults` derives time-to-recover and goodput
+    /// retention from.
+    pub goodput_gbps: f64,
 }
 
 /// Outcome of one round under the execution-time loop.
@@ -96,6 +101,13 @@ pub struct ReplanExecutor<'a> {
     pub params: FabricParams,
     pub planner_cfg: PlannerCfg,
     pub rcfg: ReplanCfg,
+    /// Fault events injected at epoch boundaries (empty by default —
+    /// and then completely inert: the fault-free code paths are
+    /// bit-identical to builds without the fault layer). A non-empty
+    /// schedule forces epoch-driven execution even with `rcfg.enable ==
+    /// false`, so a *static* plan still experiences the faults — it
+    /// just has no recovery lever.
+    pub faults: FaultSchedule,
 }
 
 impl<'a> ReplanExecutor<'a> {
@@ -107,7 +119,13 @@ impl<'a> ReplanExecutor<'a> {
     ) -> Self {
         // planner and dataplane must agree on what is endpoint-bound
         rcfg.caps = DrainCaps::from(&params);
-        ReplanExecutor { topo, params, planner_cfg, rcfg }
+        ReplanExecutor { topo, params, planner_cfg, rcfg, faults: FaultSchedule::default() }
+    }
+
+    /// Attach a fault schedule (replayed from its start each round).
+    pub fn with_faults(mut self, faults: FaultSchedule) -> Self {
+        self.faults = faults;
+        self
     }
 
     /// Fly one round of `demands`, initially routed by scaling
@@ -144,6 +162,7 @@ impl<'a> ReplanExecutor<'a> {
         // flows by engine index only. `params.backend` selects the
         // implementation; the loop below is identical either way.
         let mut engine = make_backend(topo, self.params.clone(), &init_flows);
+        let mut total_flows = init_flows.len();
         drop(init_flows);
         let mut reass = ReassemblyTable::default();
         let mut planner = Planner::new(topo, self.planner_cfg.clone());
@@ -154,29 +173,90 @@ impl<'a> ReplanExecutor<'a> {
         let mut preemptions = 0usize;
         let mut final_plan = plan0.clone();
 
-        if !self.rcfg.enable {
+        if !self.rcfg.enable && self.faults.is_empty() {
             engine.run_to_completion();
         } else {
+            // faults replay from the schedule start each round; a
+            // per-link scale vector mirrors the backend's state for the
+            // planner ([`Planner::set_link_health`]). All of this is
+            // no-op bookkeeping when the schedule is empty.
+            let mut faults = self.faults.clone();
+            faults.reset();
+            let mut fault_scale = vec![1.0f64; topo.links.len()];
+            let mut any_dead = false;
+            let mut moved_prev = 0.0f64;
+            let mut stalled = 0usize;
             let mut t_next = cadence;
             while !engine.is_done() {
                 engine.advance_to(t_next);
+                let t_epoch = t_next;
                 t_next += cadence;
+
+                // fault events take effect at the first epoch boundary
+                // at or after their fire time
+                let due: Vec<crate::fabric::FaultEvent> = faults.due(t_epoch).to_vec();
+                if !due.is_empty() {
+                    for ev in &due {
+                        engine.apply_fault(&ev.fault);
+                        faults::apply_to_scale(&mut fault_scale, topo, &ev.fault);
+                    }
+                    any_dead = fault_scale.iter().any(|&s| s <= 0.0);
+                    let healthy = fault_scale.iter().all(|&s| s >= 1.0);
+                    planner.set_link_health(if healthy {
+                        None
+                    } else {
+                        Some(fault_scale.clone())
+                    });
+                }
+
+                // per-epoch goodput: the recovery time series. A long
+                // stall means a permanently dead link with no recovery
+                // path (static plan + no restore) — fail loudly rather
+                // than spin forever.
+                let moved: f64 = (0..total_flows).map(|i| engine.moved_bytes(i)).sum();
+                let goodput_gbps = (moved - moved_prev) / cadence / 1e9;
+                stalled = if moved > moved_prev { 0 } else { stalled + 1 };
+                moved_prev = moved;
+                assert!(
+                    stalled < 100_000,
+                    "no progress for 100k epochs — dead link with no recovery path?"
+                );
+
                 if engine.is_done() {
+                    if !self.faults.is_empty() {
+                        epochs.push(EpochStat {
+                            t_s: engine.now(),
+                            deviation: 0.0,
+                            replanned: false,
+                            preempted: 0,
+                            goodput_gbps,
+                        });
+                    }
                     break;
                 }
                 monitor.observe(&engine.take_window());
 
-                // residual demands + the residual routing in flight
+                // residual demands + the residual routing in flight;
+                // pairs with a live part crossing a dead link are
+                // *forced* replan targets (their drain time is infinite)
                 let mut residual_demands: Vec<Demand> = Vec::new();
                 let mut assignments = BTreeMap::new();
                 let mut link_load = vec![0.0f64; topo.links.len()];
+                let mut forced: Vec<(GpuId, GpuId)> = Vec::new();
                 for (&pair, parts) in &streams {
                     let mut pr: Vec<(Path, f64)> = Vec::new();
                     let mut total = 0.0f64;
+                    let mut crosses_dead = false;
                     for ps in parts {
                         let r = engine.residual_bytes(ps.flow);
                         if r > 1.0 {
-                            pr.push((engine.flow(ps.flow).path.clone(), r));
+                            let path = engine.flow(ps.flow).path.clone();
+                            if any_dead
+                                && path.hops.iter().any(|&h| fault_scale[h] <= 0.0)
+                            {
+                                crosses_dead = true;
+                            }
+                            pr.push((path, r));
                             total += r;
                         }
                     }
@@ -188,6 +268,9 @@ impl<'a> ReplanExecutor<'a> {
                             }
                         }
                         assignments.insert(pair, Assignment { parts: pr });
+                        if crosses_dead {
+                            forced.push(pair);
+                        }
                     }
                 }
                 if residual_demands.is_empty() {
@@ -195,11 +278,12 @@ impl<'a> ReplanExecutor<'a> {
                 }
                 let in_flight = Plan { assignments, link_load, plan_time_s: 0.0 };
 
-                let out = planner.replan(
+                let out = planner.replan_forced(
                     &in_flight,
                     monitor.load_estimates(),
                     &residual_demands,
                     &self.rcfg,
+                    &forced,
                 );
                 let mut preempted_here = 0usize;
                 if out.replanned {
@@ -238,6 +322,7 @@ impl<'a> ReplanExecutor<'a> {
                         let counts = pool_split_counts(&shares, total_new, pool.len());
                         reissues.push(Reissue { pair, batch_off, counts, pool });
                     }
+                    total_flows += epoch_batch.len();
                     let first = engine.add_flows(&epoch_batch);
                     attach_reissues(&mut streams, first, reissues);
                     preemptions += preempted_here;
@@ -262,6 +347,7 @@ impl<'a> ReplanExecutor<'a> {
                     deviation: out.deviation,
                     replanned: out.replanned,
                     preempted: preempted_here,
+                    goodput_gbps,
                 });
             }
         }
@@ -435,6 +521,95 @@ mod tests {
             .collect();
         let direct = crate::fabric::fluid::FluidSim::new(&topo, params).run(&flows);
         assert_eq!(a.report.makespan_s.to_bits(), direct.makespan.to_bits());
+    }
+
+    /// A mid-flight link flap: the replan loop preempts the flows
+    /// frozen on the dead rail and re-routes their residuals, finishing
+    /// well before the static plan (which must wait out the outage).
+    /// Byte conservation and reassembly ordering are asserted inside
+    /// `execute` either way.
+    #[test]
+    fn fault_flap_recovers_via_replan_and_beats_static() {
+        let topo = Topology::paper();
+        let params = FabricParams::default();
+        let payload = 512.0 * MB;
+        let demands = vec![Demand::new(0, 4, payload)];
+        let plan = Planner::new(&topo, PlannerCfg::default()).plan(&demands);
+        let dead = topo.rail(0, 1, 0).unwrap();
+        let sched = FaultSchedule::new(vec![
+            crate::fabric::FaultEvent {
+                t_s: 1.0e-3,
+                fault: crate::fabric::Fault::LinkDown { link: dead },
+            },
+            crate::fabric::FaultEvent {
+                t_s: 3.0e-3,
+                fault: crate::fabric::Fault::LinkUp { link: dead },
+            },
+        ]);
+
+        let static_run = ReplanExecutor::new(
+            &topo,
+            params.clone(),
+            PlannerCfg::default(),
+            ReplanCfg::default(),
+        )
+        .with_faults(sched.clone())
+        .execute(&plan, &demands);
+        let replan_run =
+            ReplanExecutor::new(&topo, params, PlannerCfg::default(), enabled(2.0e-4))
+                .with_faults(sched)
+                .execute(&plan, &demands);
+
+        assert!(replan_run.replans >= 1, "flap did not force a replan");
+        assert!(replan_run.preemptions >= 1, "no frozen flow was preempted");
+        for run in [&static_run, &replan_run] {
+            let delivered: f64 = run.sim.flows.iter().map(|f| f.bytes).sum();
+            assert!((delivered - payload).abs() < 16.0, "lost bytes: {delivered}");
+        }
+        assert!(
+            replan_run.report.makespan_s < static_run.report.makespan_s * 0.99,
+            "replan {} did not beat static {} on a flap",
+            replan_run.report.makespan_s,
+            static_run.report.makespan_s
+        );
+        // the static plan cannot finish before the link restores
+        assert!(static_run.report.makespan_s >= 3.0e-3);
+    }
+
+    /// A degraded rail (no dead links, so no forced pairs): recovery
+    /// must come from the scaled drain-time acceptance — the planner
+    /// re-prices the throttled rail and the challenger wins on z alone.
+    #[test]
+    fn fault_degrade_recovers_via_repricing() {
+        let topo = Topology::paper();
+        let params = FabricParams::default();
+        let demands = vec![Demand::new(0, 4, 512.0 * MB)];
+        let plan = Planner::new(&topo, PlannerCfg::default()).plan(&demands);
+        let sched = FaultSchedule::new(vec![crate::fabric::FaultEvent {
+            t_s: 1.0e-3,
+            fault: crate::fabric::Fault::RailDegraded { rail: 0, factor: 0.25 },
+        }]);
+
+        let static_run = ReplanExecutor::new(
+            &topo,
+            params.clone(),
+            PlannerCfg::default(),
+            ReplanCfg::default(),
+        )
+        .with_faults(sched.clone())
+        .execute(&plan, &demands);
+        let replan_run =
+            ReplanExecutor::new(&topo, params, PlannerCfg::default(), enabled(2.0e-4))
+                .with_faults(sched)
+                .execute(&plan, &demands);
+
+        assert!(replan_run.replans >= 1, "degrade did not trigger a replan");
+        assert!(
+            replan_run.report.makespan_s < static_run.report.makespan_s * 0.9,
+            "repricing gained too little: {} vs {}",
+            replan_run.report.makespan_s,
+            static_run.report.makespan_s
+        );
     }
 
     /// A balanced, well-matched round is left alone entirely (no

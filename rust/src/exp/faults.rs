@@ -1,0 +1,646 @@
+//! Fault injection & recovery experiment (`nimble faults`) —
+//! DESIGN.md §13.
+//!
+//! Flies the named fault scenarios ([`Scenario`]) against three arms on
+//! flat and fat-tree topologies:
+//!
+//! * **static** — the clean planned routing, frozen (no recovery lever);
+//! * **replan** — the same plan with the monitor → replan → reroute
+//!   loop enabled: replanning *is* the recovery mechanism (dead links
+//!   are masked from candidate enumeration, degraded ones re-priced);
+//! * **ecmp** — the hash-striping adversary, equally frozen (switches
+//!   re-hash around hard failures in real fabrics, but are blind to
+//!   degradation — here it shows what capacity-blind striping loses).
+//!
+//! Two recovery metrics per arm, read off the per-epoch goodput series:
+//!
+//! * **time-to-recover** — epochs after the first fault until goodput
+//!   regains ≥ [`RECOVERY_FRAC`] of the pre-fault steady state;
+//! * **goodput retention** — the arm's overall goodput over the clean
+//!   planned static goodput `G0` of the same topology.
+//!
+//! A fourth arm replays a fault scenario under the multi-tenant
+//! orchestrator (`nimble serve`): the joint rebalancing loop absorbs
+//! the fault across tenants ([`serve_arm`]).
+//!
+//! `--check` additionally enforces (a) replan retains at least as much
+//! goodput as both static arms on every scenario, (b) empty schedules
+//! are bit-identical to fault-free runs on both backends, and (c) the
+//! degrade scenario's goodput agrees across the fluid and packet
+//! backends within the DESIGN.md §10 contract ([`GOODPUT_TOL`]).
+
+use std::collections::BTreeMap;
+
+use super::MB;
+use crate::baselines::{EcmpHash, Router};
+use crate::coordinator::replan::{EpochStat, ReplanExecutor};
+use crate::exp::xcheck::GOODPUT_TOL;
+use crate::fabric::faults::{scenario_schedule, FaultSchedule, Scenario, ScenarioParams};
+use crate::fabric::{BackendKind, FabricParams};
+use crate::metrics::Table;
+use crate::orchestrator::{job_stream, MultiTenantExecutor, TenancyCfg};
+use crate::planner::{Assignment, Demand, Plan, Planner, PlannerCfg, ReplanCfg};
+use crate::topology::{GpuId, Topology};
+use crate::workloads::skew::hotspot_alltoallv;
+
+/// Replan-epoch cadence every arm is sampled at (also the recovery
+/// clock: time-to-recover is reported in these epochs).
+pub const CADENCE_S: f64 = 2.0e-4;
+
+/// Recovered = goodput back to this fraction of the pre-fault steady
+/// state.
+pub const RECOVERY_FRAC: f64 = 0.9;
+
+/// Per-rank payloads sized so the hottest link still carries planned
+/// bytes well past the default fault time (t0 = 1 ms): the fault bites
+/// mid-flight, and the clean makespan (~2 ms flat) leaves several
+/// post-fault epochs to measure recovery in. A frozen plan whose hot
+/// link dies must then wait out the flap; the recovering arm reroutes
+/// and finishes before the link even restores.
+const FLAT_PER_RANK: f64 = 96.0 * MB;
+const FAT_TREE_PER_RANK: f64 = 24.0 * MB;
+const FAT_TREE_NODES: usize = 4;
+
+/// Epochs after the first fault until goodput regains
+/// [`RECOVERY_FRAC`] of the pre-fault steady state (the mean goodput of
+/// the epochs up to and including the fault boundary). `None` when the
+/// run ends without recovering, or when no epoch precedes the fault.
+pub fn recovery_epochs(epochs: &[EpochStat], t0_s: f64, cadence_s: f64) -> Option<usize> {
+    // the fault takes effect at the first epoch boundary at/after t0;
+    // half-cadence slack absorbs the accumulated boundary float error
+    let bidx = epochs.iter().position(|e| e.t_s >= t0_s - 0.5 * cadence_s)?;
+    let pre = &epochs[..=bidx];
+    let steady = pre.iter().map(|e| e.goodput_gbps).sum::<f64>() / pre.len() as f64;
+    if steady <= 0.0 {
+        return None;
+    }
+    epochs[bidx + 1..]
+        .iter()
+        .position(|e| e.goodput_gbps >= RECOVERY_FRAC * steady)
+        .map(|k| k + 1)
+}
+
+/// The ECMP adversary's routing materialized as a [`Plan`], so the
+/// frozen-arm executor can fly it through the identical epoch-driven
+/// fault machinery as the planned arms.
+pub fn ecmp_plan(topo: &Topology, demands: &[Demand]) -> Plan {
+    let mut ecmp = EcmpHash::new();
+    let mut assignments: BTreeMap<(GpuId, GpuId), Assignment> = BTreeMap::new();
+    let mut link_load = vec![0.0f64; topo.links.len()];
+    for d in demands {
+        if d.bytes <= 0.0 {
+            continue;
+        }
+        let parts = ecmp.route(topo, std::slice::from_ref(d));
+        for (p, b) in &parts {
+            for &h in &p.hops {
+                link_load[h] += *b;
+            }
+        }
+        assignments.insert((d.src, d.dst), Assignment { parts });
+    }
+    Plan { assignments, link_load, plan_time_s: 0.0 }
+}
+
+/// One (topology, scenario, arm) outcome.
+#[derive(Clone, Debug)]
+pub struct FaultRow {
+    pub topo: &'static str,
+    pub scenario: Scenario,
+    pub arm: &'static str,
+    pub goodput_gbps: f64,
+    /// goodput / clean planned static goodput of the same topology.
+    pub retention: f64,
+    pub ttr_epochs: Option<usize>,
+    pub replans: usize,
+    pub preemptions: usize,
+}
+
+/// Clean planned static goodput of one topology (the retention
+/// denominator `G0`).
+#[derive(Clone, Debug)]
+pub struct CleanRow {
+    pub topo: &'static str,
+    pub payload_mb: f64,
+    pub goodput_gbps: f64,
+}
+
+/// The serve arm: the same seeded job stream, clean vs faulted, under
+/// the joint orchestrator.
+#[derive(Clone, Debug)]
+pub struct ServeFaultRow {
+    pub scenario: Scenario,
+    pub clean_gbps: f64,
+    pub faulted_gbps: f64,
+    pub retention: f64,
+    pub replans: usize,
+    pub preemptions: usize,
+    /// Every tenant finished with positive goodput under the faults.
+    pub all_tenants_finished: bool,
+}
+
+/// Full `nimble faults` outcome.
+#[derive(Clone, Debug)]
+pub struct FaultsReport {
+    pub scenarios: Vec<Scenario>,
+    pub cadence_s: f64,
+    pub t0_s: f64,
+    pub clean: Vec<CleanRow>,
+    pub rows: Vec<FaultRow>,
+    pub serve: Option<ServeFaultRow>,
+}
+
+fn replan_cfg(enable: bool) -> ReplanCfg {
+    ReplanCfg { enable, cadence_s: CADENCE_S, margin: 0.1, ..ReplanCfg::default() }
+}
+
+struct ArmOut {
+    goodput_gbps: f64,
+    ttr_epochs: Option<usize>,
+    replans: usize,
+    preemptions: usize,
+}
+
+/// Fly one arm: `incumbent` under `sched`, replanning iff `enable`.
+fn fly_arm(
+    topo: &Topology,
+    params: &FabricParams,
+    pcfg: &PlannerCfg,
+    enable: bool,
+    sched: &FaultSchedule,
+    incumbent: &Plan,
+    demands: &[Demand],
+    t0_s: f64,
+) -> ArmOut {
+    let run = ReplanExecutor::new(topo, params.clone(), pcfg.clone(), replan_cfg(enable))
+        .with_faults(sched.clone())
+        .execute(incumbent, demands);
+    let payload: f64 = demands.iter().map(|d| d.bytes).sum();
+    ArmOut {
+        goodput_gbps: payload / run.report.makespan_s.max(1e-12) / 1e9,
+        ttr_epochs: recovery_epochs(&run.epochs, t0_s, CADENCE_S),
+        replans: run.replans,
+        preemptions: run.preemptions,
+    }
+}
+
+/// All arms of every requested scenario on one topology. The fault
+/// schedules chase the hottest link of the *clean planned* load
+/// profile, so the faults hit where the static plan hurts most.
+pub fn scenario_rows(
+    label: &'static str,
+    topo: &Topology,
+    per_rank_bytes: f64,
+    params: &FabricParams,
+    pcfg: &PlannerCfg,
+    fparams: &ScenarioParams,
+    scenarios: &[Scenario],
+    with_replan: bool,
+) -> (CleanRow, Vec<FaultRow>) {
+    let hot = topo.gpu(1, 0);
+    let demands = hotspot_alltoallv(topo, per_rank_bytes, 0.7, hot);
+    let payload: f64 = demands.iter().map(|d| d.bytes).sum();
+    let plan = Planner::new(topo, pcfg.clone()).plan(&demands);
+
+    // clean planned static goodput: the retention denominator
+    let clean_run =
+        ReplanExecutor::new(topo, params.clone(), pcfg.clone(), replan_cfg(false))
+            .execute(&plan, &demands);
+    let g0 = payload / clean_run.report.makespan_s.max(1e-12) / 1e9;
+    let clean = CleanRow { topo: label, payload_mb: payload / MB, goodput_gbps: g0 };
+
+    let adversary = ecmp_plan(topo, &demands);
+    let mut rows = Vec::new();
+    for &sc in scenarios {
+        let sched = scenario_schedule(topo, sc, fparams, Some(&plan.link_load));
+        let mut push = |arm: &'static str, out: ArmOut| {
+            rows.push(FaultRow {
+                topo: label,
+                scenario: sc,
+                arm,
+                goodput_gbps: out.goodput_gbps,
+                retention: out.goodput_gbps / g0.max(1e-12),
+                ttr_epochs: out.ttr_epochs,
+                replans: out.replans,
+                preemptions: out.preemptions,
+            });
+        };
+        push(
+            "static",
+            fly_arm(topo, params, pcfg, false, &sched, &plan, &demands, fparams.t0_s),
+        );
+        if with_replan {
+            push(
+                "replan",
+                fly_arm(topo, params, pcfg, true, &sched, &plan, &demands, fparams.t0_s),
+            );
+        }
+        push(
+            "ecmp",
+            fly_arm(
+                topo, params, pcfg, false, &sched, &adversary, &demands, fparams.t0_s,
+            ),
+        );
+    }
+    (clean, rows)
+}
+
+/// The orchestrator arm: the identical seeded job stream flown clean
+/// and under `scenario` (seeded fallback link pick — no single plan's
+/// load profile describes a whole stream); the joint loop's epoch
+/// rebalancing is the recovery path.
+pub fn serve_arm(
+    params: &FabricParams,
+    pcfg: &PlannerCfg,
+    fparams: &ScenarioParams,
+    scenario: Scenario,
+) -> ServeFaultRow {
+    let topo = Topology::paper();
+    let tcfg = TenancyCfg { jobs: 6, ..TenancyCfg::default() };
+    let rcfg = replan_cfg(true);
+    let clean = MultiTenantExecutor::new(
+        &topo,
+        params.clone(),
+        pcfg.clone(),
+        rcfg.clone(),
+        tcfg.clone(),
+    )
+    .execute(job_stream(&topo, &tcfg));
+    let sched = scenario_schedule(&topo, scenario, fparams, None);
+    let faulted =
+        MultiTenantExecutor::new(&topo, params.clone(), pcfg.clone(), rcfg, tcfg.clone())
+            .with_faults(sched)
+            .execute(job_stream(&topo, &tcfg));
+    ServeFaultRow {
+        scenario,
+        clean_gbps: clean.aggregate_goodput_gbps,
+        faulted_gbps: faulted.aggregate_goodput_gbps,
+        retention: faulted.aggregate_goodput_gbps
+            / clean.aggregate_goodput_gbps.max(1e-12),
+        replans: faulted.replans,
+        preemptions: faulted.preemptions,
+        all_tenants_finished: faulted.tenants.iter().all(|t| t.goodput_gbps > 0.0),
+    }
+}
+
+/// Run the full experiment: every requested scenario × {flat,
+/// fat-tree} × {static, replan, ecmp}, plus the serve arm (on the
+/// first scenario). `with_replan == false` (`--no-replan`) drops the
+/// recovery arms and reports what frozen plans lose on their own.
+pub fn run(
+    params: &FabricParams,
+    pcfg: &PlannerCfg,
+    fparams: &ScenarioParams,
+    scenarios: &[Scenario],
+    with_replan: bool,
+) -> FaultsReport {
+    let flat = Topology::paper();
+    let fat = Topology::fat_tree(FAT_TREE_NODES, 2.0);
+    let mut clean = Vec::new();
+    let mut rows = Vec::new();
+    for (label, topo, per_rank) in [
+        ("flat", &flat, FLAT_PER_RANK),
+        ("fat-tree", &fat, FAT_TREE_PER_RANK),
+    ] {
+        let (c, r) = scenario_rows(
+            label, topo, per_rank, params, pcfg, fparams, scenarios, with_replan,
+        );
+        clean.push(c);
+        rows.extend(r);
+    }
+    let serve = if with_replan {
+        scenarios.first().map(|&sc| serve_arm(params, pcfg, fparams, sc))
+    } else {
+        None
+    };
+    FaultsReport {
+        scenarios: scenarios.to_vec(),
+        cadence_s: CADENCE_S,
+        t0_s: fparams.t0_s,
+        clean,
+        rows,
+        serve,
+    }
+}
+
+/// The degrade-scenario cross-backend contract (`--check` and the
+/// `degrade_cross_backend_within_contract` test): one saturated heavy
+/// pair, the planner's hottest rail degraded mid-flight; both the
+/// frozen and the recovering arm must land within [`GOODPUT_TOL`] of
+/// each other across the fluid and packet backends.
+#[derive(Clone, Debug)]
+pub struct DegradeXcheck {
+    pub fluid_static_gbps: f64,
+    pub packet_static_gbps: f64,
+    pub fluid_replan_gbps: f64,
+    pub packet_replan_gbps: f64,
+}
+
+impl DegradeXcheck {
+    pub fn static_ratio(&self) -> f64 {
+        self.packet_static_gbps / self.fluid_static_gbps.max(1e-12)
+    }
+    pub fn replan_ratio(&self) -> f64 {
+        self.packet_replan_gbps / self.fluid_replan_gbps.max(1e-12)
+    }
+}
+
+pub fn degrade_xcheck(
+    params: &FabricParams,
+    pcfg: &PlannerCfg,
+    fparams: &ScenarioParams,
+) -> DegradeXcheck {
+    let topo = Topology::paper();
+    let payload = 512.0 * MB;
+    let demands = vec![Demand::new(0, 4, payload)];
+    let plan = Planner::new(&topo, pcfg.clone()).plan(&demands);
+    let sched = scenario_schedule(&topo, Scenario::Degrade, fparams, Some(&plan.link_load));
+    let mut fly = |backend: BackendKind, enable: bool| {
+        let p = FabricParams { backend, ..params.clone() };
+        let run = ReplanExecutor::new(&topo, p, pcfg.clone(), replan_cfg(enable))
+            .with_faults(sched.clone())
+            .execute(&plan, &demands);
+        payload / run.report.makespan_s.max(1e-12) / 1e9
+    };
+    DegradeXcheck {
+        fluid_static_gbps: fly(BackendKind::Fluid, false),
+        packet_static_gbps: fly(BackendKind::Packet, false),
+        fluid_replan_gbps: fly(BackendKind::Fluid, true),
+        packet_replan_gbps: fly(BackendKind::Packet, true),
+    }
+}
+
+/// Both backends, a faulted and a fault-free-with-empty-schedule run:
+/// attaching an empty [`FaultSchedule`] must be bitwise inert.
+fn empty_schedule_identity(params: &FabricParams, pcfg: &PlannerCfg) -> Result<(), String> {
+    let topo = Topology::paper();
+    let demands = vec![Demand::new(0, 4, 64.0 * MB), Demand::new(2, 5, 32.0 * MB)];
+    let plan = Planner::new(&topo, pcfg.clone()).plan(&demands);
+    for backend in [BackendKind::Fluid, BackendKind::Packet] {
+        let p = FabricParams { backend, ..params.clone() };
+        let bare = ReplanExecutor::new(&topo, p.clone(), pcfg.clone(), replan_cfg(false))
+            .execute(&plan, &demands);
+        let empty = ReplanExecutor::new(&topo, p, pcfg.clone(), replan_cfg(false))
+            .with_faults(FaultSchedule::default())
+            .execute(&plan, &demands);
+        if bare.report.makespan_s.to_bits() != empty.report.makespan_s.to_bits()
+            || bare.sim.link_bytes != empty.sim.link_bytes
+        {
+            return Err(format!(
+                "empty FaultSchedule is not inert on the {backend:?} backend: \
+                 {} vs {} s",
+                bare.report.makespan_s, empty.report.makespan_s
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The acceptance gate `nimble faults --check` enforces (and CI runs):
+///
+/// 1. on every (topology, scenario) the replanned arm retains at least
+///    as much goodput as the frozen plan *and* the ECMP adversary
+///    (0.1% slack — scenarios with no routing escape, e.g. a straggler
+///    throttling its own injection, legitimately tie);
+/// 2. a dead or degraded link actually triggers replans on the flat
+///    topology (the loop is the recovery mechanism, not a bystander);
+/// 3. the serve arm finishes every tenant with sane retention;
+/// 4. an empty schedule is bitwise inert on both backends;
+/// 5. the degrade scenario agrees across fluid and packet backends
+///    within ±[`GOODPUT_TOL`] on both arms.
+pub fn check(
+    rep: &FaultsReport,
+    params: &FabricParams,
+    pcfg: &PlannerCfg,
+    fparams: &ScenarioParams,
+) -> Result<(), String> {
+    let arm = |topo: &str, sc: Scenario, arm: &str| {
+        rep.rows
+            .iter()
+            .find(|r| r.topo == topo && r.scenario == sc && r.arm == arm)
+    };
+    for c in &rep.clean {
+        for &sc in &rep.scenarios {
+            let Some(re) = arm(c.topo, sc, "replan") else {
+                return Err("--check requires the replan arm (drop --no-replan)".into());
+            };
+            for frozen in ["static", "ecmp"] {
+                let fr = arm(c.topo, sc, frozen).expect("frozen arm present");
+                if re.retention < fr.retention * 0.999 {
+                    return Err(format!(
+                        "replan retained less than {frozen} on {} {}: {:.3} vs {:.3}",
+                        c.topo,
+                        sc.label(),
+                        re.retention,
+                        fr.retention
+                    ));
+                }
+            }
+            let has_link_fault =
+                matches!(sc, Scenario::Flap | Scenario::Degrade | Scenario::Mixed);
+            if c.topo == "flat" && has_link_fault && re.replans == 0 {
+                return Err(format!(
+                    "{} on flat never triggered a replan — recovery path dead",
+                    sc.label()
+                ));
+            }
+        }
+    }
+    if let Some(s) = &rep.serve {
+        if !s.all_tenants_finished {
+            return Err(format!(
+                "serve arm ({}) left a tenant unfinished under faults",
+                s.scenario.label()
+            ));
+        }
+        // quantized admission + plan churn can jitter a few percent
+        // either way, but faults must not *help* materially
+        if !(s.retention > 0.0 && s.retention <= 1.10) {
+            return Err(format!(
+                "serve retention out of range on {}: {:.3}",
+                s.scenario.label(),
+                s.retention
+            ));
+        }
+    }
+    empty_schedule_identity(params, pcfg)?;
+    let x = degrade_xcheck(params, pcfg, fparams);
+    for (arm, ratio) in
+        [("static", x.static_ratio()), ("replan", x.replan_ratio())]
+    {
+        if (ratio - 1.0).abs() > GOODPUT_TOL {
+            return Err(format!(
+                "degrade {arm} arm disagrees across backends: ratio {:.3} \
+                 (tolerance ±{:.0}%)",
+                ratio,
+                GOODPUT_TOL * 100.0
+            ));
+        }
+    }
+    Ok(())
+}
+
+pub fn render(rep: &FaultsReport) -> String {
+    let mut t = Table::new(&[
+        "topo",
+        "scenario",
+        "arm",
+        "goodput (GB/s)",
+        "retention",
+        "ttr (epochs)",
+        "ttr (ms)",
+        "replans",
+        "preempt",
+    ]);
+    for r in &rep.rows {
+        let (ttr, ttr_ms) = match r.ttr_epochs {
+            Some(k) => (format!("{k}"), format!("{:.2}", k as f64 * rep.cadence_s * 1e3)),
+            None => ("-".into(), "-".into()),
+        };
+        t.row(&[
+            r.topo.to_string(),
+            r.scenario.label().to_string(),
+            r.arm.to_string(),
+            format!("{:.1}", r.goodput_gbps),
+            format!("{:.3}", r.retention),
+            ttr,
+            ttr_ms,
+            format!("{}", r.replans),
+            format!("{}", r.preemptions),
+        ]);
+    }
+    let clean: Vec<String> = rep
+        .clean
+        .iter()
+        .map(|c| {
+            format!(
+                "{} {:.1} GB/s ({:.0} MB aggregate)",
+                c.topo, c.goodput_gbps, c.payload_mb
+            )
+        })
+        .collect();
+    let serve = match &rep.serve {
+        Some(s) => format!(
+            "serve ({}): clean {:.1} -> faulted {:.1} GB/s aggregate \
+             (retention {:.3}, {} replans, {} preemptions)\n",
+            s.scenario.label(),
+            s.clean_gbps,
+            s.faulted_gbps,
+            s.retention,
+            s.replans,
+            s.preemptions
+        ),
+        None => String::new(),
+    };
+    format!(
+        "Fault injection & recovery (epoch {:.2} ms, first fault at {:.2} ms; \
+         recovery = goodput back to {:.0}% of pre-fault steady state)\n\
+         clean planned goodput: {}\n{}{}",
+        rep.cadence_s * 1e3,
+        rep.t0_s * 1e3,
+        RECOVERY_FRAC * 100.0,
+        clean.join(", "),
+        t.render(),
+        serve
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ep(t_s: f64, goodput_gbps: f64) -> EpochStat {
+        EpochStat { t_s, deviation: 0.0, replanned: false, preempted: 0, goodput_gbps }
+    }
+
+    /// The recovery clock reads the goodput series exactly: steady
+    /// state from the pre-fault epochs, recovery at the first
+    /// post-fault epoch back above the threshold.
+    #[test]
+    fn recovery_epochs_reads_the_series() {
+        let c = 2.0e-4;
+        let epochs: Vec<EpochStat> = vec![
+            ep(1.0 * c, 100.0),
+            ep(2.0 * c, 100.0),
+            ep(3.0 * c, 100.0),
+            ep(4.0 * c, 100.0),
+            ep(5.0 * c, 100.0), // fault boundary (t0 = 1 ms = 5 epochs)
+            ep(6.0 * c, 10.0),
+            ep(7.0 * c, 40.0),
+            ep(8.0 * c, 95.0), // ≥ 90% of steady ⇒ recovered here
+            ep(9.0 * c, 100.0),
+        ];
+        assert_eq!(recovery_epochs(&epochs, 1.0e-3, c), Some(3));
+        // never recovers
+        let flat: Vec<EpochStat> =
+            (1..=8).map(|k| ep(k as f64 * c, if k <= 5 { 100.0 } else { 20.0 })).collect();
+        assert_eq!(recovery_epochs(&flat, 1.0e-3, c), None);
+        // no epoch at/after the fault time
+        assert_eq!(recovery_epochs(&epochs[..2], 1.0e-3, c), None);
+    }
+
+    /// A flap on the flat testbed: the replanned arm must retain at
+    /// least as much goodput as both frozen arms, and must actually
+    /// fire (the ISSUE's replan-as-recovery claim, end to end through
+    /// the experiment driver).
+    #[test]
+    fn flap_flat_replan_beats_frozen_arms() {
+        let params = FabricParams::default();
+        let pcfg = PlannerCfg::default();
+        let fparams = ScenarioParams::default();
+        let (clean, rows) = scenario_rows(
+            "flat",
+            &Topology::paper(),
+            FLAT_PER_RANK,
+            &params,
+            &pcfg,
+            &fparams,
+            &[Scenario::Flap],
+            true,
+        );
+        assert!(clean.goodput_gbps > 0.0);
+        assert_eq!(rows.len(), 3);
+        let get = |arm: &str| rows.iter().find(|r| r.arm == arm).unwrap();
+        let (st, re, ec) = (get("static"), get("replan"), get("ecmp"));
+        assert!(re.replans >= 1, "flap did not trigger a replan");
+        assert!(
+            re.retention >= st.retention,
+            "replan retained less than static: {:.3} vs {:.3}",
+            re.retention,
+            st.retention
+        );
+        assert!(
+            re.retention >= ec.retention,
+            "replan retained less than ecmp: {:.3} vs {:.3}",
+            re.retention,
+            ec.retention
+        );
+        // the frozen planned arm must wait out the outage; the
+        // recovering arm reroutes within a few epochs
+        assert!(re.ttr_epochs.is_some(), "replan arm never re-reached steady state");
+    }
+
+    /// Satellite 3: the degrade scenario's goodput agrees across the
+    /// fluid and packet backends within the DESIGN.md §10 contract, on
+    /// both the frozen and the recovering arm.
+    #[test]
+    fn degrade_cross_backend_within_contract() {
+        let x = degrade_xcheck(
+            &FabricParams::default(),
+            &PlannerCfg::default(),
+            &ScenarioParams::default(),
+        );
+        for (arm, ratio) in
+            [("static", x.static_ratio()), ("replan", x.replan_ratio())]
+        {
+            assert!(
+                (ratio - 1.0).abs() <= GOODPUT_TOL,
+                "degrade {arm} arm fluid/packet ratio {ratio:.3} outside ±{:.0}%",
+                GOODPUT_TOL * 100.0
+            );
+        }
+        // the recovering arm beats the frozen one on both backends
+        assert!(x.fluid_replan_gbps > x.fluid_static_gbps);
+        assert!(x.packet_replan_gbps > x.packet_static_gbps);
+    }
+}

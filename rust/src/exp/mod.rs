@@ -3,6 +3,7 @@
 //! every surface regenerates identical numbers.
 
 pub mod ablate;
+pub mod faults;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;

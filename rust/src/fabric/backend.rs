@@ -87,6 +87,11 @@ pub trait FabricBackend {
     /// Preempt flow `i` mid-transfer; returns its residual bytes for
     /// re-issue on other paths via [`FabricBackend::add_flows`].
     fn preempt(&mut self, i: usize) -> f64;
+    /// Apply a fault event to the running fabric (link death/recovery,
+    /// rail degradation, straggler throttle — see
+    /// [`crate::fabric::faults`]). Fault-free runs never call this, so
+    /// they stay bit-identical to builds without the fault layer.
+    fn apply_fault(&mut self, fault: &super::faults::Fault);
     /// Per-link bytes moved since the previous call (the monitor's
     /// sampling window); resets the window counters.
     fn take_window(&mut self) -> Vec<f64>;
@@ -144,6 +149,9 @@ impl<'a> FabricBackend for SimEngine<'a> {
     fn preempt(&mut self, i: usize) -> f64 {
         SimEngine::preempt(self, i)
     }
+    fn apply_fault(&mut self, fault: &super::faults::Fault) {
+        SimEngine::apply_fault(self, fault)
+    }
     fn take_window(&mut self) -> Vec<f64> {
         SimEngine::take_window(self)
     }
@@ -182,6 +190,9 @@ impl<'a> FabricBackend for PacketSim<'a> {
     }
     fn preempt(&mut self, i: usize) -> f64 {
         PacketSim::preempt(self, i)
+    }
+    fn apply_fault(&mut self, fault: &super::faults::Fault) {
+        PacketSim::apply_fault(self, fault)
     }
     fn take_window(&mut self) -> Vec<f64> {
         PacketSim::take_window(self)

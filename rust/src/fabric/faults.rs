@@ -1,0 +1,539 @@
+//! Deterministic fault injection (DESIGN.md §13).
+//!
+//! Real fabrics do not only skew — they *degrade*: links flap, rails
+//! get throttled, endpoints straggle. A [`FaultSchedule`] is a seeded,
+//! time-sorted list of [`FaultEvent`]s that both fabric backends honor
+//! through [`FabricBackend::apply_fault`](super::FabricBackend):
+//!
+//! * [`Fault::LinkDown`] / [`Fault::LinkUp`] — a link dies and later
+//!   recovers (a flap). The fluid engine pins the link's capacity
+//!   constraint at zero (members freeze at rate 0); the packet engine
+//!   freezes the link's queue (no new cell enters service; cells
+//!   already queued wait; the coordinator's recovery loop preempts the
+//!   affected flows, which aborts their in-fabric cells and returns the
+//!   undelivered chunks to the residual pool).
+//! * [`Fault::RailDegraded`] — every link of one rail plane keeps
+//!   working at `factor ×` capacity (a throttled NIC/switch ASIC).
+//!   `factor = 1.0` restores the rail.
+//! * [`Fault::StragglerNode`] — one node turns slow at *sourcing*
+//!   bytes: the injection cap of its GPUs and the capacity of every
+//!   link leaving one of its GPUs are scaled by `inject_factor` (HBM
+//!   read + copy kernels + NIC DMA all share the straggling clock).
+//!   `inject_factor = 1.0` restores the node.
+//!
+//! The schedule is pure data: identical inputs produce byte-identical
+//! event lists, and [`FaultSchedule::trace`] renders the canonical
+//! textual form the determinism properties compare. An **empty**
+//! schedule injects nothing and leaves every run bit-identical to a
+//! fault-free build — the recovery machinery is only reachable when a
+//! fault actually fires.
+//!
+//! [`scenario_schedule`] generates the four named scenarios the
+//! `nimble faults` experiment flies (flap / degrade / straggler /
+//! mixed) from a seed plus an optional per-link load profile: the
+//! flap targets the *hottest* inter-node link (the worst case for a
+//! static plan), the degrade targets that link's rail, the straggler
+//! the node sourcing it.
+
+use crate::topology::{LinkKind, Topology};
+use crate::util::rng::Rng;
+
+/// One fault applied to the running fabric at a scheduled time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// Link `link` stops serving (capacity → 0) until a `LinkUp`.
+    LinkDown { link: usize },
+    /// Link `link` recovers to full capacity.
+    LinkUp { link: usize },
+    /// Every link of rail plane `rail` (NIC edges, leaf and spine
+    /// links on tiered fabrics) runs at `factor ×` capacity.
+    /// `factor = 1.0` restores the rail.
+    RailDegraded { rail: usize, factor: f64 },
+    /// Node `node` sources bytes at `inject_factor ×` speed: its GPUs'
+    /// injection caps and the capacity of every link leaving one of
+    /// its GPUs are scaled. `inject_factor = 1.0` restores.
+    StragglerNode { node: usize, inject_factor: f64 },
+}
+
+/// A [`Fault`] stamped with the virtual time (seconds) it fires at.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub t_s: f64,
+    pub fault: Fault,
+}
+
+/// A time-sorted fault event list with a replay cursor.
+///
+/// The default (empty) schedule is inert: nothing consumes it and runs
+/// stay bit-identical to pre-fault builds.
+#[derive(Clone, Debug, Default)]
+pub struct FaultSchedule {
+    events: Vec<FaultEvent>,
+    cursor: usize,
+}
+
+impl FaultSchedule {
+    /// Build from an event list (stably sorted by fire time).
+    pub fn new(mut events: Vec<FaultEvent>) -> FaultSchedule {
+        events.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).expect("NaN fault time"));
+        FaultSchedule { events, cursor: 0 }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// All events (fire order), regardless of the cursor.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Events due at or before `t` that have not been taken yet;
+    /// advances the cursor past them.
+    pub fn due(&mut self, t: f64) -> &[FaultEvent] {
+        let start = self.cursor;
+        let mut end = start;
+        while end < self.events.len() && self.events[end].t_s <= t {
+            end += 1;
+        }
+        self.cursor = end;
+        &self.events[start..end]
+    }
+
+    /// Fire time of the next untaken event.
+    pub fn peek_next_t(&self) -> Option<f64> {
+        self.events.get(self.cursor).map(|e| e.t_s)
+    }
+
+    /// Whether every event has been taken.
+    pub fn drained(&self) -> bool {
+        self.cursor >= self.events.len()
+    }
+
+    /// Rewind the cursor (replay the schedule from the start).
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+    }
+
+    /// Canonical textual form: one line per event. Two schedules built
+    /// from identical inputs render byte-identical traces (the
+    /// determinism property in `tests/fault_props.rs`).
+    pub fn trace(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            let line = match e.fault {
+                Fault::LinkDown { link } => format!("t={:.9} down link={link}\n", e.t_s),
+                Fault::LinkUp { link } => format!("t={:.9} up link={link}\n", e.t_s),
+                Fault::RailDegraded { rail, factor } => {
+                    format!("t={:.9} degrade rail={rail} factor={factor}\n", e.t_s)
+                }
+                Fault::StragglerNode { node, inject_factor } => {
+                    format!("t={:.9} straggler node={node} factor={inject_factor}\n", e.t_s)
+                }
+            };
+            out.push_str(&line);
+        }
+        out
+    }
+
+    /// Fail-closed validation against a topology: every referenced
+    /// link/rail/node must exist, factors must lie in (0, 1] (NaN
+    /// rejected), fire times must be finite and non-negative.
+    pub fn validate(&self, topo: &Topology) -> Result<(), String> {
+        let in_unit = |f: f64| f > 0.0 && f <= 1.0; // NaN fails both
+        for e in &self.events {
+            if !e.t_s.is_finite() || e.t_s < 0.0 {
+                return Err(format!("fault time {} not finite/non-negative", e.t_s));
+            }
+            match e.fault {
+                Fault::LinkDown { link } | Fault::LinkUp { link } => {
+                    if link >= topo.links.len() {
+                        return Err(format!(
+                            "fault references link {link}, topology has {}",
+                            topo.links.len()
+                        ));
+                    }
+                }
+                Fault::RailDegraded { rail, factor } => {
+                    if rail >= topo.nics_per_node {
+                        return Err(format!(
+                            "fault references rail {rail}, topology has {}",
+                            topo.nics_per_node
+                        ));
+                    }
+                    if !in_unit(factor) {
+                        return Err(format!("degrade factor {factor} outside (0, 1]"));
+                    }
+                }
+                Fault::StragglerNode { node, inject_factor } => {
+                    if node >= topo.nodes {
+                        return Err(format!(
+                            "fault references node {node}, topology has {}",
+                            topo.nodes
+                        ));
+                    }
+                    if !in_unit(inject_factor) {
+                        return Err(format!(
+                            "straggler factor {inject_factor} outside (0, 1]"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// All links belonging to rail plane `rail`: flat NIC edges on that
+/// rail, cross-rail edges touching it, and (tiered) its leaf and spine
+/// links. NVLink edges belong to no rail.
+pub fn rail_links(topo: &Topology, rail: usize) -> Vec<usize> {
+    topo.links
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| match l.kind {
+            LinkKind::NvLink => false,
+            LinkKind::Rail { rail: r }
+            | LinkKind::LeafUp { rail: r }
+            | LinkKind::LeafDown { rail: r }
+            | LinkKind::SpineUp { rail: r, .. }
+            | LinkKind::SpineDown { rail: r, .. } => r == rail,
+            LinkKind::CrossRail { src_rail, dst_rail } => {
+                src_rail == rail || dst_rail == rail
+            }
+        })
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// All links leaving a GPU of `node` (the straggler's slowed egress
+/// set: NVLink out-edges plus NIC/leaf uplinks sourced on the node).
+pub fn node_out_links(topo: &Topology, node: usize) -> Vec<usize> {
+    topo.links
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| !topo.is_switch(l.src) && topo.node_of(l.src) == node)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Fold one fault into a per-link capacity-scale vector — the
+/// planner-facing mirror of what the backends apply internally
+/// (`scale[l] == 0.0` dead, `1.0` healthy). The coordinator maintains
+/// this vector across events and hands it to
+/// [`Planner::set_link_health`](crate::planner::Planner::set_link_health).
+pub fn apply_to_scale(scale: &mut [f64], topo: &Topology, fault: &Fault) {
+    match *fault {
+        Fault::LinkDown { link } => scale[link] = 0.0,
+        Fault::LinkUp { link } => scale[link] = 1.0,
+        Fault::RailDegraded { rail, factor } => {
+            for l in rail_links(topo, rail) {
+                scale[l] = factor;
+            }
+        }
+        Fault::StragglerNode { node, inject_factor } => {
+            for l in node_out_links(topo, node) {
+                scale[l] = inject_factor;
+            }
+        }
+    }
+}
+
+/// The named fault scenarios `nimble faults` flies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// One link dies at `t0` and recovers one flap period later.
+    Flap,
+    /// One rail plane drops to `degrade_factor ×` capacity (no restore:
+    /// recovery must come from re-routing, not from the fabric healing).
+    Degrade,
+    /// One node sources bytes at `straggler_factor ×` speed.
+    Straggler,
+    /// Flap + degrade + straggler, staggered.
+    Mixed,
+}
+
+impl Scenario {
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s {
+            "flap" => Some(Scenario::Flap),
+            "degrade" => Some(Scenario::Degrade),
+            "straggler" => Some(Scenario::Straggler),
+            "mixed" => Some(Scenario::Mixed),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scenario::Flap => "flap",
+            Scenario::Degrade => "degrade",
+            Scenario::Straggler => "straggler",
+            Scenario::Mixed => "mixed",
+        }
+    }
+
+    pub fn all() -> [Scenario; 4] {
+        [Scenario::Flap, Scenario::Degrade, Scenario::Straggler, Scenario::Mixed]
+    }
+}
+
+/// Timing/intensity knobs for [`scenario_schedule`] (the validated
+/// `[faults]` config section maps onto this).
+#[derive(Clone, Copy, Debug)]
+pub struct ScenarioParams {
+    /// Seed for the fallback target picks (used only when no load
+    /// profile identifies a hottest link).
+    pub seed: u64,
+    /// When the first fault fires (virtual seconds).
+    pub t0_s: f64,
+    /// Down time of a flap (LinkUp fires at `t0_s + flap_period_s`).
+    pub flap_period_s: f64,
+    /// Capacity factor of a degraded rail, in (0, 1].
+    pub degrade_factor: f64,
+    /// Sourcing-speed factor of a straggler node, in (0, 1].
+    pub straggler_factor: f64,
+}
+
+impl Default for ScenarioParams {
+    fn default() -> Self {
+        ScenarioParams {
+            seed: 0xFA17_5EED,
+            t0_s: 1.0e-3,
+            flap_period_s: 2.0e-3,
+            degrade_factor: 0.25,
+            straggler_factor: 0.25,
+        }
+    }
+}
+
+/// Resolved `[faults]` config section (see `configs/paper.toml`): a
+/// named scenario plus its timing/intensity knobs. `scenario = None`
+/// (TOML `"none"`) is the inert default — no schedule is built and
+/// every run stays bit-identical to a fault-free build.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultsCfg {
+    pub scenario: Option<Scenario>,
+    pub params: ScenarioParams,
+}
+
+/// The hottest non-NVLink link under `link_load` (ties → lowest id);
+/// seeded uniform pick among eligible links when no load profile is
+/// given or all loads are zero.
+fn hottest_fabric_link(topo: &Topology, link_load: Option<&[f64]>, rng: &mut Rng) -> usize {
+    let eligible: Vec<usize> = topo
+        .links
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| !matches!(l.kind, LinkKind::NvLink))
+        .map(|(i, _)| i)
+        .collect();
+    assert!(!eligible.is_empty(), "topology has no fabric links");
+    if let Some(load) = link_load {
+        let mut best = eligible[0];
+        let mut best_load = 0.0f64;
+        for &l in &eligible {
+            if load[l] > best_load {
+                best_load = load[l];
+                best = l;
+            }
+        }
+        if best_load > 0.0 {
+            return best;
+        }
+    }
+    *rng.choose(&eligible)
+}
+
+/// Rail plane of a fabric link (`None` for NVLink edges).
+fn rail_of(topo: &Topology, link: usize) -> Option<usize> {
+    match topo.link(link).kind {
+        LinkKind::NvLink => None,
+        LinkKind::Rail { rail }
+        | LinkKind::LeafUp { rail }
+        | LinkKind::LeafDown { rail }
+        | LinkKind::SpineUp { rail, .. }
+        | LinkKind::SpineDown { rail, .. } => Some(rail),
+        LinkKind::CrossRail { src_rail, .. } => Some(src_rail),
+    }
+}
+
+/// Node sourcing a fabric link: the source vertex's node when it is a
+/// GPU, else (switch-sourced links) a seeded pick.
+fn source_node(topo: &Topology, link: usize, rng: &mut Rng) -> usize {
+    let src = topo.link(link).src;
+    if topo.is_switch(src) {
+        rng.range_usize(0, topo.nodes)
+    } else {
+        topo.node_of(src)
+    }
+}
+
+/// Generate the event list for a named scenario. Deterministic in
+/// `(topo, scenario, params, link_load)`; the targets chase the
+/// hottest loaded link so the fault hits where a static plan hurts
+/// most. Every generated schedule validates against `topo` and leaves
+/// the fabric able to finish (flaps restore, factors stay > 0).
+pub fn scenario_schedule(
+    topo: &Topology,
+    scenario: Scenario,
+    params: &ScenarioParams,
+    link_load: Option<&[f64]>,
+) -> FaultSchedule {
+    let mut rng = Rng::new(params.seed);
+    let hot = hottest_fabric_link(topo, link_load, &mut rng);
+    let t0 = params.t0_s;
+    let period = params.flap_period_s;
+    let mut events = Vec::new();
+    let flap = |events: &mut Vec<FaultEvent>, at: f64| {
+        events.push(FaultEvent { t_s: at, fault: Fault::LinkDown { link: hot } });
+        events.push(FaultEvent { t_s: at + period, fault: Fault::LinkUp { link: hot } });
+    };
+    let degrade = |events: &mut Vec<FaultEvent>, at: f64, rng: &mut Rng| {
+        let rail = rail_of(topo, hot)
+            .unwrap_or_else(|| rng.range_usize(0, topo.nics_per_node));
+        events.push(FaultEvent {
+            t_s: at,
+            fault: Fault::RailDegraded { rail, factor: params.degrade_factor },
+        });
+    };
+    let straggle = |events: &mut Vec<FaultEvent>, at: f64, rng: &mut Rng| {
+        let node = source_node(topo, hot, rng);
+        events.push(FaultEvent {
+            t_s: at,
+            fault: Fault::StragglerNode { node, inject_factor: params.straggler_factor },
+        });
+    };
+    match scenario {
+        Scenario::Flap => flap(&mut events, t0),
+        Scenario::Degrade => degrade(&mut events, t0, &mut rng),
+        Scenario::Straggler => straggle(&mut events, t0, &mut rng),
+        Scenario::Mixed => {
+            flap(&mut events, t0);
+            degrade(&mut events, t0 + 0.5 * period, &mut rng);
+            straggle(&mut events, t0 + period, &mut rng);
+        }
+    }
+    let sched = FaultSchedule::new(events);
+    debug_assert!(sched.validate(topo).is_ok());
+    sched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_schedule_is_inert() {
+        let mut s = FaultSchedule::default();
+        assert!(s.is_empty());
+        assert_eq!(s.due(1.0), &[]);
+        assert!(s.drained());
+        assert_eq!(s.trace(), "");
+    }
+
+    #[test]
+    fn due_advances_cursor_in_time_order() {
+        let mut s = FaultSchedule::new(vec![
+            FaultEvent { t_s: 2.0e-3, fault: Fault::LinkUp { link: 0 } },
+            FaultEvent { t_s: 1.0e-3, fault: Fault::LinkDown { link: 0 } },
+        ]);
+        assert_eq!(s.peek_next_t(), Some(1.0e-3));
+        let d = s.due(1.5e-3);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].fault, Fault::LinkDown { link: 0 });
+        let d = s.due(5.0e-3);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].fault, Fault::LinkUp { link: 0 });
+        assert!(s.drained());
+        s.reset();
+        assert_eq!(s.due(5.0e-3).len(), 2);
+    }
+
+    #[test]
+    fn validation_rejects_bad_references_and_factors() {
+        let t = Topology::paper();
+        let bad_link = FaultSchedule::new(vec![FaultEvent {
+            t_s: 0.0,
+            fault: Fault::LinkDown { link: t.links.len() },
+        }]);
+        assert!(bad_link.validate(&t).is_err());
+        let bad_rail = FaultSchedule::new(vec![FaultEvent {
+            t_s: 0.0,
+            fault: Fault::RailDegraded { rail: t.nics_per_node, factor: 0.5 },
+        }]);
+        assert!(bad_rail.validate(&t).is_err());
+        let bad_factor = FaultSchedule::new(vec![FaultEvent {
+            t_s: 0.0,
+            fault: Fault::RailDegraded { rail: 0, factor: 0.0 },
+        }]);
+        assert!(bad_factor.validate(&t).is_err());
+        let nan_factor = FaultSchedule::new(vec![FaultEvent {
+            t_s: 0.0,
+            fault: Fault::StragglerNode { node: 0, inject_factor: f64::NAN },
+        }]);
+        assert!(nan_factor.validate(&t).is_err());
+        let bad_node = FaultSchedule::new(vec![FaultEvent {
+            t_s: 0.0,
+            fault: Fault::StragglerNode { node: t.nodes, inject_factor: 0.5 },
+        }]);
+        assert!(bad_node.validate(&t).is_err());
+    }
+
+    #[test]
+    fn scenarios_are_deterministic_and_valid() {
+        let t = Topology::fat_tree(8, 2.0);
+        let p = ScenarioParams::default();
+        for sc in Scenario::all() {
+            let a = scenario_schedule(&t, sc, &p, None);
+            let b = scenario_schedule(&t, sc, &p, None);
+            assert_eq!(a.trace(), b.trace(), "{} not deterministic", sc.label());
+            assert!(a.validate(&t).is_ok());
+            assert!(!a.is_empty());
+        }
+    }
+
+    #[test]
+    fn flap_targets_hottest_loaded_link() {
+        let t = Topology::paper();
+        let mut load = vec![0.0; t.links.len()];
+        let hot = rail_links(&t, 2)[0];
+        load[hot] = 7.0e9;
+        let s = scenario_schedule(
+            &t,
+            Scenario::Flap,
+            &ScenarioParams::default(),
+            Some(&load),
+        );
+        assert_eq!(s.events()[0].fault, Fault::LinkDown { link: hot });
+        assert_eq!(s.events()[1].fault, Fault::LinkUp { link: hot });
+        assert!(s.events()[1].t_s > s.events()[0].t_s);
+    }
+
+    #[test]
+    fn rail_and_node_link_sets_cover_expectations() {
+        let t = Topology::paper();
+        // flat: per rail, one edge per direction per node pair + the
+        // cross-rail edges touching the rail
+        let r0 = rail_links(&t, 0);
+        assert!(!r0.is_empty());
+        for &l in &r0 {
+            assert!(!matches!(t.link(l).kind, LinkKind::NvLink));
+        }
+        let out = node_out_links(&t, 0);
+        for &l in &out {
+            assert!(!t.is_switch(t.link(l).src));
+            assert_eq!(t.node_of(t.link(l).src), 0);
+        }
+        // tiered: rail links include leaf + spine planes
+        let ft = Topology::fat_tree(8, 2.0);
+        let fr = rail_links(&ft, 1);
+        let kinds: Vec<_> = fr.iter().map(|&l| ft.link(l).kind).collect();
+        assert!(kinds.iter().any(|k| matches!(k, LinkKind::LeafUp { .. })));
+        assert!(kinds.iter().any(|k| matches!(k, LinkKind::SpineUp { .. })));
+    }
+}

@@ -50,7 +50,7 @@
 //!   in `tests/fabric_props.rs` holds this invariant under randomized
 //!   preempt/add_flows sequences.
 
-use super::{gbps_to_bps, FabricParams, XferMode};
+use super::{faults, gbps_to_bps, FabricParams, XferMode};
 use crate::topology::{Path, Topology};
 
 /// One transfer request routed over a fixed path.
@@ -151,8 +151,21 @@ impl SimResult {
     }
 }
 
+/// Identity of a capacity constraint: which physical resource it
+/// models. Fault application ([`SimEngine::apply_fault`]) keys its
+/// capacity rescaling off this; fault-free runs never read it.
+#[derive(Clone, Copy, Debug)]
+enum ConsKey {
+    Link(usize),
+    Inj(usize),
+    Rcv(usize),
+    NetOut(usize),
+    NetIn(usize),
+}
+
 /// Internal: one capacity constraint (bytes/s) over a set of flows.
 struct Constraint {
+    key: ConsKey,
     cap: f64,
     members: Vec<usize>,
 }
@@ -178,7 +191,13 @@ impl<'a> FluidSim<'a> {
     }
 
     /// Assemble every capacity constraint touching any flow.
-    fn build_constraints(&self, flows: &[Flow]) -> Vec<Constraint> {
+    ///
+    /// `inj_force`: per-GPU injection scales from the fault layer —
+    /// a scaled (straggling) GPU gets an injection constraint even
+    /// with a single member flow, because its throttled cap can bind
+    /// where the healthy cap never could. `None` (every fault-free
+    /// run) reproduces the original constraint set exactly.
+    fn build_constraints(&self, flows: &[Flow], inj_force: Option<&[f64]>) -> Vec<Constraint> {
         let p = &self.params;
         let mut out = Vec::new();
         // per-link
@@ -212,24 +231,47 @@ impl<'a> FluidSim<'a> {
         for (id, members) in link_members.into_iter().enumerate() {
             if !members.is_empty() {
                 out.push(Constraint {
+                    key: ConsKey::Link(id),
                     cap: gbps_to_bps(self.topo.link(id).cap_gbps),
                     members,
                 });
             }
         }
-        for members in inj {
-            if members.len() > 1 {
-                out.push(Constraint { cap: gbps_to_bps(p.inject_cap_gbps), members });
+        for (g, members) in inj.into_iter().enumerate() {
+            let forced = inj_force.map_or(false, |s| s[g] < 1.0);
+            if members.len() > 1 || (forced && !members.is_empty()) {
+                out.push(Constraint {
+                    key: ConsKey::Inj(g),
+                    cap: gbps_to_bps(p.inject_cap_gbps),
+                    members,
+                });
             }
         }
-        for members in rcv {
+        for (g, members) in rcv.into_iter().enumerate() {
             if members.len() > 1 {
-                out.push(Constraint { cap: gbps_to_bps(p.recv_cap_gbps), members });
+                out.push(Constraint {
+                    key: ConsKey::Rcv(g),
+                    cap: gbps_to_bps(p.recv_cap_gbps),
+                    members,
+                });
             }
         }
-        for members in net_out.into_iter().chain(net_in) {
+        for (n, members) in net_out.into_iter().enumerate() {
             if members.len() > 1 {
-                out.push(Constraint { cap: gbps_to_bps(p.node_net_cap_gbps), members });
+                out.push(Constraint {
+                    key: ConsKey::NetOut(n),
+                    cap: gbps_to_bps(p.node_net_cap_gbps),
+                    members,
+                });
+            }
+        }
+        for (n, members) in net_in.into_iter().enumerate() {
+            if members.len() > 1 {
+                out.push(Constraint {
+                    key: ConsKey::NetIn(n),
+                    cap: gbps_to_bps(p.node_net_cap_gbps),
+                    members,
+                });
             }
         }
         out
@@ -399,6 +441,14 @@ pub struct SimEngine<'a> {
     rates: Vec<f64>,
     /// Flows preempted before completing (residual re-issued elsewhere).
     preempted: Vec<bool>,
+    /// Per-link capacity scale under faults (1 healthy, 0 dead).
+    link_scale: Vec<f64>,
+    /// Per-GPU injection-cap scale under faults (straggler nodes).
+    inject_scale: Vec<f64>,
+    /// Whether any fault has ever been applied. `false` keeps every
+    /// rebuild on the exact pre-fault arithmetic, so fault-free runs
+    /// stay bit-identical to builds without the fault layer.
+    faulted: bool,
     solver: SolverKind,
     /// Rate solves performed (one per event-loop step with active flows).
     events: u64,
@@ -464,6 +514,9 @@ impl<'a> SimEngine<'a> {
             rate_cap: Vec::new(),
             rates: Vec::new(),
             preempted: Vec::new(),
+            link_scale: vec![1.0; topo.links.len()],
+            inject_scale: vec![1.0; topo.num_gpus()],
+            faulted: false,
             solver: SolverKind::Incremental,
             events: 0,
             cons_cap: Vec::new(),
@@ -553,10 +606,42 @@ impl<'a> SimEngine<'a> {
             self.flows.push(f.clone());
             self.pending.push(i);
         }
+        self.rebuild();
+        first
+    }
+
+    /// Rebuild the constraint structure + solver state over the full
+    /// flow set — after an [`SimEngine::add_flows`] batch or a fault
+    /// rescaling ([`SimEngine::apply_fault`]). Pure code motion from
+    /// the original `add_flows` tail, so the fault-free trajectory is
+    /// unchanged.
+    fn rebuild(&mut self) {
         // Rebuild the constraint structure over the full flow set (the
         // solver only ever raises rates of *active* members, so closed
         // flows in a membership list are inert).
-        self.constraints = self.sim.build_constraints(&self.flows);
+        self.constraints = self.sim.build_constraints(
+            &self.flows,
+            if self.faulted { Some(&self.inject_scale) } else { None },
+        );
+        if self.faulted {
+            // re-price faulted resources; untouched keys keep the
+            // capacities build_constraints just computed
+            for c in &mut self.constraints {
+                match c.key {
+                    ConsKey::Link(l) => {
+                        c.cap = gbps_to_bps(
+                            self.sim.topo.link(l).cap_gbps * self.link_scale[l],
+                        );
+                    }
+                    ConsKey::Inj(g) => {
+                        c.cap = gbps_to_bps(
+                            self.sim.params.inject_cap_gbps * self.inject_scale[g],
+                        );
+                    }
+                    _ => {}
+                }
+            }
+        }
         self.flow_cons = vec![Vec::new(); self.flows.len()];
         for (ci, c) in self.constraints.iter().enumerate() {
             for &m in &c.members {
@@ -600,7 +685,35 @@ impl<'a> SimEngine<'a> {
         for k in 0..self.active.len() {
             self.activate(self.active[k]);
         }
-        first
+    }
+
+    /// Apply a fault to the running fabric: rescale the affected
+    /// capacity constraints and rebuild the solver state, so the next
+    /// event solves against the degraded capacities. A capacity pinned
+    /// at zero freezes its member flows at rate 0 — the stall the
+    /// monitor → replan recovery loop observes and routes around.
+    /// Fault-free runs never call this, keeping them bit-identical.
+    pub fn apply_fault(&mut self, fault: &faults::Fault) {
+        self.faulted = true;
+        match *fault {
+            faults::Fault::LinkDown { link } => self.link_scale[link] = 0.0,
+            faults::Fault::LinkUp { link } => self.link_scale[link] = 1.0,
+            faults::Fault::RailDegraded { rail, factor } => {
+                for l in faults::rail_links(self.sim.topo, rail) {
+                    self.link_scale[l] = factor;
+                }
+            }
+            faults::Fault::StragglerNode { node, inject_factor } => {
+                for local in 0..self.sim.topo.gpus_per_node {
+                    let g = self.sim.topo.gpu(node, local);
+                    self.inject_scale[g] = inject_factor;
+                }
+                for l in faults::node_out_links(self.sim.topo, node) {
+                    self.link_scale[l] = inject_factor;
+                }
+            }
+        }
+        self.rebuild();
     }
 
     /// Bookkeeping when flow `i` joins the active set: bump its
@@ -931,7 +1044,21 @@ impl<'a> SimEngine<'a> {
             if let Some(&i) = self.pending.last() {
                 dt = dt.min(self.start_t[i] - self.t);
             }
-            assert!(dt.is_finite(), "stuck: no progress possible (all rates zero)");
+            if !dt.is_finite() {
+                // A fault can pin every active flow at rate zero (all
+                // paths cross dead links). With a finite epoch bound,
+                // park there so the recovery loop can observe the
+                // stall and reroute; with no bound the run genuinely
+                // cannot make progress.
+                assert!(
+                    t_stop.is_finite(),
+                    "stuck: no progress possible (all rates zero)"
+                );
+                if t_stop > self.t {
+                    self.t = t_stop;
+                }
+                return;
+            }
             // clamp at the epoch boundary
             let stopping = self.t + dt > t_stop;
             let dt = if stopping { (t_stop - self.t).max(0.0) } else { dt };
@@ -1260,6 +1387,53 @@ mod tests {
             assert_eq!(a.bytes.to_bits(), b.bytes.to_bits());
         }
         assert_eq!(ri.link_bytes, rr.link_bytes);
+    }
+
+    /// A dead link pins its flow at rate zero (the engine parks at
+    /// epoch bounds instead of asserting); LinkUp restores service and
+    /// the payload still lands in full.
+    #[test]
+    fn fault_link_flap_stalls_then_recovers() {
+        let t = Topology::paper();
+        let p = candidates(&t, 0, 4, false).remove(0); // rail 0, single hop
+        let bytes = 64.0 * MB;
+        let mut e =
+            SimEngine::new(&t, FabricParams::default(), &[Flow::new(p.clone(), bytes)]);
+        e.advance_to(0.0002);
+        let before = e.moved_bytes(0);
+        assert!(before > 0.0);
+        e.apply_fault(&faults::Fault::LinkDown { link: p.hops[0] });
+        e.advance_to(0.0010);
+        assert!((e.moved_bytes(0) - before).abs() < 1.0, "dead link moved bytes");
+        assert!(!e.is_done());
+        e.apply_fault(&faults::Fault::LinkUp { link: p.hops[0] });
+        e.run_to_completion();
+        let r = e.result();
+        assert!((r.flows[0].bytes - bytes).abs() < 1.0);
+        assert!(r.makespan >= 0.0010);
+    }
+
+    /// A straggler node throttles the capacity of its GPUs' out-links:
+    /// the same transfer takes a multiple of the healthy makespan.
+    #[test]
+    fn fault_straggler_throttles_source_node() {
+        let t = Topology::paper();
+        let p = candidates(&t, 0, 1, false).remove(0);
+        let bytes = 128.0 * MB;
+        let mut healthy =
+            SimEngine::new(&t, FabricParams::default(), &[Flow::new(p.clone(), bytes)]);
+        healthy.run_to_completion();
+        let mut slow =
+            SimEngine::new(&t, FabricParams::default(), &[Flow::new(p, bytes)]);
+        slow.apply_fault(&faults::Fault::StragglerNode {
+            node: 0,
+            inject_factor: 0.25,
+        });
+        slow.run_to_completion();
+        assert!(
+            slow.result().makespan > 1.5 * healthy.result().makespan,
+            "straggler did not slow the source"
+        );
     }
 
     #[test]

@@ -23,6 +23,11 @@
 //! execution-time loop drives, with [`fluid::SimEngine`] (default) and
 //! [`packet::PacketSim`] as the two swappable implementations.
 //!
+//! [`faults`] injects deterministic degradation (link flaps, throttled
+//! rails, straggler nodes) into either backend via
+//! [`FabricBackend::apply_fault`]; the coordinator's replan loop is the
+//! recovery mechanism (DESIGN.md §13).
+//!
 //! Calibration anchors (from the paper):
 //! * direct NVLink path: 120 GB/s effective, saturating ≳64 MB
 //! * +1 relay path: 213.1 GB/s aggregate ⇒ relay pass-through
@@ -34,11 +39,13 @@
 //! * multi-path disabled ≤1 MB (kernel-pipeline overhead dominates)
 
 pub mod backend;
+pub mod faults;
 pub mod fluid;
 pub mod packet;
 pub mod pipeline;
 
 pub use backend::{make_backend, FabricBackend, TailStats};
+pub use faults::{Fault, FaultEvent, FaultSchedule, FaultsCfg, Scenario, ScenarioParams};
 
 use crate::topology::{LinkKind, Path, Topology};
 

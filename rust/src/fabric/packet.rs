@@ -43,6 +43,7 @@
 //! charged to `link_bytes` — rerouting is not free).
 
 use super::backend::TailStats;
+use super::faults;
 use super::fluid::{Flow, FlowResult, SimResult};
 use super::FabricParams;
 use crate::topology::Topology;
@@ -132,6 +133,13 @@ pub struct PacketSim<'a> {
     /// `(flow, cell idx, completion time)` of the cell in service.
     in_service: Vec<Option<(u32, u32, u64)>>,
     link_rate: Vec<f64>,
+    /// Per-link capacity scale under faults (1 healthy, 0 dead: the
+    /// queue freezes until a restore event re-kicks the server).
+    /// Scaling by exactly 1.0 is a bit-exact no-op, so fault-free runs
+    /// keep byte-identical traces.
+    link_scale: Vec<f64>,
+    /// Per-GPU injector-serializer scale under faults (stragglers).
+    inject_scale: Vec<f64>,
     /// Node whose NIC-out (resp. NIC-in) aggregate a cell on this link
     /// charges; `u32::MAX` = none. On flat fabrics every non-NVLink
     /// link charges both endpoints' nodes (the old `is_net` rule); on
@@ -206,6 +214,8 @@ impl<'a> PacketSim<'a> {
             peak_lq_bytes: vec![0.0; nl],
             in_service: vec![None; nl],
             link_rate: topo.links.iter().map(|l| l.cap_gbps).collect(),
+            link_scale: vec![1.0; nl],
+            inject_scale: vec![1.0; ng],
             charge_out_node: topo
                 .links
                 .iter()
@@ -345,6 +355,45 @@ impl<'a> PacketSim<'a> {
         self.inflight_bytes[i] = 0.0;
         self.unfinished -= 1;
         residual
+    }
+
+    /// Apply a fault: a dead link freezes its queue (the in-service
+    /// cell still completes — it was already on the wire — but nothing
+    /// new enters service); degraded links and straggling injectors
+    /// serialize slower from their next cell on; restore events
+    /// re-kick frozen servers. Fault-free runs never call this, so
+    /// their event traces stay byte-identical.
+    pub fn apply_fault(&mut self, fault: &faults::Fault) {
+        let t = self.t_ns;
+        match *fault {
+            faults::Fault::LinkDown { link } => self.link_scale[link] = 0.0,
+            faults::Fault::LinkUp { link } => {
+                self.link_scale[link] = 1.0;
+                self.schedule(t, Ev::LinkTick(link as u32));
+            }
+            faults::Fault::RailDegraded { rail, factor } => {
+                for l in faults::rail_links(self.topo, rail) {
+                    let was_dead = self.link_scale[l] <= 0.0;
+                    self.link_scale[l] = factor;
+                    if was_dead {
+                        self.schedule(t, Ev::LinkTick(l as u32));
+                    }
+                }
+            }
+            faults::Fault::StragglerNode { node, inject_factor } => {
+                for local in 0..self.topo.gpus_per_node {
+                    let g = self.topo.gpu(node, local);
+                    self.inject_scale[g] = inject_factor;
+                }
+                for l in faults::node_out_links(self.topo, node) {
+                    let was_dead = self.link_scale[l] <= 0.0;
+                    self.link_scale[l] = inject_factor;
+                    if was_dead {
+                        self.schedule(t, Ev::LinkTick(l as u32));
+                    }
+                }
+            }
+        }
     }
 
     /// Per-link bytes serialized since the previous call; resets the
@@ -493,7 +542,7 @@ impl<'a> PacketSim<'a> {
         let f = self.flows_at[g][pos] as usize;
         self.rr[g] = (pos + 1) % len;
         let cell = self.cell_size[f];
-        let dur = dur_ns(cell, self.params.inject_cap_gbps);
+        let dur = dur_ns(cell, self.params.inject_cap_gbps * self.inject_scale[g]);
         self.inj_busy_until[g] = t + dur;
         // token-bucket pacing at the flow's rate ceiling: deadlines
         // advance by one period per cell with at most one period of
@@ -555,6 +604,9 @@ impl<'a> PacketSim<'a> {
                 }
             }
         }
+        if self.link_scale[l] <= 0.0 {
+            return; // dead link: queue frozen until a restore re-kicks
+        }
         loop {
             let Some(&(fu, idx)) = self.lq[l].front() else { return };
             let f = fu as usize;
@@ -580,7 +632,7 @@ impl<'a> PacketSim<'a> {
             self.lq[l].pop_front();
             let cell = self.cell_size[f];
             self.lq_bytes[l] -= cell;
-            let rate = self.link_rate[l].min(self.flow_cap_gbps[f]);
+            let rate = (self.link_rate[l] * self.link_scale[l]).min(self.flow_cap_gbps[f]);
             let done = t + dur_ns(cell, rate);
             self.in_service[l] = Some((fu, idx, done));
             if co != u32::MAX || ci != u32::MAX {
@@ -849,6 +901,62 @@ mod tests {
         for (i, (&s, &tot)) in summed.iter().zip(&rs.link_bytes).enumerate() {
             assert!((s - tot).abs() < 1.0, "link {i}: windows {s} vs total {tot}");
         }
+    }
+
+    /// A dead link freezes delivery (in-flight cells drain, then
+    /// nothing moves) until LinkUp re-kicks the server; the payload
+    /// still lands in full.
+    #[test]
+    fn fault_flap_freezes_then_recovers() {
+        let t = Topology::paper();
+        let p = candidates(&t, 0, 4, false).remove(0); // rail 0, single hop
+        let link = p.hops[0];
+        let bytes = 64.0 * MB;
+        let mut sim =
+            PacketSim::new(&t, FabricParams::default(), &[Flow::new(p, bytes)]);
+        sim.advance_to(0.0003);
+        sim.apply_fault(&faults::Fault::LinkDown { link });
+        sim.advance_to(0.0050);
+        assert!(!sim.is_done(), "flow finished across a dead link");
+        let stalled = sim.moved_bytes(0);
+        sim.advance_to(0.0060);
+        assert!(
+            (sim.moved_bytes(0) - stalled).abs() < 1.0,
+            "dead link kept delivering"
+        );
+        sim.apply_fault(&faults::Fault::LinkUp { link });
+        sim.run_to_completion();
+        assert!(sim.is_done());
+        let r = sim.result();
+        assert!((r.flows[0].bytes - bytes).abs() < 1.0);
+    }
+
+    /// A degraded rail serializes slower: same payload, a multiple of
+    /// the healthy makespan, bytes conserved.
+    #[test]
+    fn fault_degrade_slows_rail() {
+        let t = Topology::paper();
+        let p = candidates(&t, 0, 4, false).remove(0);
+        let bytes = 32.0 * MB;
+        let fly = |fault: Option<faults::Fault>| {
+            let mut sim = PacketSim::new(
+                &t,
+                FabricParams::default(),
+                &[Flow::new(p.clone(), bytes)],
+            );
+            if let Some(f) = fault {
+                sim.apply_fault(&f);
+            }
+            sim.run_to_completion();
+            sim.result().makespan
+        };
+        let healthy = fly(None);
+        let degraded =
+            fly(Some(faults::Fault::RailDegraded { rail: 0, factor: 0.25 }));
+        assert!(
+            degraded > 2.0 * healthy,
+            "degrade had no effect: {degraded} vs {healthy}"
+        );
     }
 
     /// Incast: 7 senders into one destination queue up at the receive

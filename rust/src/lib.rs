@@ -23,13 +23,13 @@
 //! |---|---|---|
 //! | [`topology`] | §IV-B, §V-A | NVLink mesh + rail-matched NICs, candidate paths |
 //! | [`planner`] | Algorithm 1, §IV-B | MWU min-congestion routing + incremental [`planner::Planner::replan`] |
-//! | [`fabric`] | §V-B | calibrated fluid + packet + chunk-pipeline simulators behind the [`fabric::FabricBackend`] trait: resumable [`fabric::fluid::SimEngine`] (incremental + reference water-fillers, [`fabric::fluid::SolverKind`]) and the discrete-event [`fabric::packet::PacketSim`] (queueing + tail latency) |
+//! | [`fabric`] | §V-B | calibrated fluid + packet + chunk-pipeline simulators behind the [`fabric::FabricBackend`] trait: resumable [`fabric::fluid::SimEngine`] (incremental + reference water-fillers, [`fabric::fluid::SolverKind`]) and the discrete-event [`fabric::packet::PacketSim`] (queueing + tail latency); [`fabric::faults`] injects seeded link flaps / degraded rails / stragglers into both (DESIGN.md §13) |
 //! | [`coordinator`] | §IV | monitor / channels / reassembly, [`coordinator::Orchestrator`] and the mid-flight [`coordinator::ReplanExecutor`] |
 //! | [`orchestrator`] | beyond §V-E | multi-tenant serving: seeded job stream → admission → joint planning ([`planner::Planner::plan_joint`]) → one shared fabric, weighted fairness via channel allocation, per-tenant reassembly (`nimble serve`) |
 //! | [`collectives`] | §IV-E | All-to-Allv, async Send/Recv, ring collectives |
 //! | [`baselines`] | §II-B, §V | NCCL-like (PXN), MPI/UCX-like, single-path |
 //! | [`workloads`] | §III-A, §V-C/D | skew generators incl. time-varying [`workloads::dynamic`] |
-//! | [`exp`] | §V tables/figures | one driver per paper artifact + `exp::replan`, the `exp::scale` hot-path sweep, and the `exp::xcheck` fluid ↔ packet cross-validation |
+//! | [`exp`] | §V tables/figures | one driver per paper artifact + `exp::replan`, the `exp::scale` hot-path sweep, the `exp::xcheck` fluid ↔ packet cross-validation, and the `exp::faults` recovery arms (`nimble faults`) |
 //! | [`moe`] | §V-D, Fig 8 | MoE expert-parallel step driver |
 //! | [`runtime`] | DESIGN.md §6 | AOT artifact interpreter (L2/L1 bridge) |
 //! | [`metrics`], [`util`], [`config`] | — | reports, std-only substrates, TOML config |

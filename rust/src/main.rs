@@ -14,15 +14,17 @@
 //! nimble scale             cluster-scale hot-path sweep (incremental vs reference solver)
 //! nimble xcheck            fluid ↔ packet backend cross-validation + tail latency
 //! nimble serve [--jobs N --seed S --no-joint]   multi-tenant orchestrator on one shared fabric
+//! nimble faults [--scenario flap|degrade|straggler|mixed] [--no-replan]   fault injection + replan-as-recovery
 //! nimble plan --src 0 --dst 1 --mb 256   show a routing plan
 //! nimble moe-compute       run the AOT FFN artifacts (offline interpreter)
 //! nimble info              topology + fabric calibration summary
 //! ```
 
 use nimble::exp::{
-    ablate, fig6, fig7, fig8, interference, replan, scale, sendrecv, serve, table1,
-    xcheck, MB,
+    ablate, faults, fig6, fig7, fig8, interference, replan, scale, sendrecv, serve,
+    table1, xcheck, MB,
 };
+use nimble::fabric::Scenario;
 use nimble::fabric::FabricParams;
 use nimble::planner::{CostModel, Demand, Planner};
 use nimble::runtime::Runtime;
@@ -300,6 +302,57 @@ fn main() {
                 None => {}
             }
         }),
+        "faults" => Args::new(
+            "nimble faults",
+            "fault injection + replan-as-recovery: link flaps, degraded rails, stragglers",
+        )
+        .flag(
+            "scenario",
+            "config",
+            "flap|degrade|straggler|mixed|all|config (config: the [faults] section; all when it says none)",
+        )
+        .switch("no-replan", "frozen arms only (shows what static plans lose on their own)")
+        .switch("check", "enforce the recovery, bit-identity and cross-backend gates")
+        .parse(rest)
+        .map(|p| {
+            let fparams = cfg.faults.params;
+            let scenarios: Vec<Scenario> = match p.get("scenario") {
+                "config" => match cfg.faults.scenario {
+                    Some(sc) => vec![sc],
+                    None => Scenario::all().to_vec(),
+                },
+                "all" => Scenario::all().to_vec(),
+                name => match Scenario::parse(name) {
+                    Some(sc) => vec![sc],
+                    None => {
+                        eprintln!(
+                            "--scenario must be flap|degrade|straggler|mixed|all|config, \
+                             got '{name}'"
+                        );
+                        std::process::exit(2);
+                    }
+                },
+            };
+            let with_replan = !p.get_bool("no-replan");
+            let rep =
+                faults::run(&params, &cfg.planner, &fparams, &scenarios, with_replan);
+            println!("{}", faults::render(&rep));
+            if p.get_bool("check") {
+                match faults::check(&rep, &params, &cfg.planner, &fparams) {
+                    // stderr, like the other smokes: stdout stays a report
+                    Ok(()) => eprintln!(
+                        "faults check OK: replan retains ≥ static and ≥ ecmp on every \
+                         scenario; empty schedules bitwise inert; degrade agrees \
+                         across backends within ±{:.0}%",
+                        xcheck::GOODPUT_TOL * 100.0
+                    ),
+                    Err(e) => {
+                        eprintln!("faults check FAILED: {e}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+        }),
         "xcheck" => Args::new(
             "nimble xcheck",
             "fluid ↔ packet backend cross-validation + tail-latency report",
@@ -382,7 +435,7 @@ fn main() {
 
 fn usage() -> String {
     "nimble — NIMBLE (skew-to-symmetry multi-path balancing) reproduction\n\
-     commands: table1 | fig6 | fig7 | fig8 | sendrecv | ablate | interference | replan | scale | xcheck | serve | plan | moe-compute | info\n\
+     commands: table1 | fig6 | fig7 | fig8 | sendrecv | ablate | interference | replan | scale | xcheck | serve | faults | plan | moe-compute | info\n\
      run `nimble <cmd> --help` for flags"
         .to_string()
 }

@@ -32,6 +32,14 @@
 //! flow per part, the PR-2 layout — which is what makes a 1-job
 //! `--no-joint` stream bit-identical to
 //! [`crate::coordinator::ReplanExecutor`].
+//!
+//! **Faults** ([`FaultSchedule`], PR 7) inject at epoch boundaries,
+//! exactly as in the single-job executor: each due event hits the
+//! shared fabric and folds into a link-health mask handed to the joint
+//! planner AND every per-tenant planner (cold admission planners
+//! included), so neither admissions nor reroutes land on a link known
+//! dead. Tenants stranded on a dead link bypass the z-hysteresis. An
+//! empty schedule leaves every serve path bit-identical.
 
 use super::admission::AdmissionQueue;
 use super::job::{JobKind, JobSpec, TenancyCfg};
@@ -41,9 +49,10 @@ use crate::coordinator::reroute::{
     attach_reissues, pool_split_counts, preempt_and_pool, PartState, Reissue,
 };
 use crate::fabric::backend::{make_backend, FabricBackend, TailStats};
+use crate::fabric::faults::{self, FaultSchedule};
 use crate::fabric::fluid::{Flow, SimResult};
 use crate::fabric::FabricParams;
-use crate::planner::replan::{diff_pairs, drain_time_z, excess_over_plan, shape_deviation};
+use crate::planner::replan::{diff_pairs, drain_time_z_scaled, excess_over_plan, shape_deviation};
 use crate::planner::{
     carry_plan, Assignment, Demand, DrainCaps, Plan, Planner, PlannerCfg, ReplanCfg,
     TenantDemands,
@@ -101,6 +110,9 @@ pub struct ServeEpoch {
     pub replanned: bool,
     /// Flows preempted this epoch.
     pub preempted: usize,
+    /// Aggregate delivered bytes over this epoch / cadence — the
+    /// goodput trace `nimble faults` reads time-to-recover from.
+    pub goodput_gbps: f64,
 }
 
 /// Per-tenant outcome of a serve run.
@@ -159,6 +171,9 @@ pub struct MultiTenantExecutor<'a> {
     pub planner_cfg: PlannerCfg,
     pub rcfg: ReplanCfg,
     pub tcfg: TenancyCfg,
+    /// Fault events injected at epoch boundaries (empty = fault-free;
+    /// the empty schedule keeps every serve path bit-identical).
+    pub faults: FaultSchedule,
 }
 
 impl<'a> MultiTenantExecutor<'a> {
@@ -171,7 +186,14 @@ impl<'a> MultiTenantExecutor<'a> {
     ) -> Self {
         // planner and dataplane must agree on what is endpoint-bound
         rcfg.caps = DrainCaps::from(&params);
-        MultiTenantExecutor { topo, params, planner_cfg, rcfg, tcfg }
+        MultiTenantExecutor { topo, params, planner_cfg, rcfg, tcfg, faults: FaultSchedule::default() }
+    }
+
+    /// Attach a fault schedule; events fire at the first epoch boundary
+    /// at or after their time, exactly as in the single-job executor.
+    pub fn with_faults(mut self, faults: FaultSchedule) -> Self {
+        self.faults = faults;
+        self
     }
 
     /// Fly the whole job stream. Deterministic: same topology, params
@@ -181,9 +203,16 @@ impl<'a> MultiTenantExecutor<'a> {
         let tcfg = self.tcfg.clone();
         let chunk = self.params.chunk_bytes.max(1.0);
         let cadence = self.rcfg.cadence_s.max(1e-6);
-        let loop_on = tcfg.joint || self.rcfg.enable;
+        let loop_on = tcfg.joint || self.rcfg.enable || !self.faults.is_empty();
 
-        let shared = crate::planner::SharedConstraints::of(topo);
+        let mut shared = crate::planner::SharedConstraints::of(topo);
+        let mut faults = self.faults.clone();
+        faults.reset();
+        let mut fault_scale = vec![1.0f64; topo.links.len()];
+        let mut any_dead = false;
+        let mut health_on = false;
+        let mut moved_prev = 0.0f64;
+        let mut stalled = 0usize;
         let mut queue = AdmissionQueue::new(jobs, tcfg.max_live);
         let mut tenants: BTreeMap<usize, TenantState> = BTreeMap::new();
         let mut planners: BTreeMap<usize, Planner<'a>> = BTreeMap::new();
@@ -209,6 +238,7 @@ impl<'a> MultiTenantExecutor<'a> {
             &mut engine,
             &mut n_flows,
             chunk,
+            None,
         );
         assert!(engine.is_some(), "no job arrives at t = 0");
 
@@ -242,6 +272,7 @@ impl<'a> MultiTenantExecutor<'a> {
                         &mut engine,
                         &mut n_flows,
                         chunk,
+                        None,
                     );
                 }
             }
@@ -257,6 +288,47 @@ impl<'a> MultiTenantExecutor<'a> {
                 }
                 let t_now = t_next;
                 t_next += cadence;
+                // fault events take effect at the epoch boundary: hit
+                // the fabric, fold into the health mask, and re-arm
+                // every planner (joint + per-tenant) with it.
+                let due: Vec<crate::fabric::FaultEvent> = faults.due(t_now).to_vec();
+                if !due.is_empty() {
+                    let eng = engine.as_mut().expect("engine exists");
+                    for ev in &due {
+                        eng.apply_fault(&ev.fault);
+                        faults::apply_to_scale(&mut fault_scale, topo, &ev.fault);
+                    }
+                    any_dead = fault_scale.iter().any(|&s| s <= 0.0);
+                    let healthy = fault_scale.iter().all(|&s| s >= 1.0);
+                    health_on = !healthy;
+                    let h = if healthy { None } else { Some(fault_scale.clone()) };
+                    joint_planner.set_link_health(h.clone());
+                    for p in planners.values_mut() {
+                        p.set_link_health(h.clone());
+                    }
+                    shared = if healthy {
+                        crate::planner::SharedConstraints::of(topo)
+                    } else {
+                        crate::planner::SharedConstraints::of_scaled(topo, &fault_scale)
+                    };
+                }
+                let goodput_gbps = {
+                    let eng = engine.as_ref().expect("engine exists");
+                    let moved: f64 = (0..n_flows).map(|i| eng.moved_bytes(i)).sum();
+                    let g = (moved - moved_prev) / cadence / 1e9;
+                    if !faults.is_empty() && moved - moved_prev <= 0.0 {
+                        stalled += 1;
+                        assert!(
+                            stalled < 100_000,
+                            "serve loop stalled: no progress for {stalled} epochs \
+                             (dead link with recovery disabled?)"
+                        );
+                    } else {
+                        stalled = 0;
+                    }
+                    moved_prev = moved;
+                    g
+                };
                 refresh_done(&mut tenants, engine.as_ref().expect("engine").as_ref());
                 self.admit(
                     t_now,
@@ -267,9 +339,19 @@ impl<'a> MultiTenantExecutor<'a> {
                     &mut engine,
                     &mut n_flows,
                     chunk,
+                    if health_on { Some(&fault_scale) } else { None },
                 );
                 let eng = engine.as_mut().expect("engine exists");
                 if eng.is_done() && queue.is_empty() {
+                    if !self.faults.is_empty() {
+                        epochs.push(ServeEpoch {
+                            t_s: t_now,
+                            deviation: 0.0,
+                            replanned: false,
+                            preempted: 0,
+                            goodput_gbps,
+                        });
+                    }
                     break;
                 }
                 monitor.observe(&eng.take_window());
@@ -298,6 +380,7 @@ impl<'a> MultiTenantExecutor<'a> {
                         deviation: 0.0,
                         replanned: false,
                         preempted: 0,
+                        goodput_gbps,
                     });
                     continue;
                 }
@@ -375,10 +458,27 @@ impl<'a> MultiTenantExecutor<'a> {
                             .map(|((c, o), e)| c - o + e)
                             .collect();
                         let ch = &joint.per_tenant[&td.tenant];
-                        let z_carry = drain_time_z(topo, &self.rcfg.caps, &shared, own, &bg);
-                        let z_ch =
-                            drain_time_z(topo, &self.rcfg.caps, &shared, &ch.link_load, &bg);
-                        if z_ch >= z_carry * (1.0 - self.rcfg.margin) {
+                        // a tenant whose in-flight routing crosses a
+                        // dead link must move: waive the hysteresis,
+                        // exactly as the single-job executor does
+                        let forced = any_dead
+                            && in_flight[&td.tenant].assignments.values().any(|a| {
+                                a.parts.iter().any(|(p, b)| {
+                                    *b > 0.0 && p.hops.iter().any(|&h| fault_scale[h] <= 0.0)
+                                })
+                            });
+                        let hs = if health_on { Some(fault_scale.as_slice()) } else { None };
+                        let z_carry =
+                            drain_time_z_scaled(topo, &self.rcfg.caps, &shared, own, &bg, hs);
+                        let z_ch = drain_time_z_scaled(
+                            topo,
+                            &self.rcfg.caps,
+                            &shared,
+                            &ch.link_load,
+                            &bg,
+                            hs,
+                        );
+                        if !forced && z_ch >= z_carry * (1.0 - self.rcfg.margin) {
                             continue;
                         }
                         let changed = diff_pairs(&in_flight[&td.tenant], ch);
@@ -416,7 +516,24 @@ impl<'a> MultiTenantExecutor<'a> {
                         };
                         let planner = planners.get_mut(&tid).expect("tenant planner");
                         let observed = monitor.load_estimates().to_vec();
-                        let out = planner.replan(&in_flight, &observed, rd, &self.rcfg);
+                        // pairs stranded on a dead link bypass the
+                        // z-hysteresis (they would otherwise never
+                        // drain — the replan IS the recovery path)
+                        let forced: Vec<(GpuId, GpuId)> = if any_dead {
+                            asg.iter()
+                                .filter(|(_, a)| {
+                                    a.parts.iter().any(|(p, b)| {
+                                        *b > 0.0
+                                            && p.hops.iter().any(|&h| fault_scale[h] <= 0.0)
+                                    })
+                                })
+                                .map(|(&pair, _)| pair)
+                                .collect()
+                        } else {
+                            Vec::new()
+                        };
+                        let out =
+                            planner.replan_forced(&in_flight, &observed, rd, &self.rcfg, &forced);
                         deviation = deviation.max(out.deviation);
                         if out.replanned {
                             replanned_here = true;
@@ -453,6 +570,7 @@ impl<'a> MultiTenantExecutor<'a> {
                     deviation,
                     replanned: replanned_here,
                     preempted: preempted_here,
+                    goodput_gbps,
                 });
             }
         }
@@ -572,7 +690,10 @@ impl<'a> MultiTenantExecutor<'a> {
 
     /// Admit every job arriving by `t_now` that fits under the
     /// concurrency cap, plan the batch (jointly or per job) and issue
-    /// its flows at the epoch boundary.
+    /// its flows at the epoch boundary. `health` is the current fault
+    /// mask: per-job cold planners must see it so admissions never
+    /// route onto a link already known dead (the joint planner carries
+    /// it persistently).
     #[allow(clippy::too_many_arguments)]
     fn admit(
         &self,
@@ -584,6 +705,7 @@ impl<'a> MultiTenantExecutor<'a> {
         engine: &mut Option<Box<dyn FabricBackend + 'a>>,
         n_flows: &mut usize,
         chunk: f64,
+        health: Option<&Vec<f64>>,
     ) {
         let topo = self.topo;
         let live = tenants.values().filter(|st| !st.done).count();
@@ -614,6 +736,9 @@ impl<'a> MultiTenantExecutor<'a> {
         } else {
             for j in &batch {
                 let mut planner = Planner::new(topo, self.planner_cfg.clone());
+                if let Some(h) = health {
+                    planner.set_link_health(Some(h.clone()));
+                }
                 let d = j.demands(topo);
                 let plan = carry_plan(topo, &planner.plan(&d), &d);
                 planners.insert(j.id, planner);
@@ -893,6 +1018,50 @@ mod tests {
         for (x, y) in a.sim.link_bytes.iter().zip(&b.sim.link_bytes) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+
+    /// A mid-stream link flap on the shared fabric: every tenant still
+    /// completes with its payload conserved through reassembly
+    /// (asserted inside execute), the goodput trace records the epoch
+    /// series, and the faulted serve run is deterministic.
+    #[test]
+    fn serve_survives_link_flap_and_stays_deterministic() {
+        use crate::fabric::{Fault, FaultEvent, FaultSchedule};
+        let topo = Topology::paper();
+        let tcfg = TenancyCfg { jobs: 3, ..TenancyCfg::default() };
+        let jobs = job_stream(&topo, &tcfg);
+        let link = topo.rail(0, 1, 0).expect("rail link");
+        let sched = FaultSchedule::new(vec![
+            FaultEvent { t_s: 1.0e-3, fault: Fault::LinkDown { link } },
+            FaultEvent { t_s: 3.0e-3, fault: Fault::LinkUp { link } },
+        ]);
+        let rcfg =
+            ReplanCfg { enable: true, cadence_s: 2.0e-4, margin: 0.1, ..ReplanCfg::default() };
+        let run_once = || {
+            let mut ex = MultiTenantExecutor::new(
+                &topo,
+                FabricParams::default(),
+                PlannerCfg::default(),
+                rcfg.clone(),
+                tcfg.clone(),
+            )
+            .with_faults(sched.clone());
+            ex.execute(jobs.clone())
+        };
+        let a = run_once();
+        assert_eq!(a.tenants.len(), jobs.len());
+        for t in &a.tenants {
+            assert!(t.goodput_gbps > 0.0, "tenant {} starved", t.id);
+        }
+        assert!(!a.epochs.is_empty(), "faulted serve loop never sampled");
+        assert!(
+            a.epochs.iter().any(|e| e.goodput_gbps > 0.0),
+            "goodput trace empty under faults"
+        );
+        let b = run_once();
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.replans, b.replans);
+        assert_eq!(a.preemptions, b.preemptions);
     }
 
     /// The packet backend serves the stream too (backend-agnostic loop)

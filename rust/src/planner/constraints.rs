@@ -72,6 +72,28 @@ impl SharedConstraints {
         SharedConstraints { terms, member_terms }
     }
 
+    /// Like [`SharedConstraints::of`], but with each term's capacity
+    /// recomputed from fault-scaled member links (`scale[l]` multiplies
+    /// link `l`'s capacity): a leaf whose spine uplink died really does
+    /// have less aggregate core bandwidth, and the planner must price
+    /// that. Only called with link health installed, so the fault-free
+    /// planner never leaves [`SharedConstraints::of`]'s exact values.
+    pub fn of_scaled(topo: &Topology, scale: &[f64]) -> SharedConstraints {
+        let mut s = SharedConstraints::of(topo);
+        for term in &mut s.terms {
+            term.cap_bps = term
+                .members
+                .iter()
+                .map(|&l| topo.link(l).cap_gbps * scale[l] * 1e9)
+                .sum::<f64>()
+                // all members dead: keep the cap finite (1 byte/s) so
+                // the cost arithmetic of fully-cut fallback paths stays
+                // well-defined — effectively infinitely expensive.
+                .max(1.0);
+        }
+        s
+    }
+
     pub fn len(&self) -> usize {
         self.terms.len()
     }
@@ -179,6 +201,28 @@ mod tests {
                 assert!(s.terms[ti as usize].members.contains(&l.id));
             }
         }
+    }
+
+    #[test]
+    fn scaled_terms_sum_scaled_member_capacities() {
+        let t = Topology::fat_tree(8, 2.0);
+        let s0 = SharedConstraints::of(&t);
+        let dead = s0.terms[0].members[0];
+        let mut scale = vec![1.0; t.links.len()];
+        scale[dead] = 0.0;
+        let s = SharedConstraints::of_scaled(&t, &scale);
+        assert_eq!(s.len(), s0.len());
+        let full = s0.terms[0].cap_bps;
+        assert!(
+            (s.terms[0].cap_bps - (full - t.link(dead).cap_gbps * 1e9)).abs() < 1.0,
+            "dead member not subtracted"
+        );
+        // the paired downlink term is untouched
+        assert!((s.terms[1].cap_bps - full).abs() < 1.0);
+        // every member dead ⇒ cap clamps to the 1 B/s floor
+        let zeros = vec![0.0; t.links.len()];
+        let all_dead = SharedConstraints::of_scaled(&t, &zeros);
+        assert_eq!(all_dead.terms[0].cap_bps, 1.0);
     }
 
     #[test]

@@ -20,6 +20,6 @@ pub mod replan;
 pub use constraints::{SharedConstraints, SharedTerm};
 pub use cost::{CostModel, CostShape};
 pub use joint::{JointPlan, TenantDemands};
-pub use mwu::{lower_bound_norm_load, Planner, PlannerCfg};
+pub use mwu::{lower_bound_norm_load, LinkHealth, Planner, PlannerCfg};
 pub use plan::{Assignment, Demand, Plan};
 pub use replan::{carry_plan, DrainCaps, ReplanCfg, ReplanOutcome};

@@ -44,7 +44,7 @@
 use super::constraints::SharedConstraints;
 use super::cost::{CostModel, CostShape};
 use super::plan::{Assignment, Demand, Plan};
-use crate::topology::path::candidates;
+use crate::topology::path::{candidates, live_candidates};
 use crate::topology::{GpuId, Path, PathKind, Topology};
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -79,6 +79,27 @@ impl Default for PlannerCfg {
     }
 }
 
+/// Per-link capacity health the fault-recovery replan path feeds the
+/// planner ([`Planner::set_link_health`]): `scale[l]` multiplies link
+/// `l`'s capacity (1.0 healthy, 0.0 dead), and `live[l]` is the
+/// enumeration mask derived from it. Dead links are **masked out of
+/// candidate enumeration**, not infinitely priced — no load level can
+/// route bytes onto a link that cannot move them (DESIGN.md §13).
+#[derive(Clone, Debug)]
+pub struct LinkHealth {
+    /// Capacity multiplier per physical link, in `(0, 1]` ∪ {0}.
+    pub scale: Vec<f64>,
+    /// `scale[l] > 0.0` — the candidate-enumeration liveness mask.
+    pub live: Vec<bool>,
+}
+
+impl LinkHealth {
+    pub fn from_scale(scale: Vec<f64>) -> Self {
+        let live = scale.iter().map(|&s| s > 0.0).collect();
+        LinkHealth { scale, live }
+    }
+}
+
 pub struct Planner<'a> {
     topo: &'a Topology,
     cfg: PlannerCfg,
@@ -88,12 +109,42 @@ pub struct Planner<'a> {
     /// fabrics; empty — and therefore inert — on flat ones). Each term
     /// is one virtual entry at the tail of the MWU load table.
     shared: SharedConstraints,
+    /// Current fault-induced capacity health. `None` (the default, and
+    /// the only state fault-free runs ever see) keeps every code path
+    /// byte-identical to the pre-fault planner.
+    health: Option<LinkHealth>,
 }
 
 impl<'a> Planner<'a> {
     pub fn new(topo: &'a Topology, cfg: PlannerCfg) -> Self {
         let shared = SharedConstraints::of(topo);
-        Planner { topo, cfg, cand_cache: BTreeMap::new(), shared }
+        Planner { topo, cfg, cand_cache: BTreeMap::new(), shared, health: None }
+    }
+
+    /// Install (or clear) the per-link capacity health the next plans
+    /// route against. Dead links (`scale == 0`) are masked out of
+    /// candidate enumeration, degraded links are re-priced at their
+    /// scaled capacity, and tiered shared terms are rebuilt from scaled
+    /// member capacities. Clears the candidate cache — enumeration
+    /// depends on the mask.
+    pub fn set_link_health(&mut self, scale: Option<Vec<f64>>) {
+        self.cand_cache.clear();
+        match scale {
+            Some(s) => {
+                assert_eq!(s.len(), self.topo.links.len(), "health vector length");
+                self.shared = SharedConstraints::of_scaled(self.topo, &s);
+                self.health = Some(LinkHealth::from_scale(s));
+            }
+            None => {
+                self.shared = SharedConstraints::of(self.topo);
+                self.health = None;
+            }
+        }
+    }
+
+    /// The currently-installed link health, if any.
+    pub fn health(&self) -> Option<&LinkHealth> {
+        self.health.as_ref()
     }
 
     pub fn cfg(&self) -> &PlannerCfg {
@@ -114,9 +165,12 @@ impl<'a> Planner<'a> {
         let multipath =
             self.cfg.multipath && msg_bytes > self.cfg.cost.multipath_min_bytes;
         let key = cache_key(self.topo.num_gpus(), s, d, multipath);
-        self.cand_cache
-            .entry(key)
-            .or_insert_with(|| candidates(self.topo, s, d, multipath))
+        let topo = self.topo;
+        let health = self.health.as_ref();
+        self.cand_cache.entry(key).or_insert_with(|| match health {
+            Some(h) => live_candidates(topo, s, d, multipath, &h.live),
+            None => candidates(topo, s, d, multipath),
+        })
     }
 
     /// Materialize candidate paths and hot-loop info for every pair.
@@ -144,6 +198,7 @@ impl<'a> Planner<'a> {
             }
             if !missing.is_empty() {
                 let topo = self.topo;
+                let live = self.health.as_ref().map(|h| h.live.as_slice());
                 let workers = self.cfg.threads.min(missing.len());
                 let chunk = (missing.len() + workers - 1) / workers;
                 let mut parts: Vec<Vec<((GpuId, GpuId), Vec<Path>)>> = Vec::new();
@@ -155,7 +210,13 @@ impl<'a> Planner<'a> {
                                 .iter()
                                 .map(|&(s, d, multipath)| {
                                     let key = cache_key(g, s, d, multipath);
-                                    (key, candidates(topo, s, d, multipath))
+                                    let paths = match live {
+                                        Some(lv) => {
+                                            live_candidates(topo, s, d, multipath, lv)
+                                        }
+                                        None => candidates(topo, s, d, multipath),
+                                    };
+                                    (key, paths)
                                 })
                                 .collect::<Vec<_>>()
                         }));
@@ -195,7 +256,18 @@ impl<'a> Planner<'a> {
                             } else {
                                 1.0
                             };
-                            (h, 1.0 / (link.cap_gbps * 1e9), inflate)
+                            // Degraded links are priced at their scaled
+                            // capacity (the clamp keeps the fully-cut
+                            // fallback's arithmetic finite); with no
+                            // health installed this is the exact
+                            // pre-fault expression.
+                            let inv_cap = match &self.health {
+                                Some(hl) => {
+                                    1.0 / (link.cap_gbps * hl.scale[h].max(1e-6) * 1e9)
+                                }
+                                None => 1.0 / (link.cap_gbps * 1e9),
+                            };
+                            (h, inv_cap, inflate)
                         })
                         .collect();
                     // Shared aggregate terms the path draws down become
@@ -929,6 +1001,40 @@ mod tests {
                 "threads={threads} diverged on fat-tree"
             );
         }
+    }
+
+    /// Link health: dead links are masked out of the plan entirely,
+    /// degraded links are re-priced (and shed most of their load), and
+    /// clearing the health restores the healthy plan bit-for-bit.
+    #[test]
+    fn link_health_masks_dead_and_reprices_degraded() {
+        let t = Topology::paper();
+        let demands = vec![Demand::new(0, 4, 512.0 * MB)];
+        let baseline = Planner::new(&t, PlannerCfg::default()).plan(&demands);
+        let dead = t.rail(0, 1, 0).unwrap();
+        assert!(baseline.link_load[dead] > 0.0, "home rail idle on healthy plan");
+
+        let mut p = Planner::new(&t, PlannerCfg::default());
+        let mut scale = vec![1.0; t.links.len()];
+        scale[dead] = 0.0;
+        p.set_link_health(Some(scale.clone()));
+        let masked = p.plan(&demands);
+        masked.validate(&t, &demands).unwrap();
+        assert_eq!(masked.link_load[dead], 0.0, "dead link must carry nothing");
+
+        scale[dead] = 0.1;
+        p.set_link_health(Some(scale));
+        let degraded = p.plan(&demands);
+        degraded.validate(&t, &demands).unwrap();
+        assert!(
+            degraded.link_load[dead] < baseline.link_load[dead],
+            "degraded rail kept its healthy share: {} vs {}",
+            degraded.link_load[dead],
+            baseline.link_load[dead]
+        );
+
+        p.set_link_health(None);
+        assert_eq!(p.plan(&demands).canonical_string(), baseline.canonical_string());
     }
 
     /// The same contract holds on the warm-started path the replan

@@ -230,6 +230,27 @@ pub(crate) fn drain_time_z(
     loads: &[f64],
     background: &[f64],
 ) -> f64 {
+    drain_time_z_scaled(topo, caps, shared, loads, background, None)
+}
+
+/// [`drain_time_z`] under fault-scaled link capacities: `scale[l]`
+/// multiplies link `l`'s capacity in both the per-link terms and the
+/// endpoint aggregates (the same clamp as the planner's hop pricing
+/// keeps dead-link carries finite). Without this, a replan under a
+/// degraded rail would price the carry at *healthy* capacity,
+/// under-estimate its drain time, and reject the very challenger that
+/// routes around the fault. `scale == None` is exactly the pre-fault
+/// metric, accumulation order and all. The node-aggregate rail cap
+/// stays topological (the per-link terms already catch a degraded
+/// rail's own bottleneck).
+pub(crate) fn drain_time_z_scaled(
+    topo: &Topology,
+    caps: &DrainCaps,
+    shared: &SharedConstraints,
+    loads: &[f64],
+    background: &[f64],
+    scale: Option<&[f64]>,
+) -> f64 {
     let g = topo.num_gpus();
     let mut z = 0.0f64;
     let mut out = vec![0.0f64; g];
@@ -240,7 +261,10 @@ pub(crate) fn drain_time_z(
     let mut node_in = vec![0.0f64; topo.nodes];
     for (i, l) in topo.links.iter().enumerate() {
         let load = loads[i] + background[i];
-        let cap = l.cap_gbps * 1e9;
+        let cap = match scale {
+            Some(s) => l.cap_gbps * s[i].max(1e-6) * 1e9,
+            None => l.cap_gbps * 1e9,
+        };
         z = z.max(load / cap);
         if !matches!(l.kind, LinkKind::CrossRail { .. }) {
             if l.src < g {
@@ -334,6 +358,38 @@ impl<'a> Planner<'a> {
         residual: &[Demand],
         rcfg: &ReplanCfg,
     ) -> ReplanOutcome {
+        self.replan_with(incumbent, observed_loads, residual, rcfg, &[])
+    }
+
+    /// [`Planner::replan`] with **forced pairs**: pairs whose in-flight
+    /// path crosses a dead link (the coordinator identifies them when a
+    /// fault lands). A non-empty forced set waives the hysteresis
+    /// acceptance test — recovery must not lose to anti-churn, a dead
+    /// path's drain time is infinite regardless of what the z-estimate
+    /// under clamped capacities says — but the challenger is still
+    /// adopted only if it actually moves some pair. With replanning
+    /// disabled the carry is returned even when pairs are forced: a
+    /// static plan has no recovery path, which is exactly the contrast
+    /// `nimble faults` measures.
+    pub fn replan_forced(
+        &mut self,
+        incumbent: &Plan,
+        observed_loads: &[f64],
+        residual: &[Demand],
+        rcfg: &ReplanCfg,
+        forced: &[(GpuId, GpuId)],
+    ) -> ReplanOutcome {
+        self.replan_with(incumbent, observed_loads, residual, rcfg, forced)
+    }
+
+    fn replan_with(
+        &mut self,
+        incumbent: &Plan,
+        observed_loads: &[f64],
+        residual: &[Demand],
+        rcfg: &ReplanCfg,
+        forced: &[(GpuId, GpuId)],
+    ) -> ReplanOutcome {
         let topo = self.topo();
         assert_eq!(observed_loads.len(), topo.links.len());
         let deviation = shape_deviation(topo, observed_loads, &incumbent.link_load);
@@ -391,11 +447,29 @@ impl<'a> Planner<'a> {
             .collect();
         let challenger = self.plan_seeded(residual, Some(&excess), Some(&seeds));
 
+        // z under the installed link health: fault-free runs have no
+        // health and this is exactly the pre-fault drain_time_z.
+        let hscale = self.health().map(|h| h.scale.clone());
         let shared = self.shared();
-        let z_carry = drain_time_z(topo, &rcfg.caps, shared, &carry.link_load, &excess);
-        let z_challenger =
-            drain_time_z(topo, &rcfg.caps, shared, &challenger.link_load, &excess);
-        if z_challenger < z_carry * (1.0 - rcfg.margin) {
+        let z_carry = drain_time_z_scaled(
+            topo,
+            &rcfg.caps,
+            shared,
+            &carry.link_load,
+            &excess,
+            hscale.as_deref(),
+        );
+        let z_challenger = drain_time_z_scaled(
+            topo,
+            &rcfg.caps,
+            shared,
+            &challenger.link_load,
+            &excess,
+            hscale.as_deref(),
+        );
+        let accept =
+            !forced.is_empty() || z_challenger < z_carry * (1.0 - rcfg.margin);
+        if accept {
             let changed_pairs = diff_pairs(&carry, &challenger);
             if !changed_pairs.is_empty() {
                 return ReplanOutcome {
@@ -541,6 +615,82 @@ mod tests {
         assert!(
             direct_bytes < planned_direct,
             "challenger kept {direct_bytes} on the pressured link (was {planned_direct})"
+        );
+    }
+
+    /// A dead link forces a reroute even when the z-hysteresis would
+    /// not fire, and the challenger carries nothing on the dead link.
+    #[test]
+    fn forced_replan_reroutes_off_dead_link() {
+        let t = Topology::paper();
+        let demands = vec![Demand::new(0, 4, 512.0 * MB)];
+        let mut planner = Planner::new(&t, PlannerCfg::default());
+        let incumbent = planner.plan(&demands);
+        let dead = t.rail(0, 1, 0).unwrap();
+        assert!(incumbent.link_load[dead] > 0.0, "incumbent must use the home rail");
+
+        let mut scale = vec![1.0; t.links.len()];
+        scale[dead] = 0.0;
+        planner.set_link_health(Some(scale));
+        let observed = incumbent.link_load.clone();
+        let out = planner.replan_forced(
+            &incumbent,
+            &observed,
+            &demands,
+            &enabled(),
+            &[(0, 4)],
+        );
+        assert!(out.replanned, "dead link must force a reroute");
+        assert!(out.changed_pairs.contains(&(0, 4)));
+        assert_eq!(out.plan.link_load[dead], 0.0, "challenger still uses dead link");
+        out.plan.validate(&t, &demands).unwrap();
+    }
+
+    /// Forced pairs never override the master switch: a static plan has
+    /// no recovery path (the contrast `nimble faults` measures).
+    #[test]
+    fn forced_replan_respects_disabled_cfg() {
+        let t = Topology::paper();
+        let demands = vec![Demand::new(0, 4, 512.0 * MB)];
+        let mut planner = Planner::new(&t, PlannerCfg::default());
+        let incumbent = planner.plan(&demands);
+        let dead = t.rail(0, 1, 0).unwrap();
+        let mut scale = vec![1.0; t.links.len()];
+        scale[dead] = 0.0;
+        planner.set_link_health(Some(scale));
+        let out = planner.replan_forced(
+            &incumbent,
+            &incumbent.link_load.clone(),
+            &demands,
+            &ReplanCfg::default(),
+            &[(0, 4)],
+        );
+        assert!(!out.replanned);
+        assert!(out.plan.link_load[dead] > 0.0, "static carry keeps the dead path");
+    }
+
+    /// The scaled z metric prices degraded capacity; the unscaled
+    /// delegate is the exact legacy value.
+    #[test]
+    fn scaled_drain_time_prices_degradation() {
+        let t = Topology::paper();
+        let caps = DrainCaps::default();
+        let shared = SharedConstraints::of(&t);
+        let rail = t.rail(0, 1, 0).unwrap();
+        let mut loads = vec![0.0; t.links.len()];
+        loads[rail] = 45.1e9; // one second of healthy rail drain
+        let zero = vec![0.0; t.links.len()];
+        let z0 = drain_time_z(&t, &caps, &shared, &loads, &zero);
+        let z_none =
+            drain_time_z_scaled(&t, &caps, &shared, &loads, &zero, None);
+        assert_eq!(z0.to_bits(), z_none.to_bits());
+        let mut scale = vec![1.0; t.links.len()];
+        scale[rail] = 0.25;
+        let z_deg =
+            drain_time_z_scaled(&t, &caps, &shared, &loads, &zero, Some(&scale));
+        assert!(
+            z_deg >= z0 * 3.9,
+            "quartered rail should ~4x its drain term: {z_deg} vs {z0}"
         );
     }
 

@@ -141,6 +141,35 @@ pub fn candidates(topo: &Topology, s: GpuId, d: GpuId, allow_multipath: bool) ->
     out
 }
 
+/// Candidate enumeration under a link-liveness mask (the fault
+/// recovery path, DESIGN.md §13): candidates crossing any dead link
+/// (`live[h] == false`) are **masked out** — removed from the set, not
+/// re-priced, so no amount of load can route bytes onto a dead link.
+///
+/// If masking removes *every* candidate (the pair is fully cut), the
+/// unfiltered set is returned: the planner must still produce a plan,
+/// and a stalled-but-replayable path that resumes on recovery beats
+/// having no path at all.
+pub fn live_candidates(
+    topo: &Topology,
+    s: GpuId,
+    d: GpuId,
+    allow_multipath: bool,
+    live: &[bool],
+) -> Vec<Path> {
+    let all = candidates(topo, s, d, allow_multipath);
+    let filtered: Vec<Path> = all
+        .iter()
+        .filter(|p| p.hops.iter().all(|&h| live[h]))
+        .cloned()
+        .collect();
+    if filtered.is_empty() {
+        all
+    } else {
+        filtered
+    }
+}
+
 /// The inter-node fabric segments between the rail-`r` GPUs of nodes
 /// `na` and `nb`, one per distinct route through the fabric tier.
 ///
@@ -375,6 +404,37 @@ mod tests {
         let c = candidates(&t, 0, 1, true);
         assert_eq!(c.len(), 7); // direct + 6 relays on the 8-GPU mesh
         assert!(c.iter().all(|p| p.is_valid(&t)));
+    }
+
+    /// Liveness masking removes exactly the candidates crossing dead
+    /// links, falls back to the full set when the pair is cut, and with
+    /// an all-live mask returns the identical enumeration.
+    #[test]
+    fn live_candidates_mask_and_fallback() {
+        let t = Topology::paper();
+        let all_live = vec![true; t.links.len()];
+        assert_eq!(
+            live_candidates(&t, 1, 6, true, &all_live),
+            candidates(&t, 1, 6, true)
+        );
+        // kill rail 1: gpu1's home-rail candidate disappears
+        let mut live = all_live.clone();
+        let r1 = t.rail(0, 1, 1).unwrap();
+        live[r1] = false;
+        let masked = live_candidates(&t, 1, 6, true, &live);
+        assert_eq!(masked.len(), 3);
+        assert!(masked.iter().all(|p| !p.hops.contains(&r1)));
+        // cut every inter-node path: fallback returns the full set
+        let mut none = all_live;
+        for (i, l) in t.links.iter().enumerate() {
+            if !matches!(l.kind, crate::topology::LinkKind::NvLink) {
+                none[i] = false;
+            }
+        }
+        assert_eq!(
+            live_candidates(&t, 1, 6, true, &none),
+            candidates(&t, 1, 6, true)
+        );
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! Fault-injection property tests (DESIGN.md §13): byte conservation
+//! under every fault scenario on both fabric backends, seeded
+//! determinism of schedules and faulted runs, the bit-identity anchor
+//! (an empty `FaultSchedule` must be indistinguishable from a build
+//! without the fault layer), and fail-closed schedule validation.
+
+use nimble::coordinator::ReplanExecutor;
+use nimble::fabric::faults::scenario_schedule;
+use nimble::fabric::{
+    BackendKind, FabricParams, Fault, FaultEvent, FaultSchedule, Scenario, ScenarioParams,
+};
+use nimble::orchestrator::{job_stream, MultiTenantExecutor, TenancyCfg};
+use nimble::planner::{Demand, Planner, PlannerCfg, ReplanCfg};
+use nimble::topology::Topology;
+use nimble::workloads::skew::hotspot_alltoallv;
+
+const MB: f64 = 1024.0 * 1024.0;
+
+fn enabled(cadence_s: f64) -> ReplanCfg {
+    ReplanCfg { enable: true, cadence_s, margin: 0.1, ..ReplanCfg::default() }
+}
+
+fn disabled(cadence_s: f64) -> ReplanCfg {
+    ReplanCfg { enable: false, cadence_s, ..ReplanCfg::default() }
+}
+
+/// Every scenario, both backends, both arms: the payload arrives in
+/// full across link death, throttling and restoration — no bytes are
+/// lost or duplicated by the fault hooks or the recovery reroutes (the
+/// executor additionally asserts per-stream chunk exactness through
+/// the reassembly table on every run).
+#[test]
+fn bytes_conserved_under_every_scenario_on_both_backends() {
+    let topo = Topology::paper();
+    let demands = hotspot_alltoallv(&topo, 64.0 * MB, 0.7, topo.gpu(1, 0));
+    let payload: f64 = demands.iter().map(|d| d.bytes).sum();
+    let plan = Planner::new(&topo, PlannerCfg::default()).plan(&demands);
+    for backend in [BackendKind::Fluid, BackendKind::Packet] {
+        let params = FabricParams { backend, ..FabricParams::default() };
+        for sc in Scenario::all() {
+            let sched = scenario_schedule(
+                &topo,
+                sc,
+                &ScenarioParams::default(),
+                Some(&plan.link_load),
+            );
+            for enable in [false, true] {
+                let rcfg = if enable { enabled(2.0e-4) } else { disabled(2.0e-4) };
+                let run =
+                    ReplanExecutor::new(&topo, params.clone(), PlannerCfg::default(), rcfg)
+                        .with_faults(sched.clone())
+                        .execute(&plan, &demands);
+                let delivered: f64 = run.sim.flows.iter().map(|f| f.bytes).sum();
+                assert!(
+                    (delivered - payload).abs() < 64.0,
+                    "{backend:?} {} enable={enable}: delivered {delivered} vs {payload}",
+                    sc.label()
+                );
+                // a frozen plan cannot finish a flap before the link
+                // restores — proof the fault actually bit
+                if matches!(sc, Scenario::Flap) && !enable {
+                    assert!(
+                        run.report.makespan_s >= 3.0e-3,
+                        "{backend:?} flap static finished during the outage: {}",
+                        run.report.makespan_s
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Identical seeds ⇒ byte-identical fault event traces, and
+/// byte-identical faulted runs end to end (goodput series included).
+/// A different seed still validates against the topology.
+#[test]
+fn same_seed_byte_identical_traces_and_runs() {
+    let topo = Topology::paper();
+    let fp = ScenarioParams::default();
+    for sc in Scenario::all() {
+        let a = scenario_schedule(&topo, sc, &fp, None);
+        let b = scenario_schedule(&topo, sc, &fp, None);
+        assert_eq!(a.trace(), b.trace(), "{} trace diverged", sc.label());
+        assert!(!a.trace().is_empty());
+    }
+    let params = FabricParams::default();
+    let demands = vec![Demand::new(0, 4, 256.0 * MB)];
+    let plan = Planner::new(&topo, PlannerCfg::default()).plan(&demands);
+    let sched = scenario_schedule(&topo, Scenario::Mixed, &fp, Some(&plan.link_load));
+    let fly = || {
+        ReplanExecutor::new(&topo, params.clone(), PlannerCfg::default(), enabled(2.0e-4))
+            .with_faults(sched.clone())
+            .execute(&plan, &demands)
+    };
+    let r1 = fly();
+    let r2 = fly();
+    assert_eq!(r1.report.makespan_s.to_bits(), r2.report.makespan_s.to_bits());
+    assert_eq!(r1.replans, r2.replans);
+    assert_eq!(r1.preemptions, r2.preemptions);
+    for (a, b) in r1.sim.link_bytes.iter().zip(&r2.sim.link_bytes) {
+        assert_eq!(a.to_bits(), b.to_bits(), "link bytes diverged");
+    }
+    assert_eq!(r1.epochs.len(), r2.epochs.len());
+    for (a, b) in r1.epochs.iter().zip(&r2.epochs) {
+        assert_eq!(a.goodput_gbps.to_bits(), b.goodput_gbps.to_bits());
+        assert_eq!(a.replanned, b.replanned);
+    }
+    // a different seed may move the fallback target, never the validity
+    scenario_schedule(&topo, Scenario::Flap, &ScenarioParams { seed: 7, ..fp }, None)
+        .validate(&topo)
+        .expect("reseeded schedule must stay valid");
+}
+
+/// The bit-identity anchor: attaching an *empty* schedule changes
+/// nothing, bitwise, on either backend, with the replan loop on or
+/// off, and under the multi-tenant orchestrator. This is what keeps
+/// every pre-fault experiment reproducible with the fault layer
+/// compiled in.
+#[test]
+fn empty_schedule_is_bitwise_inert() {
+    let topo = Topology::paper();
+    let demands = vec![Demand::new(0, 4, 128.0 * MB), Demand::new(2, 5, 48.0 * MB)];
+    let plan = Planner::new(&topo, PlannerCfg::default()).plan(&demands);
+    for backend in [BackendKind::Fluid, BackendKind::Packet] {
+        let params = FabricParams { backend, ..FabricParams::default() };
+        for enable in [false, true] {
+            let rcfg = if enable { enabled(2.0e-4) } else { disabled(2.0e-4) };
+            let bare = ReplanExecutor::new(
+                &topo,
+                params.clone(),
+                PlannerCfg::default(),
+                rcfg.clone(),
+            )
+            .execute(&plan, &demands);
+            let empty =
+                ReplanExecutor::new(&topo, params.clone(), PlannerCfg::default(), rcfg)
+                    .with_faults(FaultSchedule::default())
+                    .execute(&plan, &demands);
+            assert_eq!(
+                bare.report.makespan_s.to_bits(),
+                empty.report.makespan_s.to_bits(),
+                "{backend:?} enable={enable}: makespan diverged"
+            );
+            assert_eq!(bare.replans, empty.replans);
+            assert_eq!(bare.preemptions, empty.preemptions);
+            assert_eq!(bare.epochs.len(), empty.epochs.len());
+            for (a, b) in bare.sim.link_bytes.iter().zip(&empty.sim.link_bytes) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+    // the orchestrator path (joint mode exercises the shared-constraint
+    // and admission plumbing the fault layer threads through)
+    let tcfg = TenancyCfg::default();
+    let params = FabricParams::default();
+    let serve = |faults: Option<FaultSchedule>| {
+        let ex = MultiTenantExecutor::new(
+            &topo,
+            params.clone(),
+            PlannerCfg::default(),
+            ReplanCfg::default(),
+            tcfg.clone(),
+        );
+        let ex = match faults {
+            Some(f) => ex.with_faults(f),
+            None => ex,
+        };
+        ex.execute(job_stream(&topo, &tcfg))
+    };
+    let bare = serve(None);
+    let empty = serve(Some(FaultSchedule::default()));
+    assert_eq!(bare.makespan_s.to_bits(), empty.makespan_s.to_bits());
+    assert_eq!(bare.replans, empty.replans);
+    assert_eq!(bare.preemptions, empty.preemptions);
+    assert_eq!(bare.epochs.len(), empty.epochs.len());
+    assert_eq!(bare.tenants.len(), empty.tenants.len());
+    for (a, b) in bare.tenants.iter().zip(&empty.tenants) {
+        assert_eq!(a.goodput_gbps.to_bits(), b.goodput_gbps.to_bits());
+        assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
+    }
+}
+
+/// Fail-closed validation: schedules referencing nonexistent links,
+/// rails or nodes — or carrying out-of-range factors — are rejected,
+/// while every generated scenario validates on flat and tiered
+/// topologies.
+#[test]
+fn schedule_validation_is_fail_closed() {
+    let topo = Topology::paper();
+    let at = |fault: Fault| FaultSchedule::new(vec![FaultEvent { t_s: 1.0e-3, fault }]);
+    assert!(at(Fault::LinkDown { link: topo.links.len() }).validate(&topo).is_err());
+    assert!(at(Fault::LinkUp { link: usize::MAX }).validate(&topo).is_err());
+    assert!(at(Fault::RailDegraded { rail: topo.nics_per_node, factor: 0.5 })
+        .validate(&topo)
+        .is_err());
+    assert!(at(Fault::RailDegraded { rail: 0, factor: 0.0 }).validate(&topo).is_err());
+    assert!(at(Fault::RailDegraded { rail: 0, factor: f64::NAN })
+        .validate(&topo)
+        .is_err());
+    assert!(at(Fault::StragglerNode { node: topo.nodes, inject_factor: 0.5 })
+        .validate(&topo)
+        .is_err());
+    assert!(at(Fault::StragglerNode { node: 0, inject_factor: 1.5 })
+        .validate(&topo)
+        .is_err());
+    assert!(FaultSchedule::new(vec![FaultEvent {
+        t_s: -1.0,
+        fault: Fault::LinkDown { link: 0 },
+    }])
+    .validate(&topo)
+    .is_err());
+    for t in [Topology::paper(), Topology::fat_tree(4, 2.0)] {
+        for sc in Scenario::all() {
+            scenario_schedule(&t, sc, &ScenarioParams::default(), None)
+                .validate(&t)
+                .unwrap_or_else(|e| panic!("{} invalid on {} nodes: {e}", sc.label(), t.nodes));
+        }
+    }
+}

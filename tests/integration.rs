@@ -488,6 +488,67 @@ fn serve_reroutes_under_contention_keep_tenant_ordering() {
     );
 }
 
+/// PR-7 recovery ordering: kill the hottest planned link mid-round (a
+/// flap on the link the static plan leans on hardest). The replan loop
+/// preempts the frozen flows and re-routes their residuals; the
+/// executor replays every rerouted chunk through the real
+/// `ReassemblyTable` and asserts in-order delivery plus per-stream
+/// chunk exactness on completion — reaching the end IS the ordering
+/// check; `peak_reassembly` proves chunks really arrived out of order
+/// across the reroute. Recovery must not lose goodput to the static
+/// plan, which can only wait out the outage.
+#[test]
+fn fault_flap_recovery_preserves_ordering_and_goodput() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    let mut rng = Rng::new(0xFA171);
+    let (_, demands) = hotspot_alltoallv_jittered(&topo, 64.0 * MB, 0.7, &mut rng);
+    let payload: f64 = demands.iter().map(|d| d.bytes).sum();
+    let plan = Planner::new(&topo, PlannerCfg::default()).plan(&demands);
+    let sched = nimble::fabric::faults::scenario_schedule(
+        &topo,
+        nimble::fabric::Scenario::Flap,
+        &nimble::fabric::ScenarioParams::default(),
+        Some(&plan.link_load),
+    );
+    let replan_run = ReplanExecutor::new(
+        &topo,
+        params.clone(),
+        PlannerCfg::default(),
+        ReplanCfg { enable: true, cadence_s: 2.0e-4, margin: 0.1, ..ReplanCfg::default() },
+    )
+    .with_faults(sched.clone())
+    .execute(&plan, &demands);
+    let static_run = ReplanExecutor::new(
+        &topo,
+        params.clone(),
+        PlannerCfg::default(),
+        ReplanCfg { enable: false, cadence_s: 2.0e-4, ..ReplanCfg::default() },
+    )
+    .with_faults(sched)
+    .execute(&plan, &demands);
+
+    assert!(replan_run.replans >= 1, "dead link did not force a replan");
+    assert!(replan_run.preemptions >= 1, "no frozen flow was preempted");
+    assert!(
+        replan_run.peak_reassembly >= 1,
+        "no out-of-order buffering across the recovery reroute"
+    );
+    for (arm, run) in [("replan", &replan_run), ("static", &static_run)] {
+        let delivered: f64 = run.sim.flows.iter().map(|f| f.bytes).sum();
+        assert!(
+            (delivered - payload).abs() < 64.0,
+            "{arm} lost bytes across the flap: {delivered} vs {payload}"
+        );
+    }
+    assert!(
+        replan_run.report.makespan_s <= static_run.report.makespan_s,
+        "recovery lost to waiting out the outage: {} vs {}",
+        replan_run.report.makespan_s,
+        static_run.report.makespan_s
+    );
+}
+
 /// Balanced-parity integration check across all engines (paper
 /// abstract: "matching baseline performance under balanced traffic").
 #[test]
