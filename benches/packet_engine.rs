@@ -1,0 +1,48 @@
+//! Packet-engine scheduler bench: fly the planned cross-pod skewed
+//! All-to-Allv from `nimble scale --topo fat-tree` on the chunk-granular
+//! DES under both event schedulers — the hierarchical timing wheel and
+//! the binary-heap oracle it replaced — and record events/sec for each.
+//!
+//! The two runs are asserted bit-identical (event count, makespan bits,
+//! per-flow finish bits, link bytes, tail samples) before any timing is
+//! reported, so the ratio is a pure scheduler speedup on the same event
+//! stream. At the 64-node point the ratio is gated at ≥5x — the perf
+//! target the event-core rebuild was sized for. CI runs the
+//! noise-tolerant twin of this gate (`nimble scale --check`, 1.5x
+//! floor); this harness tracks the real trajectory across PRs.
+//!
+//! Like `benches/scale_sweep.rs`, every point emits one machine-readable
+//! JSON line (`{"exp":"packet_engine",...}`).
+
+use nimble::exp::scale::{check_packet_engine, ScaleTopo};
+use nimble::exp::MB;
+use nimble::fabric::FabricParams;
+use nimble::planner::PlannerCfg;
+
+/// Wheel-over-heap events/sec floor asserted at the 64-node point.
+const SPEEDUP_FLOOR: f64 = 5.0;
+
+fn main() {
+    let params = FabricParams::default();
+    let pcfg = PlannerCfg::default();
+    let payload = 64.0 * MB;
+    println!(
+        "== packet engine bench: timing wheel vs heap oracle, fat-tree A2A, {:.0} MB/rank ==",
+        payload / MB
+    );
+    for (nodes, floor) in [(16usize, None), (64, Some(SPEEDUP_FLOOR))] {
+        let smoke = check_packet_engine(
+            nodes,
+            payload,
+            &params,
+            &pcfg,
+            ScaleTopo::FatTree { oversub: 2.0 },
+            floor,
+        );
+        println!("{}", smoke.json_line());
+    }
+    println!(
+        "packet engine bench done (wheel bit-identical to heap; \
+         >= {SPEEDUP_FLOOR:.0}x floor asserted at 64 nodes)"
+    );
+}

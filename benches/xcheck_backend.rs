@@ -34,7 +34,7 @@ fn main() {
 
         let mut sim = PacketSim::new(&topo, params.clone(), &flows);
         let t = Instant::now();
-        sim.run_to_completion();
+        sim.run_to_completion().expect("fault-free bench cannot stall");
         let wall = t.elapsed().as_secs_f64();
         let r = sim.result();
         let tail = sim.tail();

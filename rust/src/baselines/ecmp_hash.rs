@@ -21,15 +21,7 @@ use crate::fabric::XferMode;
 use crate::planner::Demand;
 use crate::topology::path::candidates;
 use crate::topology::{Path, PathKind, Topology};
-
-/// SplitMix64 finalizer — one-shot avalanche of a composed key.
-#[inline]
-fn mix64(mut z: u64) -> u64 {
-    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^ (z >> 31)
-}
+use crate::util::rng::mix64;
 
 pub struct EcmpHash {
     /// Hash seed (switch ECMP function randomization). Same seed ⇒

@@ -4,7 +4,7 @@
 //! `configs/paper.toml` for the reference file).
 
 use crate::fabric::faults::{scenario_schedule, FaultsCfg, Scenario};
-use crate::fabric::{BackendKind, FabricParams};
+use crate::fabric::{BackendKind, FabricParams, SchedulerKind};
 use crate::orchestrator::TenancyCfg;
 use crate::planner::{CostModel, PlannerCfg, ReplanCfg};
 use crate::topology::Topology;
@@ -149,6 +149,18 @@ impl Config {
         if let Some(s) = doc.get_usize(ps, "seed") {
             pk.seed = s as u64;
         }
+        if let Some(v) = doc.get(ps, "scheduler") {
+            pk.scheduler = match v.as_str() {
+                Some("wheel") => SchedulerKind::Wheel,
+                Some("heap") => SchedulerKind::Heap,
+                _ => {
+                    return Err(format!(
+                        "fabric.packet.scheduler must be \"wheel\" or \"heap\", got {v:?}"
+                    ))
+                }
+            };
+        }
+        pk.threads = doc.get_usize(ps, "threads").unwrap_or(pk.threads);
 
         // [planner]
         let p = &mut cfg.planner;
@@ -265,6 +277,12 @@ impl Config {
             return Err(format!(
                 "fabric.packet.latency_ns out of [0, 1e9]: {}",
                 pk.latency_ns
+            ));
+        }
+        if pk.threads == 0 || pk.threads > 256 {
+            return Err(format!(
+                "fabric.packet.threads out of [1,256]: {}",
+                pk.threads
             ));
         }
         if cfg.replan.cadence_s <= 0.0 {
@@ -563,6 +581,8 @@ mod tests {
         assert_eq!(c.fabric.packet.buffer_bytes, d.buffer_bytes);
         assert_eq!(c.fabric.packet.latency_ns, d.latency_ns);
         assert_eq!(c.fabric.packet.seed, d.seed);
+        assert_eq!(c.fabric.packet.scheduler, d.scheduler);
+        assert_eq!(c.fabric.packet.threads, d.threads);
         // [tenancy] mirrors the built-in defaults exactly (inert
         // unless `nimble serve` is invoked)
         let td = TenancyCfg::default();
@@ -591,9 +611,12 @@ mod tests {
         assert_eq!(c.fabric.packet.cell_bytes, 256.0 * 1024.0);
         assert_eq!(c.fabric.packet.buffer_bytes, 10.0 * 1024.0 * 1024.0);
         assert_eq!(c.fabric.packet.latency_ns, 3_000);
+        assert_eq!(c.fabric.packet.scheduler, SchedulerKind::Wheel);
+        assert_eq!(c.fabric.packet.threads, 1);
         let c = Config::from_toml(
             "[fabric.packet]\nbackend = \"packet\"\ncell_bytes = 65_536\n\
-             buffer_bytes = 1_048_576\nlatency_ns = 500\nseed = 42\n",
+             buffer_bytes = 1_048_576\nlatency_ns = 500\nseed = 42\n\
+             scheduler = \"heap\"\nthreads = 8\n",
         )
         .unwrap();
         assert_eq!(c.fabric.backend, BackendKind::Packet);
@@ -601,6 +624,10 @@ mod tests {
         assert_eq!(c.fabric.packet.buffer_bytes, 1_048_576.0);
         assert_eq!(c.fabric.packet.latency_ns, 500);
         assert_eq!(c.fabric.packet.seed, 42);
+        assert_eq!(c.fabric.packet.scheduler, SchedulerKind::Heap);
+        assert_eq!(c.fabric.packet.threads, 8);
+        let c = Config::from_toml("[fabric.packet]\nscheduler = \"wheel\"\n").unwrap();
+        assert_eq!(c.fabric.packet.scheduler, SchedulerKind::Wheel);
     }
 
     #[test]
@@ -625,5 +652,12 @@ mod tests {
             "[fabric.packet]\nlatency_ns = 2_000_000_000\n"
         )
         .is_err());
+        // unknown scheduler name fails closed
+        assert!(
+            Config::from_toml("[fabric.packet]\nscheduler = \"fifo\"\n").is_err()
+        );
+        // thread count bounds
+        assert!(Config::from_toml("[fabric.packet]\nthreads = 0\n").is_err());
+        assert!(Config::from_toml("[fabric.packet]\nthreads = 512\n").is_err());
     }
 }

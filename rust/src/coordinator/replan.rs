@@ -174,7 +174,9 @@ impl<'a> ReplanExecutor<'a> {
         let mut final_plan = plan0.clone();
 
         if !self.rcfg.enable && self.faults.is_empty() {
-            engine.run_to_completion();
+            engine
+                .run_to_completion()
+                .expect("fault-free run cannot stall: every link keeps capacity");
         } else {
             // faults replay from the schedule start each round; a
             // per-link scale vector mirrors the backend's state for the
@@ -188,7 +190,9 @@ impl<'a> ReplanExecutor<'a> {
             let mut stalled = 0usize;
             let mut t_next = cadence;
             while !engine.is_done() {
-                engine.advance_to(t_next);
+                engine
+                    .advance_to(t_next)
+                    .expect("bounded epoch advance cannot stall");
                 let t_epoch = t_next;
                 t_next += cadence;
 

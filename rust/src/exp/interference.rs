@@ -35,7 +35,9 @@ use crate::workloads::stencil::stencil_1d;
 /// Fly one round's flow set to completion on the configured backend.
 fn run_round_flows(topo: &Topology, params: &FabricParams, flows: &[Flow]) -> SimResult {
     let mut backend = make_backend(topo, params.clone(), flows);
-    backend.run_to_completion();
+    backend
+        .run_to_completion()
+        .expect("fault-free round cannot stall");
     backend.result()
 }
 

@@ -19,7 +19,8 @@ use super::MB;
 use crate::baselines::{EcmpHash, Router};
 use crate::coordinator::replan::ReplanExecutor;
 use crate::fabric::fluid::{Flow, FluidSim, SimEngine, SolverKind};
-use crate::fabric::FabricParams;
+use crate::fabric::packet::PacketSim;
+use crate::fabric::{FabricParams, SchedulerKind};
 use crate::metrics::Table;
 use crate::planner::{Demand, Plan, Planner, PlannerCfg, ReplanCfg, SharedConstraints};
 use crate::topology::Topology;
@@ -339,6 +340,121 @@ pub fn check_planned_beats_ecmp(
     (row.goodput_gbps, ecmp)
 }
 
+/// One packet-engine scheduler comparison (see [`check_packet_engine`]).
+#[derive(Clone, Debug)]
+pub struct PacketSmoke {
+    pub nodes: usize,
+    pub flows: usize,
+    /// Packet-engine events — identical for both schedulers.
+    pub events: u64,
+    /// Wall time of the timing-wheel run (seconds).
+    pub wheel_s: f64,
+    /// Wall time of the binary-heap oracle run (seconds).
+    pub heap_s: f64,
+    /// Simulated makespan (virtual seconds), shared bit-for-bit.
+    pub makespan_s: f64,
+}
+
+impl PacketSmoke {
+    pub fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.wheel_s.max(1e-12)
+    }
+
+    /// Timing-wheel speedup over the heap oracle on the same event stream.
+    pub fn speedup(&self) -> f64 {
+        self.heap_s / self.wheel_s.max(1e-12)
+    }
+
+    /// Machine-readable record for cross-PR perf tracking.
+    pub fn json_line(&self) -> String {
+        Json::obj(vec![
+            ("exp", Json::str("packet_engine")),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("flows", Json::num(self.flows as f64)),
+            ("events", Json::num(self.events as f64)),
+            ("events_per_sec", Json::num(self.events_per_sec())),
+            ("sim_ms", Json::num(self.wheel_s * 1e3)),
+            ("heap_sim_ms", Json::num(self.heap_s * 1e3)),
+            ("speedup_vs_heap", Json::num(self.speedup())),
+        ])
+        .to_string_compact()
+    }
+}
+
+/// The packet-engine `--check` anchor: fly the planned scale workload
+/// on the chunk-granular DES under both event schedulers and assert
+/// the timing wheel reproduces the binary heap's run bit-for-bit —
+/// event count, makespan bits, per-flow finish bits, per-link bytes
+/// and tail samples (`tests/fabric_props.rs` pins the full trace; this
+/// anchor re-proves it at cluster scale on every CI run). With
+/// `min_speedup`, additionally gate the wheel's wall-clock advantage —
+/// only meaningful in release builds, so the CLI passes it and the
+/// debug-mode unit test does not.
+pub fn check_packet_engine(
+    nodes: usize,
+    payload_bytes: f64,
+    params: &FabricParams,
+    planner_cfg: &PlannerCfg,
+    topo_kind: ScaleTopo,
+    min_speedup: Option<f64>,
+) -> PacketSmoke {
+    let topo = topo_kind.build(nodes);
+    let demands = demands_for(topo_kind, &topo, payload_bytes);
+    let plan = Planner::new(&topo, planner_cfg.clone()).plan(&demands);
+    let flows = plan_flows(&plan);
+
+    let run = |kind: SchedulerKind| {
+        let mut p = params.clone();
+        p.packet.scheduler = kind;
+        let mut sim = PacketSim::new(&topo, p, &flows);
+        let t = Instant::now();
+        sim.run_to_completion().expect("fault-free packet run cannot stall");
+        let wall = t.elapsed().as_secs_f64();
+        let tail = sim.tail();
+        (wall, sim.events(), sim.result(), tail)
+    };
+    let (wheel_s, events, wheel, wheel_tail) = run(SchedulerKind::Wheel);
+    let (heap_s, heap_events, heap, heap_tail) = run(SchedulerKind::Heap);
+
+    assert_eq!(events, heap_events, "scheduler event counts diverged");
+    assert_eq!(
+        wheel.makespan.to_bits(),
+        heap.makespan.to_bits(),
+        "scheduler trajectories diverged at {nodes} nodes"
+    );
+    assert_eq!(wheel.link_bytes, heap.link_bytes, "scheduler link bytes diverged");
+    for (a, b) in wheel.flows.iter().zip(&heap.flows) {
+        assert_eq!(
+            a.finish_t.to_bits(),
+            b.finish_t.to_bits(),
+            "scheduler per-flow finishes diverged"
+        );
+    }
+    assert_eq!(wheel_tail.delivered_chunks, heap_tail.delivered_chunks);
+    assert_eq!(wheel_tail.sojourn_s, heap_tail.sojourn_s, "tail samples diverged");
+
+    let smoke = PacketSmoke {
+        nodes,
+        flows: flows.len(),
+        events,
+        wheel_s,
+        heap_s,
+        makespan_s: wheel.makespan,
+    };
+    if let Some(floor) = min_speedup {
+        assert!(
+            smoke.speedup() >= floor,
+            "timing wheel under the {floor:.1}x floor vs heap at {nodes} nodes: \
+             {:.2}x ({:.1} ms vs {:.1} ms over {} events)",
+            smoke.speedup(),
+            wheel_s * 1e3,
+            heap_s * 1e3,
+            events,
+        );
+    }
+    smoke
+}
+
 /// Sweep the scale axis.
 pub fn sweep(
     node_counts: &[usize],
@@ -440,6 +556,29 @@ mod tests {
             row.makespan_s.to_bits(),
             "executor and scale row simulated different rounds"
         );
+    }
+
+    /// The packet-engine anchor holds at a small flat point: both
+    /// schedulers replay the identical run, and the JSON line carries
+    /// the tracked perf fields. No speedup floor here — wall-clock
+    /// gates belong to release builds (`nimble scale --check` and
+    /// `benches/packet_engine.rs`), not debug-mode unit tests.
+    #[test]
+    fn packet_smoke_schedulers_agree() {
+        let smoke = check_packet_engine(
+            2,
+            4.0 * MB,
+            &FabricParams::default(),
+            &PlannerCfg::default(),
+            ScaleTopo::Flat,
+            None,
+        );
+        assert!(smoke.events > 0);
+        assert!(smoke.makespan_s > 0.0);
+        let j = Json::parse(&smoke.json_line()).unwrap();
+        assert_eq!(j.get("exp").as_str(), Some("packet_engine"));
+        assert_eq!(j.get("events").as_u64(), Some(smoke.events));
+        assert!(j.get("speedup_vs_heap").as_f64().unwrap() > 0.0);
     }
 
     /// The JSON line parses back and carries the tracked fields.

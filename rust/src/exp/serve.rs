@@ -72,7 +72,7 @@ pub fn render_arm(name: &str, run: &ServeRun) -> String {
     format!(
         "[{name}] {} jobs, payload {:.2} GB\n{}\
          aggregate goodput {:.1} GB/s | weighted fairness {:.3} | makespan {:.2} ms | \
-         replans {} | preemptions {} | peak reassembly {} | sim events {}\n",
+         replans {} | preemptions {} | peak reassembly {} | sim events {} ({:.2}M/s)\n",
         run.tenants.len(),
         run.payload_bytes / 1e9,
         t.render(),
@@ -83,6 +83,7 @@ pub fn render_arm(name: &str, run: &ServeRun) -> String {
         run.preemptions,
         run.peak_reassembly,
         run.sim_events,
+        run.events_per_sec() / 1e6,
     )
 }
 

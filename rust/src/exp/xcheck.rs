@@ -75,7 +75,7 @@ fn run_both(
     let payload: f64 = flows.iter().map(|f| f.bytes).sum();
     let fluid = FluidSim::new(topo, params.clone()).run(flows);
     let mut pk = PacketSim::new(topo, params.clone(), flows);
-    pk.run_to_completion();
+    pk.run_to_completion().expect("fault-free xcheck run cannot stall");
     let packet = pk.result();
     XcheckRow {
         name,

@@ -11,12 +11,17 @@
 //!   resumable max-min engine every pre-existing experiment runs on;
 //!   selecting it routes through the identical code path, so results
 //!   stay **bit-identical** to the pre-trait executor.
-//! * [`PacketSim`] ([`BackendKind::Packet`]) — the chunk-granular
-//!   discrete-event simulator, the only backend that can report
-//!   queueing delay and tail latency ([`FabricBackend::tail`]).
+//! * [`PartitionedPacket`] ([`BackendKind::Packet`]) — the
+//!   chunk-granular discrete-event simulator, the only backend that
+//!   can report queueing delay and tail latency
+//!   ([`FabricBackend::tail`]). It runs one [`PacketSim`] per
+//!   node-disjoint flow component and merges observations in canonical
+//!   order, so results are byte-identical for every thread count
+//!   (`[fabric.packet] threads`).
 //!
-//! `nimble xcheck` cross-validates the two (same flows, both backends,
-//! goodput agreement within a stated tolerance — DESIGN.md §10).
+//! `nimble xcheck` cross-validates fluid and packet (same flows, both
+//! backends, goodput agreement within a stated tolerance — DESIGN.md
+//! §10).
 //!
 //! ## Adding a third backend
 //!
@@ -28,9 +33,43 @@
 
 use super::fluid::{Flow, SimEngine, SimResult};
 use super::packet::PacketSim;
+use super::packet_par::PartitionedPacket;
 use super::{BackendKind, FabricParams};
 use crate::topology::Topology;
 use std::collections::BTreeMap;
+use std::fmt;
+
+/// A fabric advance that cannot make progress: live flows remain but
+/// the event queue is empty, so no future event will ever deliver
+/// them. Reached through zero-capacity misconfiguration — a link left
+/// dead with no restore scheduled, every path of a flow down — and
+/// reported as a typed error (it used to be a panic deep inside the
+/// event loop) so callers can surface *which* run wedged and when.
+///
+/// Only an **unbounded** advance reports this: a bounded epoch advance
+/// that runs out of events simply waits at the epoch boundary for the
+/// coordinator's next decision (replanning around the dead link is the
+/// recovery mechanism, DESIGN.md §13).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FabricStall {
+    /// Flows still live (not delivered, not preempted) at the stall.
+    pub live_flows: usize,
+    /// Virtual time (seconds) the engine had reached.
+    pub t_s: f64,
+}
+
+impl fmt::Display for FabricStall {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "fabric stalled at t={:.6}s: {} live flow(s) but no pending events \
+             (zero-capacity path or un-restored dead link)",
+            self.t_s, self.live_flows
+        )
+    }
+}
+
+impl std::error::Error for FabricStall {}
 
 /// Queueing/latency observations only a discrete-event backend can
 /// produce ([`FabricBackend::tail`]). All latencies in seconds; the
@@ -64,11 +103,12 @@ pub trait FabricBackend {
     /// at a replan epoch); returns the index of the first new flow.
     fn add_flows(&mut self, flows: &[Flow]) -> usize;
     /// Advance the event loop until `t_stop` (a replan epoch boundary)
-    /// or until every flow completes, whichever comes first.
-    fn advance_to(&mut self, t_stop: f64);
+    /// or until every flow completes, whichever comes first. An
+    /// unbounded advance that wedges reports [`FabricStall`].
+    fn advance_to(&mut self, t_stop: f64) -> Result<(), FabricStall>;
     /// Run every remaining event (no epoch bound).
-    fn run_to_completion(&mut self) {
-        self.advance_to(f64::INFINITY);
+    fn run_to_completion(&mut self) -> Result<(), FabricStall> {
+        self.advance_to(f64::INFINITY)
     }
     /// All flows delivered or preempted.
     fn is_done(&self) -> bool;
@@ -107,6 +147,10 @@ pub trait FabricBackend {
 /// Instantiate the backend `params.backend` selects, seeded with
 /// `flows`. [`BackendKind::Fluid`] constructs the same [`SimEngine`]
 /// the pre-trait executor did — byte-for-byte the same trajectory.
+/// [`BackendKind::Packet`] constructs the partitioned engine; with a
+/// single connected flow component it degenerates to exactly one
+/// [`PacketSim`] flown inline, so its physics and traces match the
+/// monolithic engine's.
 pub fn make_backend<'a>(
     topo: &'a Topology,
     params: FabricParams,
@@ -114,7 +158,7 @@ pub fn make_backend<'a>(
 ) -> Box<dyn FabricBackend + 'a> {
     match params.backend {
         BackendKind::Fluid => Box::new(SimEngine::new(topo, params, flows)),
-        BackendKind::Packet => Box::new(PacketSim::new(topo, params, flows)),
+        BackendKind::Packet => Box::new(PartitionedPacket::new(topo, params, flows)),
     }
 }
 
@@ -122,8 +166,11 @@ impl<'a> FabricBackend for SimEngine<'a> {
     fn add_flows(&mut self, flows: &[Flow]) -> usize {
         SimEngine::add_flows(self, flows)
     }
-    fn advance_to(&mut self, t_stop: f64) {
-        SimEngine::advance_to(self, t_stop)
+    fn advance_to(&mut self, t_stop: f64) -> Result<(), FabricStall> {
+        SimEngine::advance_to(self, t_stop);
+        // the fluid engine solves rates in closed form each step and
+        // cannot wedge: a zero-rate flow still has a finite next event
+        Ok(())
     }
     fn is_done(&self) -> bool {
         SimEngine::is_done(self)
@@ -164,7 +211,7 @@ impl<'a> FabricBackend for PacketSim<'a> {
     fn add_flows(&mut self, flows: &[Flow]) -> usize {
         PacketSim::add_flows(self, flows)
     }
-    fn advance_to(&mut self, t_stop: f64) {
+    fn advance_to(&mut self, t_stop: f64) -> Result<(), FabricStall> {
         PacketSim::advance_to(self, t_stop)
     }
     fn is_done(&self) -> bool {
@@ -205,9 +252,55 @@ impl<'a> FabricBackend for PacketSim<'a> {
     }
 }
 
+impl<'a> FabricBackend for PartitionedPacket<'a> {
+    fn add_flows(&mut self, flows: &[Flow]) -> usize {
+        PartitionedPacket::add_flows(self, flows)
+    }
+    fn advance_to(&mut self, t_stop: f64) -> Result<(), FabricStall> {
+        PartitionedPacket::advance_to(self, t_stop)
+    }
+    fn is_done(&self) -> bool {
+        PartitionedPacket::is_done(self)
+    }
+    fn now(&self) -> f64 {
+        PartitionedPacket::now(self)
+    }
+    fn events(&self) -> u64 {
+        PartitionedPacket::events(self)
+    }
+    fn residual_bytes(&self, i: usize) -> f64 {
+        PartitionedPacket::residual_bytes(self, i)
+    }
+    fn moved_bytes(&self, i: usize) -> f64 {
+        PartitionedPacket::moved_bytes(self, i)
+    }
+    fn is_live(&self, i: usize) -> bool {
+        PartitionedPacket::is_live(self, i)
+    }
+    fn flow(&self, i: usize) -> &Flow {
+        PartitionedPacket::flow(self, i)
+    }
+    fn preempt(&mut self, i: usize) -> f64 {
+        PartitionedPacket::preempt(self, i)
+    }
+    fn apply_fault(&mut self, fault: &super::faults::Fault) {
+        PartitionedPacket::apply_fault(self, fault)
+    }
+    fn take_window(&mut self) -> Vec<f64> {
+        PartitionedPacket::take_window(self)
+    }
+    fn result(&self) -> SimResult {
+        PartitionedPacket::result(self)
+    }
+    fn tail(&self) -> Option<TailStats> {
+        Some(PartitionedPacket::tail(self))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fabric::faults::Fault;
     use crate::topology::path::candidates;
 
     const MB: f64 = 1024.0 * 1024.0;
@@ -228,7 +321,7 @@ mod tests {
         let a = direct.result();
 
         let mut boxed = make_backend(&topo, FabricParams::default(), &flows);
-        boxed.run_to_completion();
+        boxed.run_to_completion().expect("fluid cannot stall");
         let b = boxed.result();
 
         assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
@@ -247,10 +340,35 @@ mod tests {
         let mut params = FabricParams { backend: BackendKind::Packet, ..Default::default() };
         params.packet.cell_bytes = 64.0 * 1024.0;
         let mut be = make_backend(&topo, params, &[Flow::new(p, 4.0 * MB)]);
-        be.run_to_completion();
+        be.run_to_completion().expect("no stall");
         assert!(be.is_done());
         let tail = be.tail().expect("packet backend records tails");
         assert_eq!(tail.delivered_chunks, 64, "4 MB / 64 KB cells");
         assert_eq!(tail.sojourn_s.len(), 64);
+    }
+
+    /// Regression for the old `"stuck: packet simulation has live
+    /// flows but no events"` panic: a zero-capacity misconfiguration
+    /// (a flow's only link dead with no restore scheduled) now surfaces
+    /// the typed [`FabricStall`] through the trait instead of aborting
+    /// the process.
+    #[test]
+    fn zero_capacity_run_reports_stall_through_trait() {
+        let topo = Topology::paper();
+        let p = candidates(&topo, 0, 4, false).remove(0); // single rail hop
+        let link = p.hops[0];
+        let params = FabricParams { backend: BackendKind::Packet, ..Default::default() };
+        let mut be = make_backend(&topo, params, &[Flow::new(p, 8.0 * MB)]);
+        be.apply_fault(&Fault::LinkDown { link });
+        let err = be.run_to_completion().expect_err("dead link must stall");
+        assert_eq!(err.live_flows, 1);
+        assert!(err.t_s >= 0.0);
+        assert!(!be.is_done());
+        // the error formats with enough context to diagnose the wedge
+        let msg = err.to_string();
+        assert!(msg.contains("live flow"), "unhelpful stall message: {msg}");
+        // a bounded epoch advance over the same wedge is NOT an error:
+        // the coordinator replans at the boundary instead
+        be.advance_to(be.now() + 0.001).expect("bounded advance waits");
     }
 }

@@ -28,6 +28,14 @@
 //! fault-free build — the recovery machinery is only reachable when a
 //! fault actually fires.
 //!
+//! On the packet engine, `apply_fault` mutates capacity scales and
+//! re-kicks the affected service loops by *scheduling* events — it
+//! never touches queue internals — so faults land identically in
+//! whichever scheduler is active (wheel or heap; pinned by
+//! `prop_wheel_matches_heap_under_faults`) and, under the partitioned
+//! loop, are broadcast to every live component and replayed onto
+//! components created later (DESIGN.md §14).
+//!
 //! [`scenario_schedule`] generates the four named scenarios the
 //! `nimble faults` experiment flies (flap / degrade / straggler /
 //! mixed) from a seed plus an optional per-link load profile: the

@@ -42,9 +42,10 @@ pub mod backend;
 pub mod faults;
 pub mod fluid;
 pub mod packet;
+pub mod packet_par;
 pub mod pipeline;
 
-pub use backend::{make_backend, FabricBackend, TailStats};
+pub use backend::{make_backend, FabricBackend, FabricStall, TailStats};
 pub use faults::{Fault, FaultEvent, FaultSchedule, FaultsCfg, Scenario, ScenarioParams};
 
 use crate::topology::{LinkKind, Path, Topology};
@@ -113,6 +114,22 @@ pub enum BackendKind {
     Packet,
 }
 
+/// Event-queue implementation flown by the packet engine
+/// (`[fabric.packet] scheduler`). Both process the identical event
+/// sequence — traces, results and tail stats are byte-identical
+/// (pinned in `tests/fabric_props.rs`) — so this knob trades nothing
+/// but speed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Calendar-queue timing wheel with a one-slot fast lane
+    /// ([`crate::util::eventq::WheelQueue`]): amortized `O(1)` per
+    /// event, allocation-free once warm. The default.
+    Wheel,
+    /// The original global `BinaryHeap<Reverse<(t, seq, ev)>>`,
+    /// retained as the equivalence oracle (`O(log n)` per event).
+    Heap,
+}
+
 /// Calibration of the packet-level backend (`[fabric.packet]`). The
 /// defaults derive from the same paper measurements as the rest of
 /// [`FabricParams`]: the per-hop wire latency is `hop_lat_us` restated
@@ -134,6 +151,13 @@ pub struct PacketParams {
     /// Arbitration seed: rotates each endpoint's initial round-robin
     /// pointer. Identical seeds ⇒ byte-identical event traces.
     pub seed: u64,
+    /// Event-queue implementation (`scheduler = "wheel" | "heap"`).
+    pub scheduler: SchedulerKind,
+    /// Worker threads for the partitioned event loop
+    /// ([`packet_par::PartitionedPacket`]). Results are byte-identical
+    /// for every value — node-disjoint partitions are merged in a
+    /// canonical order — so this, too, trades nothing but speed.
+    pub threads: usize,
 }
 
 impl Default for PacketParams {
@@ -143,6 +167,8 @@ impl Default for PacketParams {
             buffer_bytes: 10.0 * 1024.0 * 1024.0,
             latency_ns: 3_000,
             seed: 0x9AC4E7,
+            scheduler: SchedulerKind::Wheel,
+            threads: 1,
         }
     }
 }

@@ -1,6 +1,6 @@
 //! Chunk-granular discrete-event fabric simulator (the packet-level
 //! [`FabricBackend`](super::FabricBackend)), in the style of the htsim
-//! family of simulators: a single event heap over integer nanoseconds,
+//! family of simulators: a single event queue over integer nanoseconds,
 //! per-link FIFO queues with store-and-forward serialization, per-hop
 //! propagation latency, and seeded round-robin endpoint injection.
 //!
@@ -30,11 +30,32 @@
 //! * Each **destination GPU** drains arrivals through a receive stage
 //!   at the HBM-write cap — the incast bottleneck.
 //!
-//! Every arbitration is deterministic: the event heap is keyed by
+//! ## Event core (DESIGN.md §9)
+//!
+//! Every arbitration is deterministic: events are keyed by
 //! `(time, insertion seq)` and ties never consult unordered state, so
 //! identical seeds produce **byte-identical event traces**
 //! (`prop_packet_identical_seeds_identical_traces` in
 //! `tests/fabric_props.rs` holds this).
+//!
+//! The queue behind that key is selected by
+//! [`SchedulerKind`](super::SchedulerKind):
+//!
+//! * `Heap` — the original `BinaryHeap<Reverse<(t, seq, ev)>>`,
+//!   retained verbatim as the **equivalence oracle** (the same playbook
+//!   as the planner's `SolverKind::Reference`): `O(log n)` per event
+//!   with one global cache-hostile heap.
+//! * `Wheel` (default) — the rebuilt fast path: a calendar-queue
+//!   timing wheel ([`crate::util::eventq::WheelQueue`], amortized
+//!   `O(1)`, allocation-free once warm) fronted by a one-slot **fast
+//!   lane**: `schedule` keeps the earliest pending event in a register
+//!   slot and `pop` takes it whenever it beats the wheel's head, so a
+//!   busy link's service chain (completion → next service → …) elides
+//!   the queue entirely when it is the next thing to happen. Both pop
+//!   in identical `(time, seq)` order, so the two schedulers process
+//!   the **same event sequence** — traces, results and tail stats are
+//!   byte-identical (pinned across seeds × faults in
+//!   `tests/fabric_props.rs`).
 //!
 //! Preemption ([`PacketSim::preempt`]) mirrors the fluid engine's
 //! semantics: the flow freezes at the bytes *delivered* so far and the
@@ -42,14 +63,14 @@
 //! fabric are aborted at their next event (their traversed hops stay
 //! charged to `link_bytes` — rerouting is not free).
 
-use super::backend::TailStats;
+use super::backend::{FabricStall, TailStats};
 use super::faults;
 use super::fluid::{Flow, FlowResult, SimResult};
-use super::FabricParams;
+use super::{FabricParams, SchedulerKind};
 use crate::topology::Topology;
-use crate::util::rng::Rng;
-use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use crate::util::eventq::{EventQueue, HeapQueue, WheelQueue};
+use crate::util::rng::{stream_seed, Rng};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 /// Trace record: `(time_ns, code, a, b)` with the `TRACE_*` codes.
 pub type TraceEvent = (u64, u8, u32, u32);
@@ -61,14 +82,16 @@ pub const TRACE_LINK_DONE: u8 = 2;
 /// Trace code: cell `(flow a, cell b)` delivered end-to-end.
 pub const TRACE_DELIVER: u8 = 3;
 
-/// Discrete events. Heap order is `(time, seq)`; the derived `Ord` on
-/// the payload exists only to satisfy the heap's type bounds.
+/// Discrete events. Queue order is `(time, seq)`; the derived `Ord` on
+/// the payload exists only to satisfy the retained heap's type bounds
+/// (`seq` is unique, so the payload never decides order). `Enq`
+/// carries the cell's hop position so handlers never re-scan the path.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 enum Ev {
     /// Injector of GPU `g` may be free — attempt the next injection.
     Inject(u32),
-    /// Cell `(flow, idx)` arrives at a link's input queue.
-    Enq(u32, u32, u32),
+    /// Cell `(flow, idx)` arrives at hop `pos`'s link input queue.
+    Enq(u32, u32, u32, u8),
     /// Link may complete its in-service cell and/or start the next.
     LinkTick(u32),
     /// Cell `(flow, idx)` arrives at GPU `g`'s receive stage.
@@ -79,7 +102,7 @@ enum Ev {
 
 /// Virtual time in integer nanoseconds (1 GB/s ≡ 1 byte/ns, so rate
 /// arithmetic needs no unit constants).
-fn ns_of(t_s: f64) -> u64 {
+pub(crate) fn ns_of(t_s: f64) -> u64 {
     if t_s <= 0.0 {
         0
     } else {
@@ -93,6 +116,12 @@ fn ns_of(t_s: f64) -> u64 {
 fn dur_ns(bytes: f64, gbps: f64) -> u64 {
     debug_assert!(gbps > 0.0, "non-positive rate");
     (bytes / gbps).ceil().max(1.0) as u64
+}
+
+/// The scheduler container: retained oracle heap or the rebuilt wheel.
+enum SchedQueue {
+    Heap(HeapQueue<Ev>),
+    Wheel(WheelQueue<Ev>),
 }
 
 /// The packet-level discrete-event simulator. Construct with the full
@@ -121,17 +150,32 @@ pub struct PacketSim<'a> {
     /// Hop-0 enqueue timestamps, FIFO per flow (cells of one flow
     /// deliver in order, so transit latency pairs up by popping).
     enq0_q: Vec<VecDeque<u64>>,
+    /// Position of the flow within `flows_at[src]` (the RR index the
+    /// injector's open-set arithmetic runs on).
+    inj_pos: Vec<u32>,
+    /// Slot into `pair_keys`/`pair_lat` (resolved once at add time so
+    /// the delivery hot path never walks a map).
+    pair_slot: Vec<u32>,
+    tag_slot: Vec<u32>,
     unfinished: usize,
     // ---- per-source-GPU injectors ----
     flows_at: Vec<Vec<u32>>,
+    /// Injectable flows per GPU, by position in `flows_at`: alive, not
+    /// fully injected, window open. Maintained incrementally so the RR
+    /// scan skips closed/done flows instead of iterating all of them
+    /// (pure strength reduction: the chosen flow and the computed wake
+    /// are identical to the full scan's, which only ever collected
+    /// wake times from open flows).
+    open: Vec<BTreeSet<u32>>,
     rr: Vec<usize>,
     inj_busy_until: Vec<u64>,
     // ---- per-link queues + servers ----
-    lq: Vec<VecDeque<(u32, u32)>>,
+    lq: Vec<VecDeque<(u32, u32, u8)>>,
     lq_bytes: Vec<f64>,
     peak_lq_bytes: Vec<f64>,
-    /// `(flow, cell idx, completion time)` of the cell in service.
-    in_service: Vec<Option<(u32, u32, u64)>>,
+    /// `(flow, cell idx, hop pos, completion time)` of the cell in
+    /// service.
+    in_service: Vec<Option<(u32, u32, u8, u64)>>,
     link_rate: Vec<f64>,
     /// Per-link capacity scale under faults (1 healthy, 0 dead: the
     /// queue freezes until a restore event re-kicks the server).
@@ -161,10 +205,21 @@ pub struct PacketSim<'a> {
     window_bytes: Vec<f64>,
     sojourn_s: Vec<f64>,
     transit_s: Vec<f64>,
-    per_pair: BTreeMap<(usize, usize), Vec<f64>>,
-    per_tag: BTreeMap<u64, Vec<f64>>,
+    /// Distinct (src, dst) pairs / tags in first-seen order; latencies
+    /// land in the parallel `*_lat` vectors and are only assembled
+    /// into sorted maps by [`PacketSim::tail`].
+    pair_keys: Vec<(usize, usize)>,
+    pair_lat: Vec<Vec<f64>>,
+    pair_slot_of: BTreeMap<(usize, usize), u32>,
+    tag_keys: Vec<u64>,
+    tag_lat: Vec<Vec<f64>>,
+    tag_slot_of: BTreeMap<u64, u32>,
     // ---- event core ----
-    heap: BinaryHeap<Reverse<(u64, u64, Ev)>>,
+    queue: SchedQueue,
+    /// One-slot fast lane (wheel scheduler only): the earliest event
+    /// seen since the last fast-lane pop. Never used by the retained
+    /// heap, which must stay the verbatim original engine.
+    fast: Option<(u64, u64, Ev)>,
     seq: u64,
     t_ns: u64,
     events: u64,
@@ -177,6 +232,10 @@ impl<'a> PacketSim<'a> {
         let nl = topo.links.len();
         let ng = topo.num_gpus();
         let nn = topo.nodes;
+        let queue = match params.packet.scheduler {
+            SchedulerKind::Heap => SchedQueue::Heap(HeapQueue::new()),
+            SchedulerKind::Wheel => SchedQueue::Wheel(WheelQueue::new()),
+        };
         let mut sim = PacketSim {
             topo,
             flows: Vec::new(),
@@ -195,17 +254,18 @@ impl<'a> PacketSim<'a> {
             flow_cap_gbps: Vec::new(),
             window_cap: Vec::new(),
             enq0_q: Vec::new(),
+            inj_pos: Vec::new(),
+            pair_slot: Vec::new(),
+            tag_slot: Vec::new(),
             unfinished: 0,
             flows_at: vec![Vec::new(); ng],
+            open: vec![BTreeSet::new(); ng],
             rr: (0..ng)
                 .map(|g| {
                     // seeded initial rotation, reduced modulo the live
                     // flow count at pick time
-                    Rng::new(
-                        params.packet.seed
-                            ^ (g as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
-                    )
-                    .next_u64() as usize
+                    Rng::new(stream_seed(params.packet.seed, g as u64)).next_u64()
+                        as usize
                 })
                 .collect(),
             inj_busy_until: vec![0; ng],
@@ -236,9 +296,14 @@ impl<'a> PacketSim<'a> {
             window_bytes: vec![0.0; nl],
             sojourn_s: Vec::new(),
             transit_s: Vec::new(),
-            per_pair: BTreeMap::new(),
-            per_tag: BTreeMap::new(),
-            heap: BinaryHeap::new(),
+            pair_keys: Vec::new(),
+            pair_lat: Vec::new(),
+            pair_slot_of: BTreeMap::new(),
+            tag_keys: Vec::new(),
+            tag_lat: Vec::new(),
+            tag_slot_of: BTreeMap::new(),
+            queue,
+            fast: None,
             seq: 0,
             t_ns: 0,
             events: 0,
@@ -300,6 +365,11 @@ impl<'a> PacketSim<'a> {
         &self.flows[i]
     }
 
+    /// Flows registered so far.
+    pub fn num_flows(&self) -> usize {
+        self.flows.len()
+    }
+
     /// Cells flow `i` was carved into (equal-size, `bytes / cells`).
     pub fn cells_of(&self, i: usize) -> u32 {
         self.n_cells[i]
@@ -317,6 +387,7 @@ impl<'a> PacketSim<'a> {
             let cap = (self.params.flow_rate_cap_gbps(self.topo, &f.path, f.bytes)
                 * f.rate_factor)
                 .max(1e-3);
+            debug_assert!(f.path.hops.len() < u8::MAX as usize, "path too deep");
             self.start_t.push(start_s);
             self.t0_ns.push(ns_of(start_s));
             self.cell_size.push(cell);
@@ -332,7 +403,23 @@ impl<'a> PacketSim<'a> {
             self.flow_cap_gbps.push(cap);
             self.window_cap.push(self.params.packet.buffer_bytes.max(cell));
             self.enq0_q.push(VecDeque::new());
+            let pos = self.flows_at[f.path.src].len() as u32;
+            self.inj_pos.push(pos);
+            let pair = (f.path.src, f.path.dst);
+            let ps = *self.pair_slot_of.entry(pair).or_insert_with(|| {
+                self.pair_keys.push(pair);
+                self.pair_lat.push(Vec::new());
+                (self.pair_keys.len() - 1) as u32
+            });
+            self.pair_slot.push(ps);
+            let ts = *self.tag_slot_of.entry(f.tag).or_insert_with(|| {
+                self.tag_keys.push(f.tag);
+                self.tag_lat.push(Vec::new());
+                (self.tag_keys.len() - 1) as u32
+            });
+            self.tag_slot.push(ts);
             self.flows_at[f.path.src].push(i as u32);
+            self.open[f.path.src].insert(pos);
             self.unfinished += 1;
             let wake = self.t0_ns[i].max(self.t_ns);
             self.schedule(wake, Ev::Inject(f.path.src as u32));
@@ -353,6 +440,7 @@ impl<'a> PacketSim<'a> {
         self.preempted[i] = true;
         self.finish_ns[i] = self.t_ns;
         self.inflight_bytes[i] = 0.0;
+        self.open[self.flows[i].path.src].remove(&self.inj_pos[i]);
         self.unfinished -= 1;
         residual
     }
@@ -361,8 +449,11 @@ impl<'a> PacketSim<'a> {
     /// cell still completes — it was already on the wire — but nothing
     /// new enters service); degraded links and straggling injectors
     /// serialize slower from their next cell on; restore events
-    /// re-kick frozen servers. Fault-free runs never call this, so
-    /// their event traces stay byte-identical.
+    /// re-kick frozen servers (the kick goes through [`Self::schedule`],
+    /// so it lands in whichever scheduler is active — the wheel's
+    /// cursor-bucket heap accepts events at the current time directly).
+    /// Fault-free runs never call this, so their event traces stay
+    /// byte-identical.
     pub fn apply_fault(&mut self, fault: &faults::Fault) {
         let t = self.t_ns;
         match *fault {
@@ -404,25 +495,34 @@ impl<'a> PacketSim<'a> {
 
     /// Advance the event loop until `t_stop` (a replan epoch boundary)
     /// or until every flow completes, whichever comes first.
-    pub fn advance_to(&mut self, t_stop: f64) {
+    ///
+    /// An unbounded advance (`t_stop` non-finite) with live flows but
+    /// an empty event queue cannot make progress — a zero-capacity
+    /// misconfiguration or an un-restored dead link — and reports
+    /// [`FabricStall`] instead of panicking.
+    pub fn advance_to(&mut self, t_stop: f64) -> Result<(), FabricStall> {
         let stop_ns = if t_stop.is_finite() { ns_of(t_stop) } else { u64::MAX };
         while self.unfinished > 0 {
-            let Some(&Reverse((t, _, _))) = self.heap.peek() else {
-                assert!(
-                    stop_ns != u64::MAX,
-                    "stuck: packet simulation has live flows but no events"
-                );
+            let Some(t) = self.peek_time() else {
+                if stop_ns == u64::MAX {
+                    return Err(FabricStall {
+                        live_flows: self.unfinished,
+                        t_s: self.now(),
+                    });
+                }
                 break;
             };
             if t > stop_ns {
                 break;
             }
-            let Reverse((t, _, ev)) = self.heap.pop().expect("peeked");
+            let (t, _, ev) = self.pop_event().expect("peeked");
             self.t_ns = t;
             self.events += 1;
             match ev {
                 Ev::Inject(g) => self.injector_tick(g as usize, t),
-                Ev::Enq(l, f, idx) => self.enqueue_link(l as usize, f as usize, idx, t),
+                Ev::Enq(l, f, idx, pos) => {
+                    self.enqueue_link(l as usize, f as usize, idx, pos, t)
+                }
                 Ev::LinkTick(l) => self.link_tick(l as usize, t),
                 Ev::RecvEnq(g, f, idx) => {
                     self.enqueue_recv(g as usize, f as usize, idx, t)
@@ -433,11 +533,12 @@ impl<'a> PacketSim<'a> {
         if stop_ns != u64::MAX && stop_ns > self.t_ns {
             self.t_ns = stop_ns;
         }
+        Ok(())
     }
 
     /// Run every remaining event (no epoch bound).
-    pub fn run_to_completion(&mut self) {
-        self.advance_to(f64::INFINITY);
+    pub fn run_to_completion(&mut self) -> Result<(), FabricStall> {
+        self.advance_to(f64::INFINITY)
     }
 
     /// Snapshot the outcome in the same shape as the fluid engine:
@@ -469,23 +570,226 @@ impl<'a> PacketSim<'a> {
     }
 
     /// The latency/queue-depth observations this backend exists for.
+    /// The sorted per-pair/per-tag maps are assembled here, off the
+    /// hot path; deliveries only push into slot-indexed vectors.
     pub fn tail(&self) -> TailStats {
+        let mut per_pair = BTreeMap::new();
+        for (k, lat) in self.pair_keys.iter().zip(&self.pair_lat) {
+            per_pair.insert(*k, lat.clone());
+        }
+        let mut per_tag: BTreeMap<u64, Vec<f64>> = BTreeMap::new();
+        for (k, lat) in self.tag_keys.iter().zip(&self.tag_lat) {
+            per_tag.entry(*k).or_default().extend_from_slice(lat);
+        }
         TailStats {
             sojourn_s: self.sojourn_s.clone(),
             transit_s: self.transit_s.clone(),
-            per_pair_sojourn_s: self.per_pair.clone(),
-            per_tag_sojourn_s: self.per_tag.clone(),
+            per_pair_sojourn_s: per_pair,
+            per_tag_sojourn_s: per_tag,
             peak_queue_bytes: self.peak_lq_bytes.clone(),
             peak_recv_queue_bytes: self.peak_rq_bytes.clone(),
             delivered_chunks: self.sojourn_s.len() as u64,
         }
     }
 
+    // ---- partitioned-engine support (`packet_par`) ----
+
+    /// Internal clock in integer nanoseconds (exact, unlike `now`).
+    pub(crate) fn clock_ns(&self) -> u64 {
+        self.t_ns
+    }
+
+    /// Align a freshly created, still-empty sub-simulation's clock with
+    /// the partitioned wrapper's epoch, so flows added next compute the
+    /// same `max(t0, now)` wake a monolithic engine would.
+    pub(crate) fn warp_clock_ns(&mut self, t_ns: u64) {
+        debug_assert!(
+            self.flows.is_empty() && self.events == 0,
+            "clock warp on a sim that already ran"
+        );
+        self.t_ns = self.t_ns.max(t_ns);
+    }
+
+    /// Transplant `other`'s entire state into `self` (partition merge:
+    /// a new flow bridges two previously node-disjoint components).
+    /// Returns the local index offset added to `other`'s flows.
+    ///
+    /// Correctness rests on disjointness: the two components share no
+    /// GPU, link or charged NIC node, so per-resource state moves over
+    /// without collision (debug-asserted). `other`'s pending events are
+    /// re-pushed in `(t, seq)` order with fresh sequence numbers — all
+    /// of them lie at or after the common epoch time, so the merged
+    /// queue never schedules into the past. Observation vectors append
+    /// in victim order; the partitioned wrapper's canonical merge
+    /// order makes the result independent of thread count.
+    pub(crate) fn absorb(&mut self, mut other: PacketSim<'a>) -> u32 {
+        let base = self.flows.len() as u32;
+        self.t_ns = self.t_ns.max(other.t_ns);
+        // 1) drain the victim's event queue (incl. its fast slot) in
+        // key order, remapping flow ids into the merged index space
+        while let Some((t, _, ev)) = other.pop_event() {
+            let ev = match ev {
+                Ev::Enq(l, f, idx, pos) => Ev::Enq(l, f + base, idx, pos),
+                Ev::RecvEnq(g, f, idx) => Ev::RecvEnq(g, f + base, idx),
+                e => e,
+            };
+            self.schedule(t, ev);
+        }
+        // 2) observation-table slots: re-resolve the victim's pair/tag
+        // keys in the merged tables, then splice its latency vectors
+        let pair_remap: Vec<u32> = other
+            .pair_keys
+            .iter()
+            .map(|&k| {
+                *self.pair_slot_of.entry(k).or_insert_with(|| {
+                    self.pair_keys.push(k);
+                    self.pair_lat.push(Vec::new());
+                    (self.pair_keys.len() - 1) as u32
+                })
+            })
+            .collect();
+        for (slot, lat) in pair_remap.iter().zip(std::mem::take(&mut other.pair_lat)) {
+            self.pair_lat[*slot as usize].extend(lat);
+        }
+        let tag_remap: Vec<u32> = other
+            .tag_keys
+            .iter()
+            .map(|&k| {
+                *self.tag_slot_of.entry(k).or_insert_with(|| {
+                    self.tag_keys.push(k);
+                    self.tag_lat.push(Vec::new());
+                    (self.tag_keys.len() - 1) as u32
+                })
+            })
+            .collect();
+        for (slot, lat) in tag_remap.iter().zip(std::mem::take(&mut other.tag_lat)) {
+            self.tag_lat[*slot as usize].extend(lat);
+        }
+        // 3) per-flow state, in the victim's local order
+        for s in std::mem::take(&mut other.pair_slot) {
+            self.pair_slot.push(pair_remap[s as usize]);
+        }
+        for s in std::mem::take(&mut other.tag_slot) {
+            self.tag_slot.push(tag_remap[s as usize]);
+        }
+        self.flows.extend(std::mem::take(&mut other.flows));
+        self.start_t.extend(std::mem::take(&mut other.start_t));
+        self.t0_ns.extend(std::mem::take(&mut other.t0_ns));
+        self.cell_size.extend(std::mem::take(&mut other.cell_size));
+        self.n_cells.extend(std::mem::take(&mut other.n_cells));
+        self.injected.extend(std::mem::take(&mut other.injected));
+        self.delivered.extend(std::mem::take(&mut other.delivered));
+        self.delivered_bytes.extend(std::mem::take(&mut other.delivered_bytes));
+        self.inflight_bytes.extend(std::mem::take(&mut other.inflight_bytes));
+        self.next_inject_ns.extend(std::mem::take(&mut other.next_inject_ns));
+        self.alive.extend(std::mem::take(&mut other.alive));
+        self.preempted.extend(std::mem::take(&mut other.preempted));
+        self.finish_ns.extend(std::mem::take(&mut other.finish_ns));
+        self.flow_cap_gbps.extend(std::mem::take(&mut other.flow_cap_gbps));
+        self.window_cap.extend(std::mem::take(&mut other.window_cap));
+        self.enq0_q.extend(std::mem::take(&mut other.enq0_q));
+        self.inj_pos.extend(std::mem::take(&mut other.inj_pos));
+        self.unfinished += other.unfinished;
+        // 4) per-GPU injector + receive state
+        for g in 0..self.rr.len() {
+            if !other.flows_at[g].is_empty() {
+                debug_assert!(self.flows_at[g].is_empty(), "components share GPU {g}");
+                self.flows_at[g] =
+                    other.flows_at[g].drain(..).map(|f| f + base).collect();
+                self.open[g] = std::mem::take(&mut other.open[g]);
+                self.rr[g] = other.rr[g];
+                self.inj_busy_until[g] = other.inj_busy_until[g];
+            }
+            if !other.rq[g].is_empty() || other.r_in_service[g].is_some() {
+                debug_assert!(
+                    self.rq[g].is_empty() && self.r_in_service[g].is_none(),
+                    "components share receive stage {g}"
+                );
+                self.rq[g] = other.rq[g].drain(..).map(|(f, i)| (f + base, i)).collect();
+                self.r_in_service[g] =
+                    other.r_in_service[g].map(|(f, i, d)| (f + base, i, d));
+            }
+            self.rq_bytes[g] += other.rq_bytes[g];
+            self.peak_rq_bytes[g] = self.peak_rq_bytes[g].max(other.peak_rq_bytes[g]);
+        }
+        // 5) per-link queues, servers and byte counters
+        for l in 0..self.lq.len() {
+            if !other.lq[l].is_empty() || other.in_service[l].is_some() {
+                debug_assert!(
+                    self.lq[l].is_empty() && self.in_service[l].is_none(),
+                    "components share link {l}"
+                );
+                self.lq[l] =
+                    other.lq[l].drain(..).map(|(f, i, p)| (f + base, i, p)).collect();
+                self.in_service[l] =
+                    other.in_service[l].map(|(f, i, p, d)| (f + base, i, p, d));
+            }
+            self.lq_bytes[l] += other.lq_bytes[l];
+            self.peak_lq_bytes[l] = self.peak_lq_bytes[l].max(other.peak_lq_bytes[l]);
+            self.link_bytes[l] += other.link_bytes[l];
+            self.window_bytes[l] += other.window_bytes[l];
+        }
+        // 6) per-node NIC token clocks (disjoint charge sets: max = move)
+        for n in 0..self.net_out_free.len() {
+            self.net_out_free[n] = self.net_out_free[n].max(other.net_out_free[n]);
+            self.net_in_free[n] = self.net_in_free[n].max(other.net_in_free[n]);
+        }
+        // 7) merged observations + counters
+        self.sojourn_s.extend(std::mem::take(&mut other.sojourn_s));
+        self.transit_s.extend(std::mem::take(&mut other.transit_s));
+        self.trace.extend(std::mem::take(&mut other.trace));
+        self.events += other.events;
+        base
+    }
+
     // ---- internals ----
 
     fn schedule(&mut self, t: u64, ev: Ev) {
         self.seq += 1;
-        self.heap.push(Reverse((t, self.seq, ev)));
+        match &mut self.queue {
+            SchedQueue::Heap(q) => q.push(t, self.seq, ev),
+            SchedQueue::Wheel(q) => {
+                // fast lane: keep the earlier of (incoming, held) in
+                // the slot, spill the other into the wheel. pop_event
+                // compares the slot against the wheel head, so the
+                // processed sequence is exactly (time, seq) order.
+                match self.fast {
+                    None => self.fast = Some((t, self.seq, ev)),
+                    Some((ft, fs, fev)) if (t, self.seq) < (ft, fs) => {
+                        q.push(ft, fs, fev);
+                        self.fast = Some((t, self.seq, ev));
+                    }
+                    Some(_) => q.push(t, self.seq, ev),
+                }
+            }
+        }
+    }
+
+    fn peek_time(&mut self) -> Option<u64> {
+        match &mut self.queue {
+            SchedQueue::Heap(q) => q.peek_key().map(|(t, _)| t),
+            SchedQueue::Wheel(q) => match (self.fast, q.peek_key()) {
+                (Some((ft, fs, _)), Some((qt, qs))) => {
+                    Some(if (qt, qs) < (ft, fs) { qt } else { ft })
+                }
+                (Some((ft, _, _)), None) => Some(ft),
+                (None, Some((qt, _))) => Some(qt),
+                (None, None) => None,
+            },
+        }
+    }
+
+    fn pop_event(&mut self) -> Option<(u64, u64, Ev)> {
+        match &mut self.queue {
+            SchedQueue::Heap(q) => q.pop(),
+            SchedQueue::Wheel(q) => match self.fast {
+                Some((ft, fs, _)) => match q.peek_key() {
+                    Some(k) if k < (ft, fs) => q.pop(),
+                    _ => self.fast.take(),
+                },
+                None => q.pop(),
+            },
+        }
     }
 
     fn push_trace(&mut self, t: u64, code: u8, a: u32, b: u32) {
@@ -494,43 +798,48 @@ impl<'a> PacketSim<'a> {
         }
     }
 
-    /// Position of link `l` on flow `f`'s path (a link appears at most
-    /// once on any candidate path).
-    fn hop_pos(&self, f: usize, l: usize) -> usize {
-        self.flows[f]
-            .path
-            .hops
-            .iter()
-            .position(|&h| h == l)
-            .expect("cell on a link outside its flow's path")
+    /// Re-derive flow `f`'s membership in its source's injectable set
+    /// after a state transition (injection, credit return, preempt).
+    #[inline]
+    fn refresh_open(&mut self, f: usize) {
+        let g = self.flows[f].path.src;
+        let pos = self.inj_pos[f];
+        let open = self.alive[f]
+            && self.injected[f] < self.n_cells[f]
+            && self.inflight_bytes[f] + self.cell_size[f] <= self.window_cap[f] + 1e-9;
+        if open {
+            self.open[g].insert(pos);
+        } else {
+            self.open[g].remove(&pos);
+        }
     }
 
     /// Injector of GPU `g` attempts one injection at time `t`.
+    ///
+    /// The candidate order is the original full round-robin scan over
+    /// `flows_at[g]` starting at `rr[g]`; the open-set only removes
+    /// flows that scan skipped without effect (dead, done, window
+    /// closed), so the chosen flow and the earliest wake time are
+    /// identical to the original scan's.
     fn injector_tick(&mut self, g: usize, t: u64) {
         if t < self.inj_busy_until[g] {
             return; // the completion tick will re-attempt
         }
         let len = self.flows_at[g].len();
-        if len == 0 {
+        if len == 0 || self.open[g].is_empty() {
             return;
         }
+        let start = (self.rr[g] % len) as u32;
         let mut chosen = None;
         let mut wake = u64::MAX;
-        for k in 0..len {
-            let pos = (self.rr[g] + k) % len;
-            let f = self.flows_at[g][pos] as usize;
-            if !self.alive[f] || self.injected[f] >= self.n_cells[f] {
-                continue;
-            }
-            if self.inflight_bytes[f] + self.cell_size[f] > self.window_cap[f] + 1e-9 {
-                continue; // window closed: the credit return wakes us
-            }
+        for &pos in self.open[g].range(start..).chain(self.open[g].range(..start)) {
+            let f = self.flows_at[g][pos as usize] as usize;
             let ready = self.t0_ns[f].max(self.next_inject_ns[f]);
             if ready > t {
                 wake = wake.min(ready);
                 continue;
             }
-            chosen = Some(pos);
+            chosen = Some(pos as usize);
             break;
         }
         let Some(pos) = chosen else {
@@ -554,21 +863,22 @@ impl<'a> PacketSim<'a> {
         let idx = self.injected[f];
         self.injected[f] += 1;
         self.inflight_bytes[f] += cell;
+        self.refresh_open(f);
         self.push_trace(t, TRACE_INJECT, f as u32, idx);
         let hop0 = self.flows[f].path.hops[0] as u32;
-        self.schedule(t + dur, Ev::Enq(hop0, f as u32, idx));
+        self.schedule(t + dur, Ev::Enq(hop0, f as u32, idx, 0));
         self.schedule(t + dur, Ev::Inject(g as u32));
     }
 
-    /// Cell `(f, idx)` arrives at link `l`'s input queue.
-    fn enqueue_link(&mut self, l: usize, f: usize, idx: u32, t: u64) {
+    /// Cell `(f, idx)` arrives at hop `pos`'s link `l` input queue.
+    fn enqueue_link(&mut self, l: usize, f: usize, idx: u32, pos: u8, t: u64) {
         if !self.alive[f] {
             return; // aborted mid-flight by a preemption
         }
-        if self.hop_pos(f, l) == 0 {
+        if pos == 0 {
             self.enq0_q[f].push_back(t);
         }
-        self.lq[l].push_back((f as u32, idx));
+        self.lq[l].push_back((f as u32, idx, pos));
         self.lq_bytes[l] += self.cell_size[f];
         if self.lq_bytes[l] > self.peak_lq_bytes[l] {
             self.peak_lq_bytes[l] = self.lq_bytes[l];
@@ -581,7 +891,7 @@ impl<'a> PacketSim<'a> {
     /// Link `l` completes its in-service cell (if due) and starts the
     /// next one it can.
     fn link_tick(&mut self, l: usize, t: u64) {
-        if let Some((fu, idx, done)) = self.in_service[l] {
+        if let Some((fu, idx, pos, done)) = self.in_service[l] {
             if t < done {
                 return; // stale tick; the completion tick is scheduled
             }
@@ -592,12 +902,11 @@ impl<'a> PacketSim<'a> {
             self.window_bytes[l] += cell;
             self.push_trace(t, TRACE_LINK_DONE, l as u32, fu);
             if self.alive[f] {
-                let pos = self.hop_pos(f, l);
                 let arr = t + self.params.packet.latency_ns;
                 let hops = &self.flows[f].path.hops;
-                if pos + 1 < hops.len() {
-                    let next = hops[pos + 1] as u32;
-                    self.schedule(arr, Ev::Enq(next, fu, idx));
+                if (pos as usize) + 1 < hops.len() {
+                    let next = hops[pos as usize + 1] as u32;
+                    self.schedule(arr, Ev::Enq(next, fu, idx, pos + 1));
                 } else {
                     let dst = self.flows[f].path.dst as u32;
                     self.schedule(arr, Ev::RecvEnq(dst, fu, idx));
@@ -608,7 +917,7 @@ impl<'a> PacketSim<'a> {
             return; // dead link: queue frozen until a restore re-kicks
         }
         loop {
-            let Some(&(fu, idx)) = self.lq[l].front() else { return };
+            let Some(&(fu, idx, pos)) = self.lq[l].front() else { return };
             let f = fu as usize;
             if !self.alive[f] {
                 self.lq[l].pop_front();
@@ -634,7 +943,7 @@ impl<'a> PacketSim<'a> {
             self.lq_bytes[l] -= cell;
             let rate = (self.link_rate[l] * self.link_scale[l]).min(self.flow_cap_gbps[f]);
             let done = t + dur_ns(cell, rate);
-            self.in_service[l] = Some((fu, idx, done));
+            self.in_service[l] = Some((fu, idx, pos, done));
             if co != u32::MAX || ci != u32::MAX {
                 let agg = dur_ns(cell, self.params.node_net_cap_gbps);
                 if co != u32::MAX {
@@ -680,14 +989,14 @@ impl<'a> PacketSim<'a> {
                 self.delivered[f] += 1;
                 self.delivered_bytes[f] += cell;
                 self.inflight_bytes[f] = (self.inflight_bytes[f] - cell).max(0.0);
+                self.refresh_open(f);
                 let enq0 = self.enq0_q[f].pop_front().unwrap_or(self.t0_ns[f]);
                 let sojourn = t.saturating_sub(self.t0_ns[f]) as f64 * 1e-9;
                 let transit = t.saturating_sub(enq0) as f64 * 1e-9;
                 self.sojourn_s.push(sojourn);
                 self.transit_s.push(transit);
-                let pair = (self.flows[f].path.src, self.flows[f].path.dst);
-                self.per_pair.entry(pair).or_default().push(sojourn);
-                self.per_tag.entry(self.flows[f].tag).or_default().push(sojourn);
+                self.pair_lat[self.pair_slot[f] as usize].push(sojourn);
+                self.tag_lat[self.tag_slot[f] as usize].push(sojourn);
                 self.push_trace(t, TRACE_DELIVER, fu, idx);
                 // credit return: the source may inject again
                 let src = self.flows[f].path.src;
@@ -724,7 +1033,7 @@ mod tests {
 
     fn run(topo: &Topology, flows: &[Flow]) -> (SimResult, TailStats) {
         let mut sim = PacketSim::new(topo, FabricParams::default(), flows);
-        sim.run_to_completion();
+        sim.run_to_completion().expect("no stall");
         (sim.result(), sim.tail())
     }
 
@@ -827,7 +1136,7 @@ mod tests {
             params.packet.seed = seed;
             let mut sim = PacketSim::new(&t, params, &flows);
             sim.set_trace(true);
-            sim.run_to_completion();
+            sim.run_to_completion().expect("no stall");
             (sim.trace().to_vec(), sim.result(), sim.events())
         };
         let (tr_a, r_a, ev_a) = drive(7);
@@ -839,6 +1148,40 @@ mod tests {
         let (_, r_c, _) = drive(8);
         let sum = |r: &SimResult| r.flows.iter().map(|f| f.bytes).sum::<f64>();
         assert!((sum(&r_a) - sum(&r_c)).abs() < 1.0, "seed changed physics");
+    }
+
+    /// The wheel scheduler processes the identical event sequence the
+    /// retained heap oracle does: traces, results and event counts are
+    /// byte-identical (the full matrix lives in `tests/fabric_props.rs`).
+    #[test]
+    fn wheel_matches_heap_oracle() {
+        let t = Topology::paper();
+        let cands = candidates(&t, 0, t.gpu(1, 1), true);
+        let flows = vec![
+            Flow::new(cands[0].clone(), 24.0 * MB),
+            Flow::new(cands[1].clone(), 12.0 * MB).at(0.0003),
+            Flow::new(cands[2].clone(), 6.0 * MB).at(0.0005),
+        ];
+        let drive = |kind: SchedulerKind| {
+            let mut params = FabricParams::default();
+            params.packet.scheduler = kind;
+            let mut sim = PacketSim::new(&t, params, &flows);
+            sim.set_trace(true);
+            sim.run_to_completion().expect("no stall");
+            (sim.trace().to_vec(), sim.result(), sim.events(), sim.tail())
+        };
+        let (tr_w, r_w, ev_w, tail_w) = drive(SchedulerKind::Wheel);
+        let (tr_h, r_h, ev_h, tail_h) = drive(SchedulerKind::Heap);
+        assert_eq!(tr_w, tr_h, "wheel diverged from heap oracle");
+        assert_eq!(ev_w, ev_h);
+        assert_eq!(r_w.makespan.to_bits(), r_h.makespan.to_bits());
+        assert_eq!(r_w.link_bytes, r_h.link_bytes);
+        for (a, b) in r_w.flows.iter().zip(&r_h.flows) {
+            assert_eq!(a.finish_t.to_bits(), b.finish_t.to_bits());
+        }
+        assert_eq!(tail_w.sojourn_s, tail_h.sojourn_s);
+        assert_eq!(tail_w.per_pair_sojourn_s, tail_h.per_pair_sojourn_s);
+        assert_eq!(tail_w.peak_queue_bytes, tail_h.peak_queue_bytes);
     }
 
     /// Mid-flight preempt + re-issue conserves the stream payload and
@@ -853,14 +1196,14 @@ mod tests {
             FabricParams::default(),
             &[Flow::new(cands[0].clone(), bytes)],
         );
-        sim.advance_to(0.0003);
+        sim.advance_to(0.0003).expect("no stall");
         assert!(!sim.is_done());
         let residual = sim.preempt(0);
         assert!(residual > 0.0 && residual < bytes, "residual={residual}");
         let moved = sim.moved_bytes(0);
         assert!((moved + residual - bytes).abs() < 1.0);
         sim.add_flows(&[Flow::new(cands[1].clone(), residual).at(sim.now())]);
-        sim.run_to_completion();
+        sim.run_to_completion().expect("no stall");
         let r = sim.result();
         let delivered: f64 = r.flows.iter().map(|f| f.bytes).sum();
         assert!((delivered - bytes).abs() < 1.0, "delivered={delivered}");
@@ -879,14 +1222,14 @@ mod tests {
             Flow::new(cands[1].clone(), 12.0 * MB).at(0.0004),
         ];
         let mut whole = PacketSim::new(&t, FabricParams::default(), &flows);
-        whole.run_to_completion();
+        whole.run_to_completion().expect("no stall");
         let rw = whole.result();
 
         let mut sliced = PacketSim::new(&t, FabricParams::default(), &flows);
         let mut summed = vec![0.0; t.links.len()];
         let mut epoch = 0.0002;
         while !sliced.is_done() {
-            sliced.advance_to(epoch);
+            sliced.advance_to(epoch).expect("no stall");
             for (s, w) in summed.iter_mut().zip(sliced.take_window()) {
                 *s += w;
             }
@@ -914,21 +1257,36 @@ mod tests {
         let bytes = 64.0 * MB;
         let mut sim =
             PacketSim::new(&t, FabricParams::default(), &[Flow::new(p, bytes)]);
-        sim.advance_to(0.0003);
+        sim.advance_to(0.0003).expect("no stall");
         sim.apply_fault(&faults::Fault::LinkDown { link });
-        sim.advance_to(0.0050);
+        sim.advance_to(0.0050).expect("no stall");
         assert!(!sim.is_done(), "flow finished across a dead link");
         let stalled = sim.moved_bytes(0);
-        sim.advance_to(0.0060);
+        sim.advance_to(0.0060).expect("no stall");
         assert!(
             (sim.moved_bytes(0) - stalled).abs() < 1.0,
             "dead link kept delivering"
         );
         sim.apply_fault(&faults::Fault::LinkUp { link });
-        sim.run_to_completion();
+        sim.run_to_completion().expect("no stall");
         assert!(sim.is_done());
         let r = sim.result();
         assert!((r.flows[0].bytes - bytes).abs() < 1.0);
+    }
+
+    /// An unbounded run across a permanently dead link cannot make
+    /// progress: it reports the typed stall instead of panicking.
+    #[test]
+    fn unbounded_run_over_dead_link_reports_stall() {
+        let t = Topology::paper();
+        let p = candidates(&t, 0, 4, false).remove(0);
+        let link = p.hops[0];
+        let mut sim =
+            PacketSim::new(&t, FabricParams::default(), &[Flow::new(p, 8.0 * MB)]);
+        sim.apply_fault(&faults::Fault::LinkDown { link });
+        let err = sim.run_to_completion().expect_err("dead link must stall");
+        assert_eq!(err.live_flows, 1);
+        assert!(!sim.is_done());
     }
 
     /// A degraded rail serializes slower: same payload, a multiple of
@@ -947,7 +1305,7 @@ mod tests {
             if let Some(f) = fault {
                 sim.apply_fault(&f);
             }
-            sim.run_to_completion();
+            sim.run_to_completion().expect("no stall");
             sim.result().makespan
         };
         let healthy = fly(None);

@@ -1,0 +1,709 @@
+//! Partitioned parallel event loop for the packet engine (DESIGN.md
+//! §9): run one [`PacketSim`] per **node-disjoint flow component** and
+//! advance the components on worker threads between epoch boundaries.
+//!
+//! ## Why this is legal
+//!
+//! Two flows interact in the packet engine only through shared
+//! resources: a source GPU's injector, a destination GPU's receive
+//! stage, a link's FIFO, or a node's NIC-aggregate token clock. A
+//! flow's **footprint** is exactly that resource set — `{src, dst}`
+//! GPUs, its hop links, and the nodes those hops charge. Union-find
+//! over footprints yields components that provably never touch each
+//! other's state, so each component's event stream is independent of
+//! the others and can run on its own scheduler without any
+//! synchronization. Within a component, event order is the engine's
+//! usual total `(time, seq)` key — nothing about arbitration changes.
+//!
+//! ## Determinism and thread invariance
+//!
+//! Partition structure is a pure function of the flow sequence (never
+//! of thread count or timing), each sub-simulation is deterministic on
+//! its own, and every merged observable is assembled in **canonical
+//! component order** (component creation order, which is itself
+//! input-order determined): traces merge by `(time, component rank,
+//! within-component position)`, latency vectors concatenate in rank
+//! order, per-link counters sum. Worker threads only decide *when*
+//! each component advances, never *what* it computes — so results are
+//! byte-identical for every `[fabric.packet] threads` value, pinned by
+//! `prop_partitioned_thread_count_invariance` in
+//! `tests/fabric_props.rs`.
+//!
+//! With a single connected component (every collective whose flows
+//! share endpoints — e.g. one all-to-all) the wrapper degenerates to
+//! exactly one inline [`PacketSim`]: physics, traces and tail stats
+//! are bit-identical to the monolithic engine. Multi-tenant serving
+//! workloads with disjoint tenant placements are where the partition
+//! fans out.
+//!
+//! ## Merges
+//!
+//! A later `add_flows` epoch can issue a flow that bridges two live
+//! components (a re-routed residual crossing tenants' rails). The
+//! victim component's state is transplanted into the survivor
+//! ([`PacketSim::absorb`]): per-resource state moves without collision
+//! (the components were disjoint), pending events re-enter the
+//! survivor's queue in `(t, seq)` order, and flow tickets are
+//! rewritten. Components live in a generation-checked
+//! [`Slab`] — a stale [`Handle`] from a merged-away component can
+//! never alias the slot's next tenant.
+
+use super::backend::{FabricStall, TailStats};
+use super::faults::Fault;
+use super::fluid::{Flow, FlowResult, SimResult};
+use super::packet::{PacketSim, TraceEvent};
+use super::FabricParams;
+use crate::topology::Topology;
+use crate::util::arena::{Handle, Slab};
+use std::collections::BTreeMap;
+
+/// Where a globally indexed flow lives: which component (generation
+/// checked) and which local index inside it. Rewritten on merges, so a
+/// lookup through a stale handle indicates a logic error and is
+/// reported by the slab rather than silently reading a reused slot.
+#[derive(Clone, Copy, Debug)]
+struct FlowTicket {
+    sub: Handle,
+    local: u32,
+}
+
+/// The partitioned packet backend ([`super::BackendKind::Packet`] via
+/// [`super::make_backend`]). Public surface mirrors [`PacketSim`];
+/// flow indices are global issue order.
+pub struct PartitionedPacket<'a> {
+    topo: &'a Topology,
+    params: FabricParams,
+    threads: usize,
+    subs: Slab<PacketSim<'a>>,
+    /// Live components in creation order — the canonical merge order.
+    order: Vec<Handle>,
+    /// Global flow index → component + local index.
+    tickets: Vec<FlowTicket>,
+    /// Per-component global flow ids in local-index order.
+    sub_flows: BTreeMap<Handle, Vec<u32>>,
+    /// Per-component claimed sites (see [`Self::flow_sites`]).
+    footprint: BTreeMap<Handle, Vec<usize>>,
+    /// Site → owning component. Site ids: GPU `g` → `g`, node `n` →
+    /// `ng + n`, link `l` → `ng + nn + l`.
+    site_owner: Vec<Option<Handle>>,
+    /// Faults applied so far, replayed onto components created later
+    /// (scale state is global; a fresh component must see it too).
+    fault_log: Vec<Fault>,
+    t_ns: u64,
+    trace_on: bool,
+}
+
+impl<'a> PartitionedPacket<'a> {
+    pub fn new(topo: &'a Topology, params: FabricParams, flows: &[Flow]) -> Self {
+        let n_sites = topo.num_gpus() + topo.nodes + topo.links.len();
+        let mut pp = PartitionedPacket {
+            topo,
+            threads: params.packet.threads.max(1),
+            params,
+            subs: Slab::new(),
+            order: Vec::new(),
+            tickets: Vec::new(),
+            sub_flows: BTreeMap::new(),
+            footprint: BTreeMap::new(),
+            site_owner: vec![None; n_sites],
+            fault_log: Vec::new(),
+            t_ns: 0,
+            trace_on: false,
+        };
+        pp.add_flows(flows);
+        pp
+    }
+
+    /// The shared-resource sites a flow's events can touch.
+    fn flow_sites(&self, f: &Flow) -> Vec<usize> {
+        let ng = self.topo.num_gpus();
+        let nn = self.topo.nodes;
+        let mut sites = Vec::with_capacity(2 + 3 * f.path.hops.len());
+        sites.push(f.path.src);
+        sites.push(f.path.dst);
+        for &h in &f.path.hops {
+            sites.push(ng + nn + h);
+            let l = self.topo.link(h);
+            if let Some(n) = self.topo.nic_out_node(l) {
+                sites.push(ng + n);
+            }
+            if let Some(n) = self.topo.nic_in_node(l) {
+                sites.push(ng + n);
+            }
+        }
+        sites.sort_unstable();
+        sites.dedup();
+        sites
+    }
+
+    /// Live components (components = partition count the experiments
+    /// report).
+    pub fn num_components(&self) -> usize {
+        self.order.len()
+    }
+
+    /// Merge `victim` into `target`: transplant simulator state,
+    /// rewrite tickets, re-own sites.
+    fn merge(&mut self, target: Handle, victim: Handle) {
+        debug_assert_ne!(target, victim);
+        let vsim = self.subs.remove(victim).expect("victim component is live");
+        let tsim = self.subs.get_mut(target).expect("target component is live");
+        let base = tsim.absorb(vsim);
+        let moved = self.sub_flows.remove(&victim).unwrap_or_default();
+        for &gid in &moved {
+            let tk = &mut self.tickets[gid as usize];
+            tk.sub = target;
+            tk.local += base;
+        }
+        self.sub_flows.entry(target).or_default().extend(moved);
+        let sites = self.footprint.remove(&victim).unwrap_or_default();
+        for &s in &sites {
+            self.site_owner[s] = Some(target);
+        }
+        self.footprint.entry(target).or_default().extend(sites);
+        self.order.retain(|&h| h != victim);
+    }
+
+    /// Register additional flows; returns the first new global index.
+    /// Groups the batch by connectivity (union-find over sites), opens
+    /// new components for unclaimed groups, and merges components a
+    /// bridging flow couples.
+    pub fn add_flows(&mut self, flows: &[Flow]) -> usize {
+        let first = self.tickets.len();
+        if flows.is_empty() {
+            return first;
+        }
+        // union-find over the sites the new flows touch
+        let n_sites = self.site_owner.len();
+        let mut parent: Vec<u32> = vec![u32::MAX; n_sites]; // MAX = untouched root
+        fn find(parent: &mut [u32], mut s: usize) -> usize {
+            while parent[s] != u32::MAX && parent[s] as usize != s {
+                let gp = parent[parent[s] as usize];
+                if gp != u32::MAX {
+                    parent[s] = gp; // path halving
+                }
+                s = parent[s] as usize;
+            }
+            s
+        }
+        let site_lists: Vec<Vec<usize>> =
+            flows.iter().map(|f| self.flow_sites(f)).collect();
+        for sites in &site_lists {
+            let r0 = find(&mut parent, sites[0]);
+            parent[r0] = r0 as u32;
+            for &s in &sites[1..] {
+                let r = find(&mut parent, s);
+                parent[r] = r0 as u32;
+            }
+        }
+        // group the batch's flows by root, in first-appearance order
+        let mut group_of_root: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (i, sites) in site_lists.iter().enumerate() {
+            let root = find(&mut parent, sites[0]);
+            let gi = *group_of_root.entry(root).or_insert_with(|| {
+                groups.push(Vec::new());
+                groups.len() - 1
+            });
+            groups[gi].push(i);
+        }
+        let mut tickets: Vec<Option<FlowTicket>> = vec![None; flows.len()];
+        for group in groups {
+            // every live component owning one of the group's sites
+            let mut owners: Vec<Handle> = Vec::new();
+            for &i in &group {
+                for &s in &site_lists[i] {
+                    if let Some(h) = self.site_owner[s] {
+                        if !owners.contains(&h) {
+                            owners.push(h);
+                        }
+                    }
+                }
+            }
+            // canonical target: the oldest involved component
+            owners.sort_by_key(|h| {
+                self.order.iter().position(|x| x == h).expect("owner is live")
+            });
+            let target = match owners.first() {
+                Some(&t) => {
+                    for &victim in &owners[1..] {
+                        self.merge(t, victim);
+                    }
+                    t
+                }
+                None => {
+                    let mut sim =
+                        PacketSim::new(self.topo, self.params.clone(), &[]);
+                    sim.warp_clock_ns(self.t_ns);
+                    sim.set_trace(self.trace_on);
+                    for f in &self.fault_log {
+                        sim.apply_fault(f);
+                    }
+                    let h = self.subs.insert(sim);
+                    self.order.push(h);
+                    h
+                }
+            };
+            // claim the group's sites
+            let fp = self.footprint.entry(target).or_default();
+            for &i in &group {
+                for &s in &site_lists[i] {
+                    if self.site_owner[s].is_none() {
+                        self.site_owner[s] = Some(target);
+                        fp.push(s);
+                    }
+                }
+            }
+            // issue the group's flows, preserving batch-relative order
+            let batch: Vec<Flow> = group.iter().map(|&i| flows[i].clone()).collect();
+            let sim = self.subs.get_mut(target).expect("target component is live");
+            let local0 = sim.add_flows(&batch) as u32;
+            let ids = self.sub_flows.entry(target).or_default();
+            for (j, &i) in group.iter().enumerate() {
+                tickets[i] = Some(FlowTicket { sub: target, local: local0 + j as u32 });
+                ids.push((first + i) as u32);
+            }
+        }
+        self.tickets
+            .extend(tickets.into_iter().map(|t| t.expect("every flow grouped")));
+        first
+    }
+
+    /// Advance every component to `t_stop`, on `threads` workers when
+    /// more than one component is live. Thread assignment only decides
+    /// scheduling; each component's computation is identical, so the
+    /// outcome is byte-identical for every thread count.
+    pub fn advance_to(&mut self, t_stop: f64) -> Result<(), FabricStall> {
+        let stall = if self.threads <= 1 || self.order.len() <= 1 {
+            let mut results: Vec<(Handle, Result<(), FabricStall>)> = Vec::new();
+            for (h, sim) in self.subs.iter_mut() {
+                results.push((h, sim.advance_to(t_stop)));
+            }
+            self.first_stall(results)
+        } else {
+            let mut sims: Vec<(Handle, &mut PacketSim<'a>)> =
+                self.subs.iter_mut().collect();
+            let n = sims.len();
+            let per = n.div_ceil(self.threads.min(n));
+            let mut results: Vec<(Handle, Result<(), FabricStall>)> =
+                Vec::with_capacity(n);
+            std::thread::scope(|scope| {
+                let mut joins = Vec::new();
+                for chunk in sims.chunks_mut(per) {
+                    joins.push(scope.spawn(move || {
+                        chunk
+                            .iter_mut()
+                            .map(|(h, sim)| (*h, sim.advance_to(t_stop)))
+                            .collect::<Vec<_>>()
+                    }));
+                }
+                for j in joins {
+                    results.extend(j.join().expect("event-loop worker panicked"));
+                }
+            });
+            self.first_stall(results)
+        };
+        for h in &self.order {
+            let c = self.subs.get(*h).expect("live").clock_ns();
+            self.t_ns = self.t_ns.max(c);
+        }
+        // mirror the monolithic engine: a bounded advance moves the
+        // clock to the epoch boundary even with no components live
+        if t_stop.is_finite() {
+            self.t_ns = self.t_ns.max(super::packet::ns_of(t_stop));
+        }
+        match stall {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// The stall of the lowest-rank stalled component (canonical, so
+    /// the reported error does not depend on worker scheduling).
+    fn first_stall(
+        &self,
+        results: Vec<(Handle, Result<(), FabricStall>)>,
+    ) -> Option<FabricStall> {
+        for h in &self.order {
+            if let Some((_, Err(e))) = results.iter().find(|(hh, _)| hh == h) {
+                return Some(*e);
+            }
+        }
+        None
+    }
+
+    /// Run every remaining event (no epoch bound).
+    pub fn run_to_completion(&mut self) -> Result<(), FabricStall> {
+        self.advance_to(f64::INFINITY)
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.order.iter().all(|&h| self.subs.get(h).expect("live").is_done())
+    }
+
+    pub fn now(&self) -> f64 {
+        self.t_ns as f64 * 1e-9
+    }
+
+    /// Events processed across all components.
+    pub fn events(&self) -> u64 {
+        self.order.iter().map(|&h| self.subs.get(h).expect("live").events()).sum()
+    }
+
+    fn sim_of(&self, i: usize) -> (&PacketSim<'a>, usize) {
+        let tk = self.tickets[i];
+        let sim = self.subs.get(tk.sub).expect("stale flow ticket");
+        (sim, tk.local as usize)
+    }
+
+    pub fn residual_bytes(&self, i: usize) -> f64 {
+        let (sim, l) = self.sim_of(i);
+        sim.residual_bytes(l)
+    }
+
+    pub fn moved_bytes(&self, i: usize) -> f64 {
+        let (sim, l) = self.sim_of(i);
+        sim.moved_bytes(l)
+    }
+
+    pub fn is_live(&self, i: usize) -> bool {
+        let (sim, l) = self.sim_of(i);
+        sim.is_live(l)
+    }
+
+    pub fn flow(&self, i: usize) -> &Flow {
+        let (sim, l) = self.sim_of(i);
+        sim.flow(l)
+    }
+
+    pub fn num_flows(&self) -> usize {
+        self.tickets.len()
+    }
+
+    pub fn preempt(&mut self, i: usize) -> f64 {
+        let tk = self.tickets[i];
+        self.subs.get_mut(tk.sub).expect("stale flow ticket").preempt(tk.local as usize)
+    }
+
+    /// Broadcast a fault to every component (capacity-scale state is
+    /// global) and log it for components created later.
+    pub fn apply_fault(&mut self, fault: &Fault) {
+        for (_, sim) in self.subs.iter_mut() {
+            sim.apply_fault(fault);
+        }
+        self.fault_log.push(*fault);
+    }
+
+    pub fn take_window(&mut self) -> Vec<f64> {
+        let mut out = vec![0.0; self.topo.links.len()];
+        for (_, sim) in self.subs.iter_mut() {
+            for (o, w) in out.iter_mut().zip(sim.take_window()) {
+                *o += w;
+            }
+        }
+        out
+    }
+
+    /// Record compact event traces in every component (and components
+    /// created later).
+    pub fn set_trace(&mut self, on: bool) {
+        self.trace_on = on;
+        for (_, sim) in self.subs.iter_mut() {
+            sim.set_trace(on);
+        }
+    }
+
+    /// The merged trace in canonical `(time, component rank, position)`
+    /// order — deterministic and thread-count invariant. With one
+    /// component this is exactly the monolithic engine's trace.
+    pub fn trace(&self) -> Vec<TraceEvent> {
+        let mut all: Vec<(u64, usize, usize, TraceEvent)> = Vec::new();
+        for (rank, &h) in self.order.iter().enumerate() {
+            let sim = self.subs.get(h).expect("live");
+            for (pos, &e) in sim.trace().iter().enumerate() {
+                all.push((e.0, rank, pos, e));
+            }
+        }
+        all.sort_unstable_by_key(|&(t, r, p, _)| (t, r, p));
+        all.into_iter().map(|(_, _, _, e)| e).collect()
+    }
+
+    /// Snapshot the outcome in global flow-index order.
+    pub fn result(&self) -> SimResult {
+        let mut flows: Vec<FlowResult> = vec![
+            FlowResult { start_t: 0.0, finish_t: f64::NAN, bytes: 0.0 };
+            self.tickets.len()
+        ];
+        let mut link_bytes = vec![0.0; self.topo.links.len()];
+        for &h in &self.order {
+            let sim = self.subs.get(h).expect("live");
+            let r = sim.result();
+            let ids = self.sub_flows.get(&h).map(|v| v.as_slice()).unwrap_or(&[]);
+            debug_assert_eq!(ids.len(), r.flows.len());
+            for (&gid, fr) in ids.iter().zip(r.flows) {
+                flows[gid as usize] = fr;
+            }
+            for (lb, b) in link_bytes.iter_mut().zip(&r.link_bytes) {
+                *lb += b;
+            }
+        }
+        let makespan = flows
+            .iter()
+            .map(|f| f.finish_t)
+            .filter(|t| !t.is_nan())
+            .fold(0.0, f64::max);
+        SimResult { flows, link_bytes, makespan }
+    }
+
+    /// Tail observations merged in canonical component-rank order:
+    /// latency vectors concatenate by rank (percentiles are
+    /// order-independent), per-key maps union (disjoint components can
+    /// still share a tenant tag), peak depths take elementwise max.
+    pub fn tail(&self) -> TailStats {
+        let mut out = TailStats {
+            peak_queue_bytes: vec![0.0; self.topo.links.len()],
+            peak_recv_queue_bytes: vec![0.0; self.topo.num_gpus()],
+            ..TailStats::default()
+        };
+        for &h in &self.order {
+            let t = self.subs.get(h).expect("live").tail();
+            out.sojourn_s.extend(t.sojourn_s);
+            out.transit_s.extend(t.transit_s);
+            for (k, v) in t.per_pair_sojourn_s {
+                out.per_pair_sojourn_s.entry(k).or_default().extend(v);
+            }
+            for (k, v) in t.per_tag_sojourn_s {
+                out.per_tag_sojourn_s.entry(k).or_default().extend(v);
+            }
+            for (o, p) in out.peak_queue_bytes.iter_mut().zip(t.peak_queue_bytes) {
+                *o = o.max(p);
+            }
+            for (o, p) in
+                out.peak_recv_queue_bytes.iter_mut().zip(t.peak_recv_queue_bytes)
+            {
+                *o = o.max(p);
+            }
+            out.delivered_chunks += t.delivered_chunks;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::SchedulerKind;
+    use crate::topology::path::candidates;
+
+    const MB: f64 = 1024.0 * 1024.0;
+
+    fn params_with(threads: usize) -> FabricParams {
+        let mut p = FabricParams::default();
+        p.packet.threads = threads;
+        p
+    }
+
+    /// Guaranteed multi-component workload: intra-node NVLink flows on
+    /// distinct nodes share no GPU, link or NIC-charged node, so the
+    /// partition provably splits them.
+    fn disjoint_flows(topo: &Topology) -> Vec<Flow> {
+        let gpn = topo.gpus_per_node;
+        let mut flows = Vec::new();
+        for node in 0..2 {
+            let s = node * gpn;
+            let d = node * gpn + 1;
+            let p = candidates(topo, s, d, false).remove(0);
+            flows.push(Flow::new(p, 16.0 * MB));
+        }
+        flows
+    }
+
+    /// Intra-node flows on different nodes are node-disjoint: the
+    /// wrapper runs them as separate components, and the physics match
+    /// the monolithic engine bit-for-bit (identical per-flow events).
+    #[test]
+    fn disjoint_flows_partition_and_match_monolithic() {
+        let t = Topology::paper();
+        let flows = disjoint_flows(&t);
+        let mut par = PartitionedPacket::new(&t, params_with(1), &flows);
+        assert_eq!(par.num_components(), 2, "expected two components");
+        par.run_to_completion().expect("no stall");
+        let rp = par.result();
+
+        let mut mono = PacketSim::new(&t, FabricParams::default(), &flows);
+        mono.run_to_completion().expect("no stall");
+        let rm = mono.result();
+
+        assert_eq!(rp.makespan.to_bits(), rm.makespan.to_bits());
+        assert_eq!(rp.link_bytes, rm.link_bytes);
+        for (a, b) in rp.flows.iter().zip(&rm.flows) {
+            assert_eq!(a.finish_t.to_bits(), b.finish_t.to_bits());
+            assert_eq!(a.bytes.to_bits(), b.bytes.to_bits());
+        }
+        assert_eq!(par.events(), mono.events());
+    }
+
+    /// One connected component (shared source GPU) degenerates to a
+    /// single inline PacketSim: trace, result and tails bit-identical
+    /// to the monolithic engine.
+    #[test]
+    fn single_component_is_bit_identical_to_monolithic() {
+        let t = Topology::paper();
+        let cands = candidates(&t, 0, 1, true);
+        let flows = vec![
+            Flow::new(cands[0].clone(), 16.0 * MB),
+            Flow::new(cands[1].clone(), 8.0 * MB).at(0.0002),
+        ];
+        let mut par = PartitionedPacket::new(&t, params_with(8), &flows);
+        assert_eq!(par.num_components(), 1);
+        par.set_trace(true);
+        par.run_to_completion().expect("no stall");
+
+        let mut mono = PacketSim::new(&t, FabricParams::default(), &flows);
+        mono.set_trace(true);
+        mono.run_to_completion().expect("no stall");
+
+        assert_eq!(par.trace(), mono.trace().to_vec());
+        assert_eq!(par.result().makespan.to_bits(), mono.result().makespan.to_bits());
+        let (tp, tm) = (par.tail(), mono.tail());
+        assert_eq!(tp.sojourn_s, tm.sojourn_s);
+        assert_eq!(tp.per_pair_sojourn_s, tm.per_pair_sojourn_s);
+    }
+
+    /// Thread count must not change a single byte of the outcome.
+    #[test]
+    fn thread_count_invariance() {
+        let t = Topology::paper();
+        // 4 disjoint intra-node components + timing spread
+        let gpn = t.gpus_per_node;
+        let flows: Vec<Flow> = (0..4)
+            .map(|node| {
+                let s = node * gpn;
+                let p = candidates(&t, s, s + 1, false).remove(0);
+                Flow::new(p, (8.0 + node as f64) * MB).at(node as f64 * 1e-4)
+            })
+            .collect();
+        let drive = |threads: usize| {
+            let mut par = PartitionedPacket::new(&t, params_with(threads), &flows);
+            par.set_trace(true);
+            par.run_to_completion().expect("no stall");
+            (par.trace(), par.result(), par.tail().sojourn_s, par.events())
+        };
+        let (tr1, r1, so1, ev1) = drive(1);
+        for threads in [2, 8] {
+            let (tr, r, so, ev) = drive(threads);
+            assert_eq!(tr1, tr, "trace diverged at threads={threads}");
+            assert_eq!(ev1, ev);
+            assert_eq!(r1.makespan.to_bits(), r.makespan.to_bits());
+            assert_eq!(r1.link_bytes, r.link_bytes);
+            assert_eq!(so1, so);
+        }
+    }
+
+    /// A bridging flow forces a merge: the two components' state is
+    /// transplanted into one, every flow still finishes, bytes conserve
+    /// and tickets stay valid across the merge.
+    #[test]
+    fn bridging_flow_merges_components() {
+        let t = Topology::paper();
+        let flows = disjoint_flows(&t);
+        let mut par = PartitionedPacket::new(&t, params_with(2), &flows);
+        assert_eq!(par.num_components(), 2);
+        par.advance_to(0.0002).expect("no stall");
+        // bridge: node 0 GPU → node 1 GPU (touches both components'
+        // source GPUs through its endpoints and NIC charges)
+        let gpn = t.gpus_per_node;
+        let bridge = candidates(&t, 0, gpn + 1, true).remove(0);
+        let idx = par.add_flows(&[Flow::new(bridge, 8.0 * MB).at(par.now())]);
+        assert_eq!(idx, 2);
+        assert_eq!(par.num_components(), 1, "bridge must merge components");
+        par.run_to_completion().expect("no stall");
+        assert!(par.is_done());
+        let r = par.result();
+        let total: f64 = r.flows.iter().map(|f| f.bytes).sum();
+        assert!((total - (16.0 + 16.0 + 8.0) * MB).abs() < 1.0, "total={total}");
+        for i in 0..3 {
+            assert!(!par.is_live(i));
+            assert!(par.residual_bytes(i) < 1.0);
+        }
+    }
+
+    /// Merged runs still agree with a monolithic engine that saw the
+    /// same flow sequence (same issue order, same epoch boundary).
+    #[test]
+    fn merge_preserves_physics_vs_monolithic() {
+        let t = Topology::paper();
+        let gpn = t.gpus_per_node;
+        let base = disjoint_flows(&t);
+        let bridge_path = candidates(&t, 0, gpn + 1, true).remove(0);
+        let epoch = 0.0002;
+
+        let mut par = PartitionedPacket::new(&t, params_with(2), &base);
+        par.advance_to(epoch).expect("no stall");
+        par.add_flows(&[Flow::new(bridge_path.clone(), 8.0 * MB).at(epoch)]);
+        par.run_to_completion().expect("no stall");
+        let rp = par.result();
+
+        let mut mono = PacketSim::new(&t, FabricParams::default(), &base);
+        mono.advance_to(epoch).expect("no stall");
+        mono.add_flows(&[Flow::new(bridge_path, 8.0 * MB).at(epoch)]);
+        mono.run_to_completion().expect("no stall");
+        let rm = mono.result();
+
+        // the components' internal event interleavings are identical
+        // (disjoint state), so even finish times agree bitwise
+        for (a, b) in rp.flows.iter().zip(&rm.flows) {
+            assert_eq!(a.finish_t.to_bits(), b.finish_t.to_bits());
+        }
+        assert_eq!(rp.link_bytes, rm.link_bytes);
+    }
+
+    /// Faults broadcast to every component, including ones created
+    /// after the fault (the log replays onto them).
+    #[test]
+    fn faults_reach_components_created_later() {
+        let t = Topology::paper();
+        let gpn = t.gpus_per_node;
+        let first = disjoint_flows(&t);
+        let mut par = PartitionedPacket::new(&t, params_with(1), &first[..1]);
+        // degrade node 1's rail-0 before its component exists
+        let p1 = candidates(&t, gpn, gpn + 1, false).remove(0);
+        par.apply_fault(&Fault::StragglerNode { node: 1, inject_factor: 0.25 });
+        par.add_flows(&[Flow::new(p1.clone(), 16.0 * MB)]);
+        assert_eq!(par.num_components(), 2);
+        par.run_to_completion().expect("no stall");
+        let slow = par.result().flows[1].finish_t;
+
+        let mut healthy = PartitionedPacket::new(&t, params_with(1), &first[..1]);
+        healthy.add_flows(&[Flow::new(p1, 16.0 * MB)]);
+        healthy.run_to_completion().expect("no stall");
+        let fast = healthy.result().flows[1].finish_t;
+        assert!(
+            slow > 1.5 * fast,
+            "late component ignored the straggler fault: {slow} vs {fast}"
+        );
+    }
+
+    /// Both schedulers drive the partitioned wrapper to byte-identical
+    /// outcomes (the sub-simulation equivalence lifts through the
+    /// canonical merge).
+    #[test]
+    fn partitioned_wheel_matches_partitioned_heap() {
+        let t = Topology::paper();
+        let flows = disjoint_flows(&t);
+        let drive = |kind: SchedulerKind| {
+            let mut p = params_with(2);
+            p.packet.scheduler = kind;
+            let mut par = PartitionedPacket::new(&t, p, &flows);
+            par.set_trace(true);
+            par.run_to_completion().expect("no stall");
+            (par.trace(), par.result(), par.events())
+        };
+        let (tw, rw, ew) = drive(SchedulerKind::Wheel);
+        let (th, rh, eh) = drive(SchedulerKind::Heap);
+        assert_eq!(tw, th);
+        assert_eq!(ew, eh);
+        assert_eq!(rw.makespan.to_bits(), rh.makespan.to_bits());
+        assert_eq!(rw.link_bytes, rh.link_bytes);
+    }
+}

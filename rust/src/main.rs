@@ -142,7 +142,10 @@ fn main() {
         .flag("oversub", "2.0", "fat-tree core oversubscription ratio (>= 1.0)")
         .switch("no-reference", "skip the (slow) reference-solver baseline run")
         .switch("json", "emit one machine-readable JSON line per row")
-        .switch("check", "assert solver bit-identity + static-path equivalence (CI perf smoke)")
+        .switch(
+            "check",
+            "assert solver + packet-scheduler bit-identity, static-path equivalence (CI perf smoke)",
+        )
         .parse(rest)
         .map(|p| {
             let payload = p.get_f64("payload-mb") * MB;
@@ -203,6 +206,27 @@ fn main() {
                             std::process::exit(1);
                         }
                     }
+                    // packet-engine anchor: the timing wheel must replay
+                    // the heap oracle bit-for-bit on this point's planned
+                    // workload, and beat it on wall clock. The floor is
+                    // noise-tolerant (the bench harness tracks the real
+                    // ≥5x) and skipped at tiny sizes where wall clock is
+                    // all jitter; the payload is capped because the gate
+                    // is about per-event scheduling cost, not bytes.
+                    let smoke = scale::check_packet_engine(
+                        r.nodes,
+                        payload.min(MB),
+                        &params,
+                        &pcfg,
+                        topo_kind,
+                        (r.nodes >= 4).then_some(1.5),
+                    );
+                    eprintln!(
+                        "  {} nodes: packet wheel {:.2}M events/s, {:.2}x vs heap",
+                        r.nodes,
+                        smoke.events_per_sec() / 1e6,
+                        smoke.speedup(),
+                    );
                     // tiered acceptance anchor: planned multi-path must
                     // not lose to the ECMP hash-striping adversary
                     if let scale::ScaleTopo::FatTree { oversub } = topo_kind {

@@ -158,8 +158,19 @@ pub struct ServeRun {
     pub peak_reassembly: usize,
     pub sim: SimResult,
     pub sim_events: u64,
+    /// Wall-clock time of the whole execute() loop (seconds) — with
+    /// [`ServeRun::sim_events`] this yields the events/sec the serve
+    /// report prints. Not deterministic; never compare it.
+    pub wall_s: f64,
     /// Packet-backend tail observations (per-tag groups included).
     pub tail: Option<TailStats>,
+}
+
+impl ServeRun {
+    /// Simulator throughput of this run (events per wall-clock second).
+    pub fn events_per_sec(&self) -> f64 {
+        self.sim_events as f64 / self.wall_s.max(1e-12)
+    }
 }
 
 /// Drives a seeded job stream through admission → (joint | per-job)
@@ -199,6 +210,7 @@ impl<'a> MultiTenantExecutor<'a> {
     /// Fly the whole job stream. Deterministic: same topology, params
     /// and stream ⇒ byte-identical results at any thread count.
     pub fn execute(&mut self, jobs: Vec<JobSpec>) -> ServeRun {
+        let t_exec = std::time::Instant::now();
         let topo = self.topo;
         let tcfg = self.tcfg.clone();
         let chunk = self.params.chunk_bytes.max(1.0);
@@ -253,13 +265,15 @@ impl<'a> MultiTenantExecutor<'a> {
                     refresh_done(&mut tenants, eng.as_ref());
                 }
                 if queue.is_empty() {
-                    eng.run_to_completion();
+                    eng.run_to_completion()
+                        .expect("fault-free static path cannot stall");
                     refresh_done(&mut tenants, eng.as_ref());
                     if eng.is_done() && queue.is_empty() {
                         break;
                     }
                 } else {
-                    eng.advance_to(t_next);
+                    eng.advance_to(t_next)
+                        .expect("bounded epoch advance cannot stall");
                     let t_now = t_next;
                     t_next += cadence;
                     refresh_done(&mut tenants, eng.as_ref());
@@ -284,7 +298,8 @@ impl<'a> MultiTenantExecutor<'a> {
                     if eng.is_done() && queue.is_empty() {
                         break;
                     }
-                    eng.advance_to(t_next);
+                    eng.advance_to(t_next)
+                        .expect("bounded epoch advance cannot stall");
                 }
                 let t_now = t_next;
                 t_next += cadence;
@@ -684,6 +699,7 @@ impl<'a> MultiTenantExecutor<'a> {
             peak_reassembly: peak_reass_all,
             sim,
             sim_events,
+            wall_s: t_exec.elapsed().as_secs_f64(),
             tail,
         }
     }

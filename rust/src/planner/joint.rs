@@ -26,10 +26,21 @@
 //!   candidate. Relaying through an endpoint-busy GPU, by contrast, is
 //!   a choice the joint solve can and does avoid.
 //!
-//! The solve is serial and deterministic for every
-//! [`PlannerCfg::threads`] value (the orchestrator's byte-identity
-//! contract needs no parallel variant here; the per-tenant challengers
-//! of the independent arm keep the PR-3 parallel sweep). The
+//! ## Link-disjoint group decomposition
+//!
+//! The drain sweep touches an entry's candidate links, their shared
+//! virtual-constraint slots and their relay endpoint slots — nothing
+//! else. Union-find over that slot space splits the entry list into
+//! groups that provably share no load-table cell, so each group's
+//! sweep reads and writes values no other group ever sees: solving the
+//! groups independently is exactly the serial sweep restricted to each
+//! group (the only deviation is the `1e-6`-byte drain threshold, which
+//! applies per group instead of globally). Groups solve on scoped
+//! worker threads when [`PlannerCfg::threads`] > 1 and merge in
+//! canonical group order (first-appearance of each group in the
+//! tenant-major entry list), so plans are **byte-identical for every
+//! thread count** — the same invariance contract as the PR-3 parallel
+//! sweep, pinned by `joint_thread_count_invariance` below. The
 //! bottleneck cost metric is always used — `CostModel::sum_cost` is a
 //! single-job ablation knob and is ignored by the joint solve.
 
@@ -148,8 +159,9 @@ impl<'a> Planner<'a> {
     /// deadbanded excess, or the in-flight residual routing at
     /// admission time); `ep_initial` does the same for the virtual
     /// endpoint slots. Deterministic: identical inputs yield
-    /// byte-identical plans for every thread count (the solve is
-    /// serial by construction).
+    /// byte-identical plans for every thread count (link-disjoint
+    /// groups solve independently and merge in canonical order — see
+    /// the module docs).
     pub fn plan_joint(
         &mut self,
         tenants: &[TenantDemands],
@@ -166,8 +178,10 @@ impl<'a> Planner<'a> {
         let ext_len = num_links + shared.len();
 
         // like the single-tenant MWU, the load table carries one
-        // virtual entry per shared-constraint term (empty on flat)
-        let mut load = match initial {
+        // virtual entry per shared-constraint term (empty on flat).
+        // These are the warm-start *base* tables: every group's sweep
+        // starts from a copy and only ever touches its own slots.
+        let load0 = match initial {
             Some(init) => {
                 assert_eq!(init.len(), num_links);
                 shared.extended_loads(init)
@@ -175,7 +189,7 @@ impl<'a> Planner<'a> {
             None => vec![0.0f64; ext_len],
         };
         let ep_inv = joint_endpoint_inv_caps(topo, caps);
-        let mut ep_load = match ep_initial {
+        let ep_load0 = match ep_initial {
             Some(init) => {
                 assert_eq!(init.len(), ep_inv.len());
                 init.to_vec()
@@ -248,8 +262,6 @@ impl<'a> Planner<'a> {
             info_by_entry.push(infos);
         }
 
-        let mut flows_by_entry: Vec<Vec<f64>> =
-            info_by_entry.iter().map(|c| vec![0.0; c.len()]).collect();
         let mut incumbent: Vec<usize> = vec![usize::MAX; order.len()];
         for (ei, &(ti, key)) in order.iter().enumerate() {
             if let Some(seed) = &tenants[ti].incumbent_kinds {
@@ -263,59 +275,181 @@ impl<'a> Planner<'a> {
             }
         }
 
+        // ---- link-disjoint group decomposition (module docs) ----
+        // union-find over the joint slot space: links + shared virtual
+        // terms (0..ext_len, as the candidate hop lists already encode
+        // them) and relay endpoint slots (ext_len..ext_len + 2G)
+        let n_slots = ext_len + ep_inv.len();
+        let mut parent: Vec<u32> = vec![u32::MAX; n_slots]; // MAX = untouched root
+        fn find(parent: &mut [u32], mut s: usize) -> usize {
+            while parent[s] != u32::MAX && parent[s] as usize != s {
+                let gp = parent[parent[s] as usize];
+                if gp != u32::MAX {
+                    parent[s] = gp; // path halving
+                }
+                s = parent[s] as usize;
+            }
+            s
+        }
+        fn slots_of(c: &JointCand, ext_len: usize) -> impl Iterator<Item = usize> + '_ {
+            c.hops
+                .iter()
+                .map(|&(h, _, _)| h)
+                .chain(c.endpoints.iter().map(move |&e| ext_len + e))
+        }
+        for infos in &info_by_entry {
+            let mut first: Option<usize> = None;
+            for c in infos {
+                for s in slots_of(c, ext_len) {
+                    let r = find(&mut parent, s);
+                    match first {
+                        None => {
+                            parent[r] = r as u32;
+                            first = Some(r);
+                        }
+                        Some(f) => {
+                            let rf = find(&mut parent, f);
+                            parent[r] = rf as u32;
+                            first = Some(rf);
+                        }
+                    }
+                }
+            }
+        }
+        // group entries by root, in first-appearance (canonical) order
+        let mut group_of_root: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (ei, infos) in info_by_entry.iter().enumerate() {
+            let Some(c0) = infos.first() else { continue };
+            let Some(s0) = slots_of(c0, ext_len).next() else { continue };
+            let root = find(&mut parent, s0);
+            let gi = *group_of_root.entry(root).or_insert_with(|| {
+                groups.push(Vec::new());
+                groups.len() - 1
+            });
+            groups[gi].push(ei);
+        }
+
+        // one group's drain sweep, exactly the serial sweep restricted
+        // to the group's entries (per-entry λ, hysteresis, the lot)
+        struct GroupOut {
+            flows: Vec<(usize, Vec<f64>)>, // (entry, per-candidate bytes)
+            added: Vec<f64>,
+            added_by_tenant: Vec<Vec<f64>>,
+        }
+        let drain_group = |entries: &[usize]| -> GroupOut {
+            let mut load = load0.clone();
+            let mut ep_load = ep_load0.clone();
+            let mut added = vec![0.0f64; ext_len];
+            let mut added_by_tenant: Vec<Vec<f64>> =
+                tenants.iter().map(|_| vec![0.0f64; ext_len]).collect();
+            let mut flows: Vec<Vec<f64>> = entries
+                .iter()
+                .map(|&ei| vec![0.0; info_by_entry[ei].len()])
+                .collect();
+            let mut inc: Vec<usize> = entries.iter().map(|&ei| incumbent[ei]).collect();
+            let mut remaining: Vec<f64> = entries.iter().map(|&ei| totals[ei]).collect();
+            let mut r_tot: f64 = 0.0;
+            for r in &remaining {
+                r_tot += r;
+            }
+            let mut active: Vec<usize> = (0..entries.len()).collect();
+            while r_tot > 1e-6 && !active.is_empty() {
+                let mut ai = 0;
+                while ai < active.len() {
+                    let li = active[ai];
+                    let ei = entries[li];
+                    let infos = &info_by_entry[ei];
+                    let f_route =
+                        next_volume(remaining[li], eps, lambdas[ei], infos.len());
+                    let mut best_i = 0usize;
+                    let mut best_c = f64::INFINITY;
+                    for (i, c) in infos.iter().enumerate() {
+                        let pc = joint_path_cost(&cfg, &load, &ep_load, &ep_inv, c);
+                        if pc < best_c {
+                            best_c = pc;
+                            best_i = i;
+                        }
+                    }
+                    if inc[li] != usize::MAX && inc[li] != best_i {
+                        let inc_c = joint_path_cost(
+                            &cfg,
+                            &load,
+                            &ep_load,
+                            &ep_inv,
+                            &infos[inc[li]],
+                        );
+                        if inc_c.is_finite()
+                            && best_c >= inc_c * (1.0 - cfg.cost.hysteresis)
+                        {
+                            best_i = inc[li];
+                        }
+                    }
+                    inc[li] = best_i;
+                    let ti = order[ei].0;
+                    for &(h, _, inflate) in &infos[best_i].hops {
+                        load[h] += f_route * inflate;
+                        added[h] += f_route;
+                        added_by_tenant[ti][h] += f_route;
+                    }
+                    for &e in &infos[best_i].endpoints {
+                        ep_load[e] += f_route;
+                    }
+                    flows[li][best_i] += f_route;
+                    remaining[li] -= f_route;
+                    r_tot -= f_route;
+                    if remaining[li] <= 0.0 {
+                        active.swap_remove(ai);
+                    } else {
+                        ai += 1;
+                    }
+                }
+            }
+            GroupOut {
+                flows: entries.iter().copied().zip(flows).collect(),
+                added,
+                added_by_tenant,
+            }
+        };
+
+        // solve the groups — scoped workers when configured, and the
+        // merge below is in canonical group order either way
+        let outs: Vec<GroupOut> = if cfg.threads > 1 && groups.len() > 1 {
+            let mut slots: Vec<Option<GroupOut>> =
+                (0..groups.len()).map(|_| None).collect();
+            let per = groups.len().div_ceil(cfg.threads.min(groups.len()));
+            let drain = &drain_group;
+            std::thread::scope(|scope| {
+                for (gs, os) in groups.chunks(per).zip(slots.chunks_mut(per)) {
+                    scope.spawn(move || {
+                        for (g, o) in gs.iter().zip(os.iter_mut()) {
+                            *o = Some(drain(g));
+                        }
+                    });
+                }
+            });
+            slots.into_iter().map(|o| o.expect("group solved")).collect()
+        } else {
+            groups.iter().map(|g| drain_group(g)).collect()
+        };
+
+        // merge: groups are slot-disjoint, so elementwise sums place
+        // each group's exact values (everything else contributes +0.0)
         let mut added = vec![0.0f64; ext_len];
         let mut added_by_tenant: Vec<Vec<f64>> =
             tenants.iter().map(|_| vec![0.0f64; ext_len]).collect();
-
-        // the serial drain sweep, with per-entry λ
-        let mut remaining = totals.clone();
-        let mut r_tot = 0.0f64;
-        for r in &remaining {
-            r_tot += r;
-        }
-        let mut active: Vec<usize> = (0..order.len()).collect();
-        while r_tot > 1e-6 && !active.is_empty() {
-            let mut ai = 0;
-            while ai < active.len() {
-                let ei = active[ai];
-                let infos = &info_by_entry[ei];
-                let f_route =
-                    next_volume(remaining[ei], eps, lambdas[ei], infos.len());
-                let mut best_i = 0usize;
-                let mut best_c = f64::INFINITY;
-                for (i, c) in infos.iter().enumerate() {
-                    let pc = joint_path_cost(&cfg, &load, &ep_load, &ep_inv, c);
-                    if pc < best_c {
-                        best_c = pc;
-                        best_i = i;
-                    }
-                }
-                let inc = incumbent[ei];
-                if inc != usize::MAX && inc != best_i {
-                    let inc_c =
-                        joint_path_cost(&cfg, &load, &ep_load, &ep_inv, &infos[inc]);
-                    if inc_c.is_finite() && best_c >= inc_c * (1.0 - cfg.cost.hysteresis)
-                    {
-                        best_i = inc;
-                    }
-                }
-                incumbent[ei] = best_i;
-                let ti = order[ei].0;
-                for &(h, _, inflate) in &infos[best_i].hops {
-                    load[h] += f_route * inflate;
-                    added[h] += f_route;
-                    added_by_tenant[ti][h] += f_route;
-                }
-                for &e in &infos[best_i].endpoints {
-                    ep_load[e] += f_route;
-                }
-                flows_by_entry[ei][best_i] += f_route;
-                remaining[ei] -= f_route;
-                r_tot -= f_route;
-                if remaining[ei] <= 0.0 {
-                    active.swap_remove(ai);
-                } else {
-                    ai += 1;
+        let mut flows_by_entry: Vec<Vec<f64>> =
+            info_by_entry.iter().map(|c| vec![0.0; c.len()]).collect();
+        for o in outs {
+            for (ei, f) in o.flows {
+                flows_by_entry[ei] = f;
+            }
+            for (a, v) in added.iter_mut().zip(&o.added) {
+                *a += v;
+            }
+            for (ti, row) in o.added_by_tenant.iter().enumerate() {
+                for (a, v) in added_by_tenant[ti].iter_mut().zip(row) {
+                    *a += v;
                 }
             }
         }
@@ -462,6 +596,58 @@ mod tests {
             .parts
             .iter()
             .any(|(p, b)| p.kind == PathKind::IntraTwoHop { via: 2 } && *b > 0.0));
+    }
+
+    /// Thread count must not change a single byte of a joint plan: the
+    /// group decomposition is input-determined and the merge is in
+    /// canonical group order.
+    #[test]
+    fn joint_thread_count_invariance() {
+        let t = Topology::paper();
+        let tenants = vec![
+            // tenants 0/1 overlap on node 0 (one group), tenant 2 is
+            // node-1-internal (its own group)
+            TenantDemands::new(0, 1.0, vec![Demand::new(0, 1, 384.0 * MB)]),
+            TenantDemands::new(1, 2.0, vec![Demand::new(2, 1, 256.0 * MB)]),
+            TenantDemands::new(2, 1.0, vec![Demand::new(4, 5, 512.0 * MB)]),
+        ];
+        let run = |threads: usize| {
+            let cfg = PlannerCfg { threads, ..Default::default() };
+            Planner::new(&t, cfg).plan_joint(&tenants, None, &caps(), None)
+        };
+        let j1 = run(1);
+        for threads in [2, 8] {
+            let j = run(threads);
+            for (k, p) in &j1.per_tenant {
+                assert_eq!(
+                    p.canonical_string(),
+                    j.per_tenant[k].canonical_string(),
+                    "tenant {k} plan diverged at threads={threads}"
+                );
+            }
+            for (x, y) in j1.combined_link_load.iter().zip(&j.combined_link_load) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    /// Group decomposition semantics: a tenant whose candidates share
+    /// no link/endpoint slot with anyone else gets byte-identically the
+    /// plan it would get planned alone (equal weights keep λ equal).
+    #[test]
+    fn joint_disjoint_tenants_solve_independently() {
+        let t = Topology::paper();
+        let a = TenantDemands::new(0, 1.0, vec![Demand::new(0, 1, 256.0 * MB)]);
+        let b = TenantDemands::new(1, 1.0, vec![Demand::new(4, 6, 256.0 * MB)]);
+        let joint = Planner::new(&t, PlannerCfg::default())
+            .plan_joint(&[a.clone(), b.clone()], None, &caps(), None);
+        let solo = Planner::new(&t, PlannerCfg::default())
+            .plan_joint(&[a], None, &caps(), None);
+        assert_eq!(
+            joint.per_tenant[&0].canonical_string(),
+            solo.per_tenant[&0].canonical_string(),
+            "disjoint tenant's plan was perturbed by an unrelated tenant"
+        );
     }
 
     /// Differential endpoint bookkeeping: relay endpoints are the only

@@ -1,0 +1,230 @@
+//! Index-based slab arena with generation-checked handles.
+//!
+//! The partitioned packet engine (`fabric/packet_par`) keeps its
+//! component sub-simulations in a [`Slab`]: partition merges retire
+//! slots (the absorbed sub-sim's state is transplanted into the
+//! survivor) and later `add_flows` epochs allocate new ones, so a
+//! plain `Vec` index would silently dangle. A [`Handle`] carries the
+//! slot's generation; any access through a stale handle — a partition
+//! that was merged away, a flow ticket outliving a preempt — reports
+//! `None` instead of aliasing whatever reused the slot.
+//!
+//! Slots are recycled through an intrusive free list, so steady-state
+//! insert/remove does no allocation — the same arena discipline the
+//! event wheel applies to its buckets (DESIGN.md §9).
+
+/// Generation-checked reference to a [`Slab`] slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Handle {
+    idx: u32,
+    gen: u32,
+}
+
+impl Handle {
+    /// Raw slot index — stable for the lifetime of the referent, only
+    /// meaningful alongside a generation check.
+    pub fn index(&self) -> usize {
+        self.idx as usize
+    }
+}
+
+enum Slot<T> {
+    Occupied { gen: u32, value: T },
+    /// Free slot: remembers the generation to issue next and the next
+    /// free slot in the intrusive list (`u32::MAX` = end).
+    Vacant { gen: u32, next_free: u32 },
+}
+
+/// Slab allocator: `O(1)` insert/remove/get, dense `u32` indices,
+/// generation-checked handles.
+pub struct Slab<T> {
+    slots: Vec<Slot<T>>,
+    free_head: u32,
+    len: usize,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Self {
+        Slab { slots: Vec::new(), free_head: u32::MAX, len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn insert(&mut self, value: T) -> Handle {
+        self.len += 1;
+        if self.free_head != u32::MAX {
+            let idx = self.free_head;
+            let (gen, next_free) = match self.slots[idx as usize] {
+                Slot::Vacant { gen, next_free } => (gen, next_free),
+                Slot::Occupied { .. } => unreachable!("free list points at occupied slot"),
+            };
+            self.free_head = next_free;
+            self.slots[idx as usize] = Slot::Occupied { gen, value };
+            Handle { idx, gen }
+        } else {
+            let idx = self.slots.len() as u32;
+            assert!(idx != u32::MAX, "slab full");
+            self.slots.push(Slot::Occupied { gen: 0, value });
+            Handle { idx, gen: 0 }
+        }
+    }
+
+    /// Remove the referent; `None` if the handle is stale or vacant.
+    pub fn remove(&mut self, h: Handle) -> Option<T> {
+        let slot = self.slots.get_mut(h.idx as usize)?;
+        match slot {
+            Slot::Occupied { gen, .. } if *gen == h.gen => {
+                // bump the generation so every outstanding handle to
+                // this slot goes stale the moment it's vacated
+                let next = Slot::Vacant { gen: h.gen.wrapping_add(1), next_free: self.free_head };
+                let old = std::mem::replace(slot, next);
+                self.free_head = h.idx;
+                self.len -= 1;
+                match old {
+                    Slot::Occupied { value, .. } => Some(value),
+                    Slot::Vacant { .. } => unreachable!(),
+                }
+            }
+            _ => None,
+        }
+    }
+
+    pub fn get(&self, h: Handle) -> Option<&T> {
+        match self.slots.get(h.idx as usize) {
+            Some(Slot::Occupied { gen, value }) if *gen == h.gen => Some(value),
+            _ => None,
+        }
+    }
+
+    pub fn get_mut(&mut self, h: Handle) -> Option<&mut T> {
+        match self.slots.get_mut(h.idx as usize) {
+            Some(Slot::Occupied { gen, value }) if *gen == h.gen => Some(value),
+            _ => None,
+        }
+    }
+
+    pub fn contains(&self, h: Handle) -> bool {
+        self.get(h).is_some()
+    }
+
+    /// Iterate live entries in slot order (deterministic: slot order
+    /// is insertion order modulo free-list reuse, never hash order).
+    pub fn iter(&self) -> impl Iterator<Item = (Handle, &T)> {
+        self.slots.iter().enumerate().filter_map(|(i, s)| match s {
+            Slot::Occupied { gen, value } => {
+                Some((Handle { idx: i as u32, gen: *gen }, value))
+            }
+            Slot::Vacant { .. } => None,
+        })
+    }
+
+    /// Iterate live entries mutably in slot order — the disjoint
+    /// `&mut` borrows the partitioned event loop hands its worker
+    /// threads.
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (Handle, &mut T)> {
+        self.slots.iter_mut().enumerate().filter_map(|(i, s)| match s {
+            Slot::Occupied { gen, value } => {
+                Some((Handle { idx: i as u32, gen: *gen }, value))
+            }
+            Slot::Vacant { .. } => None,
+        })
+    }
+
+    /// Handles of live entries in slot order.
+    pub fn handles(&self) -> Vec<Handle> {
+        self.iter().map(|(h, _)| h).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut s = Slab::new();
+        let a = s.insert("a");
+        let b = s.insert("b");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a), Some(&"a"));
+        assert_eq!(s.get(b), Some(&"b"));
+        assert_eq!(s.remove(a), Some("a"));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get(a), None);
+        assert_eq!(s.get(b), Some(&"b"));
+    }
+
+    #[test]
+    fn stale_handle_is_rejected_after_reuse() {
+        let mut s = Slab::new();
+        let a = s.insert(1u32);
+        s.remove(a);
+        let b = s.insert(2u32);
+        // slot reused, generation bumped
+        assert_eq!(b.index(), a.index());
+        assert_ne!(a, b);
+        assert_eq!(s.get(a), None);
+        assert!(!s.contains(a));
+        assert_eq!(s.remove(a), None);
+        assert_eq!(s.get(b), Some(&2));
+    }
+
+    #[test]
+    fn double_remove_is_none() {
+        let mut s = Slab::new();
+        let a = s.insert(9u8);
+        assert_eq!(s.remove(a), Some(9));
+        assert_eq!(s.remove(a), None);
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn free_list_recycles_lifo_without_growth() {
+        let mut s = Slab::new();
+        let hs: Vec<_> = (0..8).map(|i| s.insert(i)).collect();
+        for &h in &hs {
+            s.remove(h);
+        }
+        // re-fill: all 8 slots recycled (LIFO), vec does not grow
+        let hs2: Vec<_> = (0..8).map(|i| s.insert(i + 100)).collect();
+        assert_eq!(s.slots.len(), 8);
+        let mut idxs: Vec<_> = hs2.iter().map(|h| h.index()).collect();
+        idxs.sort_unstable();
+        assert_eq!(idxs, (0..8).collect::<Vec<_>>());
+        for (i, &h) in hs2.iter().enumerate() {
+            assert_eq!(s.get(h), Some(&(i + 100)));
+        }
+    }
+
+    #[test]
+    fn iter_is_slot_ordered() {
+        let mut s = Slab::new();
+        let a = s.insert("a");
+        let _b = s.insert("b");
+        let _c = s.insert("c");
+        s.remove(a);
+        let vals: Vec<_> = s.iter().map(|(_, v)| *v).collect();
+        assert_eq!(vals, vec!["b", "c"]);
+        assert_eq!(s.handles().len(), 2);
+    }
+
+    #[test]
+    fn get_mut_mutates_through_handle() {
+        let mut s = Slab::new();
+        let a = s.insert(vec![1, 2]);
+        s.get_mut(a).unwrap().push(3);
+        assert_eq!(s.get(a), Some(&vec![1, 2, 3]));
+    }
+}

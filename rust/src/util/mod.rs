@@ -1,9 +1,12 @@
 //! Self-built substrates for crates unavailable in the offline vendor
-//! set (see DESIGN.md §2): PRNG, JSON, CLI parsing, statistics, and a
-//! mini property-testing harness.
+//! set (see DESIGN.md §2): PRNG, JSON, CLI parsing, statistics, a
+//! mini property-testing harness, and the event-engine substrates
+//! (calendar-queue scheduler, slab arena).
 
+pub mod arena;
 pub mod bench;
 pub mod cli;
+pub mod eventq;
 pub mod json;
 pub mod quickcheck;
 pub mod rng;

@@ -12,7 +12,7 @@
 //! });
 //! ```
 
-use crate::util::rng::Rng;
+use crate::util::rng::{stream_seed, Rng};
 
 /// A single test case's randomness source, with convenience generators.
 pub struct Gen {
@@ -62,7 +62,7 @@ pub fn check<F: FnMut(&mut Gen) -> PropResult>(cases: usize, prop: F) {
 
 pub fn check_seeded<F: FnMut(&mut Gen) -> PropResult>(base_seed: u64, cases: usize, mut prop: F) {
     for case in 0..cases {
-        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let seed = stream_seed(base_seed, case as u64);
         let mut g = Gen { rng: Rng::new(seed), case };
         if let Err(msg) = prop(&mut g) {
             panic!(

@@ -2,6 +2,45 @@
 //! offline vendor set). SplitMix64 core with the usual convenience
 //! samplers; good enough statistical quality for workload generation
 //! and property testing, and fully reproducible across runs.
+//!
+//! The free functions below are the shared SplitMix64 primitives the
+//! simulator's seeded subsystems build on: [`Rng`] itself, the ECMP
+//! hash baseline (`baselines/ecmp_hash`), the packet engine's
+//! per-injector streams (`fabric/packet`), and the property-test
+//! case derivation (`util/quickcheck`). They were previously
+//! re-implemented locally at each of those sites; keeping one copy
+//! here pins the bit pattern every seeded anchor depends on.
+
+/// The SplitMix64 increment, `⌊2⁶⁴/φ⌋` (Weyl constant).
+pub const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// The SplitMix64 output finalizer: a bijective avalanche over `u64`.
+/// Every bit of the input affects roughly half the output bits, which
+/// is what lets correlated inputs (sequential Weyl states, packed
+/// `(src, dst, rail)` keys) act as independent uniform draws.
+#[inline]
+pub fn avalanche64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One full stateless SplitMix64 step: `avalanche64(z + GOLDEN)`.
+/// Equivalent to the output SplitMix64 produces from state `z`; this
+/// is the hash the ECMP baseline applies to packed path keys.
+#[inline]
+pub fn mix64(z: u64) -> u64 {
+    avalanche64(z.wrapping_add(GOLDEN))
+}
+
+/// Derive the seed for substream `stream` of a seeded subsystem:
+/// `seed ^ stream·GOLDEN`. Used for per-injector RNG streams in the
+/// packet engine and per-case property-test seeds, so sibling streams
+/// share no prefix.
+#[inline]
+pub fn stream_seed(seed: u64, stream: u64) -> u64 {
+    seed ^ stream.wrapping_mul(GOLDEN)
+}
 
 /// SplitMix64 PRNG (Steele, Lea, Flood 2014). Passes BigCrush; 64-bit
 /// state, trivially seedable, never hits a zero-state pathology.
@@ -12,16 +51,13 @@ pub struct Rng {
 
 impl Rng {
     pub fn new(seed: u64) -> Self {
-        Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+        Rng { state: seed.wrapping_add(GOLDEN) }
     }
 
     /// Next raw 64-bit value.
     pub fn next_u64(&mut self) -> u64 {
-        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
-        let mut z = self.state;
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-        z ^ (z >> 31)
+        self.state = self.state.wrapping_add(GOLDEN);
+        avalanche64(self.state)
     }
 
     /// Uniform in [0, 1).
@@ -121,6 +157,41 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Golden values (computed independently) pinning the shared
+    /// SplitMix64 primitives: every seeded anchor in the repo depends
+    /// on these exact bit patterns.
+    #[test]
+    fn splitmix_golden_values() {
+        assert_eq!(avalanche64(0), 0);
+        assert_eq!(avalanche64(1), 0x5692_161D_100B_05E5);
+        assert_eq!(avalanche64(0xDEAD_BEEF), 0x4E06_2702_EC92_9EEA);
+        // mix64(0) is the canonical SplitMix64 first output for seed 0
+        assert_eq!(mix64(0), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(mix64(1), 0x910A_2DEC_8902_5CC1);
+        assert_eq!(mix64(42), 0xBDD7_3226_2FEB_6E95);
+        assert_eq!(stream_seed(0x9A_C4E7, 5), 0x1715_609F_7CEE_A88E);
+        // stream 0 is the base seed itself
+        assert_eq!(stream_seed(0x1234, 0), 0x1234);
+        let mut r = Rng::new(7);
+        assert_eq!(r.next_u64(), 0x044C_3CD7_F43C_661C);
+        assert_eq!(r.next_u64(), 0xE698_4080_BAB1_2A02);
+        assert_eq!(r.next_u64(), 0x953A_EB70_673E_29CB);
+    }
+
+    /// `Rng` is exactly the stateless step iterated: state k+G yields
+    /// mix64(k+G) — the identity that makes `mix64` "one SplitMix64
+    /// draw" rather than a lookalike.
+    #[test]
+    fn rng_is_iterated_mix64() {
+        let seed = 0xFEED_F00D;
+        let mut r = Rng::new(seed);
+        let mut state = seed.wrapping_add(GOLDEN);
+        for _ in 0..32 {
+            assert_eq!(r.next_u64(), mix64(state));
+            state = state.wrapping_add(GOLDEN);
+        }
+    }
 
     #[test]
     fn deterministic() {

@@ -5,8 +5,9 @@
 use nimble::coordinator::reassembly::{ChunkArrival, ReassemblyTable};
 use nimble::fabric::fluid::{Flow, FluidSim, SimEngine, SolverKind};
 use nimble::fabric::packet::{PacketSim, TRACE_DELIVER};
+use nimble::fabric::packet_par::PartitionedPacket;
 use nimble::fabric::pipeline::PipelineModel;
-use nimble::fabric::{FabricParams, XferMode};
+use nimble::fabric::{FabricParams, Fault, SchedulerKind, XferMode};
 use nimble::prop_assert;
 use nimble::topology::path::candidates;
 use nimble::topology::Topology;
@@ -257,7 +258,7 @@ fn prop_packet_conserves_bytes_end_to_end() {
     check_seeded(0x9AC1, 25, |g| {
         let flows = random_packet_flows(g, &topo, 12);
         let mut sim = PacketSim::new(&topo, FabricParams::default(), &flows);
-        sim.run_to_completion();
+        sim.run_to_completion().expect("fault-free run cannot stall");
         let r = sim.result();
         for (i, fr) in r.flows.iter().enumerate() {
             prop_assert!(fr.finish_t.is_finite(), "flow {i} never delivered");
@@ -318,7 +319,7 @@ fn prop_packet_chunk_streams_reassemble() {
         }
         let mut sim = PacketSim::new(&topo, FabricParams::default(), &flows);
         sim.set_trace(true);
-        sim.run_to_completion();
+        sim.run_to_completion().expect("fault-free run cannot stall");
         // contiguous seq block per flow, concatenated in flow order
         // within each pair (the replan executor's chunk layout)
         let mut next_base: BTreeMap<(usize, usize), u64> = BTreeMap::new();
@@ -376,7 +377,7 @@ fn prop_packet_identical_seeds_identical_traces() {
             params.packet.seed = seed;
             let mut sim = PacketSim::new(&topo, params, &flows);
             sim.set_trace(true);
-            sim.run_to_completion();
+            sim.run_to_completion().expect("fault-free run cannot stall");
             (sim.trace().to_vec(), sim.result(), sim.events())
         };
         let (ta, ra, ea) = drive(seed);
@@ -394,6 +395,182 @@ fn prop_packet_identical_seeds_identical_traces() {
             );
         }
         prop_assert!(ra.link_bytes == rb.link_bytes, "link bytes diverged");
+        Ok(())
+    });
+}
+
+/// The timing wheel IS the binary heap, bit for bit: identical event
+/// traces, event counts, results and tail statistics on randomized
+/// flow sets. The heap arm is retained purely as this equivalence
+/// oracle (same playbook as `SolverKind::Reference` for the fluid
+/// water-filler).
+#[test]
+fn prop_wheel_matches_heap_bitwise() {
+    let topo = Topology::paper();
+    check_seeded(0x9AC5, 12, |g| {
+        let flows = random_packet_flows(g, &topo, 8);
+        let drive = |kind: SchedulerKind| {
+            let mut params = FabricParams::default();
+            params.packet.scheduler = kind;
+            let mut sim = PacketSim::new(&topo, params, &flows);
+            sim.set_trace(true);
+            sim.run_to_completion().expect("fault-free run cannot stall");
+            (sim.trace().to_vec(), sim.result(), sim.events(), sim.tail())
+        };
+        let (tw, rw, ew, sw) = drive(SchedulerKind::Wheel);
+        let (th, rh, eh, sh) = drive(SchedulerKind::Heap);
+        prop_assert!(tw == th, "event traces diverged between wheel and heap");
+        prop_assert!(ew == eh, "event counts diverged: {ew} vs {eh}");
+        prop_assert!(
+            rw.makespan.to_bits() == rh.makespan.to_bits(),
+            "makespan diverged"
+        );
+        for (a, b) in rw.flows.iter().zip(&rh.flows) {
+            prop_assert!(
+                a.finish_t.to_bits() == b.finish_t.to_bits(),
+                "finish times diverged"
+            );
+        }
+        prop_assert!(rw.link_bytes == rh.link_bytes, "link bytes diverged");
+        prop_assert!(sw.sojourn_s == sh.sojourn_s, "sojourn latencies diverged");
+        prop_assert!(sw.transit_s == sh.transit_s, "transit latencies diverged");
+        prop_assert!(
+            sw.per_pair_sojourn_s == sh.per_pair_sojourn_s,
+            "per-pair tails diverged"
+        );
+        prop_assert!(
+            sw.per_tag_sojourn_s == sh.per_tag_sojourn_s,
+            "per-tag tails diverged"
+        );
+        prop_assert!(
+            sw.peak_queue_bytes == sh.peak_queue_bytes,
+            "peak queue depths diverged"
+        );
+        prop_assert!(
+            sw.peak_recv_queue_bytes == sh.peak_recv_queue_bytes,
+            "peak receive depths diverged"
+        );
+        Ok(())
+    });
+}
+
+/// Wheel == heap also under mid-run fault injection (link down/up plus
+/// a straggler node): restore kicks go through `schedule()`, which the
+/// wheel must land at the exact same `(t, seq)` key the heap does.
+#[test]
+fn prop_wheel_matches_heap_under_faults() {
+    let topo = Topology::paper();
+    check_seeded(0x9AC6, 10, |g| {
+        let flows = random_packet_flows(g, &topo, 6);
+        let link = g.usize(0, topo.links.len() - 1);
+        let node = g.usize(0, topo.nodes - 1);
+        let t_down = g.f64(1e-4, 6e-4);
+        let t_up = t_down + g.f64(1e-4, 5e-4);
+        let drive = |kind: SchedulerKind| {
+            let mut params = FabricParams::default();
+            params.packet.scheduler = kind;
+            let mut sim = PacketSim::new(&topo, params, &flows);
+            sim.set_trace(true);
+            sim.advance_to(t_down).expect("bounded advance cannot stall");
+            sim.apply_fault(&Fault::LinkDown { link });
+            sim.advance_to(t_up).expect("bounded advance cannot stall");
+            sim.apply_fault(&Fault::LinkUp { link });
+            sim.apply_fault(&Fault::StragglerNode { node, inject_factor: 0.5 });
+            sim.run_to_completion().expect("restored fabric cannot stall");
+            (sim.trace().to_vec(), sim.result(), sim.events())
+        };
+        let (tw, rw, ew) = drive(SchedulerKind::Wheel);
+        let (th, rh, eh) = drive(SchedulerKind::Heap);
+        prop_assert!(tw == th, "faulted traces diverged between wheel and heap");
+        prop_assert!(ew == eh, "faulted event counts diverged");
+        prop_assert!(
+            rw.makespan.to_bits() == rh.makespan.to_bits(),
+            "faulted makespan diverged"
+        );
+        prop_assert!(rw.link_bytes == rh.link_bytes, "faulted link bytes diverged");
+        Ok(())
+    });
+}
+
+/// Epoch-sliced `advance_to` is the unbounded `run` on the wheel: the
+/// cursor/overflow bookkeeping must not depend on where the epoch
+/// boundaries fall (randomized slice widths).
+#[test]
+fn prop_wheel_epoch_sliced_equals_unbounded() {
+    let topo = Topology::paper();
+    check_seeded(0x9AC7, 10, |g| {
+        let flows = random_packet_flows(g, &topo, 8);
+        let mut whole = PacketSim::new(&topo, FabricParams::default(), &flows);
+        whole.set_trace(true);
+        whole.run_to_completion().expect("fault-free run cannot stall");
+
+        let mut sliced = PacketSim::new(&topo, FabricParams::default(), &flows);
+        sliced.set_trace(true);
+        let mut epoch = 0.0;
+        while !sliced.is_done() {
+            epoch += g.f64(5e-5, 6e-4);
+            sliced.advance_to(epoch).expect("bounded advance cannot stall");
+            prop_assert!(epoch < 10.0, "runaway simulation");
+        }
+        prop_assert!(
+            whole.trace() == sliced.trace(),
+            "epoch slicing changed the event trace"
+        );
+        prop_assert!(whole.events() == sliced.events(), "event counts diverged");
+        let (rw, rs) = (whole.result(), sliced.result());
+        prop_assert!(
+            rw.makespan.to_bits() == rs.makespan.to_bits(),
+            "makespan diverged"
+        );
+        prop_assert!(rw.link_bytes == rs.link_bytes, "link bytes diverged");
+        Ok(())
+    });
+}
+
+/// The partitioned event loop is byte-identical for every thread
+/// count: partition structure is input-determined and every merged
+/// observable assembles in canonical component order.
+#[test]
+fn prop_partitioned_thread_count_invariance() {
+    let topo = Topology::paper();
+    check_seeded(0x9AC8, 8, |g| {
+        let flows = random_packet_flows(g, &topo, 10);
+        let drive = |threads: usize| {
+            let mut params = FabricParams::default();
+            params.packet.threads = threads;
+            let mut par = PartitionedPacket::new(&topo, params, &flows);
+            par.set_trace(true);
+            par.run_to_completion().expect("fault-free run cannot stall");
+            (par.trace(), par.result(), par.events(), par.tail())
+        };
+        let (t1, r1, e1, s1) = drive(1);
+        for threads in [2usize, 8] {
+            let (t, r, e, s) = drive(threads);
+            prop_assert!(t1 == t, "trace diverged at threads={threads}");
+            prop_assert!(e1 == e, "event count diverged at threads={threads}");
+            prop_assert!(
+                r1.makespan.to_bits() == r.makespan.to_bits(),
+                "makespan diverged at threads={threads}"
+            );
+            for (a, b) in r1.flows.iter().zip(&r.flows) {
+                prop_assert!(
+                    a.finish_t.to_bits() == b.finish_t.to_bits(),
+                    "finish times diverged at threads={threads}"
+                );
+            }
+            prop_assert!(
+                r1.link_bytes == r.link_bytes,
+                "link bytes diverged at threads={threads}"
+            );
+            prop_assert!(
+                s1.sojourn_s == s.sojourn_s,
+                "sojourn tails diverged at threads={threads}"
+            );
+            prop_assert!(
+                s1.per_pair_sojourn_s == s.per_pair_sojourn_s,
+                "per-pair tails diverged at threads={threads}"
+            );
+        }
         Ok(())
     });
 }
