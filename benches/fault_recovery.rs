@@ -13,7 +13,7 @@ use nimble::exp::faults::{scenario_rows, CADENCE_S};
 use nimble::fabric::{FabricParams, Scenario, ScenarioParams};
 use nimble::planner::PlannerCfg;
 use nimble::topology::Topology;
-use nimble::util::json::Json;
+use nimble::util::json::{json_line, Json};
 use std::time::Instant;
 
 fn main() {
@@ -44,30 +44,32 @@ fn main() {
         );
         let wall = t.elapsed().as_secs_f64();
         for r in &rows {
-            let line = Json::obj(vec![
-                ("exp", Json::str("fault_recovery")),
-                ("topo", Json::str(r.topo)),
-                ("scenario", Json::str(r.scenario.label())),
-                ("arm", Json::str(r.arm)),
-                ("goodput_gbps", Json::num(r.goodput_gbps)),
-                ("clean_gbps", Json::num(clean.goodput_gbps)),
-                ("retention", Json::num(r.retention)),
-                // -1: the arm never re-reached 90% of steady state
-                (
-                    "ttr_epochs",
-                    Json::num(r.ttr_epochs.map_or(-1.0, |k| k as f64)),
-                ),
-                (
-                    "ttr_ms",
-                    Json::num(
-                        r.ttr_epochs.map_or(-1.0, |k| k as f64 * CADENCE_S * 1e3),
+            let line = json_line(
+                "fault_recovery",
+                vec![
+                    ("topo", Json::str(r.topo)),
+                    ("scenario", Json::str(r.scenario.label())),
+                    ("arm", Json::str(r.arm)),
+                    ("goodput_gbps", Json::num(r.goodput_gbps)),
+                    ("clean_gbps", Json::num(clean.goodput_gbps)),
+                    ("retention", Json::num(r.retention)),
+                    // -1: the arm never re-reached 90% of steady state
+                    (
+                        "ttr_epochs",
+                        Json::num(r.ttr_epochs.map_or(-1.0, |k| k as f64)),
                     ),
-                ),
-                ("replans", Json::num(r.replans as f64)),
-                ("preemptions", Json::num(r.preemptions as f64)),
-                ("wall_s_all_arms", Json::num(wall)),
-            ]);
-            println!("{}", line.to_string_compact());
+                    (
+                        "ttr_ms",
+                        Json::num(
+                            r.ttr_epochs.map_or(-1.0, |k| k as f64 * CADENCE_S * 1e3),
+                        ),
+                    ),
+                    ("replans", Json::num(r.replans as f64)),
+                    ("preemptions", Json::num(r.preemptions as f64)),
+                    ("wall_s_all_arms", Json::num(wall)),
+                ],
+            );
+            println!("{line}");
         }
         // the recovery floor: on every scenario the replanned arm must
         // retain at least as much goodput as the frozen static plan

@@ -11,16 +11,91 @@
 //! noise-tolerant twin of this gate (`nimble scale --check`, 1.5x
 //! floor); this harness tracks the real trajectory across PRs.
 //!
+//! Since the telemetry subsystem landed, this harness also gates the
+//! trace overhead: flying the identical replanned packet run with an
+//! enabled [`Recorder`] (per-epoch snapshots, decision audits, the
+//! summary record) must cost at most 5% wall clock over the disabled
+//! no-op recorder — and must reproduce the makespan bit-for-bit, the
+//! observer-purity contract of DESIGN.md §15.
+//!
 //! Like `benches/scale_sweep.rs`, every point emits one machine-readable
 //! JSON line (`{"exp":"packet_engine",...}`).
 
+use nimble::coordinator::ReplanExecutor;
 use nimble::exp::scale::{check_packet_engine, ScaleTopo};
 use nimble::exp::MB;
-use nimble::fabric::FabricParams;
-use nimble::planner::PlannerCfg;
+use nimble::fabric::{BackendKind, FabricParams};
+use nimble::planner::{Planner, PlannerCfg, ReplanCfg};
+use nimble::telemetry::Recorder;
+use nimble::topology::Topology;
+use nimble::util::json::{json_line, Json};
+use nimble::workloads::skew::hotspot_alltoallv;
+use std::time::Instant;
 
 /// Wheel-over-heap events/sec floor asserted at the 64-node point.
 const SPEEDUP_FLOOR: f64 = 5.0;
+
+/// Wall-clock ceiling on the enabled-recorder overhead (fractional).
+const TELEMETRY_OVERHEAD_CEILING: f64 = 0.05;
+
+/// Repetitions per arm; min-of-N absorbs shared-machine noise so the
+/// 5% gate measures the recorder, not the scheduler jitter.
+const OVERHEAD_REPS: usize = 7;
+
+/// The telemetry-overhead gate: the replanned packet run that carries
+/// the densest instrumentation (an epoch snapshot every cadence, plus
+/// planner audits and the summary) is flown with the recorder off and
+/// on; the enabled arm must stay within [`TELEMETRY_OVERHEAD_CEILING`]
+/// of the disabled arm's wall clock and reproduce its makespan bits.
+fn telemetry_overhead_gate() {
+    let topo = Topology::paper();
+    let demands = hotspot_alltoallv(&topo, 64.0 * MB, 0.7, topo.gpu(1, 0));
+    let plan = Planner::new(&topo, PlannerCfg::default()).plan(&demands);
+    let params = FabricParams { backend: BackendKind::Packet, ..FabricParams::default() };
+    let rcfg = ReplanCfg { enable: true, cadence_s: 2.0e-4, margin: 0.1, ..ReplanCfg::default() };
+    let fly = |rec: Recorder| {
+        let t = Instant::now();
+        let run = ReplanExecutor::new(&topo, params.clone(), PlannerCfg::default(), rcfg.clone())
+            .with_recorder(rec)
+            .execute(&plan, &demands);
+        (t.elapsed().as_secs_f64(), run.report.makespan_s)
+    };
+    // warm-up pass per arm, then interleaved timed passes
+    let (_, makespan_off) = fly(Recorder::disabled());
+    let rec = Recorder::enabled();
+    let (_, makespan_on) = fly(rec.clone());
+    let records = rec.len();
+    assert!(records > 0, "enabled recorder captured nothing");
+    assert_eq!(
+        makespan_off.to_bits(),
+        makespan_on.to_bits(),
+        "tracing changed the simulated makespan"
+    );
+    let (mut off, mut on) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..OVERHEAD_REPS {
+        off = off.min(fly(Recorder::disabled()).0);
+        on = on.min(fly(Recorder::enabled()).0);
+    }
+    let overhead = on / off.max(1e-12) - 1.0;
+    let line = json_line(
+        "packet_engine.telemetry",
+        vec![
+            ("records", Json::num(records as f64)),
+            ("off_ms", Json::num(off * 1e3)),
+            ("on_ms", Json::num(on * 1e3)),
+            ("overhead_frac", Json::num(overhead)),
+        ],
+    );
+    println!("{line}");
+    assert!(
+        overhead <= TELEMETRY_OVERHEAD_CEILING,
+        "telemetry overhead {:.1}% exceeds the {:.0}% ceiling (off {:.3} ms, on {:.3} ms)",
+        overhead * 1e2,
+        TELEMETRY_OVERHEAD_CEILING * 1e2,
+        off * 1e3,
+        on * 1e3
+    );
+}
 
 fn main() {
     let params = FabricParams::default();
@@ -41,8 +116,11 @@ fn main() {
         );
         println!("{}", smoke.json_line());
     }
+    telemetry_overhead_gate();
     println!(
         "packet engine bench done (wheel bit-identical to heap; \
-         >= {SPEEDUP_FLOOR:.0}x floor asserted at 64 nodes)"
+         >= {SPEEDUP_FLOOR:.0}x floor asserted at 64 nodes; telemetry \
+         overhead <= {:.0}%)",
+        TELEMETRY_OVERHEAD_CEILING * 1e2
     );
 }

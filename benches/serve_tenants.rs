@@ -13,7 +13,7 @@ use nimble::fabric::FabricParams;
 use nimble::orchestrator::TenancyCfg;
 use nimble::planner::{PlannerCfg, ReplanCfg};
 use nimble::topology::Topology;
-use nimble::util::json::Json;
+use nimble::util::json::{json_line, Json};
 use std::time::Instant;
 
 fn main() {
@@ -29,32 +29,36 @@ fn main() {
         let t = Instant::now();
         let run = run_arm(&topo, &params, &pcfg, &rcfg, &tcfg);
         let wall = t.elapsed().as_secs_f64();
-        let line = Json::obj(vec![
-            ("exp", Json::str("serve_tenants")),
-            ("arm", Json::str(if joint { "joint" } else { "independent" })),
-            ("jobs", Json::num(run.tenants.len() as f64)),
-            ("jobs_per_sec", Json::num(run.tenants.len() as f64 / wall.max(1e-12))),
-            ("wall_ms", Json::num(wall * 1e3)),
-            ("makespan_ms", Json::num(run.makespan_s * 1e3)),
-            ("aggregate_goodput_gbps", Json::num(run.aggregate_goodput_gbps)),
-            ("weighted_fairness", Json::num(run.weighted_fairness)),
-            ("replans", Json::num(run.replans as f64)),
-            ("preemptions", Json::num(run.preemptions as f64)),
-            ("sim_events", Json::num(run.sim_events as f64)),
-        ]);
-        println!("{}", line.to_string_compact());
+        let line = json_line(
+            "serve_tenants",
+            vec![
+                ("arm", Json::str(if joint { "joint" } else { "independent" })),
+                ("jobs", Json::num(run.tenants.len() as f64)),
+                ("jobs_per_sec", Json::num(run.tenants.len() as f64 / wall.max(1e-12))),
+                ("wall_ms", Json::num(wall * 1e3)),
+                ("makespan_ms", Json::num(run.makespan_s * 1e3)),
+                ("aggregate_goodput_gbps", Json::num(run.aggregate_goodput_gbps)),
+                ("weighted_fairness", Json::num(run.weighted_fairness)),
+                ("replans", Json::num(run.replans as f64)),
+                ("preemptions", Json::num(run.preemptions as f64)),
+                ("sim_events", Json::num(run.sim_events as f64)),
+            ],
+        );
+        println!("{line}");
         // per-tenant goodput lines (the fairness trajectory)
         for t in &run.tenants {
-            let line = Json::obj(vec![
-                ("exp", Json::str("serve_tenants.tenant")),
-                ("arm", Json::str(if joint { "joint" } else { "independent" })),
-                ("tenant", Json::num(t.id as f64)),
-                ("kind", Json::str(t.kind.name())),
-                ("weight", Json::num(t.weight)),
-                ("goodput_gbps", Json::num(t.goodput_gbps)),
-                ("p99_lat_ms", Json::num(t.p99_lat_s * 1e3)),
-            ]);
-            println!("{}", line.to_string_compact());
+            let line = json_line(
+                "serve_tenants.tenant",
+                vec![
+                    ("arm", Json::str(if joint { "joint" } else { "independent" })),
+                    ("tenant", Json::num(t.id as f64)),
+                    ("kind", Json::str(t.kind.name())),
+                    ("weight", Json::num(t.weight)),
+                    ("goodput_gbps", Json::num(t.goodput_gbps)),
+                    ("p99_lat_ms", Json::num(t.p99_lat_s * 1e3)),
+                ],
+            );
+            println!("{line}");
         }
     }
     println!(

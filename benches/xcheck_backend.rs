@@ -15,7 +15,7 @@ use nimble::fabric::packet::PacketSim;
 use nimble::fabric::FabricParams;
 use nimble::planner::{Planner, PlannerCfg};
 use nimble::topology::Topology;
-use nimble::util::json::Json;
+use nimble::util::json::{json_line, Json};
 use std::time::Instant;
 
 fn main() {
@@ -43,23 +43,25 @@ fn main() {
         let fluid = FluidSim::new(&topo, params.clone()).run(&flows);
         let fluid_goodput = payload_total / fluid.makespan.max(1e-12) / 1e9;
 
-        let line = Json::obj(vec![
-            ("exp", Json::str("xcheck_backend")),
-            ("nodes", Json::num(nodes as f64)),
-            ("flows", Json::num(flows.len() as f64)),
-            ("chunks", Json::num(tail.delivered_chunks as f64)),
-            ("events", Json::num(sim.events() as f64)),
-            ("events_per_sec", Json::num(sim.events() as f64 / wall.max(1e-12))),
-            ("sim_ms", Json::num(wall * 1e3)),
-            ("goodput_gbps", Json::num(goodput)),
-            ("fluid_goodput_gbps", Json::num(fluid_goodput)),
-            ("ratio_vs_fluid", Json::num(goodput / fluid_goodput.max(1e-12))),
-            (
-                "p99_us",
-                Json::num(nimble::util::stats::p99(&tail.sojourn_s) * 1e6),
-            ),
-        ]);
-        println!("{}", line.to_string_compact());
+        let line = json_line(
+            "xcheck_backend",
+            vec![
+                ("nodes", Json::num(nodes as f64)),
+                ("flows", Json::num(flows.len() as f64)),
+                ("chunks", Json::num(tail.delivered_chunks as f64)),
+                ("events", Json::num(sim.events() as f64)),
+                ("events_per_sec", Json::num(sim.events() as f64 / wall.max(1e-12))),
+                ("sim_ms", Json::num(wall * 1e3)),
+                ("goodput_gbps", Json::num(goodput)),
+                ("fluid_goodput_gbps", Json::num(fluid_goodput)),
+                ("ratio_vs_fluid", Json::num(goodput / fluid_goodput.max(1e-12))),
+                (
+                    "p99_us",
+                    Json::num(nimble::util::stats::p99(&tail.sojourn_s) * 1e6),
+                ),
+            ],
+        );
+        println!("{line}");
     }
     println!("xcheck backend bench done (agreement asserted by `nimble xcheck --check`)");
 }

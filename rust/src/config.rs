@@ -7,6 +7,7 @@ use crate::fabric::faults::{scenario_schedule, FaultsCfg, Scenario};
 use crate::fabric::{BackendKind, FabricParams, SchedulerKind};
 use crate::orchestrator::TenancyCfg;
 use crate::planner::{CostModel, PlannerCfg, ReplanCfg};
+use crate::telemetry::TelemetryCfg;
 use crate::topology::Topology;
 use crate::util::toml::TomlDoc;
 use std::path::Path;
@@ -28,6 +29,10 @@ pub struct Config {
     /// scenario `"none"` (the default) builds no schedule, so the
     /// section is inert for every other experiment.
     pub faults: FaultsCfg,
+    /// Telemetry (`[telemetry]`): off by default — the CLI holds a
+    /// disabled [`crate::telemetry::Recorder`], which is bitwise inert
+    /// (DESIGN.md §15). `--trace <path>` overrides this section.
+    pub telemetry: TelemetryCfg,
 }
 
 impl Default for Config {
@@ -39,6 +44,7 @@ impl Default for Config {
             replan: ReplanCfg::default(),
             tenancy: TenancyCfg::default(),
             faults: FaultsCfg::default(),
+            telemetry: TelemetryCfg::default(),
         }
     }
 }
@@ -244,6 +250,19 @@ impl Config {
             doc.get_f64("faults", "degrade_factor").unwrap_or(sp.degrade_factor);
         sp.straggler_factor =
             doc.get_f64("faults", "straggler_factor").unwrap_or(sp.straggler_factor);
+
+        // [telemetry] (pure observer: never touches plan/sim bytes)
+        let tl = &mut cfg.telemetry;
+        tl.enable = doc.get_bool("telemetry", "enable").unwrap_or(tl.enable);
+        if let Some(v) = doc.get("telemetry", "path") {
+            let Some(s) = v.as_str() else {
+                return Err(format!("telemetry.path must be a string, got {v:?}"));
+            };
+            tl.path = s.to_string();
+        }
+        if tl.path.is_empty() {
+            return Err("telemetry.path must not be empty".to_string());
+        }
 
         // sanity
         if cfg.planner.lambda <= 0.0 || cfg.planner.lambda > 1.0 {
@@ -600,6 +619,28 @@ mod tests {
         assert_eq!(c.faults.params.flap_period_s, fd.params.flap_period_s);
         assert_eq!(c.faults.params.degrade_factor, fd.params.degrade_factor);
         assert_eq!(c.faults.params.straggler_factor, fd.params.straggler_factor);
+        // [telemetry] ships disabled with the default path
+        let tld = TelemetryCfg::default();
+        assert_eq!(c.telemetry.enable, tld.enable);
+        assert_eq!(c.telemetry.path, tld.path);
+    }
+
+    /// `[telemetry]` ships disabled (the CLI then holds a bitwise-inert
+    /// disabled recorder); `enable`/`path` override; empty or
+    /// non-string paths fail closed.
+    #[test]
+    fn telemetry_section_defaults_and_overrides() {
+        let c = Config::from_toml("").unwrap();
+        assert!(!c.telemetry.enable);
+        assert_eq!(c.telemetry.path, "nimble-trace.jsonl");
+        let c = Config::from_toml(
+            "[telemetry]\nenable = true\npath = \"/tmp/run.jsonl\"\n",
+        )
+        .unwrap();
+        assert!(c.telemetry.enable);
+        assert_eq!(c.telemetry.path, "/tmp/run.jsonl");
+        assert!(Config::from_toml("[telemetry]\npath = \"\"\n").is_err());
+        assert!(Config::from_toml("[telemetry]\npath = 3\n").is_err());
     }
 
     /// `[fabric.packet]` defaults to the fluid backend (bit-identical

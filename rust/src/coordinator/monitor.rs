@@ -86,6 +86,24 @@ impl LinkMonitor {
     }
 }
 
+/// One epoch's link-utilization picture, sampled from a
+/// [`WindowedMonitor`] right after [`WindowedMonitor::observe`]. This
+/// is the shared per-epoch observability surface consumed by both the
+/// single-job and multi-tenant executors (telemetry `epoch` records)
+/// — previously each derived its own view inline.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MonitorSnapshot {
+    /// Capacity-normalized per-link utilization over the last window,
+    /// **unclamped**: a transient value above 1.0 marks a link that
+    /// moved more bytes than its nominal capacity·window allows (burst
+    /// drain after a stall), which the planner-facing clamped
+    /// [`WindowedMonitor::utilization`] view hides.
+    pub util: Vec<f64>,
+    /// Max over `util` — the capacity-normalized max-congestion of the
+    /// last window (the execution-time analogue of the planner's Z).
+    pub congestion: f64,
+}
+
 /// Windowed per-link utilization/backlog monitor for the execution-time
 /// re-planning loop: every `cadence_s` of virtual time the coordinator
 /// feeds it the bytes each link moved during the window (from
@@ -105,6 +123,7 @@ pub struct WindowedMonitor {
     pub alpha: f64,
     ewma_bytes: Vec<f64>,
     last_util: Vec<f64>,
+    last_raw_util: Vec<f64>,
     cum_bytes: Vec<f64>,
     /// Number of windows observed so far.
     pub windows: u64,
@@ -119,6 +138,7 @@ impl WindowedMonitor {
             alpha: 0.5,
             ewma_bytes: vec![0.0; links],
             last_util: vec![0.0; links],
+            last_raw_util: vec![0.0; links],
             cum_bytes: vec![0.0; links],
             windows: 0,
         }
@@ -140,7 +160,9 @@ impl WindowedMonitor {
         for i in 0..window_bytes.len() {
             let w = window_bytes[i];
             self.cum_bytes[i] += w;
-            self.last_util[i] = (w / (self.caps_bps[i] * dt)).min(1.0);
+            let u = w / (self.caps_bps[i] * dt);
+            self.last_raw_util[i] = u;
+            self.last_util[i] = u.min(1.0);
             self.ewma_bytes[i] = (1.0 - alpha) * self.ewma_bytes[i] + alpha * w;
         }
     }
@@ -153,6 +175,15 @@ impl WindowedMonitor {
     /// Utilization (0..1) of each link over the last window.
     pub fn utilization(&self) -> &[f64] {
         &self.last_util
+    }
+
+    /// The last window's utilization picture as one value: unclamped
+    /// per-link utilization plus its max (capacity-normalized
+    /// max-congestion). Pure read — sampling never perturbs the
+    /// monitor's planner-facing estimates.
+    pub fn snapshot(&self) -> MonitorSnapshot {
+        let congestion = self.last_raw_util.iter().cloned().fold(0.0f64, f64::max);
+        MonitorSnapshot { util: self.last_raw_util.clone(), congestion }
     }
 
     /// Total bytes each link carried since construction/reset.
@@ -173,6 +204,7 @@ impl WindowedMonitor {
     pub fn reset(&mut self) {
         self.ewma_bytes.iter_mut().for_each(|x| *x = 0.0);
         self.last_util.iter_mut().for_each(|x| *x = 0.0);
+        self.last_raw_util.iter_mut().for_each(|x| *x = 0.0);
         self.cum_bytes.iter_mut().for_each(|x| *x = 0.0);
         self.windows = 0;
     }
@@ -251,6 +283,29 @@ mod tests {
         assert!((m.utilization()[link] - 0.5).abs() < 1e-12);
         assert!((m.cumulative_bytes()[link] - 2.0 * w[link]).abs() < 1e-6);
         assert_eq!(m.windows, 2);
+    }
+
+    #[test]
+    fn snapshot_reports_unclamped_congestion() {
+        let topo = Topology::paper();
+        let mut m = WindowedMonitor::new(&topo, 1e-3);
+        let link = topo.nvlink(0, 1).unwrap();
+        let cap = topo.link(link).cap_gbps * 1e9;
+        let mut w = vec![0.0; topo.links.len()];
+        // burst drain: 1.5x the window's capacity worth of bytes
+        w[link] = cap * 1e-3 * 1.5;
+        m.observe_window(&w, 1e-3);
+        // the planner-facing view clamps; the snapshot does not
+        assert_eq!(m.utilization()[link], 1.0);
+        let snap = m.snapshot();
+        assert!((snap.util[link] - 1.5).abs() < 1e-12);
+        assert!((snap.congestion - 1.5).abs() < 1e-12);
+        assert_eq!(
+            snap.congestion,
+            snap.util.iter().cloned().fold(0.0f64, f64::max)
+        );
+        m.reset();
+        assert_eq!(m.snapshot().congestion, 0.0);
     }
 
     #[test]

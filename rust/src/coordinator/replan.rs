@@ -35,7 +35,7 @@
 use super::monitor::WindowedMonitor;
 use super::reassembly::{ChunkArrival, ReassemblyTable};
 use super::reroute::{
-    attach_reissues, pool_split_counts, preempt_and_pool, PartState, Reissue,
+    attach_reissues, pool_split_counts, preempt_and_pool, residual_routing, PartState, Reissue,
 };
 use crate::fabric::backend::{make_backend, FabricBackend, TailStats};
 use crate::fabric::faults::{self, FaultSchedule};
@@ -43,8 +43,9 @@ use crate::fabric::fluid::{Flow, SimResult};
 use crate::fabric::FabricParams;
 use crate::metrics::CommReport;
 use crate::planner::replan::{carry_plan, DrainCaps};
-use crate::planner::{Assignment, Demand, Plan, Planner, PlannerCfg, ReplanCfg};
-use crate::topology::{GpuId, Path, Topology};
+use crate::planner::{Demand, Plan, Planner, PlannerCfg, ReplanCfg};
+use crate::telemetry::{Recorder, TraceRecord};
+use crate::topology::{GpuId, Topology};
 use std::collections::BTreeMap;
 
 /// One replan epoch's bookkeeping.
@@ -108,6 +109,9 @@ pub struct ReplanExecutor<'a> {
     /// false`, so a *static* plan still experiences the faults — it
     /// just has no recovery lever.
     pub faults: FaultSchedule,
+    /// Telemetry sink ([`Recorder::disabled`] by default — bitwise
+    /// inert; see `crate::telemetry` for the observer-purity contract).
+    pub rec: Recorder,
 }
 
 impl<'a> ReplanExecutor<'a> {
@@ -119,12 +123,25 @@ impl<'a> ReplanExecutor<'a> {
     ) -> Self {
         // planner and dataplane must agree on what is endpoint-bound
         rcfg.caps = DrainCaps::from(&params);
-        ReplanExecutor { topo, params, planner_cfg, rcfg, faults: FaultSchedule::default() }
+        ReplanExecutor {
+            topo,
+            params,
+            planner_cfg,
+            rcfg,
+            faults: FaultSchedule::default(),
+            rec: Recorder::disabled(),
+        }
     }
 
     /// Attach a fault schedule (replayed from its start each round).
     pub fn with_faults(mut self, faults: FaultSchedule) -> Self {
         self.faults = faults;
+        self
+    }
+
+    /// Attach a telemetry sink (cloned recorders share one trace).
+    pub fn with_recorder(mut self, rec: Recorder) -> Self {
+        self.rec = rec;
         self
     }
 
@@ -173,10 +190,19 @@ impl<'a> ReplanExecutor<'a> {
         let mut preemptions = 0usize;
         let mut final_plan = plan0.clone();
 
+        // wall-clock self-profiling for the `profile` trace record;
+        // the disabled recorder takes no timestamps at all
+        let mut plan_wall_s = 0.0f64;
+        let mut sim_wall_s = 0.0f64;
+
         if !self.rcfg.enable && self.faults.is_empty() {
+            let t_wall = self.rec.on().then(std::time::Instant::now);
             engine
                 .run_to_completion()
                 .expect("fault-free run cannot stall: every link keeps capacity");
+            if let Some(t) = t_wall {
+                sim_wall_s += t.elapsed().as_secs_f64();
+            }
         } else {
             // faults replay from the schedule start each round; a
             // per-link scale vector mirrors the backend's state for the
@@ -190,9 +216,13 @@ impl<'a> ReplanExecutor<'a> {
             let mut stalled = 0usize;
             let mut t_next = cadence;
             while !engine.is_done() {
+                let t_wall = self.rec.on().then(std::time::Instant::now);
                 engine
                     .advance_to(t_next)
                     .expect("bounded epoch advance cannot stall");
+                if let Some(t) = t_wall {
+                    sim_wall_s += t.elapsed().as_secs_f64();
+                }
                 let t_epoch = t_next;
                 t_next += cadence;
 
@@ -203,6 +233,10 @@ impl<'a> ReplanExecutor<'a> {
                     for ev in &due {
                         engine.apply_fault(&ev.fault);
                         faults::apply_to_scale(&mut fault_scale, topo, &ev.fault);
+                        self.rec.emit(|| TraceRecord::Fault {
+                            t_s: t_epoch,
+                            desc: format!("{:?}", ev.fault),
+                        });
                     }
                     any_dead = fault_scale.iter().any(|&s| s <= 0.0);
                     let healthy = fault_scale.iter().all(|&s| s >= 1.0);
@@ -235,53 +269,49 @@ impl<'a> ReplanExecutor<'a> {
                             preempted: 0,
                             goodput_gbps,
                         });
+                        // final partial epoch: the engine drained before
+                        // the boundary, so the window was never sampled —
+                        // the snapshot reports the last observed window
+                        self.rec.emit(|| {
+                            let snap = monitor.snapshot();
+                            TraceRecord::Epoch {
+                                epoch: (epochs.len() - 1) as u64,
+                                t_s: engine.now(),
+                                goodput_gbps,
+                                congestion: snap.congestion,
+                                deviation: 0.0,
+                                replanned: false,
+                                preempted: 0,
+                                util: snap.util,
+                            }
+                        });
                     }
                     break;
                 }
                 monitor.observe(&engine.take_window());
 
-                // residual demands + the residual routing in flight;
-                // pairs with a live part crossing a dead link are
-                // *forced* replan targets (their drain time is infinite)
-                let mut residual_demands: Vec<Demand> = Vec::new();
-                let mut assignments = BTreeMap::new();
-                let mut link_load = vec![0.0f64; topo.links.len()];
-                let mut forced: Vec<(GpuId, GpuId)> = Vec::new();
-                for (&pair, parts) in &streams {
-                    let mut pr: Vec<(Path, f64)> = Vec::new();
-                    let mut total = 0.0f64;
-                    let mut crosses_dead = false;
-                    for ps in parts {
-                        let r = engine.residual_bytes(ps.flow);
-                        if r > 1.0 {
-                            let path = engine.flow(ps.flow).path.clone();
-                            if any_dead
-                                && path.hops.iter().any(|&h| fault_scale[h] <= 0.0)
-                            {
-                                crosses_dead = true;
-                            }
-                            pr.push((path, r));
-                            total += r;
-                        }
-                    }
-                    if total > 1.0 {
-                        residual_demands.push(Demand::new(pair.0, pair.1, total));
-                        for (p, b) in &pr {
-                            for &h in &p.hops {
-                                link_load[h] += *b;
-                            }
-                        }
-                        assignments.insert(pair, Assignment { parts: pr });
-                        if crosses_dead {
-                            forced.push(pair);
-                        }
-                    }
-                }
-                if residual_demands.is_empty() {
+                // residual demands + the residual routing in flight
+                // (shared extraction — [`residual_routing`]); pairs with
+                // a live part crossing a dead link are *forced* replan
+                // targets (their drain time is infinite)
+                let res = residual_routing(
+                    &streams,
+                    engine.as_ref(),
+                    topo.links.len(),
+                    if any_dead { Some(fault_scale.as_slice()) } else { None },
+                );
+                if res.demands.is_empty() {
                     continue;
                 }
-                let in_flight = Plan { assignments, link_load, plan_time_s: 0.0 };
+                let residual_demands = res.demands;
+                let forced = res.forced;
+                let in_flight = Plan {
+                    assignments: res.assignments,
+                    link_load: res.link_load,
+                    plan_time_s: 0.0,
+                };
 
+                let t_wall = self.rec.on().then(std::time::Instant::now);
                 let out = planner.replan_forced(
                     &in_flight,
                     monitor.load_estimates(),
@@ -289,6 +319,22 @@ impl<'a> ReplanExecutor<'a> {
                     &self.rcfg,
                     &forced,
                 );
+                if let Some(t) = t_wall {
+                    plan_wall_s += t.elapsed().as_secs_f64();
+                }
+                if let Some(a) = out.audit {
+                    self.rec.emit(|| TraceRecord::Decision {
+                        t_s: t_epoch,
+                        tenant: -1,
+                        accepted: out.replanned,
+                        forced: a.forced,
+                        z_carry: a.z_carry,
+                        z_challenger: a.z_challenger,
+                        margin: a.margin,
+                        mwu_visits: a.mwu_visits,
+                        changed_pairs: out.changed_pairs.len(),
+                    });
+                }
                 let mut preempted_here = 0usize;
                 if out.replanned {
                     replans += 1;
@@ -353,6 +399,19 @@ impl<'a> ReplanExecutor<'a> {
                     preempted: preempted_here,
                     goodput_gbps,
                 });
+                self.rec.emit(|| {
+                    let snap = monitor.snapshot();
+                    TraceRecord::Epoch {
+                        epoch: (epochs.len() - 1) as u64,
+                        t_s: engine.now(),
+                        goodput_gbps,
+                        congestion: snap.congestion,
+                        deviation: out.deviation,
+                        replanned: out.replanned,
+                        preempted: preempted_here,
+                        util: snap.util,
+                    }
+                });
             }
         }
 
@@ -394,6 +453,21 @@ impl<'a> ReplanExecutor<'a> {
         let payload: f64 = demands.iter().map(|d| d.bytes).sum();
         let name = if self.rcfg.enable { "nimble-replan" } else { "nimble-static" };
         let report = CommReport::from_sim(name, topo, &sim, payload);
+        self.rec.emit(|| TraceRecord::Summary {
+            makespan_s: report.makespan_s,
+            payload_bytes: report.payload_bytes,
+            goodput_gbps: report.goodput_gbps(),
+            replans: replans as u64,
+            preemptions: preemptions as u64,
+            sim_events,
+        });
+        self.rec.emit(|| TraceRecord::Profile {
+            engine: engine.profile(),
+            mwu_plans: planner.mwu_plans(),
+            mwu_visits: planner.mwu_total_visits(),
+            plan_wall_s,
+            sim_wall_s,
+        });
         let peak_reassembly = streams
             .keys()
             .filter_map(|&(s, d)| reass.stream(s, d).map(|q| q.peak_pending))

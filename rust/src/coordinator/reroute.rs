@@ -15,7 +15,8 @@
 
 use crate::coordinator::reassembly::{ChunkArrival, ReassemblyTable};
 use crate::fabric::backend::FabricBackend;
-use crate::topology::GpuId;
+use crate::planner::{Assignment, Demand};
+use crate::topology::{GpuId, Path};
 use std::collections::BTreeMap;
 
 /// Per-path chunk-sequence bookkeeping for one (src, dst) stream part.
@@ -37,6 +38,68 @@ pub(crate) struct Reissue {
     /// Pool slice sizes per re-issued flow (sums to `pool.len()`).
     pub counts: Vec<usize>,
     pub pool: Vec<u64>,
+}
+
+/// The residual routing still in flight for one set of streams:
+/// undrained demand per pair, the live path/byte assignments carrying
+/// it, their link loads, and — when a fault scale is supplied — the
+/// pairs whose live parts cross a dead link (*forced* replan targets:
+/// their drain time is infinite, so they bypass the z-hysteresis).
+pub(crate) struct ResidualRouting {
+    pub demands: Vec<Demand>,
+    pub assignments: BTreeMap<(GpuId, GpuId), Assignment>,
+    pub link_load: Vec<f64>,
+    pub forced: Vec<(GpuId, GpuId)>,
+}
+
+/// Extract the [`ResidualRouting`] of `streams` from the engine's live
+/// flow state. Sub-byte residues (≤ 1 byte per part / per pair) are
+/// rounding dust, not demand, and are dropped. Pass `fault_scale` only
+/// when some link is actually dead (scale ≤ 0); `None` skips the
+/// forced-pair scan entirely. Both executors previously carried an
+/// inline copy of this loop; the iteration and float-accumulation
+/// order here is exactly theirs, so extraction is bit-neutral.
+pub(crate) fn residual_routing(
+    streams: &BTreeMap<(GpuId, GpuId), Vec<PartState>>,
+    engine: &dyn FabricBackend,
+    n_links: usize,
+    fault_scale: Option<&[f64]>,
+) -> ResidualRouting {
+    let mut demands: Vec<Demand> = Vec::new();
+    let mut assignments = BTreeMap::new();
+    let mut link_load = vec![0.0f64; n_links];
+    let mut forced: Vec<(GpuId, GpuId)> = Vec::new();
+    for (&pair, parts) in streams {
+        let mut pr: Vec<(Path, f64)> = Vec::new();
+        let mut total = 0.0f64;
+        let mut crosses_dead = false;
+        for ps in parts {
+            let r = engine.residual_bytes(ps.flow);
+            if r > 1.0 {
+                let path = engine.flow(ps.flow).path.clone();
+                if let Some(scale) = fault_scale {
+                    if path.hops.iter().any(|&h| scale[h] <= 0.0) {
+                        crosses_dead = true;
+                    }
+                }
+                pr.push((path, r));
+                total += r;
+            }
+        }
+        if total > 1.0 {
+            demands.push(Demand::new(pair.0, pair.1, total));
+            for (p, b) in &pr {
+                for &h in &p.hops {
+                    link_load[h] += *b;
+                }
+            }
+            assignments.insert(pair, Assignment { parts: pr });
+            if crosses_dead {
+                forced.push(pair);
+            }
+        }
+    }
+    ResidualRouting { demands, assignments, link_load, forced }
 }
 
 /// Preempt a pair's live parts: release each part's *completed* chunk

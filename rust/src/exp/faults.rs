@@ -40,6 +40,7 @@ use crate::fabric::{BackendKind, FabricParams};
 use crate::metrics::Table;
 use crate::orchestrator::{job_stream, MultiTenantExecutor, TenancyCfg};
 use crate::planner::{Assignment, Demand, Plan, Planner, PlannerCfg, ReplanCfg};
+use crate::telemetry::{Recorder, TraceRecord};
 use crate::topology::{GpuId, Topology};
 use crate::workloads::skew::hotspot_alltoallv;
 
@@ -162,6 +163,8 @@ struct ArmOut {
 }
 
 /// Fly one arm: `incumbent` under `sched`, replanning iff `enable`.
+/// The run traces under `label` (a no-op on a disabled recorder).
+#[allow(clippy::too_many_arguments)]
 fn fly_arm(
     topo: &Topology,
     params: &FabricParams,
@@ -171,11 +174,16 @@ fn fly_arm(
     incumbent: &Plan,
     demands: &[Demand],
     t0_s: f64,
+    rec: &Recorder,
+    label: &str,
 ) -> ArmOut {
+    let payload: f64 = demands.iter().map(|d| d.bytes).sum();
+    rec.set_run(label);
+    rec.emit(|| TraceRecord::Run { cadence_s: CADENCE_S, t0_s, payload_bytes: payload });
     let run = ReplanExecutor::new(topo, params.clone(), pcfg.clone(), replan_cfg(enable))
         .with_faults(sched.clone())
+        .with_recorder(rec.clone())
         .execute(incumbent, demands);
-    let payload: f64 = demands.iter().map(|d| d.bytes).sum();
     ArmOut {
         goodput_gbps: payload / run.report.makespan_s.max(1e-12) / 1e9,
         ttr_epochs: recovery_epochs(&run.epochs, t0_s, CADENCE_S),
@@ -187,6 +195,7 @@ fn fly_arm(
 /// All arms of every requested scenario on one topology. The fault
 /// schedules chase the hottest link of the *clean planned* load
 /// profile, so the faults hit where the static plan hurts most.
+#[allow(clippy::too_many_arguments)]
 pub fn scenario_rows(
     label: &'static str,
     topo: &Topology,
@@ -197,14 +206,51 @@ pub fn scenario_rows(
     scenarios: &[Scenario],
     with_replan: bool,
 ) -> (CleanRow, Vec<FaultRow>) {
+    scenario_rows_traced(
+        label,
+        topo,
+        per_rank_bytes,
+        params,
+        pcfg,
+        fparams,
+        scenarios,
+        with_replan,
+        &Recorder::disabled(),
+    )
+}
+
+/// [`scenario_rows`] with a telemetry sink: the clean run traces as
+/// `{topo}/clean`, each arm as `{topo}/{scenario}/{arm}`, and every
+/// [`FaultRow`] is mirrored as a `fault_row` record whose `run` label
+/// points at the arm's deep trace (so `nimble report --check` can
+/// recompute retention and time-to-recover from the epoch series).
+#[allow(clippy::too_many_arguments)]
+pub fn scenario_rows_traced(
+    label: &'static str,
+    topo: &Topology,
+    per_rank_bytes: f64,
+    params: &FabricParams,
+    pcfg: &PlannerCfg,
+    fparams: &ScenarioParams,
+    scenarios: &[Scenario],
+    with_replan: bool,
+    rec: &Recorder,
+) -> (CleanRow, Vec<FaultRow>) {
     let hot = topo.gpu(1, 0);
     let demands = hotspot_alltoallv(topo, per_rank_bytes, 0.7, hot);
     let payload: f64 = demands.iter().map(|d| d.bytes).sum();
     let plan = Planner::new(topo, pcfg.clone()).plan(&demands);
 
     // clean planned static goodput: the retention denominator
+    rec.set_run(&format!("{label}/clean"));
+    rec.emit(|| TraceRecord::Run {
+        cadence_s: CADENCE_S,
+        t0_s: -1.0,
+        payload_bytes: payload,
+    });
     let clean_run =
         ReplanExecutor::new(topo, params.clone(), pcfg.clone(), replan_cfg(false))
+            .with_recorder(rec.clone())
             .execute(&plan, &demands);
     let g0 = payload / clean_run.report.makespan_s.max(1e-12) / 1e9;
     let clean = CleanRow { topo: label, payload_mb: payload / MB, goodput_gbps: g0 };
@@ -214,6 +260,18 @@ pub fn scenario_rows(
     for &sc in scenarios {
         let sched = scenario_schedule(topo, sc, fparams, Some(&plan.link_load));
         let mut push = |arm: &'static str, out: ArmOut| {
+            rec.emit(|| TraceRecord::FaultRow {
+                topo: label.to_string(),
+                scenario: sc.label().to_string(),
+                arm: arm.to_string(),
+                goodput_gbps: out.goodput_gbps,
+                clean_gbps: g0,
+                retention: out.goodput_gbps / g0.max(1e-12),
+                ttr_epochs: out.ttr_epochs.map_or(-1.0, |n| n as f64),
+                ttr_ms: out.ttr_epochs.map_or(-1.0, |n| n as f64 * CADENCE_S * 1e3),
+                replans: out.replans as u64,
+                preemptions: out.preemptions as u64,
+            });
             rows.push(FaultRow {
                 topo: label,
                 scenario: sc,
@@ -225,20 +283,53 @@ pub fn scenario_rows(
                 preemptions: out.preemptions,
             });
         };
+        let arm_label =
+            |arm: &str| format!("{label}/{}/{arm}", sc.label());
         push(
             "static",
-            fly_arm(topo, params, pcfg, false, &sched, &plan, &demands, fparams.t0_s),
+            fly_arm(
+                topo,
+                params,
+                pcfg,
+                false,
+                &sched,
+                &plan,
+                &demands,
+                fparams.t0_s,
+                rec,
+                &arm_label("static"),
+            ),
         );
         if with_replan {
             push(
                 "replan",
-                fly_arm(topo, params, pcfg, true, &sched, &plan, &demands, fparams.t0_s),
+                fly_arm(
+                    topo,
+                    params,
+                    pcfg,
+                    true,
+                    &sched,
+                    &plan,
+                    &demands,
+                    fparams.t0_s,
+                    rec,
+                    &arm_label("replan"),
+                ),
             );
         }
         push(
             "ecmp",
             fly_arm(
-                topo, params, pcfg, false, &sched, &adversary, &demands, fparams.t0_s,
+                topo,
+                params,
+                pcfg,
+                false,
+                &sched,
+                &adversary,
+                &demands,
+                fparams.t0_s,
+                rec,
+                &arm_label("ecmp"),
             ),
         );
     }
@@ -255,9 +346,27 @@ pub fn serve_arm(
     fparams: &ScenarioParams,
     scenario: Scenario,
 ) -> ServeFaultRow {
+    serve_arm_traced(params, pcfg, fparams, scenario, &Recorder::disabled())
+}
+
+/// [`serve_arm`] with a telemetry sink: the clean pass traces as
+/// `serve/clean`, the faulted pass as `serve/{scenario}`. Both carry
+/// `t0_s = -1` so the epoch-series recovery gates of `nimble report
+/// --check` (which assume a single-job goodput plateau) skip them —
+/// the orchestrator's staggered admissions have no pre-fault steady
+/// state to recover *to*; retention is still cross-checked via the
+/// mirrored `fault_row` record.
+pub fn serve_arm_traced(
+    params: &FabricParams,
+    pcfg: &PlannerCfg,
+    fparams: &ScenarioParams,
+    scenario: Scenario,
+    rec: &Recorder,
+) -> ServeFaultRow {
     let topo = Topology::paper();
     let tcfg = TenancyCfg { jobs: 6, ..TenancyCfg::default() };
     let rcfg = replan_cfg(true);
+    rec.set_run("serve/clean");
     let clean = MultiTenantExecutor::new(
         &topo,
         params.clone(),
@@ -265,18 +374,44 @@ pub fn serve_arm(
         rcfg.clone(),
         tcfg.clone(),
     )
+    .with_recorder(rec.clone())
     .execute(job_stream(&topo, &tcfg));
+    rec.emit(|| TraceRecord::Run {
+        cadence_s: rcfg.cadence_s,
+        t0_s: -1.0,
+        payload_bytes: clean.payload_bytes,
+    });
     let sched = scenario_schedule(&topo, scenario, fparams, None);
+    rec.set_run(&format!("serve/{}", scenario.label()));
     let faulted =
         MultiTenantExecutor::new(&topo, params.clone(), pcfg.clone(), rcfg, tcfg.clone())
             .with_faults(sched)
+            .with_recorder(rec.clone())
             .execute(job_stream(&topo, &tcfg));
+    rec.emit(|| TraceRecord::Run {
+        cadence_s: CADENCE_S,
+        t0_s: -1.0,
+        payload_bytes: faulted.payload_bytes,
+    });
+    let retention =
+        faulted.aggregate_goodput_gbps / clean.aggregate_goodput_gbps.max(1e-12);
+    rec.emit(|| TraceRecord::FaultRow {
+        topo: "flat".to_string(),
+        scenario: scenario.label().to_string(),
+        arm: "serve".to_string(),
+        goodput_gbps: faulted.aggregate_goodput_gbps,
+        clean_gbps: clean.aggregate_goodput_gbps,
+        retention,
+        ttr_epochs: -1.0,
+        ttr_ms: -1.0,
+        replans: faulted.replans as u64,
+        preemptions: faulted.preemptions as u64,
+    });
     ServeFaultRow {
         scenario,
         clean_gbps: clean.aggregate_goodput_gbps,
         faulted_gbps: faulted.aggregate_goodput_gbps,
-        retention: faulted.aggregate_goodput_gbps
-            / clean.aggregate_goodput_gbps.max(1e-12),
+        retention,
         replans: faulted.replans,
         preemptions: faulted.preemptions,
         all_tenants_finished: faulted.tenants.iter().all(|t| t.goodput_gbps > 0.0),
@@ -294,6 +429,20 @@ pub fn run(
     scenarios: &[Scenario],
     with_replan: bool,
 ) -> FaultsReport {
+    run_traced(params, pcfg, fparams, scenarios, with_replan, &Recorder::disabled())
+}
+
+/// [`run`] with a telemetry sink (the `nimble faults --trace` path).
+/// The `--check` cross-backend and empty-schedule probes stay
+/// untraced — they are validators, not headline runs.
+pub fn run_traced(
+    params: &FabricParams,
+    pcfg: &PlannerCfg,
+    fparams: &ScenarioParams,
+    scenarios: &[Scenario],
+    with_replan: bool,
+    rec: &Recorder,
+) -> FaultsReport {
     let flat = Topology::paper();
     let fat = Topology::fat_tree(FAT_TREE_NODES, 2.0);
     let mut clean = Vec::new();
@@ -302,14 +451,14 @@ pub fn run(
         ("flat", &flat, FLAT_PER_RANK),
         ("fat-tree", &fat, FAT_TREE_PER_RANK),
     ] {
-        let (c, r) = scenario_rows(
-            label, topo, per_rank, params, pcfg, fparams, scenarios, with_replan,
+        let (c, r) = scenario_rows_traced(
+            label, topo, per_rank, params, pcfg, fparams, scenarios, with_replan, rec,
         );
         clean.push(c);
         rows.extend(r);
     }
     let serve = if with_replan {
-        scenarios.first().map(|&sc| serve_arm(params, pcfg, fparams, sc))
+        scenarios.first().map(|&sc| serve_arm_traced(params, pcfg, fparams, sc, rec))
     } else {
         None
     };

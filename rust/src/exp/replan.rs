@@ -13,6 +13,7 @@ use crate::coordinator::replan::{ReplanExecutor, ReplanRun};
 use crate::fabric::FabricParams;
 use crate::metrics::Table;
 use crate::planner::{Demand, Plan, Planner, PlannerCfg, ReplanCfg};
+use crate::telemetry::{Recorder, TraceRecord};
 use crate::topology::Topology;
 use crate::workloads::dynamic::{MoeDrift, PhasedHotRows};
 
@@ -91,6 +92,22 @@ pub fn sweep(
     rounds: usize,
     row_mb: f64,
 ) -> ReplanSweep {
+    sweep_traced(topo, params, rcfg, workload, rounds, row_mb, &Recorder::disabled())
+}
+
+/// [`sweep`] with a telemetry sink: each round's arms run as labeled
+/// trace runs `static/round{N}` / `replanned/round{N}`. With a
+/// disabled recorder this *is* `sweep` (pure observer, DESIGN.md §15).
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_traced(
+    topo: &Topology,
+    params: &FabricParams,
+    rcfg: &ReplanCfg,
+    workload: Workload,
+    rounds: usize,
+    row_mb: f64,
+    rec: &Recorder,
+) -> ReplanSweep {
     let hot_rows = PhasedHotRows::paper_default(topo, row_mb * MB);
     let moe = MoeDrift::paper_default(topo, 32_768);
 
@@ -100,9 +117,11 @@ pub fn sweep(
 
     let static_cfg = ReplanCfg { enable: false, ..rcfg.clone() };
     let mut static_exec =
-        ReplanExecutor::new(topo, params.clone(), PlannerCfg::default(), static_cfg);
+        ReplanExecutor::new(topo, params.clone(), PlannerCfg::default(), static_cfg)
+            .with_recorder(rec.clone());
     let mut replan_exec =
-        ReplanExecutor::new(topo, params.clone(), PlannerCfg::default(), rcfg.clone());
+        ReplanExecutor::new(topo, params.clone(), PlannerCfg::default(), rcfg.clone())
+            .with_recorder(rec.clone());
 
     let mut incumbent: Plan = p0.clone();
     let mut rows = Vec::with_capacity(rounds);
@@ -113,9 +132,22 @@ pub fn sweep(
     let mut replanned_sim_events = 0u64;
     for round in 0..rounds {
         let (hot, demands) = round_demands(topo, workload, &hot_rows, &moe, round);
-        payload_total += demands.iter().map(|d| d.bytes).sum::<f64>();
+        let round_payload = demands.iter().map(|d| d.bytes).sum::<f64>();
+        payload_total += round_payload;
 
+        rec.set_run(&format!("static/round{round}"));
+        rec.emit(|| TraceRecord::Run {
+            cadence_s: rcfg.cadence_s,
+            t0_s: -1.0,
+            payload_bytes: round_payload,
+        });
         let s: ReplanRun = static_exec.execute(&p0, &demands);
+        rec.set_run(&format!("replanned/round{round}"));
+        rec.emit(|| TraceRecord::Run {
+            cadence_s: rcfg.cadence_s,
+            t0_s: -1.0,
+            payload_bytes: round_payload,
+        });
         let r: ReplanRun = replan_exec.execute(&incumbent, &demands);
         incumbent = r.final_plan.clone();
 
@@ -154,7 +186,21 @@ pub fn render(
     rounds: usize,
     row_mb: f64,
 ) -> String {
-    let sweep = sweep(topo, params, rcfg, workload, rounds, row_mb);
+    render_traced(topo, params, rcfg, workload, rounds, row_mb, &Recorder::disabled())
+}
+
+/// [`render`] with a telemetry sink (the `nimble replan --trace` path).
+#[allow(clippy::too_many_arguments)]
+pub fn render_traced(
+    topo: &Topology,
+    params: &FabricParams,
+    rcfg: &ReplanCfg,
+    workload: Workload,
+    rounds: usize,
+    row_mb: f64,
+    rec: &Recorder,
+) -> String {
+    let sweep = sweep_traced(topo, params, rcfg, workload, rounds, row_mb, rec);
     let mut t = Table::new(&[
         "round",
         "hot",

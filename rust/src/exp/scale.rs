@@ -24,7 +24,7 @@ use crate::fabric::{FabricParams, SchedulerKind};
 use crate::metrics::Table;
 use crate::planner::{Demand, Plan, Planner, PlannerCfg, ReplanCfg, SharedConstraints};
 use crate::topology::Topology;
-use crate::util::json::Json;
+use crate::util::json::{json_line, Json};
 use crate::util::rng::Rng;
 use crate::workloads::skew::{hotspot_alltoallv_jittered, shifted_hotspot_alltoallv};
 use std::time::Instant;
@@ -152,7 +152,6 @@ impl ScaleRow {
     /// Machine-readable record for cross-PR perf tracking.
     pub fn json_line(&self) -> String {
         let mut fields = vec![
-            ("exp", Json::str("scale")),
             ("nodes", Json::num(self.nodes as f64)),
             ("gpus", Json::num(self.gpus as f64)),
             ("links", Json::num(self.links as f64)),
@@ -177,7 +176,7 @@ impl ScaleRow {
         if let Some(u) = self.core_uplink_util {
             fields.push(("core_uplink_util", Json::num(u)));
         }
-        Json::obj(fields).to_string_compact()
+        json_line("scale", fields)
     }
 }
 
@@ -367,17 +366,18 @@ impl PacketSmoke {
 
     /// Machine-readable record for cross-PR perf tracking.
     pub fn json_line(&self) -> String {
-        Json::obj(vec![
-            ("exp", Json::str("packet_engine")),
-            ("nodes", Json::num(self.nodes as f64)),
-            ("flows", Json::num(self.flows as f64)),
-            ("events", Json::num(self.events as f64)),
-            ("events_per_sec", Json::num(self.events_per_sec())),
-            ("sim_ms", Json::num(self.wheel_s * 1e3)),
-            ("heap_sim_ms", Json::num(self.heap_s * 1e3)),
-            ("speedup_vs_heap", Json::num(self.speedup())),
-        ])
-        .to_string_compact()
+        json_line(
+            "packet_engine",
+            vec![
+                ("nodes", Json::num(self.nodes as f64)),
+                ("flows", Json::num(self.flows as f64)),
+                ("events", Json::num(self.events as f64)),
+                ("events_per_sec", Json::num(self.events_per_sec())),
+                ("sim_ms", Json::num(self.wheel_s * 1e3)),
+                ("heap_sim_ms", Json::num(self.heap_s * 1e3)),
+                ("speedup_vs_heap", Json::num(self.speedup())),
+            ],
+        )
     }
 }
 

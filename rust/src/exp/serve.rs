@@ -21,6 +21,7 @@ use crate::fabric::FabricParams;
 use crate::metrics::Table;
 use crate::orchestrator::{job_stream, MultiTenantExecutor, ServeRun, TenancyCfg};
 use crate::planner::{PlannerCfg, ReplanCfg};
+use crate::telemetry::{Recorder, TraceRecord};
 use crate::topology::Topology;
 
 /// Run one arm (joint or independent, per `tcfg.joint`).
@@ -31,9 +32,42 @@ pub fn run_arm(
     rcfg: &ReplanCfg,
     tcfg: &TenancyCfg,
 ) -> ServeRun {
+    run_arm_traced(topo, params, pcfg, rcfg, tcfg, &Recorder::disabled(), "")
+}
+
+/// [`run_arm`] tracing as run `label`. Serve runs are fault-free from
+/// the recovery clock's point of view (`t0_s = -1`); the `run` record
+/// lands after the arm executes because the aggregate payload is only
+/// known then ([`Trace::runs`] regroups by label, so order is
+/// immaterial).
+///
+/// [`Trace::runs`]: crate::telemetry::report::Trace
+pub fn run_arm_traced(
+    topo: &Topology,
+    params: &FabricParams,
+    pcfg: &PlannerCfg,
+    rcfg: &ReplanCfg,
+    tcfg: &TenancyCfg,
+    rec: &Recorder,
+    label: &str,
+) -> ServeRun {
     let jobs = job_stream(topo, tcfg);
-    MultiTenantExecutor::new(topo, params.clone(), pcfg.clone(), rcfg.clone(), tcfg.clone())
-        .execute(jobs)
+    rec.set_run(label);
+    let run = MultiTenantExecutor::new(
+        topo,
+        params.clone(),
+        pcfg.clone(),
+        rcfg.clone(),
+        tcfg.clone(),
+    )
+    .with_recorder(rec.clone())
+    .execute(jobs);
+    rec.emit(|| TraceRecord::Run {
+        cadence_s: rcfg.cadence_s,
+        t0_s: -1.0,
+        payload_bytes: run.payload_bytes,
+    });
+    run
 }
 
 /// Per-tenant table plus the arm's summary lines.
@@ -95,13 +129,25 @@ pub fn render(
     rcfg: &ReplanCfg,
     tcfg: &TenancyCfg,
 ) -> String {
+    render_traced(topo, params, pcfg, rcfg, tcfg, &Recorder::disabled())
+}
+
+/// [`render`] with a telemetry sink (the `nimble serve --trace` path).
+pub fn render_traced(
+    topo: &Topology,
+    params: &FabricParams,
+    pcfg: &PlannerCfg,
+    rcfg: &ReplanCfg,
+    tcfg: &TenancyCfg,
+    rec: &Recorder,
+) -> String {
     let mut out = render_stream(topo, params, tcfg);
     if !tcfg.joint {
-        let indep = run_arm(topo, params, pcfg, rcfg, tcfg);
+        let indep = run_arm_traced(topo, params, pcfg, rcfg, tcfg, rec, "independent");
         out += &render_arm("independent per-job plans (--no-joint)", &indep);
         return out;
     }
-    let (joint, indep) = run_comparison(topo, params, pcfg, rcfg, tcfg);
+    let (joint, indep) = run_comparison_traced(topo, params, pcfg, rcfg, tcfg, rec);
     out += &render_runs(rcfg, &joint, &indep);
     out
 }
@@ -115,10 +161,23 @@ pub fn run_comparison(
     rcfg: &ReplanCfg,
     tcfg: &TenancyCfg,
 ) -> (ServeRun, ServeRun) {
+    run_comparison_traced(topo, params, pcfg, rcfg, tcfg, &Recorder::disabled())
+}
+
+/// [`run_comparison`] with a telemetry sink: the arms trace as runs
+/// `joint` and `independent`.
+pub fn run_comparison_traced(
+    topo: &Topology,
+    params: &FabricParams,
+    pcfg: &PlannerCfg,
+    rcfg: &ReplanCfg,
+    tcfg: &TenancyCfg,
+    rec: &Recorder,
+) -> (ServeRun, ServeRun) {
     let joint_cfg = TenancyCfg { joint: true, ..tcfg.clone() };
     let indep_cfg = TenancyCfg { joint: false, ..tcfg.clone() };
-    let joint = run_arm(topo, params, pcfg, rcfg, &joint_cfg);
-    let indep = run_arm(topo, params, pcfg, rcfg, &indep_cfg);
+    let joint = run_arm_traced(topo, params, pcfg, rcfg, &joint_cfg, rec, "joint");
+    let indep = run_arm_traced(topo, params, pcfg, rcfg, &indep_cfg, rec, "independent");
     (joint, indep)
 }
 

@@ -95,6 +95,26 @@ pub struct TailStats {
     pub delivered_chunks: u64,
 }
 
+/// Engine self-profiling counters ([`FabricBackend::profile`]) — the
+/// raw ingredients of the telemetry `profile` record. Counters are
+/// simulation-deterministic (no wall clock): for the packet engine
+/// `sched_pushes`/`sched_pops` count scheduler operations (wheel or
+/// heap), for the fluid engine `solver_invocations` counts max-min
+/// rate solves. [`PartitionedPacket`] merges per-component counters in
+/// canonical component order, so the totals are thread-count
+/// invariant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineProfile {
+    /// Events processed (same unit as [`FabricBackend::events`]).
+    pub events: u64,
+    /// Scheduler insertions (packet backends; 0 for fluid).
+    pub sched_pushes: u64,
+    /// Scheduler removals (packet backends; 0 for fluid).
+    pub sched_pops: u64,
+    /// Max-min rate solves (fluid backend; 0 for packet).
+    pub solver_invocations: u64,
+}
+
 /// The surface [`crate::coordinator::ReplanExecutor`] needs from a
 /// fabric simulation engine. Flow indices are issue order, exactly as
 /// [`SimEngine`] numbers them.
@@ -141,6 +161,12 @@ pub trait FabricBackend {
     /// (the packet backend does; the fluid backend cannot).
     fn tail(&self) -> Option<TailStats> {
         None
+    }
+    /// Self-profiling counters (telemetry `profile` record). The
+    /// default reports only [`FabricBackend::events`]; backends
+    /// override to expose their scheduler/solver counters.
+    fn profile(&self) -> EngineProfile {
+        EngineProfile { events: self.events(), ..Default::default() }
     }
 }
 
@@ -205,6 +231,12 @@ impl<'a> FabricBackend for SimEngine<'a> {
     fn result(&self) -> SimResult {
         SimEngine::result(self)
     }
+    fn profile(&self) -> EngineProfile {
+        // the fluid engine's event unit IS a rate solve: each step
+        // re-solves max-min rates for the active flow set
+        let e = SimEngine::events(self);
+        EngineProfile { events: e, solver_invocations: e, ..Default::default() }
+    }
 }
 
 impl<'a> FabricBackend for PacketSim<'a> {
@@ -250,6 +282,9 @@ impl<'a> FabricBackend for PacketSim<'a> {
     fn tail(&self) -> Option<TailStats> {
         Some(PacketSim::tail(self))
     }
+    fn profile(&self) -> EngineProfile {
+        PacketSim::profile(self)
+    }
 }
 
 impl<'a> FabricBackend for PartitionedPacket<'a> {
@@ -294,6 +329,9 @@ impl<'a> FabricBackend for PartitionedPacket<'a> {
     }
     fn tail(&self) -> Option<TailStats> {
         Some(PartitionedPacket::tail(self))
+    }
+    fn profile(&self) -> EngineProfile {
+        PartitionedPacket::profile(self)
     }
 }
 

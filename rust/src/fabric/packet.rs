@@ -331,6 +331,18 @@ impl<'a> PacketSim<'a> {
         self.events
     }
 
+    /// Self-profiling counters: every `schedule()` bumps `seq` (one
+    /// scheduler push), every processed event is one pop — so both are
+    /// derivable with zero extra bookkeeping in the hot loop.
+    pub fn profile(&self) -> crate::fabric::backend::EngineProfile {
+        crate::fabric::backend::EngineProfile {
+            events: self.events,
+            sched_pushes: self.seq,
+            sched_pops: self.events,
+            solver_invocations: 0,
+        }
+    }
+
     /// Current virtual time (seconds).
     pub fn now(&self) -> f64 {
         self.t_ns as f64 * 1e-9

@@ -350,6 +350,22 @@ impl<'a> PartitionedPacket<'a> {
         self.order.iter().map(|&h| self.subs.get(h).expect("live").events()).sum()
     }
 
+    /// Self-profiling counters merged across components in canonical
+    /// order. Each counter is a per-component sum and each component's
+    /// trajectory is thread-count invariant, so the merged profile is
+    /// identical for every `[fabric.packet] threads`.
+    pub fn profile(&self) -> crate::fabric::backend::EngineProfile {
+        let mut p = crate::fabric::backend::EngineProfile::default();
+        for &h in &self.order {
+            let sub = self.subs.get(h).expect("live").profile();
+            p.events += sub.events;
+            p.sched_pushes += sub.sched_pushes;
+            p.sched_pops += sub.sched_pops;
+            p.solver_invocations += sub.solver_invocations;
+        }
+        p
+    }
+
     fn sim_of(&self, i: usize) -> (&PacketSim<'a>, usize) {
         let tk = self.tickets[i];
         let sim = self.subs.get(tk.sub).expect("stale flow ticket");

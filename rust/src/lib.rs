@@ -32,6 +32,7 @@
 //! | [`exp`] | §V tables/figures | one driver per paper artifact + `exp::replan`, the `exp::scale` hot-path sweep, the `exp::xcheck` fluid ↔ packet cross-validation, and the `exp::faults` recovery arms (`nimble faults`) |
 //! | [`moe`] | §V-D, Fig 8 | MoE expert-parallel step driver |
 //! | [`runtime`] | DESIGN.md §6 | AOT artifact interpreter (L2/L1 bridge) |
+//! | [`telemetry`] | §IV-A observability | execution-time trace subsystem: [`telemetry::Recorder`] sink threaded through planner/coordinator/orchestrator/fabric, JSONL schema + `nimble report` renderer (DESIGN.md §15) |
 //! | [`metrics`], [`util`], [`config`] | — | reports, std-only substrates, TOML config |
 //!
 //! ARCHITECTURE.md walks the planner ↔ fabric ↔ coordinator data flow,
@@ -93,6 +94,7 @@ pub mod moe;
 pub mod orchestrator;
 pub mod planner;
 pub mod runtime;
+pub mod telemetry;
 pub mod topology;
 pub mod util;
 pub mod workloads;

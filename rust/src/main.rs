@@ -16,18 +16,26 @@
 //! nimble serve [--jobs N --seed S --no-joint]   multi-tenant orchestrator on one shared fabric
 //! nimble faults [--scenario flap|degrade|straggler|mixed] [--no-replan]   fault injection + replan-as-recovery
 //! nimble plan --src 0 --dst 1 --mb 256   show a routing plan
+//! nimble report <trace.jsonl> [--check]  render/validate a recorded telemetry trace
 //! nimble moe-compute       run the AOT FFN artifacts (offline interpreter)
 //! nimble info              topology + fabric calibration summary
 //! ```
+//!
+//! Global flags (any subcommand): `--config <file.toml>` and
+//! `--trace <out.jsonl>` — the latter records the execution-time
+//! telemetry trace (`replan`, `faults` and `serve` are deeply
+//! instrumented; see the [`nimble::telemetry`] module docs for the
+//! JSONL schema).
 
 use nimble::exp::{
     ablate, faults, fig6, fig7, fig8, interference, replan, scale, sendrecv, serve,
     table1, xcheck, MB,
 };
 use nimble::fabric::Scenario;
-use nimble::fabric::FabricParams;
+use nimble::fabric::{BackendKind, FabricParams, SchedulerKind};
 use nimble::planner::{CostModel, Demand, Planner};
 use nimble::runtime::Runtime;
+use nimble::telemetry::{report, Recorder, TraceRecord};
 use nimble::topology::Topology;
 use nimble::util::cli::Args;
 
@@ -47,6 +55,22 @@ fn main() {
         };
         argv.drain(i..=i + 1);
     }
+    // global --trace <out.jsonl> (anywhere on the line): record the
+    // telemetry trace of the run; `[telemetry]` in the config file is
+    // the flag-less way to turn it on (DESIGN.md §15)
+    let mut trace_path: Option<String> = None;
+    if let Some(i) = argv.iter().position(|a| a == "--trace") {
+        let Some(path) = argv.get(i + 1).cloned() else {
+            eprintln!("--trace requires an output path (e.g. --trace out.jsonl)");
+            std::process::exit(2);
+        };
+        trace_path = Some(path);
+        argv.drain(i..=i + 1);
+    }
+    if trace_path.is_none() && cfg.telemetry.enable {
+        trace_path = Some(cfg.telemetry.path.clone());
+    }
+    let rec = if trace_path.is_some() { Recorder::enabled() } else { Recorder::disabled() };
     let Some(cmd) = argv.first().cloned() else {
         eprintln!("{}", usage());
         std::process::exit(2);
@@ -54,6 +78,24 @@ fn main() {
     let rest = &argv[1..];
     let topo = cfg.topology.clone();
     let params = cfg.fabric.clone();
+    rec.emit(|| TraceRecord::Meta {
+        subcommand: cmd.clone(),
+        backend: match params.backend {
+            BackendKind::Fluid => "fluid",
+            BackendKind::Packet => "packet",
+        }
+        .to_string(),
+        scheduler: match params.packet.scheduler {
+            SchedulerKind::Wheel => "wheel",
+            SchedulerKind::Heap => "heap",
+        }
+        .to_string(),
+        threads: params.packet.threads,
+        topo: if topo.tier.is_some() { "fat-tree" } else { "flat" }.to_string(),
+        nodes: topo.nodes,
+        links: topo.links.len(),
+        gpus: topo.num_gpus(),
+    });
     let result = match cmd.as_str() {
         "table1" => {
             println!("{}", table1::render(&topo, &params, 9));
@@ -121,13 +163,14 @@ fn main() {
             };
             println!(
                 "{}",
-                replan::render(
+                replan::render_traced(
                     &topo,
                     &params,
                     &rcfg,
                     workload,
                     p.get_usize("rounds"),
                     p.get_f64("row-mb"),
+                    &rec,
                 )
             );
         }),
@@ -290,8 +333,14 @@ fn main() {
             let check_result = if checking && tcfg.joint {
                 // run each arm exactly once: the gates reuse the same
                 // runs the report renders
-                let (joint, indep) =
-                    serve::run_comparison(&topo, &params, &cfg.planner, &cfg.replan, &tcfg);
+                let (joint, indep) = serve::run_comparison_traced(
+                    &topo,
+                    &params,
+                    &cfg.planner,
+                    &cfg.replan,
+                    &tcfg,
+                    &rec,
+                );
                 print!("{}", serve::render_stream(&topo, &params, &tcfg));
                 println!("{}", serve::render_runs(&cfg.replan, &joint, &indep));
                 Some(serve::check_runs(
@@ -306,7 +355,14 @@ fn main() {
             } else {
                 println!(
                     "{}",
-                    serve::render(&topo, &params, &cfg.planner, &cfg.replan, &tcfg)
+                    serve::render_traced(
+                        &topo,
+                        &params,
+                        &cfg.planner,
+                        &cfg.replan,
+                        &tcfg,
+                        &rec,
+                    )
                 );
                 checking.then(|| {
                     serve::check(&topo, &params, &cfg.planner, &cfg.replan, &tcfg)
@@ -358,8 +414,9 @@ fn main() {
                 },
             };
             let with_replan = !p.get_bool("no-replan");
-            let rep =
-                faults::run(&params, &cfg.planner, &fparams, &scenarios, with_replan);
+            let rep = faults::run_traced(
+                &params, &cfg.planner, &fparams, &scenarios, with_replan, &rec,
+            );
             println!("{}", faults::render(&rep));
             if p.get_bool("check") {
                 match faults::check(&rep, &params, &cfg.planner, &fparams) {
@@ -437,6 +494,10 @@ fn main() {
                     );
                 }
             }),
+        "report" => {
+            run_report(rest);
+            Ok(())
+        }
         "moe-compute" => run_moe_compute(),
         "info" => {
             print_info(&topo, &params);
@@ -455,11 +516,83 @@ fn main() {
         eprintln!("{e}");
         std::process::exit(2);
     }
+    if let Some(path) = &trace_path {
+        // shallow commands still leave a valid trace (meta + note)
+        // rather than a bare meta line that looks like a broken run
+        if rec.len() <= 1 {
+            rec.emit(|| TraceRecord::Note {
+                text: format!(
+                    "subcommand '{cmd}' has no deep instrumentation; \
+                     replan, faults and serve record full traces"
+                ),
+            });
+        }
+        match rec.write_jsonl(path) {
+            Ok(n) => eprintln!("trace: {n} records -> {path}"),
+            Err(e) => {
+                eprintln!("--trace {path}: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+/// `nimble report <trace.jsonl> [--check]`: render a recorded trace;
+/// `--check` re-derives the headline numbers from the raw records and
+/// exits 1 on any mismatch (hand-parsed: the one command that takes a
+/// positional argument).
+fn run_report(rest: &[String]) {
+    let mut path: Option<String> = None;
+    let mut checking = false;
+    for a in rest {
+        match a.as_str() {
+            "--check" => checking = true,
+            "--help" | "-h" => {
+                println!(
+                    "nimble report <trace.jsonl> [--check] — render a telemetry trace\n\
+                     recorded with --trace; --check validates the schema and recomputes\n\
+                     goodput/retention/time-to-recover bit-exactly from the raw records"
+                );
+                return;
+            }
+            other if !other.starts_with('-') && path.is_none() => {
+                path = Some(other.to_string());
+            }
+            other => {
+                eprintln!("nimble report: unexpected argument '{other}'");
+                std::process::exit(2);
+            }
+        }
+    }
+    let Some(path) = path else {
+        eprintln!("nimble report: missing trace path (usage: nimble report <trace.jsonl> [--check])");
+        std::process::exit(2);
+    };
+    let trace = match report::Trace::load(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("nimble report: {e}");
+            std::process::exit(2);
+        }
+    };
+    print!("{}", report::render(&trace));
+    if checking {
+        let out = report::check(&trace);
+        if out.ok() {
+            eprintln!("report check OK: {} recomputations match bit-exactly", out.checks);
+        } else {
+            for e in &out.errors {
+                eprintln!("report check FAILED: {e}");
+            }
+            std::process::exit(1);
+        }
+    }
 }
 
 fn usage() -> String {
     "nimble — NIMBLE (skew-to-symmetry multi-path balancing) reproduction\n\
-     commands: table1 | fig6 | fig7 | fig8 | sendrecv | ablate | interference | replan | scale | xcheck | serve | faults | plan | moe-compute | info\n\
+     commands: table1 | fig6 | fig7 | fig8 | sendrecv | ablate | interference | replan | scale | xcheck | serve | faults | plan | report | moe-compute | info\n\
+     global flags: --config <file.toml> | --trace <out.jsonl> (telemetry, rendered by `nimble report`)\n\
      run `nimble <cmd> --help` for flags"
         .to_string()
 }

@@ -46,7 +46,8 @@ use super::job::{JobKind, JobSpec, TenancyCfg};
 use crate::coordinator::monitor::WindowedMonitor;
 use crate::coordinator::reassembly::{ChunkArrival, ReassemblyTable};
 use crate::coordinator::reroute::{
-    attach_reissues, pool_split_counts, preempt_and_pool, PartState, Reissue,
+    attach_reissues, pool_split_counts, preempt_and_pool, residual_routing, PartState, Reissue,
+    ResidualRouting,
 };
 use crate::fabric::backend::{make_backend, FabricBackend, TailStats};
 use crate::fabric::faults::{self, FaultSchedule};
@@ -54,9 +55,9 @@ use crate::fabric::fluid::{Flow, SimResult};
 use crate::fabric::FabricParams;
 use crate::planner::replan::{diff_pairs, drain_time_z_scaled, excess_over_plan, shape_deviation};
 use crate::planner::{
-    carry_plan, Assignment, Demand, DrainCaps, Plan, Planner, PlannerCfg, ReplanCfg,
-    TenantDemands,
+    carry_plan, DrainCaps, Plan, Planner, PlannerCfg, ReplanCfg, TenantDemands,
 };
+use crate::telemetry::{Recorder, TraceRecord};
 use crate::topology::{GpuId, Path, PathKind, Topology};
 use crate::util::stats::{jain_index, percentile_nearest_rank};
 use std::collections::{BTreeMap, BTreeSet};
@@ -185,6 +186,9 @@ pub struct MultiTenantExecutor<'a> {
     /// Fault events injected at epoch boundaries (empty = fault-free;
     /// the empty schedule keeps every serve path bit-identical).
     pub faults: FaultSchedule,
+    /// Telemetry sink ([`Recorder::disabled`] by default — bitwise
+    /// inert; see `crate::telemetry` for the observer-purity contract).
+    pub rec: Recorder,
 }
 
 impl<'a> MultiTenantExecutor<'a> {
@@ -197,7 +201,15 @@ impl<'a> MultiTenantExecutor<'a> {
     ) -> Self {
         // planner and dataplane must agree on what is endpoint-bound
         rcfg.caps = DrainCaps::from(&params);
-        MultiTenantExecutor { topo, params, planner_cfg, rcfg, tcfg, faults: FaultSchedule::default() }
+        MultiTenantExecutor {
+            topo,
+            params,
+            planner_cfg,
+            rcfg,
+            tcfg,
+            faults: FaultSchedule::default(),
+            rec: Recorder::disabled(),
+        }
     }
 
     /// Attach a fault schedule; events fire at the first epoch boundary
@@ -207,10 +219,20 @@ impl<'a> MultiTenantExecutor<'a> {
         self
     }
 
+    /// Attach a telemetry sink (cloned recorders share one trace).
+    pub fn with_recorder(mut self, rec: Recorder) -> Self {
+        self.rec = rec;
+        self
+    }
+
     /// Fly the whole job stream. Deterministic: same topology, params
     /// and stream ⇒ byte-identical results at any thread count.
     pub fn execute(&mut self, jobs: Vec<JobSpec>) -> ServeRun {
         let t_exec = std::time::Instant::now();
+        // wall-clock self-profiling for the `profile` trace record;
+        // the disabled recorder takes no per-phase timestamps
+        let mut plan_wall_s = 0.0f64;
+        let mut sim_wall_s = 0.0f64;
         let topo = self.topo;
         let tcfg = self.tcfg.clone();
         let chunk = self.params.chunk_bytes.max(1.0);
@@ -265,15 +287,23 @@ impl<'a> MultiTenantExecutor<'a> {
                     refresh_done(&mut tenants, eng.as_ref());
                 }
                 if queue.is_empty() {
+                    let t_wall = self.rec.on().then(std::time::Instant::now);
                     eng.run_to_completion()
                         .expect("fault-free static path cannot stall");
+                    if let Some(t) = t_wall {
+                        sim_wall_s += t.elapsed().as_secs_f64();
+                    }
                     refresh_done(&mut tenants, eng.as_ref());
                     if eng.is_done() && queue.is_empty() {
                         break;
                     }
                 } else {
+                    let t_wall = self.rec.on().then(std::time::Instant::now);
                     eng.advance_to(t_next)
                         .expect("bounded epoch advance cannot stall");
+                    if let Some(t) = t_wall {
+                        sim_wall_s += t.elapsed().as_secs_f64();
+                    }
                     let t_now = t_next;
                     t_next += cadence;
                     refresh_done(&mut tenants, eng.as_ref());
@@ -298,8 +328,12 @@ impl<'a> MultiTenantExecutor<'a> {
                     if eng.is_done() && queue.is_empty() {
                         break;
                     }
+                    let t_wall = self.rec.on().then(std::time::Instant::now);
                     eng.advance_to(t_next)
                         .expect("bounded epoch advance cannot stall");
+                    if let Some(t) = t_wall {
+                        sim_wall_s += t.elapsed().as_secs_f64();
+                    }
                 }
                 let t_now = t_next;
                 t_next += cadence;
@@ -312,6 +346,10 @@ impl<'a> MultiTenantExecutor<'a> {
                     for ev in &due {
                         eng.apply_fault(&ev.fault);
                         faults::apply_to_scale(&mut fault_scale, topo, &ev.fault);
+                        self.rec.emit(|| TraceRecord::Fault {
+                            t_s: t_now,
+                            desc: format!("{:?}", ev.fault),
+                        });
                     }
                     any_dead = fault_scale.iter().any(|&s| s <= 0.0);
                     let healthy = fault_scale.iter().all(|&s| s >= 1.0);
@@ -366,25 +404,44 @@ impl<'a> MultiTenantExecutor<'a> {
                             preempted: 0,
                             goodput_gbps,
                         });
+                        // final partial epoch: the engine drained before
+                        // the boundary, so the window was never sampled —
+                        // the snapshot reports the last observed window
+                        self.rec.emit(|| {
+                            let snap = monitor.snapshot();
+                            TraceRecord::Epoch {
+                                epoch: (epochs.len() - 1) as u64,
+                                t_s: t_now,
+                                goodput_gbps,
+                                congestion: snap.congestion,
+                                deviation: 0.0,
+                                replanned: false,
+                                preempted: 0,
+                                util: snap.util,
+                            }
+                        });
                     }
                     break;
                 }
                 monitor.observe(&eng.take_window());
 
-                // residuals per live tenant
+                // residuals per live tenant (shared extraction —
+                // [`residual_routing`]; forced pairs cross a dead link)
                 let live_ids: Vec<usize> = tenants
                     .iter()
                     .filter(|(_, st)| !st.done)
                     .map(|(&id, _)| id)
                     .collect();
-                let mut res: BTreeMap<
-                    usize,
-                    (Vec<Demand>, BTreeMap<(GpuId, GpuId), Assignment>, Vec<f64>),
-                > = BTreeMap::new();
+                let mut res: BTreeMap<usize, ResidualRouting> = BTreeMap::new();
                 let mut any_residual = false;
                 for &tid in &live_ids {
-                    let r = tenant_residuals(&tenants[&tid], eng.as_ref(), topo);
-                    if !r.0.is_empty() {
+                    let r = residual_routing(
+                        &tenants[&tid].streams,
+                        eng.as_ref(),
+                        topo.links.len(),
+                        if any_dead { Some(fault_scale.as_slice()) } else { None },
+                    );
+                    if !r.demands.is_empty() {
                         any_residual = true;
                     }
                     res.insert(tid, r);
@@ -396,6 +453,19 @@ impl<'a> MultiTenantExecutor<'a> {
                         replanned: false,
                         preempted: 0,
                         goodput_gbps,
+                    });
+                    self.rec.emit(|| {
+                        let snap = monitor.snapshot();
+                        TraceRecord::Epoch {
+                            epoch: (epochs.len() - 1) as u64,
+                            t_s: t_now,
+                            goodput_gbps,
+                            congestion: snap.congestion,
+                            deviation: 0.0,
+                            replanned: false,
+                            preempted: 0,
+                            util: snap.util,
+                        }
                     });
                     continue;
                 }
@@ -411,15 +481,15 @@ impl<'a> MultiTenantExecutor<'a> {
                     let mut tds: Vec<TenantDemands> = Vec::new();
                     let mut in_flight: BTreeMap<usize, Plan> = BTreeMap::new();
                     for &tid in &live_ids {
-                        let (rd, asg, ll) = &res[&tid];
-                        if rd.is_empty() {
+                        let r = &res[&tid];
+                        if r.demands.is_empty() {
                             continue;
                         }
-                        for (c, l) in combined_ll.iter_mut().zip(ll) {
+                        for (c, l) in combined_ll.iter_mut().zip(&r.link_load) {
                             *c += *l;
                         }
                         let mut seeds: BTreeMap<(GpuId, GpuId), PathKind> = BTreeMap::new();
-                        for (k, a) in asg {
+                        for (k, a) in &r.assignments {
                             // first-maximal part seeds the hysteresis
                             let mut best: Option<(&Path, f64)> = None;
                             for (p, b) in &a.parts {
@@ -436,14 +506,14 @@ impl<'a> MultiTenantExecutor<'a> {
                             }
                         }
                         let mut td =
-                            TenantDemands::new(tid, tenants[&tid].job.weight, rd.clone());
+                            TenantDemands::new(tid, tenants[&tid].job.weight, r.demands.clone());
                         td.incumbent_kinds = Some(seeds);
                         tds.push(td);
                         in_flight.insert(
                             tid,
                             Plan {
-                                assignments: asg.clone(),
-                                link_load: ll.clone(),
+                                assignments: r.assignments.clone(),
+                                link_load: r.link_load.clone(),
                                 plan_time_s: 0.0,
                             },
                         );
@@ -458,8 +528,12 @@ impl<'a> MultiTenantExecutor<'a> {
                     for e in excess.iter_mut() {
                         *e = (*e - deadband).max(0.0);
                     }
+                    let t_wall = self.rec.on().then(std::time::Instant::now);
                     let joint =
                         joint_planner.plan_joint(&tds, Some(&excess), &self.rcfg.caps, None);
+                    if let Some(t) = t_wall {
+                        plan_wall_s += t.elapsed().as_secs_f64();
+                    }
                     // per-tenant acceptance: the challenger is evaluated
                     // against the OTHER tenants' in-flight routing as
                     // exact background (the information advantage over
@@ -476,12 +550,7 @@ impl<'a> MultiTenantExecutor<'a> {
                         // a tenant whose in-flight routing crosses a
                         // dead link must move: waive the hysteresis,
                         // exactly as the single-job executor does
-                        let forced = any_dead
-                            && in_flight[&td.tenant].assignments.values().any(|a| {
-                                a.parts.iter().any(|(p, b)| {
-                                    *b > 0.0 && p.hops.iter().any(|&h| fault_scale[h] <= 0.0)
-                                })
-                            });
+                        let forced = !res[&td.tenant].forced.is_empty();
                         let hs = if health_on { Some(fault_scale.as_slice()) } else { None };
                         let z_carry =
                             drain_time_z_scaled(topo, &self.rcfg.caps, &shared, own, &bg, hs);
@@ -494,9 +563,31 @@ impl<'a> MultiTenantExecutor<'a> {
                             hs,
                         );
                         if !forced && z_ch >= z_carry * (1.0 - self.rcfg.margin) {
+                            self.rec.emit(|| TraceRecord::Decision {
+                                t_s: t_now,
+                                tenant: td.tenant as i64,
+                                accepted: false,
+                                forced,
+                                z_carry,
+                                z_challenger: z_ch,
+                                margin: self.rcfg.margin,
+                                mwu_visits: joint_planner.mwu_last_visits(),
+                                changed_pairs: 0,
+                            });
                             continue;
                         }
                         let changed = diff_pairs(&in_flight[&td.tenant], ch);
+                        self.rec.emit(|| TraceRecord::Decision {
+                            t_s: t_now,
+                            tenant: td.tenant as i64,
+                            accepted: !changed.is_empty(),
+                            forced,
+                            z_carry,
+                            z_challenger: z_ch,
+                            margin: self.rcfg.margin,
+                            mwu_visits: joint_planner.mwu_last_visits(),
+                            changed_pairs: changed.len(),
+                        });
                         if changed.is_empty() {
                             continue;
                         }
@@ -520,13 +611,13 @@ impl<'a> MultiTenantExecutor<'a> {
                     }
                 } else {
                     for &tid in &live_ids {
-                        let (rd, asg, ll) = &res[&tid];
-                        if rd.is_empty() {
+                        let r = &res[&tid];
+                        if r.demands.is_empty() {
                             continue;
                         }
                         let in_flight = Plan {
-                            assignments: asg.clone(),
-                            link_load: ll.clone(),
+                            assignments: r.assignments.clone(),
+                            link_load: r.link_load.clone(),
                             plan_time_s: 0.0,
                         };
                         let planner = planners.get_mut(&tid).expect("tenant planner");
@@ -534,21 +625,30 @@ impl<'a> MultiTenantExecutor<'a> {
                         // pairs stranded on a dead link bypass the
                         // z-hysteresis (they would otherwise never
                         // drain — the replan IS the recovery path)
-                        let forced: Vec<(GpuId, GpuId)> = if any_dead {
-                            asg.iter()
-                                .filter(|(_, a)| {
-                                    a.parts.iter().any(|(p, b)| {
-                                        *b > 0.0
-                                            && p.hops.iter().any(|&h| fault_scale[h] <= 0.0)
-                                    })
-                                })
-                                .map(|(&pair, _)| pair)
-                                .collect()
-                        } else {
-                            Vec::new()
-                        };
-                        let out =
-                            planner.replan_forced(&in_flight, &observed, rd, &self.rcfg, &forced);
+                        let t_wall = self.rec.on().then(std::time::Instant::now);
+                        let out = planner.replan_forced(
+                            &in_flight,
+                            &observed,
+                            &r.demands,
+                            &self.rcfg,
+                            &r.forced,
+                        );
+                        if let Some(t) = t_wall {
+                            plan_wall_s += t.elapsed().as_secs_f64();
+                        }
+                        if let Some(a) = out.audit {
+                            self.rec.emit(|| TraceRecord::Decision {
+                                t_s: t_now,
+                                tenant: tid as i64,
+                                accepted: out.replanned,
+                                forced: a.forced,
+                                z_carry: a.z_carry,
+                                z_challenger: a.z_challenger,
+                                margin: a.margin,
+                                mwu_visits: a.mwu_visits,
+                                changed_pairs: out.changed_pairs.len(),
+                            });
+                        }
                         deviation = deviation.max(out.deviation);
                         if out.replanned {
                             replanned_here = true;
@@ -586,6 +686,19 @@ impl<'a> MultiTenantExecutor<'a> {
                     replanned: replanned_here,
                     preempted: preempted_here,
                     goodput_gbps,
+                });
+                self.rec.emit(|| {
+                    let snap = monitor.snapshot();
+                    TraceRecord::Epoch {
+                        epoch: (epochs.len() - 1) as u64,
+                        t_s: t_now,
+                        goodput_gbps,
+                        congestion: snap.congestion,
+                        deviation,
+                        replanned: replanned_here,
+                        preempted: preempted_here,
+                        util: snap.util,
+                    }
                 });
             }
         }
@@ -683,6 +796,37 @@ impl<'a> MultiTenantExecutor<'a> {
         }
         let g_over_w: Vec<f64> = results.iter().map(|t| t.goodput_gbps / t.weight).collect();
         let makespan = sim.makespan;
+        let aggregate_goodput_gbps = payload_total / makespan.max(1e-12) / 1e9;
+        for t in &results {
+            self.rec.emit(|| TraceRecord::Tenant {
+                tenant: t.id as u64,
+                tenant_kind: format!("{:?}", t.kind),
+                weight: t.weight,
+                admit_s: t.admit_s,
+                finish_s: t.finish_s,
+                payload_bytes: t.payload_bytes,
+                goodput_gbps: t.goodput_gbps,
+                p99_lat_s: t.p99_lat_s,
+                p99_chunk_s: t.p99_chunk_s.unwrap_or(-1.0),
+            });
+        }
+        self.rec.emit(|| TraceRecord::Summary {
+            makespan_s: makespan,
+            payload_bytes: payload_total,
+            goodput_gbps: aggregate_goodput_gbps,
+            replans: replans as u64,
+            preemptions: preemptions as u64,
+            sim_events,
+        });
+        self.rec.emit(|| TraceRecord::Profile {
+            engine: eng.profile(),
+            mwu_plans: joint_planner.mwu_plans()
+                + planners.values().map(|p| p.mwu_plans()).sum::<u64>(),
+            mwu_visits: joint_planner.mwu_total_visits()
+                + planners.values().map(|p| p.mwu_total_visits()).sum::<u64>(),
+            plan_wall_s,
+            sim_wall_s,
+        });
         ServeRun {
             weighted_fairness: if g_over_w.is_empty() {
                 1.0
@@ -692,7 +836,7 @@ impl<'a> MultiTenantExecutor<'a> {
             tenants: results,
             makespan_s: makespan,
             payload_bytes: payload_total,
-            aggregate_goodput_gbps: payload_total / makespan.max(1e-12) / 1e9,
+            aggregate_goodput_gbps,
             replans,
             preemptions,
             epochs,
@@ -774,6 +918,14 @@ impl<'a> MultiTenantExecutor<'a> {
                 done: false,
             };
             let k = if self.tcfg.joint { channel_count(j.weight) } else { 1 };
+            self.rec.emit(|| TraceRecord::Admit {
+                t_s: start,
+                tenant: j.id as u64,
+                tenant_kind: format!("{:?}", j.kind),
+                weight: j.weight,
+                payload_bytes: payload,
+                channels: k,
+            });
             let mut idx = *n_flows + batch_flows.len();
             let plan = &plans[&j.id];
             for (&pair, a) in &plan.assignments {
@@ -862,38 +1014,6 @@ fn residual_link_load(
         }
     }
     (ll, ep)
-}
-
-/// One tenant's residual demands and in-flight routing.
-fn tenant_residuals(
-    st: &TenantState,
-    engine: &dyn FabricBackend,
-    topo: &Topology,
-) -> (Vec<Demand>, BTreeMap<(GpuId, GpuId), Assignment>, Vec<f64>) {
-    let mut residual_demands: Vec<Demand> = Vec::new();
-    let mut assignments = BTreeMap::new();
-    let mut link_load = vec![0.0f64; topo.links.len()];
-    for (&pair, parts) in &st.streams {
-        let mut pr: Vec<(Path, f64)> = Vec::new();
-        let mut total = 0.0f64;
-        for ps in parts {
-            let r = engine.residual_bytes(ps.flow);
-            if r > 1.0 {
-                pr.push((engine.flow(ps.flow).path.clone(), r));
-                total += r;
-            }
-        }
-        if total > 1.0 {
-            residual_demands.push(Demand::new(pair.0, pair.1, total));
-            for (p, b) in &pr {
-                for &h in &p.hops {
-                    link_load[h] += *b;
-                }
-            }
-            assignments.insert(pair, Assignment { parts: pr });
-        }
-    }
-    (residual_demands, assignments, link_load)
 }
 
 /// Preempt the changed pairs of one tenant and stage their residuals

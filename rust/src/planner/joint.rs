@@ -336,6 +336,7 @@ impl<'a> Planner<'a> {
             flows: Vec<(usize, Vec<f64>)>, // (entry, per-candidate bytes)
             added: Vec<f64>,
             added_by_tenant: Vec<Vec<f64>>,
+            visits: u64,
         }
         let drain_group = |entries: &[usize]| -> GroupOut {
             let mut load = load0.clone();
@@ -354,12 +355,14 @@ impl<'a> Planner<'a> {
                 r_tot += r;
             }
             let mut active: Vec<usize> = (0..entries.len()).collect();
+            let mut visits = 0u64;
             while r_tot > 1e-6 && !active.is_empty() {
                 let mut ai = 0;
                 while ai < active.len() {
                     let li = active[ai];
                     let ei = entries[li];
                     let infos = &info_by_entry[ei];
+                    visits += 1;
                     let f_route =
                         next_volume(remaining[li], eps, lambdas[ei], infos.len());
                     let mut best_i = 0usize;
@@ -409,6 +412,7 @@ impl<'a> Planner<'a> {
                 flows: entries.iter().copied().zip(flows).collect(),
                 added,
                 added_by_tenant,
+                visits,
             }
         };
 
@@ -440,6 +444,7 @@ impl<'a> Planner<'a> {
             tenants.iter().map(|_| vec![0.0f64; ext_len]).collect();
         let mut flows_by_entry: Vec<Vec<f64>> =
             info_by_entry.iter().map(|c| vec![0.0; c.len()]).collect();
+        let mut visits = 0u64;
         for o in outs {
             for (ei, f) in o.flows {
                 flows_by_entry[ei] = f;
@@ -452,7 +457,9 @@ impl<'a> Planner<'a> {
                     *a += v;
                 }
             }
+            visits += o.visits;
         }
+        self.note_plan(visits);
 
         let plan_time_s = t0.elapsed().as_secs_f64();
         added.truncate(num_links);

@@ -22,4 +22,4 @@ pub use cost::{CostModel, CostShape};
 pub use joint::{JointPlan, TenantDemands};
 pub use mwu::{lower_bound_norm_load, LinkHealth, Planner, PlannerCfg};
 pub use plan::{Assignment, Demand, Plan};
-pub use replan::{carry_plan, DrainCaps, ReplanCfg, ReplanOutcome};
+pub use replan::{carry_plan, DrainCaps, ReplanAudit, ReplanCfg, ReplanOutcome};

@@ -113,12 +113,53 @@ pub struct Planner<'a> {
     /// the only state fault-free runs ever see) keeps every code path
     /// byte-identical to the pre-fault planner.
     health: Option<LinkHealth>,
+    /// Plans produced (single-tenant sweeps and joint solves alike) —
+    /// telemetry self-profiling, never read by the planning math.
+    plans: u64,
+    /// Algorithm-1 visits in the most recent plan. The visit count is
+    /// a pure function of the demand set and λ/ε (the script is
+    /// load-independent), so it is identical for every thread count.
+    last_visits: u64,
+    /// Cumulative visits across this planner's lifetime.
+    total_visits: u64,
 }
 
 impl<'a> Planner<'a> {
     pub fn new(topo: &'a Topology, cfg: PlannerCfg) -> Self {
         let shared = SharedConstraints::of(topo);
-        Planner { topo, cfg, cand_cache: BTreeMap::new(), shared, health: None }
+        Planner {
+            topo,
+            cfg,
+            cand_cache: BTreeMap::new(),
+            shared,
+            health: None,
+            plans: 0,
+            last_visits: 0,
+            total_visits: 0,
+        }
+    }
+
+    /// Fold one finished plan into the self-profiling counters.
+    pub(crate) fn note_plan(&mut self, visits: u64) {
+        self.plans += 1;
+        self.last_visits = visits;
+        self.total_visits += visits;
+    }
+
+    /// Plans produced so far (telemetry `profile.mwu_plans`).
+    pub fn mwu_plans(&self) -> u64 {
+        self.plans
+    }
+
+    /// Algorithm-1 visits of the most recent plan (the decision
+    /// record's `mwu_visits`).
+    pub fn mwu_last_visits(&self) -> u64 {
+        self.last_visits
+    }
+
+    /// Cumulative visits across every plan this planner produced.
+    pub fn mwu_total_visits(&self) -> u64 {
+        self.total_visits
     }
 
     /// Install (or clear) the per-link capacity health the next plans
@@ -380,12 +421,14 @@ impl<'a> Planner<'a> {
         } else {
             None
         };
-        match components {
+        let visits = match components {
             None => {
                 // serial sweep: immediate load updates, global drain
                 // state (the pre-threads code path)
                 let mut load = load;
+                let mut visits = 0u64;
                 drive_drain_schedule(&totals, eps, cfg.lambda, &info_by_pair, |pi, f_route| {
+                    visits += 1;
                     route_visit(
                         &cfg.cost,
                         &info_by_pair[pi],
@@ -396,6 +439,7 @@ impl<'a> Planner<'a> {
                         &mut flows_by_pair[pi],
                     );
                 });
+                visits
             }
             Some((comp_of_pair, n_comps)) => sweep_parallel(
                 &cfg,
@@ -409,7 +453,8 @@ impl<'a> Planner<'a> {
                 &mut added,
                 &mut flows_by_pair,
             ),
-        }
+        };
+        self.note_plan(visits);
 
         // `Plan::link_load` reports physical links only; the virtual
         // tail was bookkeeping for the sweep's cost basis.
@@ -618,7 +663,9 @@ fn conflict_components(info_by_pair: &[Vec<Cand>], num_links: usize) -> Vec<u32>
 /// worker partition (worker *w* takes components *w*, *w+T*, …) and
 /// merge the results in component order. Every merged entry has
 /// exactly one contributing component, so the outcome is byte-identical
-/// to the serial sweep for any worker count.
+/// to the serial sweep for any worker count. Returns the total visit
+/// count (the summed script lengths — exactly the serial sweep's
+/// visit count, since the driver generating the scripts is shared).
 #[allow(clippy::too_many_arguments)]
 fn sweep_parallel(
     cfg: &PlannerCfg,
@@ -631,13 +678,14 @@ fn sweep_parallel(
     n_comps: usize,
     added: &mut [f64],
     flows_by_pair: &mut [Vec<f64>],
-) {
+) -> u64 {
     // the load-independent visit script, split per component as it is
     // generated (= the serial visit sequence, in order, per component)
     let mut scripts: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n_comps];
     drive_drain_schedule(totals, eps, cfg.lambda, info_by_pair, |pi, f_route| {
         scripts[comp_of_pair[pi] as usize].push((pi as u32, f_route));
     });
+    let visits: u64 = scripts.iter().map(|s| s.len() as u64).sum();
     // execute component scripts on the fixed worker partition
     let workers = cfg.threads.min(n_comps).max(1);
     type CompOut = (Vec<(usize, f64)>, Vec<(usize, Vec<f64>)>);
@@ -681,6 +729,7 @@ fn sweep_parallel(
             flows_by_pair[pi] = fl;
         }
     }
+    visits
 }
 
 /// Execute one component's visit script against a private copy of the

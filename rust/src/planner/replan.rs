@@ -106,6 +106,27 @@ pub struct ReplanOutcome {
     pub deviation: f64,
     /// Pairs whose path set or byte split materially changed.
     pub changed_pairs: Vec<(GpuId, GpuId)>,
+    /// Decision-audit evidence (telemetry `decision` record): present
+    /// whenever a challenger was actually planned and judged, `None`
+    /// on the disabled fast path. Purely observational — nothing in
+    /// the loop reads it back.
+    pub audit: Option<ReplanAudit>,
+}
+
+/// The drain-time evidence one replan decision ran on
+/// ([`ReplanOutcome::audit`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplanAudit {
+    /// Capacity-normalized drain time of carrying the incumbent.
+    pub z_carry: f64,
+    /// Same metric for the challenger plan.
+    pub z_challenger: f64,
+    /// The accept margin the comparison used.
+    pub margin: f64,
+    /// True when dead-link pairs forced adoption regardless of z.
+    pub forced: bool,
+    /// Algorithm-1 visits the challenger sweep performed.
+    pub mwu_visits: u64,
 }
 
 /// Scale the incumbent's per-pair path splits onto the residual
@@ -421,6 +442,7 @@ impl<'a> Planner<'a> {
                 replanned: false,
                 deviation,
                 changed_pairs: Vec::new(),
+                audit: None,
             };
         }
 
@@ -469,6 +491,13 @@ impl<'a> Planner<'a> {
         );
         let accept =
             !forced.is_empty() || z_challenger < z_carry * (1.0 - rcfg.margin);
+        let audit = Some(ReplanAudit {
+            z_carry,
+            z_challenger,
+            margin: rcfg.margin,
+            forced: !forced.is_empty(),
+            mwu_visits: self.mwu_last_visits(),
+        });
         if accept {
             let changed_pairs = diff_pairs(&carry, &challenger);
             if !changed_pairs.is_empty() {
@@ -477,10 +506,17 @@ impl<'a> Planner<'a> {
                     replanned: true,
                     deviation,
                     changed_pairs,
+                    audit,
                 };
             }
         }
-        ReplanOutcome { plan: carry, replanned: false, deviation, changed_pairs: Vec::new() }
+        ReplanOutcome {
+            plan: carry,
+            replanned: false,
+            deviation,
+            changed_pairs: Vec::new(),
+            audit,
+        }
     }
 }
 

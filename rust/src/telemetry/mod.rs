@@ -1,0 +1,623 @@
+//! Execution-time telemetry: a typed, zero-overhead-when-disabled
+//! trace subsystem threaded through the planner, coordinator,
+//! orchestrator and both fabric backends.
+//!
+//! The paper's premise is that runtime traffic deviates from
+//! expectations and the system must *observe* link utilization to
+//! rebalance it — yet without this module the repro could only show
+//! end-of-run aggregates. A [`Recorder`] sink collects
+//! [`TraceRecord`]s at every decision point of the execution-time
+//! loop; `--trace out.jsonl` on the experiment CLIs serializes them as
+//! JSON lines, and `nimble report <trace.jsonl>` re-renders epoch
+//! time-series, a per-link utilization heatmap, per-tenant series and
+//! recovery curves from the trace alone (see [`report`]).
+//!
+//! ## Observer purity (the hard contract)
+//!
+//! Telemetry is a **pure observer** (DESIGN.md §15, in the spirit of
+//! the §9/§14 bit-identity anchors):
+//!
+//! * a [`Recorder::disabled`] sink is bitwise inert — every `emit`
+//!   is one branch on a `None`, no closure runs, no allocation;
+//! * enabling it changes **no plan or simulation bytes** for any
+//!   backend, scheduler, or planner thread count — recording reads
+//!   state, never mutates it (`tests/telemetry_props.rs` pins this
+//!   across the full matrix);
+//! * the trace itself is deterministic modulo wall-clock fields
+//!   (`*_wall_s`, which measure the host, not the simulation).
+//!
+//! ## JSONL schema (version 1)
+//!
+//! One JSON object per line, alphabetical keys, every line carrying
+//! `"kind"`. Floats use the repo-wide shortest-roundtrip policy of
+//! [`crate::util::json`], so a parsed trace reproduces recorded values
+//! **bit-exactly** — `nimble report --check` recomputes headline
+//! numbers from raw ingredients and asserts equality, not closeness.
+//!
+//! | `kind`      | emitted by | fields |
+//! |-------------|-----------|--------|
+//! | `meta`      | CLI entry | `schema`, `subcommand`, `backend`, `scheduler`, `threads`, `topo`, `nodes`, `links`, `gpus` |
+//! | `run`       | experiment driver, once per labeled run | `run`, `cadence_s`, `t0_s` (first-fault time, `-1` if fault-free), `payload_bytes` |
+//! | `epoch`     | replan/serve epoch loop | `run`, `epoch`, `t_s`, `goodput_gbps`, `congestion` (capacity-normalized max link utilization, **unclamped**), `deviation`, `replanned`, `preempted`, `util` (per-link, unclamped) |
+//! | `decision`  | planner challenger audit | `run`, `t_s`, `tenant` (`-1` outside multi-tenant), `accepted`, `forced` (fault-forced replan), `z_carry`, `z_challenger` (capacity-normalized drain times), `margin`, `mwu_visits` (MWU iteration count for the challenger), `changed_pairs` |
+//! | `fault`     | fault application | `run`, `t_s`, `desc` |
+//! | `admit`     | orchestrator admission | `run`, `t_s`, `tenant`, `tenant_kind`, `weight`, `payload_bytes`, `channels` |
+//! | `tenant`    | orchestrator results | `run`, `tenant`, `tenant_kind`, `weight`, `admit_s`, `finish_s`, `payload_bytes`, `goodput_gbps`, `p99_lat_s`, `p99_chunk_s` (`-1` on the fluid backend) |
+//! | `summary`   | end of run | `run`, `makespan_s`, `payload_bytes`, `goodput_gbps`, `replans`, `preemptions`, `sim_events` |
+//! | `fault_row` | `nimble faults` arms | `run`, `topo`, `scenario`, `arm`, `goodput_gbps`, `clean_gbps`, `retention`, `ttr_epochs`, `ttr_ms` (`-1` = no recovery / not applicable), `replans`, `preemptions` |
+//! | `profile`   | end of run | `run`, `events`, `sched_pushes`, `sched_pops`, `solver_invocations`, `mwu_plans`, `mwu_visits`, `plan_wall_s`, `sim_wall_s` |
+//! | `note`      | CLIs without deep instrumentation | `text` |
+//!
+//! Absent optional numerics are encoded as `-1` (never JSON `null`,
+//! never NaN — NaN is not valid JSON), matching the bench convention.
+
+pub mod report;
+
+use crate::fabric::backend::EngineProfile;
+use crate::util::json::{Json, JsonlWriter};
+use std::io;
+use std::sync::{Arc, Mutex};
+
+/// Trace schema version stamped into every `meta` line.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One typed telemetry event. Serialized with [`TraceRecord::to_json`];
+/// field-by-field schema in the [module docs](self).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceRecord {
+    /// CLI invocation context (once per trace).
+    Meta {
+        subcommand: String,
+        backend: String,
+        scheduler: String,
+        threads: usize,
+        topo: String,
+        nodes: usize,
+        links: usize,
+        gpus: usize,
+    },
+    /// Start of a labeled run; subsequent run-scoped records carry the
+    /// label. `t0_s < 0.0` means fault-free.
+    Run { cadence_s: f64, t0_s: f64, payload_bytes: f64 },
+    /// One monitoring epoch of the execution-time loop.
+    Epoch {
+        epoch: u64,
+        t_s: f64,
+        goodput_gbps: f64,
+        congestion: f64,
+        deviation: f64,
+        replanned: bool,
+        preempted: usize,
+        util: Vec<f64>,
+    },
+    /// Planner challenger audit: accepted/rejected with the
+    /// drain-time evidence the decision was made on.
+    Decision {
+        t_s: f64,
+        tenant: i64,
+        accepted: bool,
+        forced: bool,
+        z_carry: f64,
+        z_challenger: f64,
+        margin: f64,
+        mwu_visits: u64,
+        changed_pairs: usize,
+    },
+    /// A fault applied to the running fabric.
+    Fault { t_s: f64, desc: String },
+    /// An admission decision by the orchestrator.
+    Admit {
+        t_s: f64,
+        tenant: u64,
+        tenant_kind: String,
+        weight: f64,
+        payload_bytes: f64,
+        channels: usize,
+    },
+    /// Per-tenant outcome (orchestrator runs).
+    Tenant {
+        tenant: u64,
+        tenant_kind: String,
+        weight: f64,
+        admit_s: f64,
+        finish_s: f64,
+        payload_bytes: f64,
+        goodput_gbps: f64,
+        p99_lat_s: f64,
+        p99_chunk_s: f64,
+    },
+    /// End-of-run headline aggregates.
+    Summary {
+        makespan_s: f64,
+        payload_bytes: f64,
+        goodput_gbps: f64,
+        replans: u64,
+        preemptions: u64,
+        sim_events: u64,
+    },
+    /// One `nimble faults` arm's headline row.
+    FaultRow {
+        topo: String,
+        scenario: String,
+        arm: String,
+        goodput_gbps: f64,
+        clean_gbps: f64,
+        retention: f64,
+        ttr_epochs: f64,
+        ttr_ms: f64,
+        replans: u64,
+        preemptions: u64,
+    },
+    /// Engine self-profiling counters + planner work + phase wall time.
+    /// The `*_wall_s` fields are the only non-deterministic ones in the
+    /// schema.
+    Profile {
+        engine: EngineProfile,
+        mwu_plans: u64,
+        mwu_visits: u64,
+        plan_wall_s: f64,
+        sim_wall_s: f64,
+    },
+    /// Free-form marker for CLIs without deep instrumentation.
+    Note { text: String },
+}
+
+impl TraceRecord {
+    /// Serialize as one schema line, stamped with the current run
+    /// label (empty outside a labeled run).
+    pub fn to_json(&self, run: &str) -> Json {
+        let runj = ("run", Json::str(run));
+        match self {
+            TraceRecord::Meta {
+                subcommand,
+                backend,
+                scheduler,
+                threads,
+                topo,
+                nodes,
+                links,
+                gpus,
+            } => Json::obj(vec![
+                ("kind", Json::str("meta")),
+                ("schema", Json::num(SCHEMA_VERSION as f64)),
+                ("subcommand", Json::str(subcommand.as_str())),
+                ("backend", Json::str(backend.as_str())),
+                ("scheduler", Json::str(scheduler.as_str())),
+                ("threads", Json::num(*threads as f64)),
+                ("topo", Json::str(topo.as_str())),
+                ("nodes", Json::num(*nodes as f64)),
+                ("links", Json::num(*links as f64)),
+                ("gpus", Json::num(*gpus as f64)),
+            ]),
+            TraceRecord::Run { cadence_s, t0_s, payload_bytes } => Json::obj(vec![
+                ("kind", Json::str("run")),
+                runj,
+                ("cadence_s", Json::num(*cadence_s)),
+                ("t0_s", Json::num(*t0_s)),
+                ("payload_bytes", Json::num(*payload_bytes)),
+            ]),
+            TraceRecord::Epoch {
+                epoch,
+                t_s,
+                goodput_gbps,
+                congestion,
+                deviation,
+                replanned,
+                preempted,
+                util,
+            } => Json::obj(vec![
+                ("kind", Json::str("epoch")),
+                runj,
+                ("epoch", Json::num(*epoch as f64)),
+                ("t_s", Json::num(*t_s)),
+                ("goodput_gbps", Json::num(*goodput_gbps)),
+                ("congestion", Json::num(*congestion)),
+                ("deviation", Json::num(*deviation)),
+                ("replanned", Json::Bool(*replanned)),
+                ("preempted", Json::num(*preempted as f64)),
+                ("util", Json::arr(util.iter().map(|&u| Json::num(u)))),
+            ]),
+            TraceRecord::Decision {
+                t_s,
+                tenant,
+                accepted,
+                forced,
+                z_carry,
+                z_challenger,
+                margin,
+                mwu_visits,
+                changed_pairs,
+            } => Json::obj(vec![
+                ("kind", Json::str("decision")),
+                runj,
+                ("t_s", Json::num(*t_s)),
+                ("tenant", Json::num(*tenant as f64)),
+                ("accepted", Json::Bool(*accepted)),
+                ("forced", Json::Bool(*forced)),
+                ("z_carry", Json::num(*z_carry)),
+                ("z_challenger", Json::num(*z_challenger)),
+                ("margin", Json::num(*margin)),
+                ("mwu_visits", Json::num(*mwu_visits as f64)),
+                ("changed_pairs", Json::num(*changed_pairs as f64)),
+            ]),
+            TraceRecord::Fault { t_s, desc } => Json::obj(vec![
+                ("kind", Json::str("fault")),
+                runj,
+                ("t_s", Json::num(*t_s)),
+                ("desc", Json::str(desc.as_str())),
+            ]),
+            TraceRecord::Admit {
+                t_s,
+                tenant,
+                tenant_kind,
+                weight,
+                payload_bytes,
+                channels,
+            } => Json::obj(vec![
+                ("kind", Json::str("admit")),
+                runj,
+                ("t_s", Json::num(*t_s)),
+                ("tenant", Json::num(*tenant as f64)),
+                ("tenant_kind", Json::str(tenant_kind.as_str())),
+                ("weight", Json::num(*weight)),
+                ("payload_bytes", Json::num(*payload_bytes)),
+                ("channels", Json::num(*channels as f64)),
+            ]),
+            TraceRecord::Tenant {
+                tenant,
+                tenant_kind,
+                weight,
+                admit_s,
+                finish_s,
+                payload_bytes,
+                goodput_gbps,
+                p99_lat_s,
+                p99_chunk_s,
+            } => Json::obj(vec![
+                ("kind", Json::str("tenant")),
+                runj,
+                ("tenant", Json::num(*tenant as f64)),
+                ("tenant_kind", Json::str(tenant_kind.as_str())),
+                ("weight", Json::num(*weight)),
+                ("admit_s", Json::num(*admit_s)),
+                ("finish_s", Json::num(*finish_s)),
+                ("payload_bytes", Json::num(*payload_bytes)),
+                ("goodput_gbps", Json::num(*goodput_gbps)),
+                ("p99_lat_s", Json::num(*p99_lat_s)),
+                ("p99_chunk_s", Json::num(*p99_chunk_s)),
+            ]),
+            TraceRecord::Summary {
+                makespan_s,
+                payload_bytes,
+                goodput_gbps,
+                replans,
+                preemptions,
+                sim_events,
+            } => Json::obj(vec![
+                ("kind", Json::str("summary")),
+                runj,
+                ("makespan_s", Json::num(*makespan_s)),
+                ("payload_bytes", Json::num(*payload_bytes)),
+                ("goodput_gbps", Json::num(*goodput_gbps)),
+                ("replans", Json::num(*replans as f64)),
+                ("preemptions", Json::num(*preemptions as f64)),
+                ("sim_events", Json::num(*sim_events as f64)),
+            ]),
+            TraceRecord::FaultRow {
+                topo,
+                scenario,
+                arm,
+                goodput_gbps,
+                clean_gbps,
+                retention,
+                ttr_epochs,
+                ttr_ms,
+                replans,
+                preemptions,
+            } => Json::obj(vec![
+                ("kind", Json::str("fault_row")),
+                runj,
+                ("topo", Json::str(topo.as_str())),
+                ("scenario", Json::str(scenario.as_str())),
+                ("arm", Json::str(arm.as_str())),
+                ("goodput_gbps", Json::num(*goodput_gbps)),
+                ("clean_gbps", Json::num(*clean_gbps)),
+                ("retention", Json::num(*retention)),
+                ("ttr_epochs", Json::num(*ttr_epochs)),
+                ("ttr_ms", Json::num(*ttr_ms)),
+                ("replans", Json::num(*replans as f64)),
+                ("preemptions", Json::num(*preemptions as f64)),
+            ]),
+            TraceRecord::Profile { engine, mwu_plans, mwu_visits, plan_wall_s, sim_wall_s } => {
+                Json::obj(vec![
+                    ("kind", Json::str("profile")),
+                    runj,
+                    ("events", Json::num(engine.events as f64)),
+                    ("sched_pushes", Json::num(engine.sched_pushes as f64)),
+                    ("sched_pops", Json::num(engine.sched_pops as f64)),
+                    ("solver_invocations", Json::num(engine.solver_invocations as f64)),
+                    ("mwu_plans", Json::num(*mwu_plans as f64)),
+                    ("mwu_visits", Json::num(*mwu_visits as f64)),
+                    ("plan_wall_s", Json::num(*plan_wall_s)),
+                    ("sim_wall_s", Json::num(*sim_wall_s)),
+                ])
+            }
+            TraceRecord::Note { text } => {
+                Json::obj(vec![("kind", Json::str("note")), ("text", Json::str(text.as_str()))])
+            }
+        }
+    }
+}
+
+struct Inner {
+    run: String,
+    lines: Vec<Json>,
+}
+
+/// The telemetry sink. `Clone` is cheap (an `Option<Arc>`); a cloned
+/// recorder appends to the same trace. The default/[`disabled`]
+/// recorder holds `None`, so every [`emit`] is a single branch and the
+/// record-constructing closure never runs — zero overhead, zero
+/// allocation, bitwise inert (the observer-purity contract, module
+/// docs).
+///
+/// [`disabled`]: Recorder::disabled
+/// [`emit`]: Recorder::emit
+#[derive(Clone, Default)]
+pub struct Recorder {
+    inner: Option<Arc<Mutex<Inner>>>,
+}
+
+impl Recorder {
+    /// The no-op sink (what executors hold unless `--trace` is given).
+    pub fn disabled() -> Self {
+        Recorder { inner: None }
+    }
+
+    /// A live sink accumulating records in memory.
+    pub fn enabled() -> Self {
+        Recorder {
+            inner: Some(Arc::new(Mutex::new(Inner { run: String::new(), lines: Vec::new() }))),
+        }
+    }
+
+    /// Whether records are being collected. Instrumentation sites that
+    /// need to *compute* something purely for telemetry (a utilization
+    /// snapshot, a wall-clock timestamp) gate on this.
+    pub fn on(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Set the run label stamped on subsequent run-scoped records.
+    pub fn set_run(&self, label: &str) {
+        if let Some(m) = &self.inner {
+            m.lock().unwrap().run = label.to_string();
+        }
+    }
+
+    /// Record one event. The closure only runs when the sink is live.
+    pub fn emit(&self, f: impl FnOnce() -> TraceRecord) {
+        if let Some(m) = &self.inner {
+            let mut g = m.lock().unwrap();
+            let line = f().to_json(&g.run);
+            g.lines.push(line);
+        }
+    }
+
+    /// Lines recorded so far.
+    pub fn len(&self) -> usize {
+        self.inner.as_ref().map_or(0, |m| m.lock().unwrap().lines.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take every recorded line out of the sink (oldest first).
+    pub fn drain(&self) -> Vec<Json> {
+        match &self.inner {
+            None => Vec::new(),
+            Some(m) => std::mem::take(&mut m.lock().unwrap().lines),
+        }
+    }
+
+    /// Snapshot the recorded lines without draining them.
+    pub fn lines(&self) -> Vec<Json> {
+        self.inner.as_ref().map_or_else(Vec::new, |m| m.lock().unwrap().lines.clone())
+    }
+
+    /// Serialize every recorded line to `path` as JSONL (drains the
+    /// sink); returns the number of lines written.
+    pub fn write_jsonl(&self, path: &str) -> io::Result<usize> {
+        let mut w = JsonlWriter::create(path)?;
+        for line in self.drain() {
+            w.write(&line)?;
+        }
+        w.flush()?;
+        Ok(w.lines())
+    }
+}
+
+/// The `[telemetry]` config section: opt-in tracing without a
+/// `--trace` flag. When `enable` is true and no `--trace PATH` is
+/// given on the command line, experiment commands write their trace to
+/// `path`. The flag always wins over the config file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetryCfg {
+    /// Collect a trace even without `--trace` on the command line.
+    pub enable: bool,
+    /// Where the trace goes when enabled via config.
+    pub path: String,
+}
+
+impl Default for TelemetryCfg {
+    fn default() -> Self {
+        TelemetryCfg { enable: false, path: "nimble-trace.jsonl".into() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_never_runs_closures() {
+        let rec = Recorder::disabled();
+        assert!(!rec.on());
+        rec.emit(|| unreachable!("disabled sink must not evaluate the record"));
+        rec.set_run("ignored");
+        assert!(rec.is_empty());
+        assert!(rec.drain().is_empty());
+    }
+
+    #[test]
+    fn enabled_recorder_stamps_run_labels() {
+        let rec = Recorder::enabled();
+        assert!(rec.on());
+        rec.emit(|| TraceRecord::Note { text: "hello".into() });
+        rec.set_run("flap");
+        rec.emit(|| TraceRecord::Fault { t_s: 0.001, desc: "link down".into() });
+        let lines = rec.lines();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].get("kind").as_str(), Some("note"));
+        assert_eq!(lines[1].get("run").as_str(), Some("flap"));
+        assert_eq!(lines[1].get("t_s").as_f64(), Some(0.001));
+        // clones share the sink
+        let clone = rec.clone();
+        clone.emit(|| TraceRecord::Note { text: "shared".into() });
+        assert_eq!(rec.len(), 3);
+        // drain empties, preserves order
+        let drained = rec.drain();
+        assert_eq!(drained.len(), 3);
+        assert!(rec.is_empty());
+    }
+
+    #[test]
+    fn every_record_kind_serializes_and_roundtrips() {
+        let records = vec![
+            TraceRecord::Meta {
+                subcommand: "faults".into(),
+                backend: "fluid".into(),
+                scheduler: "wheel".into(),
+                threads: 1,
+                topo: "flat".into(),
+                nodes: 2,
+                links: 34,
+                gpus: 8,
+            },
+            TraceRecord::Run { cadence_s: 2.0e-4, t0_s: 0.004, payload_bytes: 1.5e9 },
+            TraceRecord::Epoch {
+                epoch: 3,
+                t_s: 6.0e-4,
+                goodput_gbps: 812.5,
+                congestion: 1.25,
+                deviation: 0.31,
+                replanned: true,
+                preempted: 4,
+                util: vec![0.5, 1.25, 0.0],
+            },
+            TraceRecord::Decision {
+                t_s: 6.0e-4,
+                tenant: -1,
+                accepted: true,
+                forced: false,
+                z_carry: 1.9e-3,
+                z_challenger: 1.2e-3,
+                margin: 0.1,
+                mwu_visits: 640,
+                changed_pairs: 7,
+            },
+            TraceRecord::Fault { t_s: 0.004, desc: "LinkDown(12)".into() },
+            TraceRecord::Admit {
+                t_s: 0.0,
+                tenant: 2,
+                tenant_kind: "allreduce".into(),
+                weight: 2.0,
+                payload_bytes: 3.0e8,
+                channels: 2,
+            },
+            TraceRecord::Tenant {
+                tenant: 2,
+                tenant_kind: "allreduce".into(),
+                weight: 2.0,
+                admit_s: 0.0,
+                finish_s: 0.0123,
+                payload_bytes: 3.0e8,
+                goodput_gbps: 24.4,
+                p99_lat_s: 1.1e-3,
+                p99_chunk_s: -1.0,
+            },
+            TraceRecord::Summary {
+                makespan_s: 0.0123,
+                payload_bytes: 1.5e9,
+                goodput_gbps: 975.6,
+                replans: 2,
+                preemptions: 9,
+                sim_events: 123456,
+            },
+            TraceRecord::FaultRow {
+                topo: "flat".into(),
+                scenario: "flap".into(),
+                arm: "replan".into(),
+                goodput_gbps: 900.0,
+                clean_gbps: 1000.0,
+                retention: 0.9,
+                ttr_epochs: 5.0,
+                ttr_ms: 1.0,
+                replans: 2,
+                preemptions: 9,
+            },
+            TraceRecord::Profile {
+                engine: EngineProfile {
+                    events: 1000,
+                    sched_pushes: 1100,
+                    sched_pops: 1000,
+                    solver_invocations: 0,
+                },
+                mwu_plans: 3,
+                mwu_visits: 1920,
+                plan_wall_s: 0.01,
+                sim_wall_s: 0.2,
+            },
+            TraceRecord::Note { text: "shallow".into() },
+        ];
+        for r in records {
+            let line = r.to_json("runlabel").to_string_compact();
+            let back = Json::parse(&line).expect("every kind emits valid JSON");
+            assert!(back.get("kind").as_str().is_some(), "missing kind: {line}");
+        }
+    }
+
+    #[test]
+    fn floats_in_records_roundtrip_bitwise() {
+        let rec = Recorder::enabled();
+        let g = 1234.567_890_123_4 / 3.0;
+        rec.emit(|| TraceRecord::Summary {
+            makespan_s: 1.0 / 3.0,
+            payload_bytes: 9.87e15,
+            goodput_gbps: g,
+            replans: 1,
+            preemptions: 0,
+            sim_events: 2,
+        });
+        let line = rec.drain().pop().unwrap().to_string_compact();
+        let back = Json::parse(&line).unwrap();
+        assert_eq!(back.get("goodput_gbps").as_f64().unwrap().to_bits(), g.to_bits());
+        assert_eq!(back.get("makespan_s").as_f64().unwrap().to_bits(), (1.0f64 / 3.0).to_bits());
+    }
+
+    #[test]
+    fn write_jsonl_counts_lines() {
+        let rec = Recorder::enabled();
+        rec.emit(|| TraceRecord::Note { text: "a".into() });
+        rec.emit(|| TraceRecord::Note { text: "b".into() });
+        let path = std::env::temp_dir().join("nimble_telemetry_unit.jsonl");
+        let n = rec.write_jsonl(path.to_str().unwrap()).unwrap();
+        assert_eq!(n, 2);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_file(&path).ok();
+        // writing drained the sink
+        assert!(rec.is_empty());
+    }
+}

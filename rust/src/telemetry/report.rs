@@ -1,0 +1,821 @@
+//! `nimble report <trace.jsonl> [--check]` — render and validate a
+//! recorded telemetry trace (schema in the [module docs](super)).
+//!
+//! The renderer reconstructs, **from the trace alone**: per-run epoch
+//! time-series tables, a text per-link utilization heatmap, per-tenant
+//! goodput/p99 rows, fault-recovery curves, and the headline tables of
+//! `nimble replan`/`faults`/`serve`. `--check` additionally validates
+//! the schema and *recomputes* every derived headline number from the
+//! raw ingredients in the trace — goodput from payload/makespan,
+//! retention from the clean-arm denominator, time-to-recover by
+//! re-running [`recovery_epochs`] over the recorded goodput series —
+//! and asserts **bit-equality** with the recorded values (the
+//! shortest-roundtrip float policy of [`crate::util::json`] makes that
+//! exact, not approximate). It also gates the congestion objective:
+//! a faulted run that replanned must see its capacity-normalized
+//! max-congestion recover to ≤ 1.1× the pre-fault level.
+
+use crate::coordinator::replan::EpochStat;
+use crate::exp::faults::recovery_epochs;
+use crate::metrics::Table;
+use crate::util::json::Json;
+
+/// Every kind the schema defines, with the fields a valid line of that
+/// kind must carry (`--check` schema validation).
+const REQUIRED: &[(&str, &[&str])] = &[
+    (
+        "meta",
+        &["schema", "subcommand", "backend", "scheduler", "threads", "topo", "nodes", "links", "gpus"],
+    ),
+    ("run", &["run", "cadence_s", "t0_s", "payload_bytes"]),
+    (
+        "epoch",
+        &[
+            "run",
+            "epoch",
+            "t_s",
+            "goodput_gbps",
+            "congestion",
+            "deviation",
+            "replanned",
+            "preempted",
+            "util",
+        ],
+    ),
+    (
+        "decision",
+        &[
+            "run",
+            "t_s",
+            "tenant",
+            "accepted",
+            "forced",
+            "z_carry",
+            "z_challenger",
+            "margin",
+            "mwu_visits",
+            "changed_pairs",
+        ],
+    ),
+    ("fault", &["run", "t_s", "desc"]),
+    ("admit", &["run", "t_s", "tenant", "tenant_kind", "weight", "payload_bytes", "channels"]),
+    (
+        "tenant",
+        &[
+            "run",
+            "tenant",
+            "tenant_kind",
+            "weight",
+            "admit_s",
+            "finish_s",
+            "payload_bytes",
+            "goodput_gbps",
+            "p99_lat_s",
+            "p99_chunk_s",
+        ],
+    ),
+    (
+        "summary",
+        &["run", "makespan_s", "payload_bytes", "goodput_gbps", "replans", "preemptions", "sim_events"],
+    ),
+    (
+        "fault_row",
+        &[
+            "run",
+            "topo",
+            "scenario",
+            "arm",
+            "goodput_gbps",
+            "clean_gbps",
+            "retention",
+            "ttr_epochs",
+            "ttr_ms",
+            "replans",
+            "preemptions",
+        ],
+    ),
+    (
+        "profile",
+        &[
+            "run",
+            "events",
+            "sched_pushes",
+            "sched_pops",
+            "solver_invocations",
+            "mwu_plans",
+            "mwu_visits",
+            "plan_wall_s",
+            "sim_wall_s",
+        ],
+    ),
+    ("note", &["text"]),
+];
+
+/// Congestion must recover to ≤ this × the pre-fault level after a
+/// replanned epoch (the `--check` recovery gate, CI smoke).
+pub const CONGESTION_RECOVERY_FACTOR: f64 = 1.1;
+
+/// A parsed trace: one [`Json`] object per line, in file order.
+pub struct Trace {
+    pub lines: Vec<Json>,
+}
+
+/// One labeled run's records, regrouped from the flat line stream.
+struct RunView {
+    label: String,
+    cadence_s: f64,
+    t0_s: f64,
+    epochs: Vec<Json>,
+    decisions: Vec<Json>,
+    faults: Vec<Json>,
+    admits: Vec<Json>,
+    tenants: Vec<Json>,
+    summaries: Vec<Json>,
+    profiles: Vec<Json>,
+}
+
+impl Trace {
+    /// Parse JSONL text; fails on the first malformed line.
+    pub fn parse(text: &str) -> Result<Trace, String> {
+        let mut lines = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            if raw.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(raw).map_err(|e| format!("line {}: {}", i + 1, e))?;
+            lines.push(j);
+        }
+        if lines.is_empty() {
+            return Err("empty trace".to_string());
+        }
+        Ok(Trace { lines })
+    }
+
+    /// Read and parse a trace file.
+    pub fn load(path: &str) -> Result<Trace, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+        Trace::parse(&text)
+    }
+
+    fn kind_lines(&self, kind: &str) -> impl Iterator<Item = &Json> {
+        let k = kind.to_string();
+        self.lines.iter().filter(move |l| l.get("kind").as_str() == Some(k.as_str()))
+    }
+
+    /// Group run-scoped records by label, in first-appearance order.
+    fn runs(&self) -> Vec<RunView> {
+        let mut order: Vec<String> = Vec::new();
+        let mut views: Vec<RunView> = Vec::new();
+        for l in &self.lines {
+            let kind = l.get("kind").as_str().unwrap_or("");
+            let label = match l.get("run").as_str() {
+                Some(r) if !r.is_empty() => r.to_string(),
+                _ => continue,
+            };
+            let idx = match order.iter().position(|o| *o == label) {
+                Some(i) => i,
+                None => {
+                    order.push(label.clone());
+                    views.push(RunView {
+                        label,
+                        cadence_s: 0.0,
+                        t0_s: -1.0,
+                        epochs: Vec::new(),
+                        decisions: Vec::new(),
+                        faults: Vec::new(),
+                        admits: Vec::new(),
+                        tenants: Vec::new(),
+                        summaries: Vec::new(),
+                        profiles: Vec::new(),
+                    });
+                    order.len() - 1
+                }
+            };
+            let v = &mut views[idx];
+            match kind {
+                "run" => {
+                    v.cadence_s = l.get("cadence_s").as_f64().unwrap_or(0.0);
+                    v.t0_s = l.get("t0_s").as_f64().unwrap_or(-1.0);
+                }
+                "epoch" => v.epochs.push(l.clone()),
+                "decision" => v.decisions.push(l.clone()),
+                "fault" => v.faults.push(l.clone()),
+                "admit" => v.admits.push(l.clone()),
+                "tenant" => v.tenants.push(l.clone()),
+                "summary" => v.summaries.push(l.clone()),
+                "profile" => v.profiles.push(l.clone()),
+                _ => {}
+            }
+        }
+        views
+    }
+}
+
+fn epoch_stats(epochs: &[Json]) -> Vec<EpochStat> {
+    epochs
+        .iter()
+        .map(|e| EpochStat {
+            t_s: e.get("t_s").as_f64().unwrap_or(0.0),
+            deviation: e.get("deviation").as_f64().unwrap_or(0.0),
+            replanned: e.get("replanned").as_bool().unwrap_or(false),
+            preempted: e.get("preempted").as_f64().unwrap_or(0.0) as usize,
+            goodput_gbps: e.get("goodput_gbps").as_f64().unwrap_or(0.0),
+        })
+        .collect()
+}
+
+fn heat_char(u: f64) -> char {
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    if !(u > 0.0) {
+        return ' ';
+    }
+    let i = ((u * (RAMP.len() - 1) as f64).ceil() as usize).min(RAMP.len() - 1);
+    RAMP[i] as char
+}
+
+/// Text per-link utilization heatmap: one row per link that ever
+/// carried traffic, one column per epoch (stride-sampled by window max
+/// past `max_cols`, so congestion spikes survive the downsample).
+fn heatmap(epochs: &[Json], max_cols: usize) -> String {
+    let utils: Vec<Vec<f64>> = epochs
+        .iter()
+        .map(|e| {
+            e.get("util")
+                .as_arr()
+                .map(|v| v.iter().map(|u| u.as_f64().unwrap_or(0.0)).collect())
+                .unwrap_or_default()
+        })
+        .collect();
+    let nl = utils.iter().map(|u| u.len()).max().unwrap_or(0);
+    if nl == 0 || utils.is_empty() {
+        return String::new();
+    }
+    let stride = utils.len().div_ceil(max_cols);
+    let cols = utils.len().div_ceil(stride);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "  per-link utilization (rows=links, cols=epochs ×{stride}, ramp \" .:-=+*#%@\" = 0..≥1):\n"
+    ));
+    for link in 0..nl {
+        let mut row = String::new();
+        let mut any = false;
+        for c in 0..cols {
+            let m = utils[c * stride..((c + 1) * stride).min(utils.len())]
+                .iter()
+                .map(|u| u.get(link).copied().unwrap_or(0.0))
+                .fold(0.0f64, f64::max);
+            any |= m > 0.0;
+            row.push(heat_char(m));
+        }
+        if any {
+            out.push_str(&format!("  link {link:>4} |{row}|\n"));
+        }
+    }
+    out
+}
+
+fn fmt_ms(s: f64) -> String {
+    format!("{:.3}", s * 1e3)
+}
+
+fn fmt_opt(x: f64) -> String {
+    if x < 0.0 { "—".to_string() } else { format!("{x:.2}") }
+}
+
+/// Render the human-readable report (every section the trace has data
+/// for; sections with no records are skipped).
+pub fn render(trace: &Trace) -> String {
+    let mut out = String::new();
+    for m in trace.kind_lines("meta") {
+        out.push_str(&format!(
+            "trace: schema v{} · nimble {} · backend {} ({} sched, {} threads) · topo {} ({} nodes, {} links, {} gpus)\n",
+            m.get("schema").as_u64().unwrap_or(0),
+            m.get("subcommand").as_str().unwrap_or("?"),
+            m.get("backend").as_str().unwrap_or("?"),
+            m.get("scheduler").as_str().unwrap_or("?"),
+            m.get("threads").as_u64().unwrap_or(0),
+            m.get("topo").as_str().unwrap_or("?"),
+            m.get("nodes").as_u64().unwrap_or(0),
+            m.get("links").as_u64().unwrap_or(0),
+            m.get("gpus").as_u64().unwrap_or(0),
+        ));
+    }
+    for n in trace.kind_lines("note") {
+        out.push_str(&format!("note: {}\n", n.get("text").as_str().unwrap_or("")));
+    }
+
+    for run in trace.runs() {
+        out.push_str(&format!("\n== run {} ==\n", run.label));
+        if run.t0_s >= 0.0 {
+            out.push_str(&format!(
+                "  cadence {} ms, first fault at {} ms\n",
+                fmt_ms(run.cadence_s),
+                fmt_ms(run.t0_s)
+            ));
+        }
+
+        if !run.epochs.is_empty() {
+            let mut t = Table::new(&[
+                "epoch",
+                "t_ms",
+                "goodput_gbps",
+                "congestion",
+                "deviation",
+                "replanned",
+                "preempted",
+            ]);
+            for e in &run.epochs {
+                t.row(&[
+                    format!("{}", e.get("epoch").as_u64().unwrap_or(0)),
+                    fmt_ms(e.get("t_s").as_f64().unwrap_or(0.0)),
+                    format!("{:.1}", e.get("goodput_gbps").as_f64().unwrap_or(0.0)),
+                    format!("{:.3}", e.get("congestion").as_f64().unwrap_or(0.0)),
+                    format!("{:.3}", e.get("deviation").as_f64().unwrap_or(0.0)),
+                    format!("{}", e.get("replanned").as_bool().unwrap_or(false)),
+                    format!("{}", e.get("preempted").as_u64().unwrap_or(0)),
+                ]);
+            }
+            out.push_str(&t.render());
+            out.push_str(&heatmap(&run.epochs, 72));
+        }
+
+        if !run.decisions.is_empty() {
+            let mut t = Table::new(&[
+                "t_ms", "tenant", "accepted", "forced", "z_carry", "z_chall", "margin",
+                "mwu_visits", "changed",
+            ]);
+            for d in &run.decisions {
+                let tenant = d.get("tenant").as_f64().unwrap_or(-1.0);
+                t.row(&[
+                    fmt_ms(d.get("t_s").as_f64().unwrap_or(0.0)),
+                    if tenant < 0.0 { "—".to_string() } else { format!("{tenant:.0}") },
+                    format!("{}", d.get("accepted").as_bool().unwrap_or(false)),
+                    format!("{}", d.get("forced").as_bool().unwrap_or(false)),
+                    format!("{:.3e}", d.get("z_carry").as_f64().unwrap_or(0.0)),
+                    format!("{:.3e}", d.get("z_challenger").as_f64().unwrap_or(0.0)),
+                    format!("{:.2}", d.get("margin").as_f64().unwrap_or(0.0)),
+                    format!("{}", d.get("mwu_visits").as_u64().unwrap_or(0)),
+                    format!("{}", d.get("changed_pairs").as_u64().unwrap_or(0)),
+                ]);
+            }
+            out.push_str("  planner decisions:\n");
+            out.push_str(&t.render());
+        }
+
+        for f in &run.faults {
+            out.push_str(&format!(
+                "  fault @ {} ms: {}\n",
+                fmt_ms(f.get("t_s").as_f64().unwrap_or(0.0)),
+                f.get("desc").as_str().unwrap_or("?")
+            ));
+        }
+        for a in &run.admits {
+            out.push_str(&format!(
+                "  admit @ {} ms: tenant {} ({}, w={}, {:.0} MB, {} ch)\n",
+                fmt_ms(a.get("t_s").as_f64().unwrap_or(0.0)),
+                a.get("tenant").as_u64().unwrap_or(0),
+                a.get("tenant_kind").as_str().unwrap_or("?"),
+                a.get("weight").as_f64().unwrap_or(0.0),
+                a.get("payload_bytes").as_f64().unwrap_or(0.0) / (1024.0 * 1024.0),
+                a.get("channels").as_u64().unwrap_or(0),
+            ));
+        }
+
+        if !run.tenants.is_empty() {
+            let mut t = Table::new(&[
+                "tenant",
+                "kind",
+                "weight",
+                "admit_ms",
+                "finish_ms",
+                "goodput_gbps",
+                "p99_lat_us",
+                "p99_chunk_us",
+            ]);
+            for r in &run.tenants {
+                let p99c = r.get("p99_chunk_s").as_f64().unwrap_or(-1.0);
+                t.row(&[
+                    format!("{}", r.get("tenant").as_u64().unwrap_or(0)),
+                    r.get("tenant_kind").as_str().unwrap_or("?").to_string(),
+                    format!("{:.1}", r.get("weight").as_f64().unwrap_or(0.0)),
+                    fmt_ms(r.get("admit_s").as_f64().unwrap_or(0.0)),
+                    fmt_ms(r.get("finish_s").as_f64().unwrap_or(0.0)),
+                    format!("{:.1}", r.get("goodput_gbps").as_f64().unwrap_or(0.0)),
+                    format!("{:.1}", r.get("p99_lat_s").as_f64().unwrap_or(0.0) * 1e6),
+                    fmt_opt(if p99c < 0.0 { p99c } else { p99c * 1e6 }),
+                ]);
+            }
+            out.push_str("  per-tenant series:\n");
+            out.push_str(&t.render());
+        }
+
+        // recovery curve: goodput relative to pre-fault steady state
+        if run.t0_s >= 0.0 && !run.epochs.is_empty() {
+            let stats = epoch_stats(&run.epochs);
+            if let Some(bidx) =
+                stats.iter().position(|e| e.t_s >= run.t0_s - 0.5 * run.cadence_s)
+            {
+                let pre = &stats[..=bidx];
+                let steady =
+                    pre.iter().map(|e| e.goodput_gbps).sum::<f64>() / pre.len() as f64;
+                if steady > 0.0 {
+                    let ttr = recovery_epochs(&stats, run.t0_s, run.cadence_s);
+                    let curve: Vec<String> = stats[bidx + 1..]
+                        .iter()
+                        .take(12)
+                        .enumerate()
+                        .map(|(k, e)| {
+                            format!("+{}:{:.0}%", k + 1, 100.0 * e.goodput_gbps / steady)
+                        })
+                        .collect();
+                    out.push_str(&format!(
+                        "  recovery: steady {:.1} GB/s pre-fault; {}{}\n",
+                        steady,
+                        curve.join(" "),
+                        match ttr {
+                            Some(n) => format!(
+                                " → recovered in {} epochs ({} ms)",
+                                n,
+                                fmt_ms(n as f64 * run.cadence_s)
+                            ),
+                            None => " → never recovered".to_string(),
+                        }
+                    ));
+                }
+            }
+        }
+
+        for s in &run.summaries {
+            out.push_str(&format!(
+                "  summary: {:.1} GB/s ({:.0} MB over {} ms), {} replans, {} preemptions, {} sim events\n",
+                s.get("goodput_gbps").as_f64().unwrap_or(0.0),
+                s.get("payload_bytes").as_f64().unwrap_or(0.0) / (1024.0 * 1024.0),
+                fmt_ms(s.get("makespan_s").as_f64().unwrap_or(0.0)),
+                s.get("replans").as_u64().unwrap_or(0),
+                s.get("preemptions").as_u64().unwrap_or(0),
+                s.get("sim_events").as_u64().unwrap_or(0),
+            ));
+        }
+        for p in &run.profiles {
+            out.push_str(&format!(
+                "  profile: {} events ({} pushes / {} pops / {} solves), MWU {} plans / {} visits, wall plan {:.1} ms sim {:.1} ms\n",
+                p.get("events").as_u64().unwrap_or(0),
+                p.get("sched_pushes").as_u64().unwrap_or(0),
+                p.get("sched_pops").as_u64().unwrap_or(0),
+                p.get("solver_invocations").as_u64().unwrap_or(0),
+                p.get("mwu_plans").as_u64().unwrap_or(0),
+                p.get("mwu_visits").as_u64().unwrap_or(0),
+                p.get("plan_wall_s").as_f64().unwrap_or(0.0) * 1e3,
+                p.get("sim_wall_s").as_f64().unwrap_or(0.0) * 1e3,
+            ));
+        }
+    }
+
+    let rows: Vec<&Json> = trace.kind_lines("fault_row").collect();
+    if !rows.is_empty() {
+        let mut t = Table::new(&[
+            "topo",
+            "scenario",
+            "arm",
+            "goodput_gbps",
+            "retention",
+            "ttr_epochs",
+            "ttr_ms",
+            "replans",
+            "preempts",
+        ]);
+        for r in rows {
+            let ttr = r.get("ttr_epochs").as_f64().unwrap_or(-1.0);
+            t.row(&[
+                r.get("topo").as_str().unwrap_or("?").to_string(),
+                r.get("scenario").as_str().unwrap_or("?").to_string(),
+                r.get("arm").as_str().unwrap_or("?").to_string(),
+                format!("{:.1}", r.get("goodput_gbps").as_f64().unwrap_or(0.0)),
+                format!("{:.3}", r.get("retention").as_f64().unwrap_or(0.0)),
+                if ttr < 0.0 { "—".to_string() } else { format!("{ttr:.0}") },
+                fmt_opt(r.get("ttr_ms").as_f64().unwrap_or(-1.0)),
+                format!("{}", r.get("replans").as_u64().unwrap_or(0)),
+                format!("{}", r.get("preemptions").as_u64().unwrap_or(0)),
+            ]);
+        }
+        out.push_str("\n== faults headline (reproduced from trace) ==\n");
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// `--check` outcome: every failed assertion, plus how many checks ran
+/// (so an empty `errors` on zero checks can't masquerade as a pass).
+pub struct CheckOutcome {
+    pub checks: usize,
+    pub errors: Vec<String>,
+}
+
+impl CheckOutcome {
+    pub fn ok(&self) -> bool {
+        self.errors.is_empty() && self.checks > 0
+    }
+}
+
+/// Validate the schema and recompute every derived headline number
+/// from the trace's raw ingredients (bit-equality, see module docs).
+pub fn check(trace: &Trace) -> CheckOutcome {
+    let mut checks = 0usize;
+    let mut errors: Vec<String> = Vec::new();
+    let mut err = |msg: String| errors.push(msg);
+
+    // -- schema: every line has a known kind carrying its required fields
+    let mut metas = 0usize;
+    for (i, l) in trace.lines.iter().enumerate() {
+        checks += 1;
+        let kind = match l.get("kind").as_str() {
+            Some(k) => k,
+            None => {
+                err(format!("line {}: missing \"kind\"", i + 1));
+                continue;
+            }
+        };
+        match REQUIRED.iter().find(|(k, _)| *k == kind) {
+            None => err(format!("line {}: unknown kind {kind:?}", i + 1)),
+            Some((_, fields)) => {
+                for f in *fields {
+                    if matches!(l.get(f), Json::Null) {
+                        err(format!("line {}: kind {kind:?} missing field {f:?}", i + 1));
+                    }
+                }
+            }
+        }
+        if kind == "meta" {
+            metas += 1;
+            if l.get("schema").as_u64() != Some(super::SCHEMA_VERSION) {
+                err(format!(
+                    "line {}: schema version {:?} != {}",
+                    i + 1,
+                    l.get("schema").as_u64(),
+                    super::SCHEMA_VERSION
+                ));
+            }
+        }
+    }
+    if metas == 0 {
+        err("no meta line in trace".to_string());
+    }
+
+    // -- headline reproduction: summaries and tenants recompute bitwise
+    for s in trace.kind_lines("summary") {
+        checks += 1;
+        let payload = s.get("payload_bytes").as_f64().unwrap_or(f64::NAN);
+        let makespan = s.get("makespan_s").as_f64().unwrap_or(f64::NAN);
+        let recorded = s.get("goodput_gbps").as_f64().unwrap_or(f64::NAN);
+        let recomputed = payload / makespan.max(1e-12) / 1e9;
+        if recomputed.to_bits() != recorded.to_bits() {
+            err(format!(
+                "summary (run {:?}): goodput {} != recomputed payload/makespan {}",
+                s.get("run").as_str().unwrap_or(""),
+                recorded,
+                recomputed
+            ));
+        }
+    }
+    for t in trace.kind_lines("tenant") {
+        checks += 1;
+        let payload = t.get("payload_bytes").as_f64().unwrap_or(f64::NAN);
+        let admit = t.get("admit_s").as_f64().unwrap_or(f64::NAN);
+        let finish = t.get("finish_s").as_f64().unwrap_or(f64::NAN);
+        let recorded = t.get("goodput_gbps").as_f64().unwrap_or(f64::NAN);
+        let recomputed = payload / (finish - admit).max(1e-12) / 1e9;
+        if recomputed.to_bits() != recorded.to_bits() {
+            err(format!(
+                "tenant {}: goodput {} != recomputed {}",
+                t.get("tenant").as_u64().unwrap_or(0),
+                recorded,
+                recomputed
+            ));
+        }
+    }
+
+    // -- fault rows: retention and time-to-recover recompute from the
+    //    run's recorded goodput series
+    let runs = trace.runs();
+    for r in trace.kind_lines("fault_row") {
+        checks += 1;
+        let goodput = r.get("goodput_gbps").as_f64().unwrap_or(f64::NAN);
+        let clean = r.get("clean_gbps").as_f64().unwrap_or(f64::NAN);
+        let recorded = r.get("retention").as_f64().unwrap_or(f64::NAN);
+        let recomputed = goodput / clean.max(1e-12);
+        let arm = r.get("arm").as_str().unwrap_or("?");
+        if recomputed.to_bits() != recorded.to_bits() {
+            err(format!(
+                "fault_row {arm}: retention {recorded} != recomputed goodput/clean {recomputed}"
+            ));
+        }
+        let label = r.get("run").as_str().unwrap_or("");
+        let recorded_ttr = r.get("ttr_epochs").as_f64().unwrap_or(-1.0);
+        if let Some(run) = runs.iter().find(|v| v.label == label) {
+            if run.t0_s >= 0.0 && !run.epochs.is_empty() {
+                checks += 1;
+                let stats = epoch_stats(&run.epochs);
+                let ttr = recovery_epochs(&stats, run.t0_s, run.cadence_s)
+                    .map_or(-1.0, |n| n as f64);
+                if ttr != recorded_ttr {
+                    err(format!(
+                        "fault_row {arm}: ttr_epochs {recorded_ttr} != recomputed {ttr} from the epoch series"
+                    ));
+                }
+            }
+        }
+    }
+
+    // -- congestion recovery gate: a faulted run that replanned must
+    //    see max-congestion return to ≤ 1.1× the pre-fault level
+    for run in &runs {
+        if run.t0_s < 0.0 || run.epochs.is_empty() {
+            continue;
+        }
+        let stats = epoch_stats(&run.epochs);
+        let cong: Vec<f64> =
+            run.epochs.iter().map(|e| e.get("congestion").as_f64().unwrap_or(0.0)).collect();
+        let bidx = match stats.iter().position(|e| e.t_s >= run.t0_s - 0.5 * run.cadence_s) {
+            Some(i) => i,
+            None => continue,
+        };
+        let replan_idx = match stats[bidx..].iter().position(|e| e.replanned) {
+            Some(k) => bidx + k,
+            None => continue, // frozen arm: nothing to gate
+        };
+        checks += 1;
+        let pre = cong[..=bidx].iter().sum::<f64>() / (bidx + 1) as f64;
+        if pre <= 0.0 {
+            continue;
+        }
+        let post = cong[replan_idx + 1..].iter().cloned().fold(f64::INFINITY, f64::min);
+        if !(post <= CONGESTION_RECOVERY_FACTOR * pre) {
+            err(format!(
+                "run {}: congestion never recovered after the replan epoch \
+                 (pre-fault {pre:.3}, best post-replan {post:.3} > {CONGESTION_RECOVERY_FACTOR}×)",
+                run.label
+            ));
+        }
+    }
+
+    CheckOutcome { checks, errors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{Recorder, TraceRecord};
+
+    fn meta() -> TraceRecord {
+        TraceRecord::Meta {
+            subcommand: "test".into(),
+            backend: "fluid".into(),
+            scheduler: "wheel".into(),
+            threads: 1,
+            topo: "flat".into(),
+            nodes: 2,
+            links: 3,
+            gpus: 8,
+        }
+    }
+
+    fn synth_trace(goodput_skew: bool) -> Trace {
+        let rec = Recorder::enabled();
+        rec.emit(meta);
+        rec.set_run("r0");
+        let payload = 1.5e9;
+        let cadence = 2.0e-4;
+        rec.emit(|| TraceRecord::Run { cadence_s: cadence, t0_s: 4.0 * cadence, payload_bytes: payload });
+        // steady 100 GB/s for 4 epochs, fault crater, replan, recovery
+        let gp = [100.0, 100.0, 100.0, 100.0, 10.0, 95.0, 98.0, 99.0];
+        let cg = [0.8, 0.8, 0.8, 0.8, 2.4, 0.85, 0.8, 0.4];
+        for (i, (&g, &c)) in gp.iter().zip(&cg).enumerate() {
+            rec.emit(|| TraceRecord::Epoch {
+                epoch: i as u64,
+                t_s: (i + 1) as f64 * cadence,
+                goodput_gbps: g,
+                congestion: c,
+                deviation: 0.1,
+                replanned: i == 4,
+                preempted: if i == 4 { 3 } else { 0 },
+                util: vec![c, 0.2, 0.0],
+            });
+        }
+        rec.emit(|| TraceRecord::Fault { t_s: 4.0 * cadence, desc: "LinkDown(0)".into() });
+        let makespan = 8.0 * cadence;
+        let good =
+            if goodput_skew { 123.0 } else { payload / makespan.max(1e-12) / 1e9 };
+        rec.emit(|| TraceRecord::Summary {
+            makespan_s: makespan,
+            payload_bytes: payload,
+            goodput_gbps: good,
+            replans: 1,
+            preemptions: 3,
+            sim_events: 4242,
+        });
+        rec.emit(|| TraceRecord::FaultRow {
+            topo: "flat".into(),
+            scenario: "flap".into(),
+            arm: "replan".into(),
+            goodput_gbps: good,
+            clean_gbps: good / 0.9,
+            retention: good / (good / 0.9).max(1e-12),
+            ttr_epochs: 2.0, // epochs 5..: position of 95 (>=0.9*100) is 1 → +1 = 2
+            ttr_ms: 2.0 * cadence * 1e3,
+            replans: 1,
+            preemptions: 3,
+        });
+        let text: Vec<String> =
+            rec.drain().iter().map(|l| l.to_string_compact()).collect();
+        Trace::parse(&text.join("\n")).unwrap()
+    }
+
+    #[test]
+    fn render_reconstructs_sections_from_the_trace() {
+        let t = synth_trace(false);
+        let out = render(&t);
+        assert!(out.contains("== run r0 =="), "{out}");
+        assert!(out.contains("goodput_gbps"), "{out}");
+        assert!(out.contains("link    0"), "missing heatmap row:\n{out}");
+        assert!(out.contains("recovered in 2 epochs"), "{out}");
+        assert!(out.contains("faults headline"), "{out}");
+        assert!(out.contains("fault @"), "{out}");
+    }
+
+    #[test]
+    fn check_passes_on_consistent_trace_and_counts_checks() {
+        let t = synth_trace(false);
+        let out = check(&t);
+        assert!(out.ok(), "unexpected errors: {:?}", out.errors);
+        assert!(out.checks > t.lines.len(), "derived checks beyond schema: {}", out.checks);
+    }
+
+    #[test]
+    fn check_catches_skewed_goodput_and_ttr() {
+        let t = synth_trace(true);
+        let out = check(&t);
+        assert!(!out.ok());
+        assert!(
+            out.errors.iter().any(|e| e.contains("goodput")),
+            "no goodput error: {:?}",
+            out.errors
+        );
+    }
+
+    #[test]
+    fn check_rejects_unknown_kind_and_missing_fields() {
+        let t = Trace::parse("{\"kind\":\"bogus\"}\n{\"kind\":\"note\"}").unwrap();
+        let out = check(&t);
+        assert!(out.errors.iter().any(|e| e.contains("unknown kind")));
+        assert!(out.errors.iter().any(|e| e.contains("missing field")));
+        assert!(out.errors.iter().any(|e| e.contains("no meta")));
+    }
+
+    #[test]
+    fn congestion_gate_fires_when_congestion_stays_high() {
+        let rec = Recorder::enabled();
+        rec.emit(meta);
+        rec.set_run("bad");
+        let cadence = 2.0e-4;
+        rec.emit(|| TraceRecord::Run { cadence_s: cadence, t0_s: 2.0 * cadence, payload_bytes: 1.0 });
+        for i in 0..6u64 {
+            rec.emit(|| TraceRecord::Epoch {
+                epoch: i,
+                t_s: (i + 1) as f64 * cadence,
+                goodput_gbps: 50.0,
+                congestion: if i < 2 { 0.5 } else { 2.0 }, // never recovers
+                deviation: 0.0,
+                replanned: i == 2,
+                preempted: 0,
+                util: vec![0.5],
+            });
+        }
+        let text: Vec<String> = rec.drain().iter().map(|l| l.to_string_compact()).collect();
+        let t = Trace::parse(&text.join("\n")).unwrap();
+        let out = check(&t);
+        assert!(out.errors.iter().any(|e| e.contains("congestion never recovered")), "{:?}", out.errors);
+    }
+
+    #[test]
+    fn heatmap_downsamples_with_max() {
+        let rec = Recorder::enabled();
+        rec.set_run("h");
+        for i in 0..144u64 {
+            rec.emit(|| TraceRecord::Epoch {
+                epoch: i,
+                t_s: i as f64,
+                goodput_gbps: 1.0,
+                congestion: 0.1,
+                deviation: 0.0,
+                replanned: false,
+                preempted: 0,
+                // one spike that must survive the ×2 downsample
+                util: vec![if i == 77 { 1.0 } else { 0.1 }],
+            });
+        }
+        let lines = rec.drain();
+        let hm = heatmap(&lines, 72);
+        assert!(hm.contains('@'), "spike lost in downsample:\n{hm}");
+    }
+}

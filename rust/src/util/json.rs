@@ -8,6 +8,7 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::io;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
@@ -185,6 +186,53 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// One machine-readable JSONL record: the single choke point every
+/// `benches/*.rs` target and the telemetry trace writer emit through,
+/// so the whole repo shares exactly one float-formatting policy
+/// ([`Json::Num`]'s integral-`f64` rule). The `exp` tag is folded in as
+/// a field; key order on the wire is [`Json::Obj`]'s (alphabetical).
+pub fn json_line(exp: &str, fields: Vec<(&str, Json)>) -> String {
+    let mut all = vec![("exp", Json::str(exp))];
+    all.extend(fields);
+    Json::obj(all).to_string_compact()
+}
+
+/// Line-oriented JSON sink (JSONL): one compact object per line.
+/// Telemetry traces (`--trace out.jsonl`) stream through this; benches
+/// use [`json_line`] directly since they print to stdout.
+pub struct JsonlWriter<W: io::Write> {
+    w: W,
+    lines: usize,
+}
+
+impl JsonlWriter<io::BufWriter<std::fs::File>> {
+    /// Create (truncate) `path` as a buffered JSONL sink.
+    pub fn create(path: impl AsRef<std::path::Path>) -> io::Result<Self> {
+        let f = std::fs::File::create(path)?;
+        Ok(JsonlWriter::new(io::BufWriter::new(f)))
+    }
+}
+
+impl<W: io::Write> JsonlWriter<W> {
+    pub fn new(w: W) -> Self {
+        JsonlWriter { w, lines: 0 }
+    }
+
+    /// Number of lines written so far.
+    pub fn lines(&self) -> usize {
+        self.lines
+    }
+
+    pub fn write(&mut self, line: &Json) -> io::Result<()> {
+        self.lines += 1;
+        writeln!(self.w, "{}", line.to_string_compact())
+    }
+
+    pub fn flush(&mut self) -> io::Result<()> {
+        self.w.flush()
     }
 }
 
@@ -418,6 +466,42 @@ impl<'a> Parser<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_line_tags_and_roundtrips() {
+        let line = json_line(
+            "demo",
+            vec![("n", Json::num(3.0)), ("ratio", Json::num(0.25))],
+        );
+        assert!(!line.contains('\n'), "JSONL records are single lines");
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("exp").as_str(), Some("demo"));
+        assert_eq!(v.get("n").as_u64(), Some(3));
+        assert_eq!(v.get("ratio").as_f64(), Some(0.25));
+    }
+
+    /// The `Display`-based float path is shortest-roundtrip: any finite
+    /// f64 written by the line writer parses back bit-identically —
+    /// the property `nimble report` relies on to reproduce headline
+    /// numbers from a trace alone.
+    #[test]
+    fn jsonl_floats_roundtrip_bitwise() {
+        let xs = [0.1 + 0.2, 1.0 / 3.0, 6.02e23, -4.9e-324, 1234.5678e-9];
+        let mut buf = Vec::new();
+        {
+            let mut w = JsonlWriter::new(&mut buf);
+            for &x in &xs {
+                w.write(&Json::obj(vec![("x", Json::num(x))])).unwrap();
+            }
+            w.flush().unwrap();
+            assert_eq!(w.lines(), xs.len());
+        }
+        let text = String::from_utf8(buf).unwrap();
+        for (line, &x) in text.lines().zip(&xs) {
+            let v = Json::parse(line).unwrap();
+            assert_eq!(v.get("x").as_f64().unwrap().to_bits(), x.to_bits());
+        }
+    }
 
     #[test]
     fn roundtrip_nested() {

@@ -161,7 +161,7 @@ fn empty_schedule_is_bitwise_inert() {
             ReplanCfg::default(),
             tcfg.clone(),
         );
-        let ex = match faults {
+        let mut ex = match faults {
             Some(f) => ex.with_faults(f),
             None => ex,
         };

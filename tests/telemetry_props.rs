@@ -1,0 +1,264 @@
+//! Telemetry property tests (DESIGN.md §15): the trace subsystem is a
+//! pure observer. Attaching an enabled [`Recorder`] must change no
+//! plan or simulation bytes — on either fabric backend, under either
+//! packet-event scheduler, at any thread count, with or without a
+//! fault schedule, replan loop on or off. And `nimble report --check`
+//! must reproduce the headline numbers of `faults` and `serve` runs
+//! bit-exactly from the trace alone.
+
+use nimble::coordinator::ReplanExecutor;
+use nimble::exp::faults::scenario_rows_traced;
+use nimble::exp::serve::run_arm_traced;
+use nimble::fabric::faults::scenario_schedule;
+use nimble::fabric::{
+    BackendKind, FabricParams, Scenario, ScenarioParams, SchedulerKind,
+};
+use nimble::orchestrator::{job_stream, MultiTenantExecutor, TenancyCfg};
+use nimble::planner::{Planner, PlannerCfg, ReplanCfg};
+use nimble::telemetry::{report, Recorder, TraceRecord};
+use nimble::topology::Topology;
+use nimble::workloads::skew::hotspot_alltoallv;
+
+const MB: f64 = 1024.0 * 1024.0;
+
+fn rcfg(enable: bool) -> ReplanCfg {
+    ReplanCfg { enable, cadence_s: 2.0e-4, margin: 0.1, ..ReplanCfg::default() }
+}
+
+/// A meta record like the CLI stamps (check() fails closed without one).
+fn meta() -> TraceRecord {
+    TraceRecord::Meta {
+        subcommand: "test".into(),
+        backend: "fluid".into(),
+        scheduler: "wheel".into(),
+        threads: 1,
+        topo: "flat".into(),
+        nodes: 2,
+        links: 0,
+        gpus: 8,
+    }
+}
+
+/// The observer-purity contract on the single-job executor, over the
+/// full matrix the issue names: fluid plus packet × {wheel, heap} ×
+/// {1, 8 threads}, fault-free and under the flap schedule, replan loop
+/// off and on. Trace-on and trace-off runs must agree to the bit on
+/// makespan, per-link byte counters, the whole epoch goodput series
+/// and the replan/preempt counts — while the enabled recorder actually
+/// captures records (a silent no-op would pass vacuously).
+#[test]
+fn trace_is_a_pure_observer_on_the_replan_executor() {
+    let topo = Topology::paper();
+    let demands = hotspot_alltoallv(&topo, 48.0 * MB, 0.7, topo.gpu(1, 0));
+    let plan = Planner::new(&topo, PlannerCfg::default()).plan(&demands);
+    let flap = scenario_schedule(
+        &topo,
+        Scenario::Flap,
+        &ScenarioParams::default(),
+        Some(&plan.link_load),
+    );
+
+    let mut cases = vec![FabricParams::default()];
+    for scheduler in [SchedulerKind::Wheel, SchedulerKind::Heap] {
+        for threads in [1usize, 8] {
+            let mut p = FabricParams { backend: BackendKind::Packet, ..FabricParams::default() };
+            p.packet.scheduler = scheduler;
+            p.packet.threads = threads;
+            cases.push(p);
+        }
+    }
+
+    for params in &cases {
+        for faulted in [false, true] {
+            for enable in [false, true] {
+                let fly = |rec: Recorder| {
+                    let mut ex = ReplanExecutor::new(
+                        &topo,
+                        params.clone(),
+                        PlannerCfg::default(),
+                        rcfg(enable),
+                    )
+                    .with_recorder(rec);
+                    if faulted {
+                        ex = ex.with_faults(flap.clone());
+                    }
+                    ex.execute(&plan, &demands)
+                };
+                let tag = format!(
+                    "{:?}/{:?}/t{} faulted={faulted} enable={enable}",
+                    params.backend, params.packet.scheduler, params.packet.threads
+                );
+                let off = fly(Recorder::disabled());
+                let rec = Recorder::enabled();
+                let on = fly(rec.clone());
+                assert!(!rec.is_empty(), "{tag}: enabled recorder captured nothing");
+                assert_eq!(
+                    off.report.makespan_s.to_bits(),
+                    on.report.makespan_s.to_bits(),
+                    "{tag}: makespan diverged under tracing"
+                );
+                assert_eq!(off.replans, on.replans, "{tag}: replans diverged");
+                assert_eq!(off.preemptions, on.preemptions, "{tag}: preemptions diverged");
+                assert_eq!(off.epochs.len(), on.epochs.len(), "{tag}: epoch count diverged");
+                for (a, b) in off.epochs.iter().zip(&on.epochs) {
+                    assert_eq!(
+                        a.goodput_gbps.to_bits(),
+                        b.goodput_gbps.to_bits(),
+                        "{tag}: epoch goodput diverged"
+                    );
+                    assert_eq!(a.replanned, b.replanned, "{tag}: replan epoch moved");
+                }
+                for (a, b) in off.sim.link_bytes.iter().zip(&on.sim.link_bytes) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{tag}: link bytes diverged");
+                }
+            }
+        }
+    }
+}
+
+/// The same contract on the multi-tenant orchestrator: joint and
+/// independent modes, clean and under the flap schedule. Per-tenant
+/// goodput and finish times are part of the bit-identity surface.
+#[test]
+fn trace_is_a_pure_observer_on_the_orchestrator() {
+    let topo = Topology::paper();
+    let params = FabricParams::default();
+    for joint in [true, false] {
+        let tcfg = TenancyCfg { jobs: 6, joint, ..TenancyCfg::default() };
+        for faulted in [false, true] {
+            let fly = |rec: Recorder| {
+                let mut ex = MultiTenantExecutor::new(
+                    &topo,
+                    params.clone(),
+                    PlannerCfg::default(),
+                    rcfg(true),
+                    tcfg.clone(),
+                )
+                .with_recorder(rec);
+                if faulted {
+                    ex = ex.with_faults(scenario_schedule(
+                        &topo,
+                        Scenario::Flap,
+                        &ScenarioParams::default(),
+                        None,
+                    ));
+                }
+                ex.execute(job_stream(&topo, &tcfg))
+            };
+            let tag = format!("joint={joint} faulted={faulted}");
+            let off = fly(Recorder::disabled());
+            let rec = Recorder::enabled();
+            let on = fly(rec.clone());
+            assert!(!rec.is_empty(), "{tag}: enabled recorder captured nothing");
+            assert_eq!(
+                off.makespan_s.to_bits(),
+                on.makespan_s.to_bits(),
+                "{tag}: makespan diverged under tracing"
+            );
+            assert_eq!(off.replans, on.replans, "{tag}: replans diverged");
+            assert_eq!(off.preemptions, on.preemptions, "{tag}: preemptions diverged");
+            assert_eq!(off.epochs.len(), on.epochs.len(), "{tag}: epoch count diverged");
+            assert_eq!(off.tenants.len(), on.tenants.len(), "{tag}: tenant count diverged");
+            for (a, b) in off.tenants.iter().zip(&on.tenants) {
+                assert_eq!(
+                    a.goodput_gbps.to_bits(),
+                    b.goodput_gbps.to_bits(),
+                    "{tag}: tenant goodput diverged"
+                );
+                assert_eq!(
+                    a.finish_s.to_bits(),
+                    b.finish_s.to_bits(),
+                    "{tag}: tenant finish diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Drain an enabled recorder into JSONL text exactly as
+/// `Recorder::write_jsonl` would lay it down on disk.
+fn jsonl(rec: &Recorder) -> String {
+    rec.lines().iter().map(|l| l.to_string_compact()).collect::<Vec<_>>().join("\n")
+}
+
+/// `nimble report --check` on a faults trace: every retention and
+/// time-to-recover headline recomputes bit-exactly from the raw
+/// ingredients the trace records (clean goodput, per-arm goodput, the
+/// per-epoch goodput series), and the rendered report reproduces the
+/// faults headline table.
+#[test]
+fn report_check_reproduces_faults_headlines_bit_exactly() {
+    let rec = Recorder::enabled();
+    rec.emit(meta);
+    let topo = Topology::paper();
+    let (_clean, rows) = scenario_rows_traced(
+        "flat",
+        &topo,
+        48.0 * MB,
+        &FabricParams::default(),
+        &PlannerCfg::default(),
+        &ScenarioParams::default(),
+        &[Scenario::Flap, Scenario::Degrade],
+        true,
+        &rec,
+    );
+    assert_eq!(rows.len(), 2 * 3, "two scenarios x (static | replan | ecmp)");
+
+    let text = jsonl(&rec);
+    let trace = report::Trace::parse(&text).expect("traced faults run must parse");
+    let rendered = report::render(&trace);
+    assert!(
+        rendered.contains("faults headline (reproduced from trace)"),
+        "report did not reproduce the faults table:\n{rendered}"
+    );
+    let out = report::check(&trace);
+    assert!(
+        out.ok(),
+        "check failed ({} checks): {:?}",
+        out.checks,
+        out.errors
+    );
+    // the ttr recomputation path actually ran: the trace holds fault
+    // rows bound to runs with a fault epoch and a goodput series
+    assert!(
+        out.checks > trace_lines(&text),
+        "no derived-headline recomputation beyond the per-line schema pass"
+    );
+}
+
+fn trace_lines(text: &str) -> usize {
+    text.lines().filter(|l| !l.trim().is_empty()).count()
+}
+
+/// The same closed loop on a serve trace: per-tenant goodput and the
+/// aggregate summary recompute bit-exactly from admit/finish times and
+/// payload bytes.
+#[test]
+fn report_check_reproduces_serve_headlines_bit_exactly() {
+    let rec = Recorder::enabled();
+    rec.emit(meta);
+    let topo = Topology::paper();
+    let tcfg = TenancyCfg { jobs: 6, ..TenancyCfg::default() };
+    let run = run_arm_traced(
+        &topo,
+        &FabricParams::default(),
+        &PlannerCfg::default(),
+        &ReplanCfg::default(),
+        &tcfg,
+        &rec,
+        "joint",
+    );
+    assert_eq!(run.tenants.len(), tcfg.jobs);
+
+    let text = jsonl(&rec);
+    assert!(text.contains("\"kind\":\"tenant\""), "serve trace lost its tenant rows");
+    let trace = report::Trace::parse(&text).expect("traced serve run must parse");
+    let out = report::check(&trace);
+    assert!(
+        out.ok(),
+        "check failed ({} checks): {:?}",
+        out.checks,
+        out.errors
+    );
+    assert!(!report::render(&trace).is_empty());
+}
