@@ -14,9 +14,13 @@
 //! Since the telemetry subsystem landed, this harness also gates the
 //! trace overhead: flying the identical replanned packet run with an
 //! enabled [`Recorder`] (per-epoch snapshots, decision audits, the
-//! summary record) must cost at most 5% wall clock over the disabled
-//! no-op recorder — and must reproduce the makespan bit-for-bit, the
-//! observer-purity contract of DESIGN.md §15.
+//! summary record — and, since the attribution engine landed, the
+//! per-window blame decomposition plus the end-of-run tail histograms)
+//! must cost at most 5% wall clock over the disabled no-op recorder —
+//! and must reproduce the makespan bit-for-bit, the observer-purity
+//! contract of DESIGN.md §15/§16. The enabled arm is asserted to have
+//! actually emitted `attribution` and `histogram` records, so the gate
+//! cannot silently stop covering the attribution path.
 //!
 //! Like `benches/scale_sweep.rs`, every point emits one machine-readable
 //! JSON line (`{"exp":"packet_engine",...}`).
@@ -66,10 +70,24 @@ fn telemetry_overhead_gate() {
     let (_, makespan_on) = fly(rec.clone());
     let records = rec.len();
     assert!(records > 0, "enabled recorder captured nothing");
+    let kind_count = |k: &str| {
+        rec.lines().iter().filter(|l| l.get("kind").as_str() == Some(k)).count()
+    };
+    let attributions = kind_count("attribution");
+    let histograms = kind_count("histogram");
+    assert!(
+        attributions > 0,
+        "recorder-on run emitted no attribution records: the overhead \
+         gate is no longer exercising the blame decomposition"
+    );
+    assert!(
+        histograms > 0,
+        "recorder-on packet run emitted no tail histogram records"
+    );
     assert_eq!(
         makespan_off.to_bits(),
         makespan_on.to_bits(),
-        "tracing changed the simulated makespan"
+        "tracing (with attribution sampling) changed the simulated makespan"
     );
     let (mut off, mut on) = (f64::INFINITY, f64::INFINITY);
     for _ in 0..OVERHEAD_REPS {
@@ -81,6 +99,8 @@ fn telemetry_overhead_gate() {
         "packet_engine.telemetry",
         vec![
             ("records", Json::num(records as f64)),
+            ("attributions", Json::num(attributions as f64)),
+            ("histograms", Json::num(histograms as f64)),
             ("off_ms", Json::num(off * 1e3)),
             ("on_ms", Json::num(on * 1e3)),
             ("overhead_frac", Json::num(overhead)),

@@ -55,10 +55,7 @@ fn main() {
                 ("goodput_gbps", Json::num(goodput)),
                 ("fluid_goodput_gbps", Json::num(fluid_goodput)),
                 ("ratio_vs_fluid", Json::num(goodput / fluid_goodput.max(1e-12))),
-                (
-                    "p99_us",
-                    Json::num(nimble::util::stats::p99(&tail.sojourn_s) * 1e6),
-                ),
+                ("p99_us", Json::num(tail.sojourn.quantile_s(99.0) * 1e6)),
             ],
         );
         println!("{line}");

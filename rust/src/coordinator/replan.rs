@@ -44,7 +44,9 @@ use crate::fabric::FabricParams;
 use crate::metrics::CommReport;
 use crate::planner::replan::{carry_plan, DrainCaps};
 use crate::planner::{Demand, Plan, Planner, PlannerCfg, ReplanCfg};
-use crate::telemetry::{Recorder, TraceRecord};
+use crate::telemetry::{
+    emit_tail_histograms, DecisionCandidate, LinkBlame, Recorder, TraceRecord, ATTR_TOP_LINKS,
+};
 use crate::topology::{GpuId, Topology};
 use std::collections::BTreeMap;
 
@@ -215,6 +217,7 @@ impl<'a> ReplanExecutor<'a> {
             let mut moved_prev = 0.0f64;
             let mut stalled = 0usize;
             let mut t_next = cadence;
+            let mut attr_epoch = 0u64;
             while !engine.is_done() {
                 let t_wall = self.rec.on().then(std::time::Instant::now);
                 engine
@@ -288,7 +291,21 @@ impl<'a> ReplanExecutor<'a> {
                     }
                     break;
                 }
-                monitor.observe(&engine.take_window());
+                // sample the engine's window; with the recorder live,
+                // take the attributed form — its `totals` are produced
+                // by the same canonical per-link summation, so the
+                // monitor sees bit-identical bytes either way — and
+                // emit the blame decomposition of the hottest links
+                if self.rec.on() {
+                    let attr = engine.take_window_attr();
+                    let links = LinkBlame::hottest(&attr, ATTR_TOP_LINKS);
+                    let epoch = attr_epoch;
+                    self.rec.emit(|| TraceRecord::Attribution { t_s: t_epoch, epoch, links });
+                    attr_epoch += 1;
+                    monitor.observe(&attr.totals);
+                } else {
+                    monitor.observe(&engine.take_window());
+                }
 
                 // residual demands + the residual routing in flight
                 // (shared extraction — [`residual_routing`]); pairs with
@@ -333,6 +350,16 @@ impl<'a> ReplanExecutor<'a> {
                         margin: a.margin,
                         mwu_visits: a.mwu_visits,
                         changed_pairs: out.changed_pairs.len(),
+                        candidates: a
+                            .candidates
+                            .iter()
+                            .map(|c| DecisionCandidate {
+                                name: c.name.to_string(),
+                                z_s: c.z_s,
+                                delta_s: c.delta_s,
+                                binding: c.binding.clone(),
+                            })
+                            .collect(),
                     });
                 }
                 let mut preempted_here = 0usize;
@@ -449,6 +476,9 @@ impl<'a> ReplanExecutor<'a> {
 
         let sim_events = engine.events();
         let tail = engine.tail();
+        if let Some(t) = &tail {
+            emit_tail_histograms(&self.rec, t);
+        }
         let sim = engine.result();
         let payload: f64 = demands.iter().map(|d| d.bytes).sum();
         let name = if self.rcfg.enable { "nimble-replan" } else { "nimble-static" };
@@ -560,7 +590,7 @@ mod tests {
         assert!(run.preemptions >= 1, "no flow was preempted");
         let tail = run.tail.expect("packet backend records tails");
         assert!(tail.delivered_chunks > 0);
-        assert_eq!(tail.sojourn_s.len(), tail.transit_s.len());
+        assert_eq!(tail.sojourn.total(), tail.transit.total());
         // the stream arrived in full across the mid-flight reroute
         let delivered: f64 = run.sim.flows.iter().map(|f| f.bytes).sum();
         assert!((delivered - payload).abs() < 16.0, "delivered {delivered}");

@@ -431,7 +431,7 @@ pub fn check_packet_engine(
         );
     }
     assert_eq!(wheel_tail.delivered_chunks, heap_tail.delivered_chunks);
-    assert_eq!(wheel_tail.sojourn_s, heap_tail.sojourn_s, "tail samples diverged");
+    assert_eq!(wheel_tail.sojourn, heap_tail.sojourn, "tail histograms diverged");
 
     let smoke = PacketSmoke {
         nodes,

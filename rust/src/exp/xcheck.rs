@@ -29,8 +29,8 @@ use crate::metrics::{Table, TailReport};
 use crate::planner::{Planner, PlannerCfg, ReplanCfg};
 use crate::topology::path::candidates;
 use crate::topology::Topology;
+use crate::util::hist::LatencyHist;
 use crate::util::rng::Rng;
-use crate::util::stats;
 use crate::workloads::dynamic::PhasedHotRows;
 use crate::workloads::skew::{hotspot_alltoallv, hotspot_alltoallv_jittered};
 
@@ -207,8 +207,8 @@ pub fn replan_tail(
         ReplanExecutor::new(topo, pk, PlannerCfg::default(), rcfg);
 
     let mut incumbent = p0.clone();
-    let mut static_lat: Vec<f64> = Vec::new();
-    let mut replanned_lat: Vec<f64> = Vec::new();
+    let mut static_lat = LatencyHist::new();
+    let mut replanned_lat = LatencyHist::new();
     let mut payload = 0.0f64;
     let mut static_time = 0.0f64;
     let mut replanned_time = 0.0f64;
@@ -224,21 +224,17 @@ pub fn replan_tail(
         replanned_time += r.report.makespan_s;
         replans += r.replans;
         preemptions += r.preemptions;
-        static_lat.extend(s.tail.expect("packet backend").sojourn_s);
-        replanned_lat.extend(r.tail.expect("packet backend").sojourn_s);
+        static_lat.merge(&s.tail.expect("packet backend").sojourn);
+        replanned_lat.merge(&r.tail.expect("packet backend").sojourn);
     }
-    // sort each arm's pooled latencies once; both percentiles read
-    // off the same order
-    static_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    replanned_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // pooled per-round histograms merge exactly (bucket-wise count
+    // addition), so both percentiles read off one merged histogram
     ReplanXcheck {
         rounds,
-        static_p99_us: stats::percentile_nearest_rank_sorted(&static_lat, 99.0) * 1e6,
-        replanned_p99_us: stats::percentile_nearest_rank_sorted(&replanned_lat, 99.0)
-            * 1e6,
-        static_p50_us: stats::percentile_nearest_rank_sorted(&static_lat, 50.0) * 1e6,
-        replanned_p50_us: stats::percentile_nearest_rank_sorted(&replanned_lat, 50.0)
-            * 1e6,
+        static_p99_us: static_lat.quantile_s(99.0) * 1e6,
+        replanned_p99_us: replanned_lat.quantile_s(99.0) * 1e6,
+        static_p50_us: static_lat.quantile_s(50.0) * 1e6,
+        replanned_p50_us: replanned_lat.quantile_s(50.0) * 1e6,
         static_goodput_gbps: payload / static_time.max(1e-12) / 1e9,
         replanned_goodput_gbps: payload / replanned_time.max(1e-12) / 1e9,
         replans,

@@ -36,8 +36,57 @@ use super::packet::PacketSim;
 use super::packet_par::PartitionedPacket;
 use super::{BackendKind, FabricParams};
 use crate::topology::Topology;
+use crate::util::hist::LatencyHist;
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// One tenant/pair contributor to a link's window bytes: the blame key
+/// is ([`Flow::tag`], src GPU, dst GPU) and the value is the bytes that
+/// contributor completed across the link during the window.
+pub type BlameKey = (u64, usize, usize);
+
+/// Attribution of one monitoring window
+/// ([`FabricBackend::take_window_attr`]): the per-link byte totals the
+/// monitor consumes plus, per link, the decomposition of those bytes by
+/// (tenant tag, src, dst).
+///
+/// **Conservation invariant (DESIGN.md §16):** `totals` is computed by
+/// summing each link's blame entries in ascending key order, and
+/// [`FabricBackend::take_window`] runs the *same* canonical summation —
+/// so summing `blame[l]` in listed order reproduces `totals[l]`
+/// bit-exactly, and an attribution-sampling run feeds the monitor the
+/// bit-identical totals a plain `take_window` run would (the observer-
+/// purity contract).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WindowAttr {
+    /// Per-link window bytes (the exact `take_window` payload).
+    pub totals: Vec<f64>,
+    /// Per-link blame entries, sorted ascending by key. Empty for
+    /// backends that do not attribute (the trait default).
+    pub blame: Vec<Vec<(BlameKey, f64)>>,
+}
+
+/// The canonical blame reduction: per-flow window contributions arrive
+/// bucketed per link by (tag, src, dst) (the `BTreeMap` fixes the key
+/// order), and each link's total is the sum of its bucket values in
+/// ascending key order. f64 addition is not associative, so fixing
+/// this one summation order — and routing `take_window` *and*
+/// `take_window_attr` through it — is what makes the per-link totals
+/// bit-identical in both modes and the blame sums conserve bit-exactly.
+pub(crate) fn reduce_blame(per_link: Vec<BTreeMap<BlameKey, f64>>) -> WindowAttr {
+    let mut totals = Vec::with_capacity(per_link.len());
+    let mut blame = Vec::with_capacity(per_link.len());
+    for m in per_link {
+        let entries: Vec<(BlameKey, f64)> = m.into_iter().collect();
+        let mut t = 0.0f64;
+        for &(_, b) in &entries {
+            t += b;
+        }
+        totals.push(t);
+        blame.push(entries);
+    }
+    WindowAttr { totals, blame }
+}
 
 /// A fabric advance that cannot make progress: live flows remain but
 /// the event queue is empty, so no future event will ever deliver
@@ -72,27 +121,41 @@ impl fmt::Display for FabricStall {
 impl std::error::Error for FabricStall {}
 
 /// Queueing/latency observations only a discrete-event backend can
-/// produce ([`FabricBackend::tail`]). All latencies in seconds; the
-/// percentile reduction lives in [`crate::metrics::TailReport`].
-#[derive(Clone, Debug, Default)]
+/// produce ([`FabricBackend::tail`]). Latency distributions are kept
+/// as deterministic log-bucketed streaming histograms
+/// ([`LatencyHist`], DESIGN.md §16) so memory stays bounded over
+/// long-horizon runs: O(log range) buckets instead of O(chunks)
+/// samples. Histograms merge by exact bucket-count addition, which is
+/// what the partitioned packet engine's canonical component merge
+/// relies on. The percentile reduction lives in
+/// [`crate::metrics::TailReport`].
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct TailStats {
     /// Per delivered chunk: issue (incl. setup latency) → delivery.
-    pub sojourn_s: Vec<f64>,
+    pub sojourn: LatencyHist,
     /// Per delivered chunk: first-queue entry → delivery (the pure
     /// network transit + queueing component).
-    pub transit_s: Vec<f64>,
-    /// Sojourn latencies grouped by (src, dst) pair.
-    pub per_pair_sojourn_s: BTreeMap<(usize, usize), Vec<f64>>,
-    /// Sojourn latencies grouped by [`Flow::tag`] (the multi-tenant
-    /// orchestrator stamps the tenant/job id; untagged flows land
-    /// under 0).
-    pub per_tag_sojourn_s: BTreeMap<u64, Vec<f64>>,
+    pub transit: LatencyHist,
+    /// Sojourn latency histograms grouped by (src, dst) pair.
+    pub per_pair_sojourn: BTreeMap<(usize, usize), LatencyHist>,
+    /// Sojourn latency histograms grouped by [`Flow::tag`] (the
+    /// multi-tenant orchestrator stamps the tenant/job id; untagged
+    /// flows land under 0).
+    pub per_tag_sojourn: BTreeMap<u64, LatencyHist>,
     /// Peak queued bytes per link (excludes the cell in service).
     pub peak_queue_bytes: Vec<f64>,
     /// Peak queued bytes per destination GPU's receive stage.
     pub peak_recv_queue_bytes: Vec<f64>,
     /// Chunks delivered end-to-end.
     pub delivered_chunks: u64,
+    /// Exact per-chunk sojourn samples (seconds, delivery order).
+    /// Populated only in the `exact_tail` debug mode
+    /// (`PacketParams::exact_tail`) — the unbounded-memory oracle the
+    /// histogram error bound is tested against.
+    pub sojourn_exact_s: Vec<f64>,
+    /// Exact per-chunk transit samples (debug mode only, see
+    /// [`TailStats::sojourn_exact_s`]).
+    pub transit_exact_s: Vec<f64>,
 }
 
 /// Engine self-profiling counters ([`FabricBackend::profile`]) — the
@@ -155,6 +218,14 @@ pub trait FabricBackend {
     /// Per-link bytes moved since the previous call (the monitor's
     /// sampling window); resets the window counters.
     fn take_window(&mut self) -> Vec<f64>;
+    /// Like [`FabricBackend::take_window`], but also decomposes each
+    /// link's window bytes by (tenant tag, src, dst). `totals` carries
+    /// the bit-identical bytes `take_window` would have returned (see
+    /// [`WindowAttr`]); the default for attribution-less backends
+    /// returns empty blame.
+    fn take_window_attr(&mut self) -> WindowAttr {
+        WindowAttr { totals: self.take_window(), blame: Vec::new() }
+    }
     /// Snapshot the outcome (same shape for every backend).
     fn result(&self) -> SimResult;
     /// Latency/queue-depth observations, when the backend records them
@@ -228,6 +299,9 @@ impl<'a> FabricBackend for SimEngine<'a> {
     fn take_window(&mut self) -> Vec<f64> {
         SimEngine::take_window(self)
     }
+    fn take_window_attr(&mut self) -> WindowAttr {
+        SimEngine::take_window_attr(self)
+    }
     fn result(&self) -> SimResult {
         SimEngine::result(self)
     }
@@ -276,6 +350,9 @@ impl<'a> FabricBackend for PacketSim<'a> {
     fn take_window(&mut self) -> Vec<f64> {
         PacketSim::take_window(self)
     }
+    fn take_window_attr(&mut self) -> WindowAttr {
+        PacketSim::take_window_attr(self)
+    }
     fn result(&self) -> SimResult {
         PacketSim::result(self)
     }
@@ -323,6 +400,9 @@ impl<'a> FabricBackend for PartitionedPacket<'a> {
     }
     fn take_window(&mut self) -> Vec<f64> {
         PartitionedPacket::take_window(self)
+    }
+    fn take_window_attr(&mut self) -> WindowAttr {
+        PartitionedPacket::take_window_attr(self)
     }
     fn result(&self) -> SimResult {
         PartitionedPacket::result(self)
@@ -382,7 +462,8 @@ mod tests {
         assert!(be.is_done());
         let tail = be.tail().expect("packet backend records tails");
         assert_eq!(tail.delivered_chunks, 64, "4 MB / 64 KB cells");
-        assert_eq!(tail.sojourn_s.len(), 64);
+        assert_eq!(tail.sojourn.total(), 64);
+        assert!(tail.sojourn_exact_s.is_empty(), "exact oracle is opt-in");
     }
 
     /// Regression for the old `"stuck: packet simulation has live

@@ -50,8 +50,10 @@
 //!   in `tests/fabric_props.rs` holds this invariant under randomized
 //!   preempt/add_flows sequences.
 
+use super::backend::{reduce_blame, BlameKey, WindowAttr};
 use super::{faults, gbps_to_bps, FabricParams, XferMode};
 use crate::topology::{Path, Topology};
+use std::collections::BTreeMap;
 
 /// One transfer request routed over a fixed path.
 #[derive(Clone, Debug)]
@@ -67,7 +69,7 @@ pub struct Flow {
     /// Opaque owner tag (the multi-tenant orchestrator stamps the
     /// tenant/job id). Never affects simulation dynamics; backends
     /// that record per-chunk observations group them by it
-    /// ([`crate::fabric::TailStats::per_tag_sojourn_s`]). 0 = untagged.
+    /// ([`crate::fabric::TailStats::per_tag_sojourn`]). 0 = untagged.
     pub tag: u64,
 }
 
@@ -430,7 +432,13 @@ pub struct SimEngine<'a> {
     moved: Vec<f64>,
     finish_t: Vec<f64>,
     link_bytes: Vec<f64>,
-    window_bytes: Vec<f64>,
+    /// Per-flow bytes moved since the last window drain. The fluid
+    /// engine adds the identical `rate·dt` to every hop of a flow, so
+    /// one counter per flow is the full attribution: the per-link
+    /// window totals are recovered by the canonical blame reduction
+    /// ([`reduce_blame`], DESIGN.md §16), which runs identically
+    /// whether or not attribution is requested.
+    win_flow: Vec<f64>,
     t: f64,
     active: Vec<usize>,
     /// Sorted by start time, descending (pop from the back = earliest).
@@ -505,7 +513,7 @@ impl<'a> SimEngine<'a> {
             moved: Vec::new(),
             finish_t: Vec::new(),
             link_bytes: vec![0.0; topo.links.len()],
-            window_bytes: vec![0.0; topo.links.len()],
+            win_flow: Vec::new(),
             t: 0.0,
             active: Vec::new(),
             pending: Vec::new(),
@@ -601,6 +609,7 @@ impl<'a> SimEngine<'a> {
                 .push(f.issue_t + self.sim.params.start_latency_s(&f.path, f.mode));
             self.remaining.push(f.bytes.max(1.0));
             self.moved.push(0.0);
+            self.win_flow.push(0.0);
             self.finish_t.push(f64::NAN);
             self.preempted.push(false);
             self.flows.push(f.clone());
@@ -994,10 +1003,38 @@ impl<'a> SimEngine<'a> {
         residual
     }
 
+    /// Bucket this window's per-flow byte counters per link by
+    /// (tag, src, dst) and reset them — the shared reduction behind
+    /// both window drains, so their totals are bit-identical.
+    fn window_attr(&mut self) -> WindowAttr {
+        let mut per_link: Vec<BTreeMap<BlameKey, f64>> =
+            vec![BTreeMap::new(); self.link_bytes.len()];
+        for (i, f) in self.flows.iter().enumerate() {
+            let w = self.win_flow[i];
+            if w == 0.0 {
+                continue;
+            }
+            let key = (f.tag, f.path.src, f.path.dst);
+            for &h in &f.path.hops {
+                *per_link[h].entry(key).or_insert(0.0) += w;
+            }
+        }
+        for w in &mut self.win_flow {
+            *w = 0.0;
+        }
+        reduce_blame(per_link)
+    }
+
     /// Per-link bytes moved since the previous `take_window` call (the
     /// monitor's sampling window); resets the window counters.
     pub fn take_window(&mut self) -> Vec<f64> {
-        std::mem::replace(&mut self.window_bytes, vec![0.0; self.link_bytes.len()])
+        self.window_attr().totals
+    }
+
+    /// [`SimEngine::take_window`] plus the per-link (tag, src, dst)
+    /// blame decomposition; totals carry the identical bits.
+    pub fn take_window_attr(&mut self) -> WindowAttr {
+        self.window_attr()
     }
 
     /// Advance the event loop until `t_stop` (a replan epoch boundary)
@@ -1067,9 +1104,9 @@ impl<'a> SimEngine<'a> {
                 let moved = self.rates[i] * dt;
                 self.remaining[i] -= moved;
                 self.moved[i] += moved;
+                self.win_flow[i] += moved;
                 for &h in &self.flows[i].path.hops {
                     self.link_bytes[h] += moved;
-                    self.window_bytes[h] += moved;
                 }
             }
             self.t += dt;

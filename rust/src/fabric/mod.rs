@@ -45,7 +45,7 @@ pub mod packet;
 pub mod packet_par;
 pub mod pipeline;
 
-pub use backend::{make_backend, FabricBackend, FabricStall, TailStats};
+pub use backend::{make_backend, BlameKey, FabricBackend, FabricStall, TailStats, WindowAttr};
 pub use faults::{Fault, FaultEvent, FaultSchedule, FaultsCfg, Scenario, ScenarioParams};
 
 use crate::topology::{LinkKind, Path, Topology};
@@ -158,6 +158,11 @@ pub struct PacketParams {
     /// for every value — node-disjoint partitions are merged in a
     /// canonical order — so this, too, trades nothing but speed.
     pub threads: usize,
+    /// Debug oracle: also keep the exact per-chunk sojourn/transit
+    /// sample vectors (`TailStats::sojourn_exact_s`/`transit_exact_s`)
+    /// alongside the bounded streaming histograms. O(chunks) memory —
+    /// tests only; production runs leave this off.
+    pub exact_tail: bool,
 }
 
 impl Default for PacketParams {
@@ -169,6 +174,7 @@ impl Default for PacketParams {
             seed: 0x9AC4E7,
             scheduler: SchedulerKind::Wheel,
             threads: 1,
+            exact_tail: false,
         }
     }
 }

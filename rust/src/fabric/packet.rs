@@ -63,12 +63,13 @@
 //! fabric are aborted at their next event (their traversed hops stay
 //! charged to `link_bytes` — rerouting is not free).
 
-use super::backend::{FabricStall, TailStats};
+use super::backend::{reduce_blame, BlameKey, FabricStall, TailStats, WindowAttr};
 use super::faults;
 use super::fluid::{Flow, FlowResult, SimResult};
 use super::{FabricParams, SchedulerKind};
 use crate::topology::Topology;
 use crate::util::eventq::{EventQueue, HeapQueue, WheelQueue};
+use crate::util::hist::LatencyHist;
 use crate::util::rng::{stream_seed, Rng};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
@@ -153,7 +154,7 @@ pub struct PacketSim<'a> {
     /// Position of the flow within `flows_at[src]` (the RR index the
     /// injector's open-set arithmetic runs on).
     inj_pos: Vec<u32>,
-    /// Slot into `pair_keys`/`pair_lat` (resolved once at add time so
+    /// Slot into `pair_keys`/`pair_hist` (resolved once at add time so
     /// the delivery hot path never walks a map).
     pair_slot: Vec<u32>,
     tag_slot: Vec<u32>,
@@ -202,17 +203,26 @@ pub struct PacketSim<'a> {
     r_in_service: Vec<Option<(u32, u32, u64)>>,
     // ---- accounting ----
     link_bytes: Vec<f64>,
-    window_bytes: Vec<f64>,
-    sojourn_s: Vec<f64>,
-    transit_s: Vec<f64>,
+    /// Per-flow, per-hop-position bytes completed since the last
+    /// window drain. Cells can be fractional (`bytes / n_cells`), so
+    /// the per-link window totals are recovered through the canonical
+    /// blame reduction ([`reduce_blame`], DESIGN.md §16) — the same
+    /// code path whether or not attribution is requested.
+    win_hop: Vec<Vec<f64>>,
+    sojourn: LatencyHist,
+    transit: LatencyHist,
+    /// Exact per-chunk samples, recorded only under
+    /// `PacketParams::exact_tail` (the histogram oracle).
+    sojourn_exact_s: Vec<f64>,
+    transit_exact_s: Vec<f64>,
     /// Distinct (src, dst) pairs / tags in first-seen order; latencies
-    /// land in the parallel `*_lat` vectors and are only assembled
+    /// land in the parallel `*_hist` histograms and are only assembled
     /// into sorted maps by [`PacketSim::tail`].
     pair_keys: Vec<(usize, usize)>,
-    pair_lat: Vec<Vec<f64>>,
+    pair_hist: Vec<LatencyHist>,
     pair_slot_of: BTreeMap<(usize, usize), u32>,
     tag_keys: Vec<u64>,
-    tag_lat: Vec<Vec<f64>>,
+    tag_hist: Vec<LatencyHist>,
     tag_slot_of: BTreeMap<u64, u32>,
     // ---- event core ----
     queue: SchedQueue,
@@ -293,14 +303,16 @@ impl<'a> PacketSim<'a> {
             peak_rq_bytes: vec![0.0; ng],
             r_in_service: vec![None; ng],
             link_bytes: vec![0.0; nl],
-            window_bytes: vec![0.0; nl],
-            sojourn_s: Vec::new(),
-            transit_s: Vec::new(),
+            win_hop: Vec::new(),
+            sojourn: LatencyHist::new(),
+            transit: LatencyHist::new(),
+            sojourn_exact_s: Vec::new(),
+            transit_exact_s: Vec::new(),
             pair_keys: Vec::new(),
-            pair_lat: Vec::new(),
+            pair_hist: Vec::new(),
             pair_slot_of: BTreeMap::new(),
             tag_keys: Vec::new(),
-            tag_lat: Vec::new(),
+            tag_hist: Vec::new(),
             tag_slot_of: BTreeMap::new(),
             queue,
             fast: None,
@@ -420,16 +432,17 @@ impl<'a> PacketSim<'a> {
             let pair = (f.path.src, f.path.dst);
             let ps = *self.pair_slot_of.entry(pair).or_insert_with(|| {
                 self.pair_keys.push(pair);
-                self.pair_lat.push(Vec::new());
+                self.pair_hist.push(LatencyHist::new());
                 (self.pair_keys.len() - 1) as u32
             });
             self.pair_slot.push(ps);
             let ts = *self.tag_slot_of.entry(f.tag).or_insert_with(|| {
                 self.tag_keys.push(f.tag);
-                self.tag_lat.push(Vec::new());
+                self.tag_hist.push(LatencyHist::new());
                 (self.tag_keys.len() - 1) as u32
             });
             self.tag_slot.push(ts);
+            self.win_hop.push(vec![0.0; f.path.hops.len()]);
             self.flows_at[f.path.src].push(i as u32);
             self.open[f.path.src].insert(pos);
             self.unfinished += 1;
@@ -499,10 +512,40 @@ impl<'a> PacketSim<'a> {
         }
     }
 
+    /// Bucket this window's per-flow, per-hop byte counters per link by
+    /// (tag, src, dst) and reset them — the shared reduction behind
+    /// both window drains, so their totals are bit-identical.
+    fn window_attr(&mut self) -> WindowAttr {
+        let mut per_link: Vec<BTreeMap<BlameKey, f64>> =
+            vec![BTreeMap::new(); self.link_bytes.len()];
+        for (i, f) in self.flows.iter().enumerate() {
+            let key = (f.tag, f.path.src, f.path.dst);
+            for (pos, &h) in f.path.hops.iter().enumerate() {
+                let w = self.win_hop[i][pos];
+                if w == 0.0 {
+                    continue;
+                }
+                *per_link[h].entry(key).or_insert(0.0) += w;
+            }
+        }
+        for v in &mut self.win_hop {
+            for w in v.iter_mut() {
+                *w = 0.0;
+            }
+        }
+        reduce_blame(per_link)
+    }
+
     /// Per-link bytes serialized since the previous call; resets the
     /// window counters (the monitor's sampling surface).
     pub fn take_window(&mut self) -> Vec<f64> {
-        std::mem::replace(&mut self.window_bytes, vec![0.0; self.link_bytes.len()])
+        self.window_attr().totals
+    }
+
+    /// [`PacketSim::take_window`] plus the per-link (tag, src, dst)
+    /// blame decomposition; totals carry the identical bits.
+    pub fn take_window_attr(&mut self) -> WindowAttr {
+        self.window_attr()
     }
 
     /// Advance the event loop until `t_stop` (a replan epoch boundary)
@@ -586,21 +629,23 @@ impl<'a> PacketSim<'a> {
     /// hot path; deliveries only push into slot-indexed vectors.
     pub fn tail(&self) -> TailStats {
         let mut per_pair = BTreeMap::new();
-        for (k, lat) in self.pair_keys.iter().zip(&self.pair_lat) {
-            per_pair.insert(*k, lat.clone());
+        for (k, h) in self.pair_keys.iter().zip(&self.pair_hist) {
+            per_pair.insert(*k, h.clone());
         }
-        let mut per_tag: BTreeMap<u64, Vec<f64>> = BTreeMap::new();
-        for (k, lat) in self.tag_keys.iter().zip(&self.tag_lat) {
-            per_tag.entry(*k).or_default().extend_from_slice(lat);
+        let mut per_tag: BTreeMap<u64, LatencyHist> = BTreeMap::new();
+        for (k, h) in self.tag_keys.iter().zip(&self.tag_hist) {
+            per_tag.entry(*k).or_default().merge(h);
         }
         TailStats {
-            sojourn_s: self.sojourn_s.clone(),
-            transit_s: self.transit_s.clone(),
-            per_pair_sojourn_s: per_pair,
-            per_tag_sojourn_s: per_tag,
+            sojourn: self.sojourn.clone(),
+            transit: self.transit.clone(),
+            per_pair_sojourn: per_pair,
+            per_tag_sojourn: per_tag,
             peak_queue_bytes: self.peak_lq_bytes.clone(),
             peak_recv_queue_bytes: self.peak_rq_bytes.clone(),
-            delivered_chunks: self.sojourn_s.len() as u64,
+            delivered_chunks: self.sojourn.total(),
+            sojourn_exact_s: self.sojourn_exact_s.clone(),
+            transit_exact_s: self.transit_exact_s.clone(),
         }
     }
 
@@ -648,20 +693,21 @@ impl<'a> PacketSim<'a> {
             self.schedule(t, ev);
         }
         // 2) observation-table slots: re-resolve the victim's pair/tag
-        // keys in the merged tables, then splice its latency vectors
+        // keys in the merged tables, then merge its latency histograms
+        // (exact bucket-count addition, so merge order cannot matter)
         let pair_remap: Vec<u32> = other
             .pair_keys
             .iter()
             .map(|&k| {
                 *self.pair_slot_of.entry(k).or_insert_with(|| {
                     self.pair_keys.push(k);
-                    self.pair_lat.push(Vec::new());
+                    self.pair_hist.push(LatencyHist::new());
                     (self.pair_keys.len() - 1) as u32
                 })
             })
             .collect();
-        for (slot, lat) in pair_remap.iter().zip(std::mem::take(&mut other.pair_lat)) {
-            self.pair_lat[*slot as usize].extend(lat);
+        for (slot, h) in pair_remap.iter().zip(std::mem::take(&mut other.pair_hist)) {
+            self.pair_hist[*slot as usize].merge(&h);
         }
         let tag_remap: Vec<u32> = other
             .tag_keys
@@ -669,13 +715,13 @@ impl<'a> PacketSim<'a> {
             .map(|&k| {
                 *self.tag_slot_of.entry(k).or_insert_with(|| {
                     self.tag_keys.push(k);
-                    self.tag_lat.push(Vec::new());
+                    self.tag_hist.push(LatencyHist::new());
                     (self.tag_keys.len() - 1) as u32
                 })
             })
             .collect();
-        for (slot, lat) in tag_remap.iter().zip(std::mem::take(&mut other.tag_lat)) {
-            self.tag_lat[*slot as usize].extend(lat);
+        for (slot, h) in tag_remap.iter().zip(std::mem::take(&mut other.tag_hist)) {
+            self.tag_hist[*slot as usize].merge(&h);
         }
         // 3) per-flow state, in the victim's local order
         for s in std::mem::take(&mut other.pair_slot) {
@@ -701,6 +747,7 @@ impl<'a> PacketSim<'a> {
         self.window_cap.extend(std::mem::take(&mut other.window_cap));
         self.enq0_q.extend(std::mem::take(&mut other.enq0_q));
         self.inj_pos.extend(std::mem::take(&mut other.inj_pos));
+        self.win_hop.extend(std::mem::take(&mut other.win_hop));
         self.unfinished += other.unfinished;
         // 4) per-GPU injector + receive state
         for g in 0..self.rr.len() {
@@ -739,7 +786,6 @@ impl<'a> PacketSim<'a> {
             self.lq_bytes[l] += other.lq_bytes[l];
             self.peak_lq_bytes[l] = self.peak_lq_bytes[l].max(other.peak_lq_bytes[l]);
             self.link_bytes[l] += other.link_bytes[l];
-            self.window_bytes[l] += other.window_bytes[l];
         }
         // 6) per-node NIC token clocks (disjoint charge sets: max = move)
         for n in 0..self.net_out_free.len() {
@@ -747,8 +793,10 @@ impl<'a> PacketSim<'a> {
             self.net_in_free[n] = self.net_in_free[n].max(other.net_in_free[n]);
         }
         // 7) merged observations + counters
-        self.sojourn_s.extend(std::mem::take(&mut other.sojourn_s));
-        self.transit_s.extend(std::mem::take(&mut other.transit_s));
+        self.sojourn.merge(&other.sojourn);
+        self.transit.merge(&other.transit);
+        self.sojourn_exact_s.extend(std::mem::take(&mut other.sojourn_exact_s));
+        self.transit_exact_s.extend(std::mem::take(&mut other.transit_exact_s));
         self.trace.extend(std::mem::take(&mut other.trace));
         self.events += other.events;
         base
@@ -911,7 +959,7 @@ impl<'a> PacketSim<'a> {
             let f = fu as usize;
             let cell = self.cell_size[f];
             self.link_bytes[l] += cell;
-            self.window_bytes[l] += cell;
+            self.win_hop[f][pos as usize] += cell;
             self.push_trace(t, TRACE_LINK_DONE, l as u32, fu);
             if self.alive[f] {
                 let arr = t + self.params.packet.latency_ns;
@@ -1003,12 +1051,16 @@ impl<'a> PacketSim<'a> {
                 self.inflight_bytes[f] = (self.inflight_bytes[f] - cell).max(0.0);
                 self.refresh_open(f);
                 let enq0 = self.enq0_q[f].pop_front().unwrap_or(self.t0_ns[f]);
-                let sojourn = t.saturating_sub(self.t0_ns[f]) as f64 * 1e-9;
-                let transit = t.saturating_sub(enq0) as f64 * 1e-9;
-                self.sojourn_s.push(sojourn);
-                self.transit_s.push(transit);
-                self.pair_lat[self.pair_slot[f] as usize].push(sojourn);
-                self.tag_lat[self.tag_slot[f] as usize].push(sojourn);
+                let sojourn_ns = t.saturating_sub(self.t0_ns[f]);
+                let transit_ns = t.saturating_sub(enq0);
+                self.sojourn.record_ns(sojourn_ns);
+                self.transit.record_ns(transit_ns);
+                self.pair_hist[self.pair_slot[f] as usize].record_ns(sojourn_ns);
+                self.tag_hist[self.tag_slot[f] as usize].record_ns(sojourn_ns);
+                if self.params.packet.exact_tail {
+                    self.sojourn_exact_s.push(sojourn_ns as f64 * 1e-9);
+                    self.transit_exact_s.push(transit_ns as f64 * 1e-9);
+                }
                 self.push_trace(t, TRACE_DELIVER, fu, idx);
                 // credit return: the source may inject again
                 let src = self.flows[f].path.src;
@@ -1062,7 +1114,7 @@ mod tests {
         assert_eq!(tail.delivered_chunks, 1024);
         // uncontended: transit stays near the serialization floor —
         // pacing keeps queues shallow
-        let worst = tail.transit_s.iter().cloned().fold(0.0, f64::max);
+        let worst = tail.transit.max_ns() as f64 * 1e-9;
         assert!(worst < 100e-6, "uncontended transit ballooned: {worst}");
     }
 
@@ -1106,7 +1158,11 @@ mod tests {
         let p = candidates(&t, 0, 1, false).remove(0);
         let flows =
             vec![Flow::new(p.clone(), 64.0 * MB), Flow::new(p.clone(), 64.0 * MB)];
-        let (r, tail) = run(&t, &flows);
+        let mut params = FabricParams::default();
+        params.packet.exact_tail = true; // paired per-chunk samples below
+        let mut sim = PacketSim::new(&t, params, &flows);
+        sim.run_to_completion().expect("no stall");
+        let (r, tail) = (sim.result(), sim.tail());
         let skew = (r.flows[0].finish_t - r.flows[1].finish_t).abs();
         assert!(skew < 50e-6, "finish skew {skew}");
         let bw = r.aggregate_gbps();
@@ -1115,7 +1171,9 @@ mod tests {
         let peak = tail.peak_queue_bytes.iter().cloned().fold(0.0, f64::max);
         assert!(peak > 0.0, "contention produced no queueing");
         // sojourn includes source-side pacing; transit is within it
-        for (s, tr) in tail.sojourn_s.iter().zip(&tail.transit_s) {
+        // (per-chunk pairing needs the exact-vector debug oracle)
+        assert_eq!(tail.sojourn_exact_s.len() as u64, tail.sojourn.total());
+        for (s, tr) in tail.sojourn_exact_s.iter().zip(&tail.transit_exact_s) {
             assert!(tr <= s, "transit {tr} exceeds sojourn {s}");
         }
     }
@@ -1191,8 +1249,8 @@ mod tests {
         for (a, b) in r_w.flows.iter().zip(&r_h.flows) {
             assert_eq!(a.finish_t.to_bits(), b.finish_t.to_bits());
         }
-        assert_eq!(tail_w.sojourn_s, tail_h.sojourn_s);
-        assert_eq!(tail_w.per_pair_sojourn_s, tail_h.per_pair_sojourn_s);
+        assert_eq!(tail_w.sojourn, tail_h.sojourn);
+        assert_eq!(tail_w.per_pair_sojourn, tail_h.per_pair_sojourn);
         assert_eq!(tail_w.peak_queue_bytes, tail_h.peak_queue_bytes);
     }
 
@@ -1344,8 +1402,8 @@ mod tests {
         let payload = 7.0 * 16.0 * MB;
         let agg = payload / r.makespan / 1e9;
         assert!(agg < 278.2 + 1.0, "incast beat the receive cap: {agg}");
-        let p99 = crate::util::stats::p99(&tail.transit_s);
-        let p50 = crate::util::stats::p50(&tail.transit_s);
+        let p99 = tail.transit.quantile_s(99.0);
+        let p50 = tail.transit.quantile_s(50.0);
         assert!(p99 >= p50, "percentiles out of order");
         let peak_rq = tail.peak_recv_queue_bytes[dst];
         assert!(peak_rq > 0.0, "incast produced no receive-side queueing");

@@ -22,8 +22,8 @@
 //! its own, and every merged observable is assembled in **canonical
 //! component order** (component creation order, which is itself
 //! input-order determined): traces merge by `(time, component rank,
-//! within-component position)`, latency vectors concatenate in rank
-//! order, per-link counters sum. Worker threads only decide *when*
+//! within-component position)`, latency histograms merge by exact
+//! bucket-count addition, per-link counters sum. Worker threads only decide *when*
 //! each component advances, never *what* it computes — so results are
 //! byte-identical for every `[fabric.packet] threads` value, pinned by
 //! `prop_partitioned_thread_count_invariance` in
@@ -48,7 +48,7 @@
 //! [`Slab`] — a stale [`Handle`] from a merged-away component can
 //! never alias the slot's next tenant.
 
-use super::backend::{FabricStall, TailStats};
+use super::backend::{reduce_blame, BlameKey, FabricStall, TailStats, WindowAttr};
 use super::faults::Fault;
 use super::fluid::{Flow, FlowResult, SimResult};
 use super::packet::{PacketSim, TraceEvent};
@@ -420,6 +420,27 @@ impl<'a> PartitionedPacket<'a> {
         out
     }
 
+    /// Window bytes with blame decomposition (see
+    /// [`super::backend::WindowAttr`]). Components are link-disjoint,
+    /// so each link's blame map receives entries from at most one
+    /// component; the canonical [`reduce_blame`] reduction therefore
+    /// reproduces exactly the per-link totals [`Self::take_window`]
+    /// would have returned (additions against 0.0 are exact), for every
+    /// thread count.
+    pub fn take_window_attr(&mut self) -> WindowAttr {
+        let mut per_link: Vec<BTreeMap<BlameKey, f64>> =
+            vec![BTreeMap::new(); self.topo.links.len()];
+        for &h in &self.order.clone() {
+            let sub = self.subs.get_mut(h).expect("live").take_window_attr();
+            for (l, entries) in sub.blame.into_iter().enumerate() {
+                for (k, b) in entries {
+                    *per_link[l].entry(k).or_insert(0.0) += b;
+                }
+            }
+        }
+        reduce_blame(per_link)
+    }
+
     /// Record compact event traces in every component (and components
     /// created later).
     pub fn set_trace(&mut self, on: bool) {
@@ -472,9 +493,10 @@ impl<'a> PartitionedPacket<'a> {
     }
 
     /// Tail observations merged in canonical component-rank order:
-    /// latency vectors concatenate by rank (percentiles are
-    /// order-independent), per-key maps union (disjoint components can
-    /// still share a tenant tag), peak depths take elementwise max.
+    /// latency histograms merge by exact bucket-count addition (so the
+    /// merge is order-independent and thread-count invariant), per-key
+    /// maps union (disjoint components can still share a tenant tag),
+    /// peak depths take elementwise max.
     pub fn tail(&self) -> TailStats {
         let mut out = TailStats {
             peak_queue_bytes: vec![0.0; self.topo.links.len()],
@@ -483,13 +505,15 @@ impl<'a> PartitionedPacket<'a> {
         };
         for &h in &self.order {
             let t = self.subs.get(h).expect("live").tail();
-            out.sojourn_s.extend(t.sojourn_s);
-            out.transit_s.extend(t.transit_s);
-            for (k, v) in t.per_pair_sojourn_s {
-                out.per_pair_sojourn_s.entry(k).or_default().extend(v);
+            out.sojourn.merge(&t.sojourn);
+            out.transit.merge(&t.transit);
+            out.sojourn_exact_s.extend(t.sojourn_exact_s);
+            out.transit_exact_s.extend(t.transit_exact_s);
+            for (k, v) in t.per_pair_sojourn {
+                out.per_pair_sojourn.entry(k).or_default().merge(&v);
             }
-            for (k, v) in t.per_tag_sojourn_s {
-                out.per_tag_sojourn_s.entry(k).or_default().extend(v);
+            for (k, v) in t.per_tag_sojourn {
+                out.per_tag_sojourn.entry(k).or_default().merge(&v);
             }
             for (o, p) in out.peak_queue_bytes.iter_mut().zip(t.peak_queue_bytes) {
                 *o = o.max(p);
@@ -582,8 +606,8 @@ mod tests {
         assert_eq!(par.trace(), mono.trace().to_vec());
         assert_eq!(par.result().makespan.to_bits(), mono.result().makespan.to_bits());
         let (tp, tm) = (par.tail(), mono.tail());
-        assert_eq!(tp.sojourn_s, tm.sojourn_s);
-        assert_eq!(tp.per_pair_sojourn_s, tm.per_pair_sojourn_s);
+        assert_eq!(tp.sojourn, tm.sojourn);
+        assert_eq!(tp.per_pair_sojourn, tm.per_pair_sojourn);
     }
 
     /// Thread count must not change a single byte of the outcome.
@@ -603,7 +627,7 @@ mod tests {
             let mut par = PartitionedPacket::new(&t, params_with(threads), &flows);
             par.set_trace(true);
             par.run_to_completion().expect("no stall");
-            (par.trace(), par.result(), par.tail().sojourn_s, par.events())
+            (par.trace(), par.result(), par.tail().sojourn, par.events())
         };
         let (tr1, r1, so1, ev1) = drive(1);
         for threads in [2, 8] {

@@ -17,6 +17,7 @@
 //! nimble faults [--scenario flap|degrade|straggler|mixed] [--no-replan]   fault injection + replan-as-recovery
 //! nimble plan --src 0 --dst 1 --mb 256   show a routing plan
 //! nimble report <trace.jsonl> [--check]  render/validate a recorded telemetry trace
+//! nimble explain <trace.jsonl> [--epoch E] [--link L] [--tenant T] [--check]   congestion attribution: blame tables, decision audits, tenant SLO burn
 //! nimble moe-compute       run the AOT FFN artifacts (offline interpreter)
 //! nimble info              topology + fabric calibration summary
 //! ```
@@ -35,7 +36,7 @@ use nimble::fabric::Scenario;
 use nimble::fabric::{BackendKind, FabricParams, SchedulerKind};
 use nimble::planner::{CostModel, Demand, Planner};
 use nimble::runtime::Runtime;
-use nimble::telemetry::{report, Recorder, TraceRecord};
+use nimble::telemetry::{explain, report, Recorder, TraceRecord};
 use nimble::topology::Topology;
 use nimble::util::cli::Args;
 
@@ -70,7 +71,18 @@ fn main() {
     if trace_path.is_none() && cfg.telemetry.enable {
         trace_path = Some(cfg.telemetry.path.clone());
     }
-    let rec = if trace_path.is_some() { Recorder::enabled() } else { Recorder::disabled() };
+    // with a file sink configured, records stream to disk as they are
+    // emitted (an aborted run still leaves everything recorded so far)
+    let rec = match &trace_path {
+        Some(path) => match Recorder::to_file(path) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("--trace {path}: {e}");
+                std::process::exit(2);
+            }
+        },
+        None => Recorder::disabled(),
+    };
     let Some(cmd) = argv.first().cloned() else {
         eprintln!("{}", usage());
         std::process::exit(2);
@@ -498,6 +510,10 @@ fn main() {
             run_report(rest);
             Ok(())
         }
+        "explain" => {
+            run_explain(rest);
+            Ok(())
+        }
         "moe-compute" => run_moe_compute(),
         "info" => {
             print_info(&topo, &params);
@@ -527,7 +543,9 @@ fn main() {
                 ),
             });
         }
-        match rec.write_jsonl(path) {
+        // records were streamed as they were emitted; finish() flushes
+        // and surfaces any write error deferred along the way
+        match rec.finish() {
             Ok(n) => eprintln!("trace: {n} records -> {path}"),
             Err(e) => {
                 eprintln!("--trace {path}: {e}");
@@ -578,6 +596,9 @@ fn run_report(rest: &[String]) {
     print!("{}", report::render(&trace));
     if checking {
         let out = report::check(&trace);
+        for w in &out.warnings {
+            eprintln!("report check warning: {w}");
+        }
         if out.ok() {
             eprintln!("report check OK: {} recomputations match bit-exactly", out.checks);
         } else {
@@ -589,9 +610,96 @@ fn run_report(rest: &[String]) {
     }
 }
 
+/// `nimble explain <trace.jsonl> [--epoch E] [--link L] [--tenant T]
+/// [--check]`: congestion attribution from a recorded trace — blame
+/// tables, replan decision audits, per-tenant SLO burn. `--check`
+/// re-verifies blame-sum conservation bit-exactly and recomputes every
+/// histogram headline from its sparse buckets; exits 1 on any mismatch.
+/// Hand-parsed like `report` (positional trace path).
+fn run_explain(rest: &[String]) {
+    let mut path: Option<String> = None;
+    let mut checking = false;
+    let mut opts = explain::ExplainOpts::default();
+    let mut want_val: Option<&str> = None;
+    for a in rest {
+        if let Some(flag) = want_val.take() {
+            let parsed: Result<i64, _> = a.parse();
+            let Ok(v) = parsed else {
+                eprintln!("nimble explain: --{flag} needs an integer, got '{a}'");
+                std::process::exit(2);
+            };
+            match flag {
+                "epoch" => opts.epoch = Some(v as u64),
+                "link" => opts.link = Some(v as usize),
+                _ => opts.tenant = Some(v),
+            }
+            continue;
+        }
+        match a.as_str() {
+            "--check" => checking = true,
+            "--epoch" => want_val = Some("epoch"),
+            "--link" => want_val = Some("link"),
+            "--tenant" => want_val = Some("tenant"),
+            "--help" | "-h" => {
+                println!(
+                    "nimble explain <trace.jsonl> [--epoch E] [--link L] [--tenant T] [--check]\n\
+                     — why was a constraint hot, why did a decision go the way it did, who is\n\
+                     burning each tenant's latency budget. --epoch/--link focus the blame\n\
+                     tables; --tenant focuses decisions and the SLO table; --check re-verifies\n\
+                     blame-sum conservation (bit-exact) and histogram headline consistency"
+                );
+                return;
+            }
+            other if !other.starts_with('-') && path.is_none() => {
+                path = Some(other.to_string());
+            }
+            other => {
+                eprintln!("nimble explain: unexpected argument '{other}'");
+                std::process::exit(2);
+            }
+        }
+    }
+    if let Some(flag) = want_val {
+        eprintln!("nimble explain: --{flag} requires a value");
+        std::process::exit(2);
+    }
+    let Some(path) = path else {
+        eprintln!(
+            "nimble explain: missing trace path \
+             (usage: nimble explain <trace.jsonl> [--epoch E] [--link L] [--tenant T] [--check])"
+        );
+        std::process::exit(2);
+    };
+    let trace = match report::Trace::load(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("nimble explain: {e}");
+            std::process::exit(2);
+        }
+    };
+    print!("{}", explain::render(&trace, &opts));
+    if checking {
+        let out = explain::check(&trace);
+        for w in &out.warnings {
+            eprintln!("explain check warning: {w}");
+        }
+        if out.errors.is_empty() {
+            eprintln!(
+                "explain check OK: {} blame/histogram invariants verified bit-exactly",
+                out.checks
+            );
+        } else {
+            for e in &out.errors {
+                eprintln!("explain check FAILED: {e}");
+            }
+            std::process::exit(1);
+        }
+    }
+}
+
 fn usage() -> String {
     "nimble — NIMBLE (skew-to-symmetry multi-path balancing) reproduction\n\
-     commands: table1 | fig6 | fig7 | fig8 | sendrecv | ablate | interference | replan | scale | xcheck | serve | faults | plan | report | moe-compute | info\n\
+     commands: table1 | fig6 | fig7 | fig8 | sendrecv | ablate | interference | replan | scale | xcheck | serve | faults | plan | report | explain | moe-compute | info\n\
      global flags: --config <file.toml> | --trace <out.jsonl> (telemetry, rendered by `nimble report`)\n\
      run `nimble <cmd> --help` for flags"
         .to_string()

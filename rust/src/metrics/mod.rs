@@ -6,9 +6,7 @@
 use crate::fabric::fluid::SimResult;
 use crate::fabric::TailStats;
 use crate::topology::Topology;
-use crate::util::stats::{
-    jain_index, percentile_nearest_rank, percentile_nearest_rank_sorted, Summary,
-};
+use crate::util::stats::{jain_index, Summary};
 
 /// Outcome of one communication round under some engine.
 #[derive(Clone, Debug)]
@@ -54,10 +52,13 @@ impl CommReport {
 }
 
 /// Tail-latency and queue-depth report reduced from the packet
-/// backend's raw observations ([`TailStats`]) with **nearest-rank**
-/// percentiles ([`crate::util::stats::percentile_nearest_rank`]) —
-/// every reported figure is a latency some chunk actually saw.
-/// Latencies in microseconds.
+/// backend's bounded streaming histograms ([`TailStats`]) with
+/// **nearest-rank** bucket quantiles
+/// ([`crate::util::hist::LatencyHist::quantile_ns`]) — every reported
+/// figure is the lower boundary of the bucket holding a latency some
+/// chunk actually saw (within one bucket width, ≤3.2%, of the exact
+/// nearest-rank sample; the max is tracked exactly). Latencies in
+/// microseconds.
 #[derive(Clone, Debug)]
 pub struct TailReport {
     /// Chunks delivered end-to-end.
@@ -82,7 +83,7 @@ pub struct TailReport {
 
 impl TailReport {
     pub fn from_stats(tail: &TailStats) -> Option<TailReport> {
-        if tail.sojourn_s.is_empty() {
+        if tail.sojourn.is_empty() {
             return None;
         }
         let us = 1e6;
@@ -91,17 +92,13 @@ impl TailReport {
             .iter()
             .enumerate()
             .fold((0, 0.0), |best, (i, &b)| if b > best.1 { (i, b) } else { best });
-        // one sort serves every sojourn percentile (chunk counts run
-        // into the hundreds of thousands on cluster-scale runs)
-        let mut sojourn = tail.sojourn_s.clone();
-        sojourn.sort_by(|a, b| a.partial_cmp(b).unwrap());
         Some(TailReport {
             chunks: tail.delivered_chunks,
-            p50_us: percentile_nearest_rank_sorted(&sojourn, 50.0) * us,
-            p95_us: percentile_nearest_rank_sorted(&sojourn, 95.0) * us,
-            p99_us: percentile_nearest_rank_sorted(&sojourn, 99.0) * us,
-            max_us: *sojourn.last().expect("non-empty") * us,
-            transit_p99_us: percentile_nearest_rank(&tail.transit_s, 99.0) * us,
+            p50_us: tail.sojourn.quantile_s(50.0) * us,
+            p95_us: tail.sojourn.quantile_s(95.0) * us,
+            p99_us: tail.sojourn.quantile_s(99.0) * us,
+            max_us: tail.sojourn.max_ns() as f64 * 1e-9 * us,
+            transit_p99_us: tail.transit.quantile_s(99.0) * us,
             peak_queue_bytes,
             peak_queue_link,
             peak_recv_queue_bytes: tail
@@ -114,10 +111,10 @@ impl TailReport {
 
     /// Nearest-rank p99 sojourn for one (src, dst) pair, when observed.
     pub fn pair_p99_us(tail: &TailStats, pair: (usize, usize)) -> Option<f64> {
-        tail.per_pair_sojourn_s
+        tail.per_pair_sojourn
             .get(&pair)
-            .filter(|v| !v.is_empty())
-            .map(|v| percentile_nearest_rank(v, 99.0) * 1e6)
+            .filter(|h| !h.is_empty())
+            .map(|h| h.quantile_s(99.0) * 1e6)
     }
 }
 
@@ -215,27 +212,40 @@ mod tests {
 
     #[test]
     fn tail_report_reduces_nearest_rank() {
-        let sojourn: Vec<f64> = (1..=100).map(|i| i as f64 * 1e-6).collect();
+        use crate::util::hist::{bucket_width_ns, LatencyHist};
+        let mut sojourn = LatencyHist::new();
+        for i in 1..=100u64 {
+            sojourn.record_ns(i * 1000); // 1..=100 µs
+        }
+        let mut pair = LatencyHist::new();
+        for ns in [5_000u64, 9_000, 1_000] {
+            pair.record_ns(ns);
+        }
         let mut per_pair = std::collections::BTreeMap::new();
-        per_pair.insert((0usize, 1usize), vec![5e-6, 9e-6, 1e-6]);
+        per_pair.insert((0usize, 1usize), pair);
         let tail = TailStats {
-            sojourn_s: sojourn.clone(),
-            transit_s: sojourn,
-            per_pair_sojourn_s: per_pair,
+            sojourn: sojourn.clone(),
+            transit: sojourn,
+            per_pair_sojourn: per_pair,
             peak_queue_bytes: vec![0.0, 4096.0, 512.0],
             peak_recv_queue_bytes: vec![128.0, 0.0],
             delivered_chunks: 100,
             ..TailStats::default()
         };
         let r = TailReport::from_stats(&tail).unwrap();
-        assert!((r.p50_us - 50.0).abs() < 1e-9);
-        assert!((r.p99_us - 99.0).abs() < 1e-9);
-        assert!((r.max_us - 100.0).abs() < 1e-9);
+        // quantiles report the bucket floor: within one bucket width
+        // below the exact nearest-rank sample
+        let tol_us = |ns: u64| bucket_width_ns(ns) as f64 * 1e-3;
+        assert!(r.p50_us <= 50.0 && 50.0 - r.p50_us <= tol_us(50_000), "p50={}", r.p50_us);
+        assert!(r.p99_us <= 99.0 && 99.0 - r.p99_us <= tol_us(99_000), "p99={}", r.p99_us);
+        // ... while the max stays exact
+        assert!((r.max_us - 100.0).abs() < 1e-9, "max={}", r.max_us);
         assert_eq!(r.peak_queue_link, 1);
         assert_eq!(r.peak_queue_bytes, 4096.0);
         assert_eq!(r.peak_recv_queue_bytes, 128.0);
-        // per-pair p99 is the worst observed sample of that pair
-        assert!((TailReport::pair_p99_us(&tail, (0, 1)).unwrap() - 9.0).abs() < 1e-9);
+        // per-pair p99 is (the bucket floor of) the pair's worst sample
+        let p = TailReport::pair_p99_us(&tail, (0, 1)).unwrap();
+        assert!(p <= 9.0 && 9.0 - p <= tol_us(9_000), "pair p99={p}");
         assert!(TailReport::pair_p99_us(&tail, (3, 4)).is_none());
         // no chunks → no report
         assert!(TailReport::from_stats(&TailStats::default()).is_none());

@@ -53,11 +53,16 @@ use crate::fabric::backend::{make_backend, FabricBackend, TailStats};
 use crate::fabric::faults::{self, FaultSchedule};
 use crate::fabric::fluid::{Flow, SimResult};
 use crate::fabric::FabricParams;
-use crate::planner::replan::{diff_pairs, drain_time_z_scaled, excess_over_plan, shape_deviation};
+use crate::planner::replan::{
+    diff_pairs, drain_time_terms, drain_time_z_scaled, excess_over_plan, shape_deviation,
+    top_binding, TOP_K_BINDING,
+};
 use crate::planner::{
     carry_plan, DrainCaps, Plan, Planner, PlannerCfg, ReplanCfg, TenantDemands,
 };
-use crate::telemetry::{Recorder, TraceRecord};
+use crate::telemetry::{
+    emit_tail_histograms, DecisionCandidate, LinkBlame, Recorder, TraceRecord, ATTR_TOP_LINKS,
+};
 use crate::topology::{GpuId, Path, PathKind, Topology};
 use crate::util::stats::{jain_index, percentile_nearest_rank};
 use std::collections::{BTreeMap, BTreeSet};
@@ -135,7 +140,9 @@ pub struct TenantResult {
     /// latencies ARE counted). Defined on every backend.
     pub p99_lat_s: f64,
     /// Nearest-rank p99 chunk sojourn from the packet backend's
-    /// per-tag tail records; `None` on the fluid backend.
+    /// per-tag streaming histogram (bucket quantile — within one
+    /// bucket width, ≤3.2%, of the exact sample); `None` on the
+    /// fluid backend.
     pub p99_chunk_s: Option<f64>,
     /// Peak out-of-order chunks buffered in this tenant's reassembly.
     pub peak_reassembly: usize,
@@ -322,6 +329,7 @@ impl<'a> MultiTenantExecutor<'a> {
             }
         } else {
             let mut t_next = cadence;
+            let mut attr_epoch = 0u64;
             loop {
                 {
                     let eng = engine.as_mut().expect("engine exists");
@@ -423,7 +431,21 @@ impl<'a> MultiTenantExecutor<'a> {
                     }
                     break;
                 }
-                monitor.observe(&eng.take_window());
+                // sample the engine's window; with the recorder live,
+                // take the attributed form — its `totals` are produced
+                // by the same canonical per-link summation, so the
+                // monitor sees bit-identical bytes either way — and
+                // emit the blame decomposition of the hottest links
+                if self.rec.on() {
+                    let attr = eng.take_window_attr();
+                    let links = LinkBlame::hottest(&attr, ATTR_TOP_LINKS);
+                    let epoch = attr_epoch;
+                    self.rec.emit(|| TraceRecord::Attribution { t_s: t_now, epoch, links });
+                    attr_epoch += 1;
+                    monitor.observe(&attr.totals);
+                } else {
+                    monitor.observe(&eng.take_window());
+                }
 
                 // residuals per live tenant (shared extraction —
                 // [`residual_routing`]; forced pairs cross a dead link)
@@ -562,6 +584,35 @@ impl<'a> MultiTenantExecutor<'a> {
                             &bg,
                             hs,
                         );
+                        // candidate evidence mirrors the single-job
+                        // audit: built from the same drain-time terms
+                        // the z figures fold, and only when recording
+                        let candidates = |own: &[f64], ch_ll: &[f64]| {
+                            vec![
+                                DecisionCandidate {
+                                    name: "carry".to_string(),
+                                    z_s: z_carry,
+                                    delta_s: 0.0,
+                                    binding: top_binding(
+                                        &drain_time_terms(
+                                            topo, &self.rcfg.caps, &shared, own, &bg, hs,
+                                        ),
+                                        TOP_K_BINDING,
+                                    ),
+                                },
+                                DecisionCandidate {
+                                    name: "challenger".to_string(),
+                                    z_s: z_ch,
+                                    delta_s: z_ch - z_carry,
+                                    binding: top_binding(
+                                        &drain_time_terms(
+                                            topo, &self.rcfg.caps, &shared, ch_ll, &bg, hs,
+                                        ),
+                                        TOP_K_BINDING,
+                                    ),
+                                },
+                            ]
+                        };
                         if !forced && z_ch >= z_carry * (1.0 - self.rcfg.margin) {
                             self.rec.emit(|| TraceRecord::Decision {
                                 t_s: t_now,
@@ -573,6 +624,7 @@ impl<'a> MultiTenantExecutor<'a> {
                                 margin: self.rcfg.margin,
                                 mwu_visits: joint_planner.mwu_last_visits(),
                                 changed_pairs: 0,
+                                candidates: candidates(own, &ch.link_load),
                             });
                             continue;
                         }
@@ -587,6 +639,7 @@ impl<'a> MultiTenantExecutor<'a> {
                             margin: self.rcfg.margin,
                             mwu_visits: joint_planner.mwu_last_visits(),
                             changed_pairs: changed.len(),
+                            candidates: candidates(own, &ch.link_load),
                         });
                         if changed.is_empty() {
                             continue;
@@ -647,6 +700,16 @@ impl<'a> MultiTenantExecutor<'a> {
                                 margin: a.margin,
                                 mwu_visits: a.mwu_visits,
                                 changed_pairs: out.changed_pairs.len(),
+                                candidates: a
+                                    .candidates
+                                    .iter()
+                                    .map(|c| DecisionCandidate {
+                                        name: c.name.to_string(),
+                                        z_s: c.z_s,
+                                        delta_s: c.delta_s,
+                                        binding: c.binding.clone(),
+                                    })
+                                    .collect(),
                             });
                         }
                         deviation = deviation.max(out.deviation);
@@ -711,6 +774,9 @@ impl<'a> MultiTenantExecutor<'a> {
         let eng = engine.expect("engine exists");
         let sim_events = eng.events();
         let tail = eng.tail();
+        if let Some(t) = &tail {
+            emit_tail_histograms(&self.rec, t);
+        }
         let sim = eng.result();
         let mut results: Vec<TenantResult> = Vec::new();
         let mut peak_reass_all = 0usize;
@@ -786,10 +852,10 @@ impl<'a> MultiTenantExecutor<'a> {
                     percentile_nearest_rank(&lat, 99.0)
                 },
                 p99_chunk_s: tail.as_ref().and_then(|t| {
-                    t.per_tag_sojourn_s
+                    t.per_tag_sojourn
                         .get(&(tid as u64))
-                        .filter(|v| !v.is_empty())
-                        .map(|v| percentile_nearest_rank(v, 99.0))
+                        .filter(|h| !h.is_empty())
+                        .map(|h| h.quantile_s(99.0))
                 }),
                 peak_reassembly: peak,
             });
@@ -1221,6 +1287,9 @@ mod tests {
         let run = ex.execute(jobs);
         let tail = run.tail.expect("packet backend records tails");
         assert!(tail.delivered_chunks > 0);
+        assert_eq!(tail.sojourn.total(), tail.delivered_chunks);
+        let per_tag_total: u64 = tail.per_tag_sojourn.values().map(|h| h.total()).sum();
+        assert_eq!(per_tag_total, tail.delivered_chunks, "tag groups partition deliveries");
         for t in &run.tenants {
             assert!(t.goodput_gbps > 0.0);
             let p99 = t.p99_chunk_s.expect("per-tenant chunk tail");

@@ -115,7 +115,7 @@ pub struct ReplanOutcome {
 
 /// The drain-time evidence one replan decision ran on
 /// ([`ReplanOutcome::audit`]).
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ReplanAudit {
     /// Capacity-normalized drain time of carrying the incumbent.
     pub z_carry: f64,
@@ -127,6 +127,66 @@ pub struct ReplanAudit {
     pub forced: bool,
     /// Algorithm-1 visits the challenger sweep performed.
     pub mwu_visits: u64,
+    /// Per-candidate evidence: z, delta against the carry, and the
+    /// top-k binding constraints behind each number (`nimble explain`
+    /// renders these as the "why" of the decision).
+    pub candidates: Vec<CandidateAudit>,
+}
+
+/// One judged plan candidate inside a [`ReplanAudit`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct CandidateAudit {
+    /// `"carry"` or `"challenger"`.
+    pub name: &'static str,
+    /// Capacity-normalized drain time of this candidate (seconds).
+    pub z_s: f64,
+    /// `z_s − z_carry`: negative means the candidate drains faster
+    /// than carrying the incumbent (0 for the carry itself).
+    pub delta_s: f64,
+    /// Top-[`TOP_K_BINDING`] binding constraints `(label, z_term)`,
+    /// descending by drain term — which constraint(s) this candidate's
+    /// drain time actually sits on.
+    pub binding: Vec<(String, f64)>,
+}
+
+/// How many binding constraints each candidate audit retains.
+pub const TOP_K_BINDING: usize = 3;
+
+/// Identity of one drain-time constraint term — every max-term of
+/// [`drain_time_z_scaled`], named. The `Ord` order (variant, index) is
+/// the deterministic tie-break when equal terms compete for a top-k
+/// slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ConsId {
+    /// Per-link drain: `load / cap` of link `l`.
+    Link(usize),
+    /// Per-GPU injection aggregate (sum of outgoing non-CrossRail
+    /// links, capped by the fabric's inject anchor).
+    GpuOut(usize),
+    /// Per-GPU receive aggregate.
+    GpuIn(usize),
+    /// Per-node NIC-out aggregate (rail + leaf-uplink load over the
+    /// node's achievable rail capacity).
+    NodeOut(usize),
+    /// Per-node NIC-in aggregate.
+    NodeIn(usize),
+    /// Shared-constraint term `i` of the topology (tiered fabrics).
+    Shared(usize),
+}
+
+impl ConsId {
+    /// Stable textual label (`decision` trace records / `nimble
+    /// explain`).
+    pub fn label(&self) -> String {
+        match self {
+            ConsId::Link(l) => format!("link:{l}"),
+            ConsId::GpuOut(g) => format!("gpu_out:{g}"),
+            ConsId::GpuIn(g) => format!("gpu_in:{g}"),
+            ConsId::NodeOut(n) => format!("node_out:{n}"),
+            ConsId::NodeIn(n) => format!("node_in:{n}"),
+            ConsId::Shared(i) => format!("shared:{i}"),
+        }
+    }
 }
 
 /// Scale the incumbent's per-pair path splits onto the residual
@@ -272,8 +332,46 @@ pub(crate) fn drain_time_z_scaled(
     background: &[f64],
     scale: Option<&[f64]>,
 ) -> f64 {
+    fold_terms(&drain_time_terms(topo, caps, shared, loads, background, scale))
+}
+
+/// Reduce a term list back to the drain-time `z`. The terms are
+/// emitted in exactly the accumulation order the pre-decomposition
+/// metric used, so this fold is bit-identical to it.
+pub(crate) fn fold_terms(terms: &[(ConsId, f64)]) -> f64 {
+    terms.iter().fold(0.0f64, |z, &(_, v)| z.max(v))
+}
+
+/// The top-`k` binding constraints of a term list, `(label, z_term)`
+/// descending by term; equal terms tie-break on [`ConsId`] order so
+/// the selection is deterministic. Zero terms never bind.
+pub(crate) fn top_binding(terms: &[(ConsId, f64)], k: usize) -> Vec<(String, f64)> {
+    let mut live: Vec<(ConsId, f64)> =
+        terms.iter().filter(|&&(_, v)| v > 0.0).cloned().collect();
+    live.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    live.truncate(k);
+    live.into_iter().map(|(id, v)| (id.label(), v)).collect()
+}
+
+/// The full constraint-term decomposition behind
+/// [`drain_time_z_scaled`]: every `(constraint, load/cap)` max-term,
+/// in the exact order the scalar metric accumulated them (so
+/// [`fold_terms`] reproduces `z` bit-identically). This is what the
+/// decision audit ranks to name the binding constraints.
+pub(crate) fn drain_time_terms(
+    topo: &Topology,
+    caps: &DrainCaps,
+    shared: &SharedConstraints,
+    loads: &[f64],
+    background: &[f64],
+    scale: Option<&[f64]>,
+) -> Vec<(ConsId, f64)> {
     let g = topo.num_gpus();
-    let mut z = 0.0f64;
+    let mut terms = Vec::with_capacity(topo.links.len() + 2 * g + 2 * topo.nodes);
     let mut out = vec![0.0f64; g];
     let mut inb = vec![0.0f64; g];
     let mut out_cap = vec![0.0f64; g];
@@ -286,7 +384,7 @@ pub(crate) fn drain_time_z_scaled(
             Some(s) => l.cap_gbps * s[i].max(1e-6) * 1e9,
             None => l.cap_gbps * 1e9,
         };
-        z = z.max(load / cap);
+        terms.push((ConsId::Link(i), load / cap));
         if !matches!(l.kind, LinkKind::CrossRail { .. }) {
             if l.src < g {
                 out[l.src] += load;
@@ -309,22 +407,29 @@ pub(crate) fn drain_time_z_scaled(
     }
     for gi in 0..g {
         if out_cap[gi] > 0.0 {
-            z = z.max(out[gi] / out_cap[gi].min(caps.inject_gbps * 1e9));
+            terms.push((
+                ConsId::GpuOut(gi),
+                out[gi] / out_cap[gi].min(caps.inject_gbps * 1e9),
+            ));
         }
         if in_cap[gi] > 0.0 {
-            z = z.max(inb[gi] / in_cap[gi].min(caps.recv_gbps * 1e9));
+            terms.push((
+                ConsId::GpuIn(gi),
+                inb[gi] / in_cap[gi].min(caps.recv_gbps * 1e9),
+            ));
         }
     }
     let rails_cap = (topo.nics_per_node as f64 * topo.rail_gbps * 1e9)
         .min(caps.node_net_gbps * 1e9);
     for n in 0..topo.nodes {
-        z = z.max(node_out[n] / rails_cap).max(node_in[n] / rails_cap);
+        terms.push((ConsId::NodeOut(n), node_out[n] / rails_cap));
+        terms.push((ConsId::NodeIn(n), node_in[n] / rails_cap));
     }
-    for t in &shared.terms {
+    for (i, t) in shared.terms.iter().enumerate() {
         let agg: f64 = t.members.iter().map(|&l| loads[l] + background[l]).sum();
-        z = z.max(agg / t.cap_bps);
+        terms.push((ConsId::Shared(i), agg / t.cap_bps));
     }
-    z
+    terms
 }
 
 /// Pairs whose routing materially differs between two plans over the
@@ -473,7 +578,7 @@ impl<'a> Planner<'a> {
         // health and this is exactly the pre-fault drain_time_z.
         let hscale = self.health().map(|h| h.scale.clone());
         let shared = self.shared();
-        let z_carry = drain_time_z_scaled(
+        let terms_carry = drain_time_terms(
             topo,
             &rcfg.caps,
             shared,
@@ -481,7 +586,7 @@ impl<'a> Planner<'a> {
             &excess,
             hscale.as_deref(),
         );
-        let z_challenger = drain_time_z_scaled(
+        let terms_chal = drain_time_terms(
             topo,
             &rcfg.caps,
             shared,
@@ -489,6 +594,8 @@ impl<'a> Planner<'a> {
             &excess,
             hscale.as_deref(),
         );
+        let z_carry = fold_terms(&terms_carry);
+        let z_challenger = fold_terms(&terms_chal);
         let accept =
             !forced.is_empty() || z_challenger < z_carry * (1.0 - rcfg.margin);
         let audit = Some(ReplanAudit {
@@ -497,6 +604,20 @@ impl<'a> Planner<'a> {
             margin: rcfg.margin,
             forced: !forced.is_empty(),
             mwu_visits: self.mwu_last_visits(),
+            candidates: vec![
+                CandidateAudit {
+                    name: "carry",
+                    z_s: z_carry,
+                    delta_s: 0.0,
+                    binding: top_binding(&terms_carry, TOP_K_BINDING),
+                },
+                CandidateAudit {
+                    name: "challenger",
+                    z_s: z_challenger,
+                    delta_s: z_challenger - z_carry,
+                    binding: top_binding(&terms_chal, TOP_K_BINDING),
+                },
+            ],
         });
         if accept {
             let changed_pairs = diff_pairs(&carry, &challenger);
@@ -728,6 +849,58 @@ mod tests {
             z_deg >= z0 * 3.9,
             "quartered rail should ~4x its drain term: {z_deg} vs {z0}"
         );
+    }
+
+    /// The constraint-term decomposition folds back to exactly the
+    /// scalar drain-time metric, and the loaded constraint tops the
+    /// deterministic binding ranking.
+    #[test]
+    fn drain_terms_fold_to_z_and_rank_binding() {
+        let t = Topology::paper();
+        let caps = DrainCaps::default();
+        let shared = SharedConstraints::of(&t);
+        let rail = t.rail(0, 1, 0).unwrap();
+        let mut loads = vec![0.0; t.links.len()];
+        loads[rail] = 45.1e9; // one second of healthy rail drain
+        let zero = vec![0.0; t.links.len()];
+        let terms = drain_time_terms(&t, &caps, &shared, &loads, &zero, None);
+        let z = drain_time_z(&t, &caps, &shared, &loads, &zero);
+        assert_eq!(fold_terms(&terms).to_bits(), z.to_bits());
+        let binding = top_binding(&terms, TOP_K_BINDING);
+        assert!(!binding.is_empty());
+        assert_eq!(binding[0].0, format!("link:{rail}"));
+        assert_eq!(binding[0].1.to_bits(), z.to_bits());
+        for w in binding.windows(2) {
+            assert!(w[0].1 >= w[1].1, "binding list not descending");
+        }
+    }
+
+    /// An enabled replan always carries per-candidate audit evidence
+    /// whose z figures match the headline numbers.
+    #[test]
+    fn audit_carries_candidate_evidence() {
+        let t = Topology::paper();
+        let stale = vec![Demand::new(2, 1, 2.0 * MB)];
+        let mut planner = Planner::new(&t, PlannerCfg::default());
+        let incumbent = planner.plan(&stale);
+        let residual = vec![Demand::new(2, 1, 512.0 * MB)];
+        let observed = incumbent.link_load.clone();
+        let out = planner.replan(&incumbent, &observed, &residual, &enabled());
+        let audit = out.audit.expect("enabled replan must audit");
+        assert_eq!(audit.candidates.len(), 2);
+        let carry = &audit.candidates[0];
+        let chal = &audit.candidates[1];
+        assert_eq!(carry.name, "carry");
+        assert_eq!(chal.name, "challenger");
+        assert_eq!(carry.z_s.to_bits(), audit.z_carry.to_bits());
+        assert_eq!(chal.z_s.to_bits(), audit.z_challenger.to_bits());
+        assert_eq!(carry.delta_s, 0.0);
+        assert_eq!(
+            chal.delta_s.to_bits(),
+            (audit.z_challenger - audit.z_carry).to_bits()
+        );
+        assert!(!carry.binding.is_empty() && carry.binding.len() <= TOP_K_BINDING);
+        assert!(!chal.binding.is_empty());
     }
 
     #[test]

@@ -1,0 +1,622 @@
+//! `nimble explain <trace.jsonl> [--epoch E] [--link L] [--tenant T]
+//! [--check]` — congestion attribution from a recorded trace: *why*
+//! was a constraint hot, *why* did a replan decision go the way it
+//! did, and *who* is burning each tenant's latency budget.
+//!
+//! Everything here is reconstructed **from the trace alone** (schema
+//! v2, see [the module docs](super)):
+//!
+//! * **blame tables** — `attribution` records decompose each hot
+//!   link's window bytes per `(tenant tag, src GPU, dst GPU)`;
+//!   without `--epoch` the windows aggregate into a whole-run view,
+//!   with `--epoch E` the single window at that monitor epoch is
+//!   shown (`--link L` restricts either view to one link);
+//! * **decision audits** — `decision` records carry the judged
+//!   candidates (schema v2 `candidates`): per-candidate drain time,
+//!   delta vs carrying the incumbent, and the top binding
+//!   constraints each candidate's drain time sits on;
+//! * **tenant SLO burn** — per-tenant headline latencies joined with
+//!   the per-tag `histogram` records: the *burn* column is the share
+//!   of a tenant's chunk sojourns landing at or above the run-wide
+//!   p95 sojourn bucket (cross-tenant tail pressure).
+//!
+//! `--check` ([`check`]) re-verifies the two v2 invariants from raw
+//! trace ingredients, **bit-exactly** where the writer promises it:
+//!
+//! 1. *blame conservation* — summing each listed link's blame bytes
+//!    in listed order reproduces `window_bytes` to the bit (the
+//!    writer lists the full decomposition in canonical key order and
+//!    floats roundtrip bitwise through [`crate::util::json`]);
+//! 2. *histogram consistency* — every `histogram` record's `total`
+//!    and headline quantiles are recomputed from its sparse bucket
+//!    counts via [`LatencyHist::from_sparse`] and must equal the
+//!    recorded values exactly, and the exact `max_ns` must fall in
+//!    the highest nonzero bucket.
+
+use super::report::{CheckOutcome, Trace};
+use crate::metrics::Table;
+use crate::util::hist::{bucket_bounds, bucket_of, LatencyHist};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Filters for [`render`]; `None` = show everything.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExplainOpts {
+    /// Only the attribution window at this monitor epoch.
+    pub epoch: Option<u64>,
+    /// Only this link's blame rows.
+    pub link: Option<usize>,
+    /// Only this tenant's decisions and SLO row.
+    pub tenant: Option<i64>,
+}
+
+/// Blame contributors a table row spells out before folding the rest
+/// into an `… (+n more)` remainder.
+const TOP_CONTRIBUTORS: usize = 3;
+
+/// Detailed decision rows rendered before truncating (rejected
+/// decisions beyond the cap are still counted in the totals line).
+const MAX_DECISIONS: usize = 24;
+
+/// One parsed `attribution` link entry.
+struct LinkRow {
+    link: usize,
+    window_bytes: f64,
+    blame: Vec<(u64, usize, usize, f64)>,
+}
+
+fn parse_links(a: &Json) -> Vec<LinkRow> {
+    let mut out = Vec::new();
+    let Some(links) = a.get("links").as_arr() else { return out };
+    for l in links {
+        let blame = l
+            .get("blame")
+            .as_arr()
+            .map(|entries| {
+                entries
+                    .iter()
+                    .filter_map(|e| {
+                        let q = e.as_arr()?;
+                        Some((
+                            q.first()?.as_u64()?,
+                            q.get(1)?.as_u64()? as usize,
+                            q.get(2)?.as_u64()? as usize,
+                            q.get(3)?.as_f64()?,
+                        ))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        out.push(LinkRow {
+            link: l.get("link").as_u64().unwrap_or(0) as usize,
+            window_bytes: l.get("window_bytes").as_f64().unwrap_or(0.0),
+            blame,
+        });
+    }
+    out
+}
+
+fn fmt_mb(bytes: f64) -> String {
+    format!("{:.2}", bytes / (1024.0 * 1024.0))
+}
+
+fn fmt_contributors(blame: &[(u64, usize, usize, f64)], total: f64) -> String {
+    let mut ranked: Vec<&(u64, usize, usize, f64)> = blame.iter().collect();
+    ranked.sort_by(|a, b| {
+        b.3.partial_cmp(&a.3)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then((a.0, a.1, a.2).cmp(&(b.0, b.1, b.2)))
+    });
+    let shown: Vec<String> = ranked
+        .iter()
+        .take(TOP_CONTRIBUTORS)
+        .map(|(tag, src, dst, b)| {
+            format!("t{tag} g{src}→g{dst} {} MB ({:.0}%)", fmt_mb(*b), 100.0 * b / total.max(1e-12))
+        })
+        .collect();
+    let rest = ranked.len().saturating_sub(TOP_CONTRIBUTORS);
+    if rest > 0 {
+        format!("{} (+{rest} more)", shown.join(", "))
+    } else {
+        shown.join(", ")
+    }
+}
+
+fn blame_table(rows: &[LinkRow], link_filter: Option<usize>) -> String {
+    let mut t = Table::new(&["link", "window_MB", "blame (tag src→dst, share of link bytes)"]);
+    let mut any = false;
+    for r in rows {
+        if link_filter.map_or(false, |l| l != r.link) {
+            continue;
+        }
+        any = true;
+        t.row(&[
+            format!("{}", r.link),
+            fmt_mb(r.window_bytes),
+            fmt_contributors(&r.blame, r.window_bytes),
+        ]);
+    }
+    if any {
+        t.render()
+    } else {
+        "  (no matching link in the recorded windows)\n".to_string()
+    }
+}
+
+fn fmt_ms(s: f64) -> String {
+    format!("{:.3}", s * 1e3)
+}
+
+/// Render the explanation report for one trace.
+pub fn render(trace: &Trace, opts: &ExplainOpts) -> String {
+    let mut out = String::new();
+    let attrs: Vec<&Json> = trace.kind_lines("attribution").collect();
+    let decisions: Vec<&Json> = trace.kind_lines("decision").collect();
+    let hists: Vec<&Json> = trace.kind_lines("histogram").collect();
+    let tenants: Vec<&Json> = trace.kind_lines("tenant").collect();
+
+    // ---- blame tables ----
+    if attrs.is_empty() {
+        out.push_str(
+            "no attribution records in trace (recorded by a pre-v2 build, or the run \
+             drained before the first monitor window?)\n",
+        );
+    } else if let Some(e) = opts.epoch {
+        let mut found = false;
+        for a in &attrs {
+            if a.get("epoch").as_u64() != Some(e) {
+                continue;
+            }
+            found = true;
+            let run = a.get("run").as_str().unwrap_or("");
+            out.push_str(&format!(
+                "== blame @ epoch {e} (run {run}, t = {} ms) ==\n",
+                fmt_ms(a.get("t_s").as_f64().unwrap_or(0.0))
+            ));
+            out.push_str(&blame_table(&parse_links(a), opts.link));
+        }
+        if !found {
+            out.push_str(&format!("== blame @ epoch {e} ==\n  (no attribution record at this epoch)\n"));
+        }
+    } else {
+        // whole-run aggregate: per-link byte totals and merged blame
+        // across every recorded window, hottest links first
+        let mut per_link: BTreeMap<usize, (f64, BTreeMap<(u64, usize, usize), f64>)> =
+            BTreeMap::new();
+        for a in &attrs {
+            for r in parse_links(a) {
+                let slot = per_link.entry(r.link).or_default();
+                slot.0 += r.window_bytes;
+                for (tag, src, dst, b) in r.blame {
+                    *slot.1.entry((tag, src, dst)).or_insert(0.0) += b;
+                }
+            }
+        }
+        let mut ranked: Vec<(usize, (f64, BTreeMap<(u64, usize, usize), f64>))> =
+            per_link.into_iter().collect();
+        ranked.sort_by(|a, b| {
+            b.1 .0.partial_cmp(&a.1 .0).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
+        });
+        let rows: Vec<LinkRow> = ranked
+            .into_iter()
+            .map(|(link, (bytes, blame))| LinkRow {
+                link,
+                window_bytes: bytes,
+                blame: blame.into_iter().map(|((t, s, d), b)| (t, s, d, b)).collect(),
+            })
+            .collect();
+        out.push_str(&format!(
+            "== blame, aggregated over {} windows (hottest links first) ==\n",
+            attrs.len()
+        ));
+        out.push_str(&blame_table(&rows, opts.link));
+    }
+
+    // ---- decision audits ----
+    let picked: Vec<&Json> = decisions
+        .iter()
+        .copied()
+        .filter(|d| {
+            opts.tenant
+                .map_or(true, |t| d.get("tenant").as_f64().map(|x| x as i64) == Some(t))
+        })
+        .collect();
+    if !picked.is_empty() {
+        let accepted = picked.iter().filter(|d| d.get("accepted").as_bool() == Some(true)).count();
+        let forced = picked.iter().filter(|d| d.get("forced").as_bool() == Some(true)).count();
+        out.push_str(&format!(
+            "\n== decisions: {} total, {accepted} accepted, {forced} forced ==\n",
+            picked.len()
+        ));
+        // detail the interesting ones first: accepted or forced, then
+        // rejections, truncating past the cap
+        let hot = |d: &Json| {
+            d.get("accepted").as_bool() == Some(true) || d.get("forced").as_bool() == Some(true)
+        };
+        let mut detail: Vec<&Json> = Vec::new();
+        for &d in &picked {
+            if hot(d) {
+                detail.push(d);
+            }
+        }
+        for &d in &picked {
+            if !hot(d) {
+                detail.push(d);
+            }
+        }
+        let shown = detail.len().min(MAX_DECISIONS);
+        for d in &detail[..shown] {
+            let tenant = d.get("tenant").as_f64().unwrap_or(-1.0);
+            out.push_str(&format!(
+                "  @{} ms{}: {}{} — z_carry {:.3e}s vs z_challenger {:.3e}s (margin {:.2}, {} pairs changed)\n",
+                fmt_ms(d.get("t_s").as_f64().unwrap_or(0.0)),
+                if tenant < 0.0 { String::new() } else { format!(" tenant {tenant:.0}") },
+                if d.get("accepted").as_bool() == Some(true) { "ACCEPTED" } else { "rejected" },
+                if d.get("forced").as_bool() == Some(true) { " (fault-forced)" } else { "" },
+                d.get("z_carry").as_f64().unwrap_or(0.0),
+                d.get("z_challenger").as_f64().unwrap_or(0.0),
+                d.get("margin").as_f64().unwrap_or(0.0),
+                d.get("changed_pairs").as_u64().unwrap_or(0),
+            ));
+            if let Some(cands) = d.get("candidates").as_arr() {
+                for c in cands {
+                    let binding: Vec<String> = c
+                        .get("binding")
+                        .as_arr()
+                        .map(|b| {
+                            b.iter()
+                                .filter_map(|e| {
+                                    let p = e.as_arr()?;
+                                    Some(format!(
+                                        "{}={:.3e}s",
+                                        p.first()?.as_str()?,
+                                        p.get(1)?.as_f64()?
+                                    ))
+                                })
+                                .collect()
+                        })
+                        .unwrap_or_default();
+                    out.push_str(&format!(
+                        "      {:<10} z {:.3e}s (Δ {:+.3e}s), binding: {}\n",
+                        c.get("name").as_str().unwrap_or("?"),
+                        c.get("z_s").as_f64().unwrap_or(0.0),
+                        c.get("delta_s").as_f64().unwrap_or(0.0),
+                        if binding.is_empty() { "—".to_string() } else { binding.join(", ") },
+                    ));
+                }
+            }
+        }
+        if detail.len() > shown {
+            out.push_str(&format!("  … {} more decisions not shown\n", detail.len() - shown));
+        }
+    }
+
+    // ---- per-tenant SLO burn ----
+    if !tenants.is_empty() {
+        // run-wide p95 sojourn bucket: the burn threshold
+        let p95_ns = hists
+            .iter()
+            .find(|h| h.get("scope").as_str() == Some("sojourn"))
+            .and_then(|h| h.get("p95_ns").as_u64());
+        let tag_hist = |tag: u64| -> Option<LatencyHist> {
+            let h = hists
+                .iter()
+                .find(|h| h.get("scope").as_str() == Some(format!("tag:{tag}").as_str()))?;
+            Some(from_record(h))
+        };
+        let mut t = Table::new(&[
+            "tenant",
+            "weight",
+            "goodput_gbps",
+            "p99_lat_us",
+            "p99_chunk_us",
+            "slo_burn_pct",
+        ]);
+        let mut any = false;
+        for r in &tenants {
+            let tid = r.get("tenant").as_u64().unwrap_or(0);
+            if opts.tenant.map_or(false, |t| t != tid as i64) {
+                continue;
+            }
+            any = true;
+            let p99c = r.get("p99_chunk_s").as_f64().unwrap_or(-1.0);
+            let burn = match (p95_ns, tag_hist(tid)) {
+                (Some(thr), Some(h)) if h.total() > 0 => {
+                    let above: u64 = h
+                        .nonzero()
+                        .iter()
+                        .filter(|&&(idx, _)| bucket_bounds(idx).0 >= thr)
+                        .map(|&(_, c)| c)
+                        .sum();
+                    format!("{:.1}", 100.0 * above as f64 / h.total() as f64)
+                }
+                _ => "—".to_string(),
+            };
+            t.row(&[
+                format!("{tid}"),
+                format!("{:.1}", r.get("weight").as_f64().unwrap_or(0.0)),
+                format!("{:.1}", r.get("goodput_gbps").as_f64().unwrap_or(0.0)),
+                format!("{:.1}", r.get("p99_lat_s").as_f64().unwrap_or(0.0) * 1e6),
+                if p99c < 0.0 { "—".to_string() } else { format!("{:.1}", p99c * 1e6) },
+                burn,
+            ]);
+        }
+        if any {
+            out.push_str(
+                "\n== tenant SLO burn (share of chunk sojourns at/above the run-wide p95 bucket) ==\n",
+            );
+            out.push_str(&t.render());
+        }
+    }
+    out
+}
+
+/// Rebuild a [`LatencyHist`] from a `histogram` record's sparse
+/// buckets (the `--check` oracle path and the SLO-burn source).
+fn from_record(h: &Json) -> LatencyHist {
+    let pairs: Vec<(usize, u64)> = h
+        .get("buckets")
+        .as_arr()
+        .map(|b| {
+            b.iter()
+                .filter_map(|e| {
+                    let p = e.as_arr()?;
+                    Some((p.first()?.as_u64()? as usize, p.get(1)?.as_u64()?))
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    LatencyHist::from_sparse(&pairs, h.get("max_ns").as_u64().unwrap_or(0))
+}
+
+/// Re-verify the v2 invariants from raw trace ingredients: blame-sum
+/// conservation (bit-exact) and histogram/headline consistency.
+pub fn check(trace: &Trace) -> CheckOutcome {
+    let mut checks = 0usize;
+    let mut errors: Vec<String> = Vec::new();
+    let mut warnings: Vec<String> = Vec::new();
+
+    // -- blame conservation: Σ listed blame bytes (in listed order)
+    //    reproduces window_bytes bit-exactly on every listed link
+    let mut attr_records = 0usize;
+    for a in trace.kind_lines("attribution") {
+        attr_records += 1;
+        let epoch = a.get("epoch").as_u64().unwrap_or(0);
+        for r in parse_links(a) {
+            checks += 1;
+            let mut sum = 0.0f64;
+            for &(_, _, _, b) in &r.blame {
+                sum += b;
+            }
+            if sum.to_bits() != r.window_bytes.to_bits() {
+                errors.push(format!(
+                    "attribution epoch {epoch} link {}: blame sum {} != window_bytes {} \
+                     (conservation violated)",
+                    r.link, sum, r.window_bytes
+                ));
+            }
+            if r.blame.is_empty() && r.window_bytes != 0.0 {
+                errors.push(format!(
+                    "attribution epoch {epoch} link {}: {} window bytes with an empty \
+                     blame decomposition",
+                    r.link, r.window_bytes
+                ));
+            }
+        }
+    }
+    if attr_records == 0 {
+        warnings.push("no attribution records to verify".to_string());
+    }
+
+    // -- histogram consistency: totals and headline quantiles
+    //    recompute exactly from the sparse buckets; the exact max
+    //    falls in the highest nonzero bucket
+    let mut hist_records = 0usize;
+    for h in trace.kind_lines("histogram") {
+        hist_records += 1;
+        checks += 1;
+        let scope = h.get("scope").as_str().unwrap_or("?").to_string();
+        let rebuilt = from_record(h);
+        let total = h.get("total").as_u64().unwrap_or(0);
+        if rebuilt.total() != total {
+            errors.push(format!(
+                "histogram {scope}: recorded total {total} != bucket-count sum {}",
+                rebuilt.total()
+            ));
+        }
+        for (q, field) in [(50.0, "p50_ns"), (95.0, "p95_ns"), (99.0, "p99_ns")] {
+            let recorded = h.get(field).as_u64().unwrap_or(0);
+            let recomputed = rebuilt.quantile_ns(q);
+            if recomputed != recorded {
+                errors.push(format!(
+                    "histogram {scope}: {field} {recorded} != {recomputed} recomputed \
+                     from the buckets"
+                ));
+            }
+        }
+        if total > 0 {
+            let max_ns = h.get("max_ns").as_u64().unwrap_or(0);
+            let top = rebuilt.nonzero().last().map(|&(i, _)| i);
+            if top != Some(bucket_of(max_ns)) {
+                errors.push(format!(
+                    "histogram {scope}: max_ns {max_ns} does not fall in the highest \
+                     nonzero bucket"
+                ));
+            }
+        }
+    }
+    if hist_records == 0 {
+        warnings.push(
+            "no histogram records to verify (fluid backend records no tails)".to_string(),
+        );
+    }
+
+    CheckOutcome { checks, errors, warnings }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{LinkBlame, Recorder, TraceRecord};
+
+    fn attr_record(window: &[(usize, Vec<(u64, usize, usize, f64)>)]) -> TraceRecord {
+        TraceRecord::Attribution {
+            t_s: 1.0e-3,
+            epoch: 0,
+            links: window
+                .iter()
+                .map(|(link, blame)| {
+                    // totals derived exactly as the writer does: fold
+                    // the listed bytes in order
+                    let mut t = 0.0;
+                    for &(_, _, _, b) in blame {
+                        t += b;
+                    }
+                    LinkBlame { link: *link, window_bytes: t, blame: blame.clone() }
+                })
+                .collect(),
+        }
+    }
+
+    fn hist_record(scope: &str, samples_ns: &[u64]) -> TraceRecord {
+        let mut h = LatencyHist::new();
+        for &s in samples_ns {
+            h.record_ns(s);
+        }
+        TraceRecord::Histogram {
+            scope: scope.to_string(),
+            total: h.total(),
+            max_ns: h.max_ns(),
+            buckets: h.nonzero(),
+            p50_ns: h.quantile_ns(50.0),
+            p95_ns: h.quantile_ns(95.0),
+            p99_ns: h.quantile_ns(99.0),
+        }
+    }
+
+    fn trace_of(records: Vec<TraceRecord>) -> Trace {
+        let rec = Recorder::enabled();
+        rec.set_run("r0");
+        for r in records {
+            rec.emit(move || r);
+        }
+        let text: Vec<String> = rec.drain().iter().map(|l| l.to_string_compact()).collect();
+        Trace::parse(&text.join("\n")).unwrap()
+    }
+
+    #[test]
+    fn conservation_check_passes_and_catches_tampering() {
+        let blame = vec![(0u64, 0usize, 4usize, 1.5e6), (1, 1, 5, 0.7e6), (1, 2, 6, 0.1e6)];
+        let t = trace_of(vec![attr_record(&[(3, blame.clone())])]);
+        let out = check(&t);
+        assert!(out.ok(), "unexpected errors: {:?}", out.errors);
+        assert!(out.checks > 0);
+
+        // tamper: drop one contributor — the sum no longer reproduces
+        let short = vec![(3usize, blame[..2].to_vec())];
+        let mut bad = attr_record(&short);
+        if let TraceRecord::Attribution { links, .. } = &mut bad {
+            links[0].window_bytes += 0.1e6; // the dropped entry's bytes
+        }
+        let t = trace_of(vec![bad]);
+        let out = check(&t);
+        assert!(
+            out.errors.iter().any(|e| e.contains("conservation")),
+            "tampered blame not caught: {:?}",
+            out.errors
+        );
+    }
+
+    #[test]
+    fn histogram_check_recomputes_headlines_and_catches_skew() {
+        let samples: Vec<u64> = (1..=200u64).map(|i| i * 750).collect();
+        let t = trace_of(vec![hist_record("sojourn", &samples)]);
+        let out = check(&t);
+        assert!(out.ok(), "unexpected errors: {:?}", out.errors);
+
+        let mut bad = hist_record("sojourn", &samples);
+        if let TraceRecord::Histogram { p99_ns, .. } = &mut bad {
+            *p99_ns += 1; // not a bucket boundary the counts produce
+        }
+        let t = trace_of(vec![bad]);
+        let out = check(&t);
+        assert!(
+            out.errors.iter().any(|e| e.contains("p99_ns")),
+            "skewed headline not caught: {:?}",
+            out.errors
+        );
+    }
+
+    #[test]
+    fn check_warns_but_passes_without_v2_records() {
+        let rec = Recorder::enabled();
+        rec.emit(|| TraceRecord::Note { text: "old trace".into() });
+        let text: Vec<String> = rec.drain().iter().map(|l| l.to_string_compact()).collect();
+        let t = Trace::parse(&text.join("\n")).unwrap();
+        let out = check(&t);
+        // zero checks ran: ok() is false by construction, but nothing errored
+        assert!(out.errors.is_empty());
+        assert_eq!(out.warnings.len(), 2, "{:?}", out.warnings);
+    }
+
+    #[test]
+    fn render_blame_decisions_and_slo_sections() {
+        let blame0 = vec![(0u64, 0usize, 4usize, 2.0e6), (1, 1, 5, 1.0e6)];
+        let blame1 = vec![(1u64, 1usize, 5usize, 4.0e6)];
+        let records = vec![
+            attr_record(&[(3, blame0), (7, blame1)]),
+            TraceRecord::Decision {
+                t_s: 2.0e-3,
+                tenant: 1,
+                accepted: true,
+                forced: false,
+                z_carry: 3.0e-3,
+                z_challenger: 2.0e-3,
+                margin: 0.05,
+                mwu_visits: 42,
+                changed_pairs: 2,
+                candidates: vec![crate::telemetry::DecisionCandidate {
+                    name: "challenger".into(),
+                    z_s: 2.0e-3,
+                    delta_s: -1.0e-3,
+                    binding: vec![("link:7".into(), 2.0e-3)],
+                }],
+            },
+            TraceRecord::Tenant {
+                tenant: 1,
+                tenant_kind: "AllToAll".into(),
+                weight: 2.0,
+                admit_s: 0.0,
+                finish_s: 1.0e-2,
+                payload_bytes: 3.0e8,
+                goodput_gbps: 30.0,
+                p99_lat_s: 5.0e-3,
+                p99_chunk_s: 40.0e-6,
+            },
+            hist_record("sojourn", &[10_000, 20_000, 30_000, 40_000, 1_000_000]),
+            hist_record("tag:1", &[30_000, 1_000_000]),
+        ];
+        let t = trace_of(records);
+        let out = render(&t, &ExplainOpts::default());
+        assert!(out.contains("blame, aggregated"), "{out}");
+        assert!(out.contains("g1→g5"), "{out}");
+        assert!(out.contains("ACCEPTED"), "{out}");
+        assert!(out.contains("link:7"), "{out}");
+        assert!(out.contains("slo_burn_pct"), "{out}");
+
+        // link filter drops the other link's row
+        let only7 = render(&t, &ExplainOpts { link: Some(7), ..Default::default() });
+        assert!(only7.contains("g1→g5"), "{only7}");
+        assert!(!only7.contains("g0→g4"), "{only7}");
+
+        // epoch filter finds the window; a missing epoch says so
+        let e0 = render(&t, &ExplainOpts { epoch: Some(0), ..Default::default() });
+        assert!(e0.contains("blame @ epoch 0"), "{e0}");
+        let e9 = render(&t, &ExplainOpts { epoch: Some(9), ..Default::default() });
+        assert!(e9.contains("no attribution record at this epoch"), "{e9}");
+
+        // tenant filter keeps tenant 1's decision detail
+        let t1 = render(&t, &ExplainOpts { tenant: Some(1), ..Default::default() });
+        assert!(t1.contains("tenant 1"), "{t1}");
+    }
+}

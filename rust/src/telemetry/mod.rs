@@ -26,13 +26,20 @@
 //! * the trace itself is deterministic modulo wall-clock fields
 //!   (`*_wall_s`, which measure the host, not the simulation).
 //!
-//! ## JSONL schema (version 1)
+//! ## JSONL schema (version 2)
 //!
 //! One JSON object per line, alphabetical keys, every line carrying
 //! `"kind"`. Floats use the repo-wide shortest-roundtrip policy of
 //! [`crate::util::json`], so a parsed trace reproduces recorded values
 //! **bit-exactly** — `nimble report --check` recomputes headline
 //! numbers from raw ingredients and asserts equality, not closeness.
+//!
+//! Version 2 (DESIGN.md §16) adds the `attribution` and `histogram`
+//! kinds, and enriches `decision` with an optional `candidates` array
+//! (per-candidate z, delta vs the carry, top-k binding constraints).
+//! Forward compat: readers skip unknown kinds with a counted warning
+//! instead of failing, so a v1 reader degrades gracefully on a v2
+//! trace and vice versa.
 //!
 //! | `kind`      | emitted by | fields |
 //! |-------------|-----------|--------|
@@ -46,20 +53,109 @@
 //! | `summary`   | end of run | `run`, `makespan_s`, `payload_bytes`, `goodput_gbps`, `replans`, `preemptions`, `sim_events` |
 //! | `fault_row` | `nimble faults` arms | `run`, `topo`, `scenario`, `arm`, `goodput_gbps`, `clean_gbps`, `retention`, `ttr_epochs`, `ttr_ms` (`-1` = no recovery / not applicable), `replans`, `preemptions` |
 //! | `profile`   | end of run | `run`, `events`, `sched_pushes`, `sched_pops`, `solver_invocations`, `mwu_plans`, `mwu_visits`, `plan_wall_s`, `sim_wall_s` |
+//! | `attribution` | monitor window (v2) | `run`, `t_s`, `epoch`, `links` (hottest links, each `{link, window_bytes, blame: [[tag, src, dst, bytes], …]}` — the full blame list per listed link, in sorted `(tag, src, dst)` key order, so summing the listed bytes in order reproduces `window_bytes` bit-exactly) |
+//! | `histogram` | end of run (v2) | `run`, `scope` (`sojourn` \| `transit` \| `tag:<id>`), `total`, `max_ns`, `buckets` (sparse `[index, count]` pairs), `p50_ns`, `p95_ns`, `p99_ns` |
 //! | `note`      | CLIs without deep instrumentation | `text` |
 //!
 //! Absent optional numerics are encoded as `-1` (never JSON `null`,
 //! never NaN — NaN is not valid JSON), matching the bench convention.
 
+pub mod explain;
 pub mod report;
 
-use crate::fabric::backend::EngineProfile;
+use crate::fabric::backend::{EngineProfile, TailStats, WindowAttr};
+use crate::util::hist::LatencyHist;
 use crate::util::json::{Json, JsonlWriter};
 use std::io;
 use std::sync::{Arc, Mutex};
 
 /// Trace schema version stamped into every `meta` line.
-pub const SCHEMA_VERSION: u64 = 1;
+pub const SCHEMA_VERSION: u64 = 2;
+
+/// One link's blame row inside a [`TraceRecord::Attribution`] record:
+/// the window bytes the link carried, decomposed per
+/// `(tenant tag, src GPU, dst GPU)`. The decomposition lists **every**
+/// contributor of the link in sorted key order, so summing `blame`
+/// bytes in listed order reproduces `window_bytes` bit-exactly (the
+/// conservation invariant `nimble explain --check` verifies).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkBlame {
+    pub link: usize,
+    pub window_bytes: f64,
+    pub blame: Vec<(u64, usize, usize, f64)>,
+}
+
+/// How many (hottest) links an `attribution` record lists per window.
+pub const ATTR_TOP_LINKS: usize = 4;
+
+impl LinkBlame {
+    /// The `k` hottest links of a monitor window (bytes descending,
+    /// link-index ascending on ties — deterministic), each carrying
+    /// its **full** blame decomposition in the canonical sorted key
+    /// order, so the `Σ blame == window_bytes` conservation invariant
+    /// checks bit-exactly on every listed link.
+    pub fn hottest(attr: &WindowAttr, k: usize) -> Vec<LinkBlame> {
+        let mut idx: Vec<usize> =
+            (0..attr.totals.len()).filter(|&l| attr.totals[l] > 0.0).collect();
+        idx.sort_by(|&a, &b| {
+            attr.totals[b]
+                .partial_cmp(&attr.totals[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx.truncate(k);
+        idx.into_iter()
+            .map(|l| LinkBlame {
+                link: l,
+                window_bytes: attr.totals[l],
+                blame: attr.blame[l]
+                    .iter()
+                    .map(|&((tag, src, dst), b)| (tag, src, dst, b))
+                    .collect(),
+            })
+            .collect()
+    }
+}
+
+/// Emit the end-of-run `histogram` records for a tail-stats snapshot:
+/// one record each for the `sojourn` and `transit` scopes plus one
+/// `tag:<id>` scope per tenant tag, skipping empty histograms. No-op
+/// on a disabled recorder.
+pub fn emit_tail_histograms(rec: &Recorder, tail: &TailStats) {
+    if !rec.on() {
+        return;
+    }
+    let mut emit_one = |scope: String, h: &LatencyHist| {
+        if h.is_empty() {
+            return;
+        }
+        rec.emit(|| TraceRecord::Histogram {
+            scope,
+            total: h.total(),
+            max_ns: h.max_ns(),
+            buckets: h.nonzero(),
+            p50_ns: h.quantile_ns(50.0),
+            p95_ns: h.quantile_ns(95.0),
+            p99_ns: h.quantile_ns(99.0),
+        });
+    };
+    emit_one("sojourn".into(), &tail.sojourn);
+    emit_one("transit".into(), &tail.transit);
+    for (tag, h) in &tail.per_tag_sojourn {
+        emit_one(format!("tag:{tag}"), h);
+    }
+}
+
+/// One judged candidate inside a v2 `decision` record (mirrors the
+/// planner's audit; see [`crate::planner::replan::CandidateAudit`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecisionCandidate {
+    pub name: String,
+    pub z_s: f64,
+    pub delta_s: f64,
+    /// Top-k binding constraints `(label, z_term)`, descending.
+    pub binding: Vec<(String, f64)>,
+}
 
 /// One typed telemetry event. Serialized with [`TraceRecord::to_json`];
 /// field-by-field schema in the [module docs](self).
@@ -91,7 +187,9 @@ pub enum TraceRecord {
         util: Vec<f64>,
     },
     /// Planner challenger audit: accepted/rejected with the
-    /// drain-time evidence the decision was made on.
+    /// drain-time evidence the decision was made on. `candidates`
+    /// (schema v2, optional on read) names the binding constraints and
+    /// drain-time delta behind each judged plan.
     Decision {
         t_s: f64,
         tenant: i64,
@@ -102,6 +200,7 @@ pub enum TraceRecord {
         margin: f64,
         mwu_visits: u64,
         changed_pairs: usize,
+        candidates: Vec<DecisionCandidate>,
     },
     /// A fault applied to the running fabric.
     Fault { t_s: f64, desc: String },
@@ -157,6 +256,22 @@ pub enum TraceRecord {
         mwu_visits: u64,
         plan_wall_s: f64,
         sim_wall_s: f64,
+    },
+    /// Per-link blame decomposition of one monitor window (schema v2):
+    /// the hottest links of the window, each carrying its full
+    /// per-(tag, src, dst) byte decomposition.
+    Attribution { t_s: f64, epoch: u64, links: Vec<LinkBlame> },
+    /// One bounded streaming latency histogram (schema v2): sparse
+    /// bucket counts ([`crate::util::hist::LatencyHist`]) plus the
+    /// derived headline quantiles, for `--check`-style re-verification.
+    Histogram {
+        scope: String,
+        total: u64,
+        max_ns: u64,
+        buckets: Vec<(usize, u64)>,
+        p50_ns: u64,
+        p95_ns: u64,
+        p99_ns: u64,
     },
     /// Free-form marker for CLIs without deep instrumentation.
     Note { text: String },
@@ -227,6 +342,7 @@ impl TraceRecord {
                 margin,
                 mwu_visits,
                 changed_pairs,
+                candidates,
             } => Json::obj(vec![
                 ("kind", Json::str("decision")),
                 runj,
@@ -239,6 +355,25 @@ impl TraceRecord {
                 ("margin", Json::num(*margin)),
                 ("mwu_visits", Json::num(*mwu_visits as f64)),
                 ("changed_pairs", Json::num(*changed_pairs as f64)),
+                (
+                    "candidates",
+                    Json::arr(candidates.iter().map(|c| {
+                        Json::obj(vec![
+                            ("name", Json::str(c.name.as_str())),
+                            ("z_s", Json::num(c.z_s)),
+                            ("delta_s", Json::num(c.delta_s)),
+                            (
+                                "binding",
+                                Json::arr(c.binding.iter().map(|(label, v)| {
+                                    Json::arr(
+                                        [Json::str(label.as_str()), Json::num(*v)]
+                                            .into_iter(),
+                                    )
+                                })),
+                            ),
+                        ])
+                    })),
+                ),
             ]),
             TraceRecord::Fault { t_s, desc } => Json::obj(vec![
                 ("kind", Json::str("fault")),
@@ -342,6 +477,61 @@ impl TraceRecord {
                     ("sim_wall_s", Json::num(*sim_wall_s)),
                 ])
             }
+            TraceRecord::Attribution { t_s, epoch, links } => Json::obj(vec![
+                ("kind", Json::str("attribution")),
+                runj,
+                ("t_s", Json::num(*t_s)),
+                ("epoch", Json::num(*epoch as f64)),
+                (
+                    "links",
+                    Json::arr(links.iter().map(|lb| {
+                        Json::obj(vec![
+                            ("link", Json::num(lb.link as f64)),
+                            ("window_bytes", Json::num(lb.window_bytes)),
+                            (
+                                "blame",
+                                Json::arr(lb.blame.iter().map(
+                                    |&(tag, src, dst, bytes)| {
+                                        Json::arr(
+                                            [
+                                                Json::num(tag as f64),
+                                                Json::num(src as f64),
+                                                Json::num(dst as f64),
+                                                Json::num(bytes),
+                                            ]
+                                            .into_iter(),
+                                        )
+                                    },
+                                )),
+                            ),
+                        ])
+                    })),
+                ),
+            ]),
+            TraceRecord::Histogram {
+                scope,
+                total,
+                max_ns,
+                buckets,
+                p50_ns,
+                p95_ns,
+                p99_ns,
+            } => Json::obj(vec![
+                ("kind", Json::str("histogram")),
+                runj,
+                ("scope", Json::str(scope.as_str())),
+                ("total", Json::num(*total as f64)),
+                ("max_ns", Json::num(*max_ns as f64)),
+                (
+                    "buckets",
+                    Json::arr(buckets.iter().map(|&(i, c)| {
+                        Json::arr([Json::num(i as f64), Json::num(c as f64)].into_iter())
+                    })),
+                ),
+                ("p50_ns", Json::num(*p50_ns as f64)),
+                ("p95_ns", Json::num(*p95_ns as f64)),
+                ("p99_ns", Json::num(*p99_ns as f64)),
+            ]),
             TraceRecord::Note { text } => {
                 Json::obj(vec![("kind", Json::str("note")), ("text", Json::str(text.as_str()))])
             }
@@ -349,9 +539,22 @@ impl TraceRecord {
     }
 }
 
+/// Where recorded lines go: the in-memory buffer (tests, `--check`
+/// pipelines) or an incremental JSONL file sink (`--trace PATH` on
+/// long runs — trace memory stays O(1) instead of O(records)).
+enum Sink {
+    Mem(Vec<Json>),
+    File {
+        w: JsonlWriter<io::BufWriter<std::fs::File>>,
+        /// First write error, surfaced at [`Recorder::finish`] (the
+        /// emit path cannot return it).
+        err: Option<io::Error>,
+    },
+}
+
 struct Inner {
     run: String,
-    lines: Vec<Json>,
+    sink: Sink,
 }
 
 /// The telemetry sink. `Clone` is cheap (an `Option<Arc>`); a cloned
@@ -377,8 +580,24 @@ impl Recorder {
     /// A live sink accumulating records in memory.
     pub fn enabled() -> Self {
         Recorder {
-            inner: Some(Arc::new(Mutex::new(Inner { run: String::new(), lines: Vec::new() }))),
+            inner: Some(Arc::new(Mutex::new(Inner {
+                run: String::new(),
+                sink: Sink::Mem(Vec::new()),
+            }))),
         }
+    }
+
+    /// A live sink streaming each record to `path` as it is emitted
+    /// (buffered JSONL). Bounds trace memory on long-horizon runs; call
+    /// [`Recorder::finish`] at exit to flush and surface I/O errors.
+    pub fn to_file(path: &str) -> io::Result<Self> {
+        let w = JsonlWriter::create(path)?;
+        Ok(Recorder {
+            inner: Some(Arc::new(Mutex::new(Inner {
+                run: String::new(),
+                sink: Sink::File { w, err: None },
+            }))),
+        })
     }
 
     /// Whether records are being collected. Instrumentation sites that
@@ -396,38 +615,63 @@ impl Recorder {
     }
 
     /// Record one event. The closure only runs when the sink is live.
+    /// File sinks write the line through immediately (buffered); any
+    /// I/O error is stashed and surfaced by [`Recorder::finish`].
     pub fn emit(&self, f: impl FnOnce() -> TraceRecord) {
         if let Some(m) = &self.inner {
             let mut g = m.lock().unwrap();
             let line = f().to_json(&g.run);
-            g.lines.push(line);
+            match &mut g.sink {
+                Sink::Mem(lines) => lines.push(line),
+                Sink::File { w, err } => {
+                    if err.is_none() {
+                        if let Err(e) = w.write(&line) {
+                            *err = Some(e);
+                        }
+                    }
+                }
+            }
         }
     }
 
-    /// Lines recorded so far.
+    /// Lines recorded so far (file sinks: lines streamed out).
     pub fn len(&self) -> usize {
-        self.inner.as_ref().map_or(0, |m| m.lock().unwrap().lines.len())
+        self.inner.as_ref().map_or(0, |m| match &m.lock().unwrap().sink {
+            Sink::Mem(lines) => lines.len(),
+            Sink::File { w, .. } => w.lines(),
+        })
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Take every recorded line out of the sink (oldest first).
+    /// Take every recorded line out of the sink (oldest first). File
+    /// sinks stream lines out as they are emitted, so there is nothing
+    /// to drain — the trace lives in the file.
     pub fn drain(&self) -> Vec<Json> {
         match &self.inner {
             None => Vec::new(),
-            Some(m) => std::mem::take(&mut m.lock().unwrap().lines),
+            Some(m) => match &mut m.lock().unwrap().sink {
+                Sink::Mem(lines) => std::mem::take(lines),
+                Sink::File { .. } => Vec::new(),
+            },
         }
     }
 
-    /// Snapshot the recorded lines without draining them.
+    /// Snapshot the recorded lines without draining them (in-memory
+    /// sinks only; file sinks return empty).
     pub fn lines(&self) -> Vec<Json> {
-        self.inner.as_ref().map_or_else(Vec::new, |m| m.lock().unwrap().lines.clone())
+        self.inner.as_ref().map_or_else(Vec::new, |m| match &m.lock().unwrap().sink {
+            Sink::Mem(lines) => lines.clone(),
+            Sink::File { .. } => Vec::new(),
+        })
     }
 
     /// Serialize every recorded line to `path` as JSONL (drains the
-    /// sink); returns the number of lines written.
+    /// sink); returns the number of lines written. In-memory sinks
+    /// only — a file sink already streamed its lines (use
+    /// [`Recorder::finish`] there).
     pub fn write_jsonl(&self, path: &str) -> io::Result<usize> {
         let mut w = JsonlWriter::create(path)?;
         for line in self.drain() {
@@ -435,6 +679,25 @@ impl Recorder {
         }
         w.flush()?;
         Ok(w.lines())
+    }
+
+    /// Flush a file sink and surface any deferred write error; returns
+    /// the total lines that went to the file (0 for memory/disabled
+    /// sinks — their lines are still in the buffer).
+    pub fn finish(&self) -> io::Result<usize> {
+        match &self.inner {
+            None => Ok(0),
+            Some(m) => match &mut m.lock().unwrap().sink {
+                Sink::Mem(_) => Ok(0),
+                Sink::File { w, err } => {
+                    if let Some(e) = err.take() {
+                        return Err(e);
+                    }
+                    w.flush()?;
+                    Ok(w.lines())
+                }
+            },
+        }
     }
 }
 
@@ -526,6 +789,30 @@ mod tests {
                 margin: 0.1,
                 mwu_visits: 640,
                 changed_pairs: 7,
+                candidates: vec![DecisionCandidate {
+                    name: "carry".into(),
+                    z_s: 1.9e-3,
+                    delta_s: 0.0,
+                    binding: vec![("link:4".into(), 1.9e-3)],
+                }],
+            },
+            TraceRecord::Attribution {
+                t_s: 6.0e-4,
+                epoch: 3,
+                links: vec![LinkBlame {
+                    link: 4,
+                    window_bytes: 3.0e6,
+                    blame: vec![(0, 0, 1, 2.0e6), (7, 2, 1, 1.0e6)],
+                }],
+            },
+            TraceRecord::Histogram {
+                scope: "sojourn".into(),
+                total: 64,
+                max_ns: 123_456,
+                buckets: vec![(40, 60), (100, 4)],
+                p50_ns: 1_024,
+                p95_ns: 98_304,
+                p99_ns: 98_304,
             },
             TraceRecord::Fault { t_s: 0.004, desc: "LinkDown(12)".into() },
             TraceRecord::Admit {
@@ -604,6 +891,28 @@ mod tests {
         let back = Json::parse(&line).unwrap();
         assert_eq!(back.get("goodput_gbps").as_f64().unwrap().to_bits(), g.to_bits());
         assert_eq!(back.get("makespan_s").as_f64().unwrap().to_bits(), (1.0f64 / 3.0).to_bits());
+    }
+
+    #[test]
+    fn file_sink_streams_incrementally() {
+        let path = std::env::temp_dir().join("nimble_telemetry_stream_unit.jsonl");
+        let p = path.to_str().unwrap();
+        let rec = Recorder::to_file(p).unwrap();
+        assert!(rec.on());
+        rec.set_run("stream");
+        rec.emit(|| TraceRecord::Note { text: "a".into() });
+        rec.emit(|| TraceRecord::Note { text: "b".into() });
+        // lines went to the file, not the buffer
+        assert!(rec.lines().is_empty());
+        assert!(rec.drain().is_empty());
+        assert_eq!(rec.len(), 2);
+        assert_eq!(rec.finish().unwrap(), 2);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            Json::parse(line).expect("streamed lines are valid JSON");
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -108,6 +108,11 @@ const REQUIRED: &[(&str, &[&str])] = &[
             "sim_wall_s",
         ],
     ),
+    ("attribution", &["run", "t_s", "epoch", "links"]),
+    (
+        "histogram",
+        &["run", "scope", "total", "max_ns", "buckets", "p50_ns", "p95_ns", "p99_ns"],
+    ),
     ("note", &["text"]),
 ];
 
@@ -116,8 +121,14 @@ const REQUIRED: &[(&str, &[&str])] = &[
 pub const CONGESTION_RECOVERY_FACTOR: f64 = 1.1;
 
 /// A parsed trace: one [`Json`] object per line, in file order.
+/// Lines whose `kind` this build does not know are **skipped** at
+/// parse time and counted in [`Trace::unknown_kinds`] — a trace
+/// written by a newer schema stays readable (forward compatibility);
+/// `--check` surfaces the count as a warning, not an error.
 pub struct Trace {
     pub lines: Vec<Json>,
+    /// Well-formed lines dropped because their `kind` is unknown.
+    pub unknown_kinds: usize,
 }
 
 /// One labeled run's records, regrouped from the flat line stream.
@@ -135,20 +146,30 @@ struct RunView {
 }
 
 impl Trace {
-    /// Parse JSONL text; fails on the first malformed line.
+    /// Parse JSONL text; fails on the first malformed line. Lines
+    /// carrying an unknown `kind` are skipped and counted (lines with
+    /// no `kind` at all are kept so `--check` can flag them).
     pub fn parse(text: &str) -> Result<Trace, String> {
         let mut lines = Vec::new();
+        let mut unknown_kinds = 0usize;
+        let mut total = 0usize;
         for (i, raw) in text.lines().enumerate() {
             if raw.trim().is_empty() {
                 continue;
             }
             let j = Json::parse(raw).map_err(|e| format!("line {}: {}", i + 1, e))?;
-            lines.push(j);
+            total += 1;
+            match j.get("kind").as_str() {
+                Some(k) if !REQUIRED.iter().any(|(known, _)| *known == k) => {
+                    unknown_kinds += 1;
+                }
+                _ => lines.push(j),
+            }
         }
-        if lines.is_empty() {
+        if total == 0 {
             return Err("empty trace".to_string());
         }
-        Ok(Trace { lines })
+        Ok(Trace { lines, unknown_kinds })
     }
 
     /// Read and parse a trace file.
@@ -158,7 +179,7 @@ impl Trace {
         Trace::parse(&text)
     }
 
-    fn kind_lines(&self, kind: &str) -> impl Iterator<Item = &Json> {
+    pub(crate) fn kind_lines(&self, kind: &str) -> impl Iterator<Item = &Json> {
         let k = kind.to_string();
         self.lines.iter().filter(move |l| l.get("kind").as_str() == Some(k.as_str()))
     }
@@ -507,9 +528,12 @@ pub fn render(trace: &Trace) -> String {
 
 /// `--check` outcome: every failed assertion, plus how many checks ran
 /// (so an empty `errors` on zero checks can't masquerade as a pass).
+/// `warnings` are forward-compatibility notices (unknown record kinds,
+/// a newer schema version) — reported but not failing.
 pub struct CheckOutcome {
     pub checks: usize,
     pub errors: Vec<String>,
+    pub warnings: Vec<String>,
 }
 
 impl CheckOutcome {
@@ -523,7 +547,14 @@ impl CheckOutcome {
 pub fn check(trace: &Trace) -> CheckOutcome {
     let mut checks = 0usize;
     let mut errors: Vec<String> = Vec::new();
+    let mut warnings: Vec<String> = Vec::new();
     let mut err = |msg: String| errors.push(msg);
+    if trace.unknown_kinds > 0 {
+        warnings.push(format!(
+            "{} line(s) of unknown kind skipped (trace written by a newer schema?)",
+            trace.unknown_kinds
+        ));
+    }
 
     // -- schema: every line has a known kind carrying its required fields
     let mut metas = 0usize;
@@ -537,7 +568,7 @@ pub fn check(trace: &Trace) -> CheckOutcome {
             }
         };
         match REQUIRED.iter().find(|(k, _)| *k == kind) {
-            None => err(format!("line {}: unknown kind {kind:?}", i + 1)),
+            None => warnings.push(format!("line {}: unknown kind {kind:?}", i + 1)),
             Some((_, fields)) => {
                 for f in *fields {
                     if matches!(l.get(f), Json::Null) {
@@ -548,11 +579,20 @@ pub fn check(trace: &Trace) -> CheckOutcome {
         }
         if kind == "meta" {
             metas += 1;
-            if l.get("schema").as_u64() != Some(super::SCHEMA_VERSION) {
+            let schema = l.get("schema").as_u64();
+            if schema > Some(super::SCHEMA_VERSION) {
+                warnings.push(format!(
+                    "line {}: schema version {:?} is newer than this build's {} — \
+                     unknown records are skipped",
+                    i + 1,
+                    schema,
+                    super::SCHEMA_VERSION
+                ));
+            } else if schema != Some(super::SCHEMA_VERSION) {
                 err(format!(
                     "line {}: schema version {:?} != {}",
                     i + 1,
-                    l.get("schema").as_u64(),
+                    schema,
                     super::SCHEMA_VERSION
                 ));
             }
@@ -659,7 +699,7 @@ pub fn check(trace: &Trace) -> CheckOutcome {
         }
     }
 
-    CheckOutcome { checks, errors }
+    CheckOutcome { checks, errors, warnings }
 }
 
 #[cfg(test)]
@@ -764,12 +804,35 @@ mod tests {
     }
 
     #[test]
-    fn check_rejects_unknown_kind_and_missing_fields() {
+    fn check_rejects_missing_fields_and_warns_on_unknown_kind() {
         let t = Trace::parse("{\"kind\":\"bogus\"}\n{\"kind\":\"note\"}").unwrap();
+        // forward compat: the unknown kind was skipped at parse, not kept
+        assert_eq!(t.unknown_kinds, 1);
+        assert_eq!(t.lines.len(), 1);
         let out = check(&t);
-        assert!(out.errors.iter().any(|e| e.contains("unknown kind")));
+        assert!(out.warnings.iter().any(|w| w.contains("unknown kind")), "{:?}", out.warnings);
         assert!(out.errors.iter().any(|e| e.contains("missing field")));
         assert!(out.errors.iter().any(|e| e.contains("no meta")));
+        assert!(!out.errors.iter().any(|e| e.contains("unknown kind")), "{:?}", out.errors);
+    }
+
+    #[test]
+    fn newer_schema_version_warns_but_does_not_fail_schema_rows() {
+        let newer = super::super::SCHEMA_VERSION + 1;
+        let text = format!(
+            "{{\"kind\":\"meta\",\"schema\":{newer},\"subcommand\":\"x\",\"backend\":\"fluid\",\
+             \"scheduler\":\"wheel\",\"threads\":1,\"topo\":\"flat\",\"nodes\":1,\"links\":1,\
+             \"gpus\":1}}\n{{\"kind\":\"future_kind\",\"run\":\"r\",\"payload\":42}}"
+        );
+        let t = Trace::parse(&text).unwrap();
+        assert_eq!(t.unknown_kinds, 1);
+        let out = check(&t);
+        assert!(out.warnings.iter().any(|w| w.contains("newer")), "{:?}", out.warnings);
+        assert!(
+            !out.errors.iter().any(|e| e.contains("schema version")),
+            "newer schema must not error: {:?}",
+            out.errors
+        );
     }
 
     #[test]

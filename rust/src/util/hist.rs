@@ -1,0 +1,283 @@
+//! Deterministic log-bucketed streaming latency histogram
+//! (DESIGN.md §16): the memory-bounded replacement for the packet
+//! backend's per-chunk sojourn/transit sample vectors.
+//!
+//! Bucket boundaries are **fixed integers in nanoseconds**, independent
+//! of the data: values below 2^[`MANTISSA_BITS`] get one bucket per
+//! nanosecond, and every octave above is split into
+//! 2^[`MANTISSA_BITS`] equal sub-buckets (the HdrHistogram layout). A
+//! bucket's relative width is therefore at most 2^-[`MANTISSA_BITS`]
+//! ≈ 3.2% — the error bound on any histogram-derived quantile.
+//! Because the boundaries are fixed, two histograms merge by exact
+//! u64 bucket-count addition: merging is associative, commutative and
+//! bit-deterministic, which is what the partitioned packet engine's
+//! canonical component merge needs.
+//!
+//! Quantiles are nearest-rank over the bucket counts and return the
+//! **lower boundary** of the bucket holding the nearest-rank sample —
+//! a deterministic representative within one bucket width of the exact
+//! nearest-rank value (the oracle contract pinned in
+//! `tests/telemetry_props.rs`). The exact maximum is tracked
+//! separately so `max` headlines stay exact.
+
+/// Sub-bucket resolution: 2^5 = 32 sub-buckets per octave.
+pub const MANTISSA_BITS: u32 = 5;
+
+/// Exclusive upper bound on bucket indices for u64 values.
+pub const MAX_BUCKETS: usize = ((64 - MANTISSA_BITS as usize) + 1) << MANTISSA_BITS;
+
+/// A streaming latency histogram over integer nanoseconds. Buckets
+/// are allocated lazily up to the highest observed index; untouched
+/// tails count as zero, so equality and merging see one canonical
+/// representation (trailing zero buckets are never stored).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LatencyHist {
+    counts: Vec<u64>,
+    total: u64,
+    /// Exact maximum observed (ns) — kept so the `max` headline does
+    /// not quantize.
+    max_ns: u64,
+}
+
+/// Bucket index of a nanosecond value (fixed, data-independent).
+pub fn bucket_of(ns: u64) -> usize {
+    let m = MANTISSA_BITS;
+    if ns < (1u64 << m) {
+        return ns as usize;
+    }
+    let e = 63 - ns.leading_zeros();
+    let sub = ((ns >> (e - m)) & ((1u64 << m) - 1)) as usize;
+    (((e - m + 1) as usize) << m) + sub
+}
+
+/// `[lower, upper)` boundaries of bucket `idx`, in nanoseconds.
+pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+    let m = MANTISSA_BITS as usize;
+    if idx < (1usize << m) {
+        return (idx as u64, idx as u64 + 1);
+    }
+    let g = (idx >> m) as u32; // octave group, >= 1
+    let sub = (idx & ((1 << m) - 1)) as u64;
+    let lower = ((1u64 << m) + sub) << (g - 1);
+    let width = 1u64 << (g - 1);
+    (lower, lower.saturating_add(width))
+}
+
+/// Width of the bucket containing `ns` — the quantile error bound at
+/// that magnitude.
+pub fn bucket_width_ns(ns: u64) -> u64 {
+    let (lo, hi) = bucket_bounds(bucket_of(ns));
+    hi - lo
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist::default()
+    }
+
+    /// Record one observation in nanoseconds.
+    pub fn record_ns(&mut self, ns: u64) {
+        let idx = bucket_of(ns);
+        if idx >= self.counts.len() {
+            self.counts.resize(idx + 1, 0);
+        }
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Record one observation in seconds (rounded to integer ns — the
+    /// packet engine's native clock, so the conversion is exact there).
+    pub fn record_s(&mut self, s: f64) {
+        self.record_ns((s * 1e9).round().max(0.0) as u64);
+    }
+
+    /// Exact merge: bucket-wise u64 addition (order-independent).
+    pub fn merge(&mut self, other: &LatencyHist) {
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (a, &b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Exact maximum observed, in nanoseconds (0 when empty).
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Nearest-rank quantile over the bucket counts (`q` in [0,100]):
+    /// the lower boundary of the bucket holding the rank-
+    /// `ceil(q/100·n)` sample. Within one bucket width of the exact
+    /// nearest-rank value. 0 when empty.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= rank {
+                return bucket_bounds(i).0;
+            }
+        }
+        bucket_bounds(self.counts.len().saturating_sub(1)).0
+    }
+
+    /// [`LatencyHist::quantile_ns`] in seconds.
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        self.quantile_ns(q) as f64 * 1e-9
+    }
+
+    /// Non-empty buckets as `(index, count)` pairs, ascending — the
+    /// sparse form the `histogram` trace record serializes.
+    pub fn nonzero(&self) -> Vec<(usize, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(i, &c)| (i, c))
+            .collect()
+    }
+
+    /// Rebuild from the sparse form (trace round-trip). `max_ns` must
+    /// be supplied — the sparse form only bounds it to a bucket.
+    pub fn from_sparse(pairs: &[(usize, u64)], max_ns: u64) -> Self {
+        let mut h = LatencyHist::new();
+        for &(i, c) in pairs {
+            if i >= h.counts.len() {
+                h.counts.resize(i + 1, 0);
+            }
+            h.counts[i] += c;
+            h.total += c;
+        }
+        h.max_ns = max_ns;
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::percentile_nearest_rank;
+
+    /// The bucket map is continuous, monotone, and bounded by
+    /// [`MAX_BUCKETS`]; bounds invert the map exactly.
+    #[test]
+    fn buckets_are_continuous_and_invertible() {
+        let mut prev = None;
+        for ns in 0u64..5000 {
+            let i = bucket_of(ns);
+            if let Some(p) = prev {
+                assert!(i == p || i == p + 1, "gap at {ns}: {p} -> {i}");
+            }
+            prev = Some(i);
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= ns && ns < hi, "{ns} outside [{lo},{hi})");
+        }
+        for &ns in &[1u64 << 20, (1 << 40) + 12345, u64::MAX] {
+            let (lo, hi) = bucket_bounds(bucket_of(ns));
+            assert!(lo <= ns && (ns < hi || hi <= lo), "{ns} outside [{lo},{hi})");
+            assert!(bucket_of(ns) < MAX_BUCKETS);
+        }
+    }
+
+    /// Relative bucket width stays under 2^-MANTISSA_BITS.
+    #[test]
+    fn relative_width_bound() {
+        for &ns in &[100u64, 1_000, 33_333, 1_000_000, 123_456_789] {
+            let w = bucket_width_ns(ns);
+            let (lo, _) = bucket_bounds(bucket_of(ns));
+            assert!(
+                (w as f64) <= (lo.max(1) as f64) / 32.0 + 1.0,
+                "bucket at {ns} too wide: {w} vs lower {lo}"
+            );
+        }
+    }
+
+    /// Histogram quantiles land within one bucket width of the exact
+    /// nearest-rank value, at every rank, on an adversarial sample.
+    #[test]
+    fn quantiles_match_oracle_within_one_bucket() {
+        let samples: Vec<u64> =
+            (0..5000u64).map(|i| (i * 7919) % 2_000_000 + 3).collect();
+        let mut h = LatencyHist::new();
+        for &s in &samples {
+            h.record_ns(s);
+        }
+        let exact_s: Vec<f64> = samples.iter().map(|&x| x as f64 * 1e-9).collect();
+        for q in [1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let exact_ns = (percentile_nearest_rank(&exact_s, q) * 1e9).round() as u64;
+            let got = h.quantile_ns(q);
+            // the histogram returns the lower bound of exactly the
+            // bucket holding the nearest-rank sample
+            assert_eq!(
+                got,
+                bucket_bounds(bucket_of(exact_ns)).0,
+                "p{q}: {got} vs exact {exact_ns}"
+            );
+            assert!(got <= exact_ns && exact_ns - got <= bucket_width_ns(exact_ns));
+        }
+        assert_eq!(h.max_ns(), *samples.iter().max().unwrap());
+        assert_eq!(h.total(), samples.len() as u64);
+    }
+
+    /// Merging partitions is exact: any split of the sample stream
+    /// merges back to the bit-identical histogram.
+    #[test]
+    fn merge_is_exact_and_order_independent() {
+        let samples: Vec<u64> = (0..999u64).map(|i| (i * 104_729) % 10_000_000).collect();
+        let mut whole = LatencyHist::new();
+        for &s in &samples {
+            whole.record_ns(s);
+        }
+        for split in [1usize, 3, 7] {
+            let mut parts: Vec<LatencyHist> = vec![LatencyHist::new(); split];
+            for (i, &s) in samples.iter().enumerate() {
+                parts[i % split].record_ns(s);
+            }
+            // merge in reverse order: still identical
+            let mut merged = LatencyHist::new();
+            for p in parts.iter().rev() {
+                merged.merge(p);
+            }
+            assert_eq!(merged, whole, "split {split} diverged");
+        }
+    }
+
+    /// Sparse serialization round-trips bit-exactly.
+    #[test]
+    fn sparse_roundtrip() {
+        let mut h = LatencyHist::new();
+        for ns in [0u64, 5, 31, 32, 1000, 3_000_000, 3_000_100] {
+            h.record_ns(ns);
+        }
+        let back = LatencyHist::from_sparse(&h.nonzero(), h.max_ns());
+        for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(h.quantile_ns(q), back.quantile_ns(q));
+        }
+        assert_eq!(h.total(), back.total());
+        assert_eq!(h.max_ns(), back.max_ns());
+    }
+
+    #[test]
+    fn empty_hist_is_inert() {
+        let h = LatencyHist::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile_ns(99.0), 0);
+        assert_eq!(h.max_ns(), 0);
+        assert!(h.nonzero().is_empty());
+    }
+}

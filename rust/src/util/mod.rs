@@ -7,6 +7,7 @@ pub mod arena;
 pub mod bench;
 pub mod cli;
 pub mod eventq;
+pub mod hist;
 pub mod json;
 pub mod quickcheck;
 pub mod rng;

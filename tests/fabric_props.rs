@@ -432,14 +432,14 @@ fn prop_wheel_matches_heap_bitwise() {
             );
         }
         prop_assert!(rw.link_bytes == rh.link_bytes, "link bytes diverged");
-        prop_assert!(sw.sojourn_s == sh.sojourn_s, "sojourn latencies diverged");
-        prop_assert!(sw.transit_s == sh.transit_s, "transit latencies diverged");
+        prop_assert!(sw.sojourn == sh.sojourn, "sojourn histograms diverged");
+        prop_assert!(sw.transit == sh.transit, "transit histograms diverged");
         prop_assert!(
-            sw.per_pair_sojourn_s == sh.per_pair_sojourn_s,
+            sw.per_pair_sojourn == sh.per_pair_sojourn,
             "per-pair tails diverged"
         );
         prop_assert!(
-            sw.per_tag_sojourn_s == sh.per_tag_sojourn_s,
+            sw.per_tag_sojourn == sh.per_tag_sojourn,
             "per-tag tails diverged"
         );
         prop_assert!(
@@ -563,11 +563,11 @@ fn prop_partitioned_thread_count_invariance() {
                 "link bytes diverged at threads={threads}"
             );
             prop_assert!(
-                s1.sojourn_s == s.sojourn_s,
-                "sojourn tails diverged at threads={threads}"
+                s1.sojourn == s.sojourn,
+                "sojourn histograms diverged at threads={threads}"
             );
             prop_assert!(
-                s1.per_pair_sojourn_s == s.per_pair_sojourn_s,
+                s1.per_pair_sojourn == s.per_pair_sojourn,
                 "per-pair tails diverged at threads={threads}"
             );
         }

@@ -8,15 +8,19 @@
 
 use nimble::coordinator::ReplanExecutor;
 use nimble::exp::faults::scenario_rows_traced;
+use nimble::exp::scale::plan_flows;
 use nimble::exp::serve::run_arm_traced;
 use nimble::fabric::faults::scenario_schedule;
 use nimble::fabric::{
-    BackendKind, FabricParams, Scenario, ScenarioParams, SchedulerKind,
+    make_backend, BackendKind, FabricParams, Scenario, ScenarioParams,
+    SchedulerKind,
 };
 use nimble::orchestrator::{job_stream, MultiTenantExecutor, TenancyCfg};
 use nimble::planner::{Planner, PlannerCfg, ReplanCfg};
 use nimble::telemetry::{report, Recorder, TraceRecord};
 use nimble::topology::Topology;
+use nimble::util::hist::{bucket_bounds, bucket_of, bucket_width_ns};
+use nimble::util::stats::percentile_nearest_rank;
 use nimble::workloads::skew::hotspot_alltoallv;
 
 const MB: f64 = 1024.0 * 1024.0;
@@ -173,6 +177,168 @@ fn trace_is_a_pure_observer_on_the_orchestrator() {
             }
         }
     }
+}
+
+/// The conservation invariant of DESIGN.md §16, across the full
+/// backend matrix the issue names (fluid plus packet × {wheel, heap} ×
+/// {1, 8 threads}): twin engines fly identical multi-tenant flow sets
+/// epoch by epoch, one sampling `take_window`, the other
+/// `take_window_attr`. Per link and per epoch, (a) the attribution
+/// totals are bit-identical to the plain window bytes, and (b) summing
+/// the link's blame entries in listed (ascending-key) order reproduces
+/// the total bit-exactly. Keys must arrive strictly sorted — the order
+/// the conservation sum is defined over.
+#[test]
+fn blame_decomposition_conserves_window_bytes_bit_exactly() {
+    let topo = Topology::paper();
+    let demands = hotspot_alltoallv(&topo, 24.0 * MB, 0.7, topo.gpu(1, 0));
+    let plan = Planner::new(&topo, PlannerCfg::default()).plan(&demands);
+    let mut flows = plan_flows(&plan);
+    for (i, f) in flows.iter_mut().enumerate() {
+        f.tag = (i % 3) as u64 + 1; // several tenants share each hot link
+    }
+
+    let mut cases = vec![FabricParams::default()];
+    for scheduler in [SchedulerKind::Wheel, SchedulerKind::Heap] {
+        for threads in [1usize, 8] {
+            let mut p =
+                FabricParams { backend: BackendKind::Packet, ..FabricParams::default() };
+            p.packet.scheduler = scheduler;
+            p.packet.threads = threads;
+            cases.push(p);
+        }
+    }
+
+    for params in &cases {
+        let tag = format!(
+            "{:?}/{:?}/t{}",
+            params.backend, params.packet.scheduler, params.packet.threads
+        );
+        let mut plain = make_backend(&topo, params.clone(), &flows);
+        let mut attr = make_backend(&topo, params.clone(), &flows);
+        let mut epoch = 0.0f64;
+        let mut shared_link = false;
+        while !plain.is_done() {
+            epoch += 2.0e-4;
+            assert!(epoch < 10.0, "{tag}: runaway simulation");
+            plain.advance_to(epoch).expect("bounded advance cannot stall");
+            attr.advance_to(epoch).expect("bounded advance cannot stall");
+            let w = plain.take_window();
+            let a = attr.take_window_attr();
+            assert_eq!(w.len(), a.totals.len(), "{tag}: window width diverged");
+            assert_eq!(a.blame.len(), a.totals.len(), "{tag}: blame rows missing");
+            for (l, x) in w.iter().enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    a.totals[l].to_bits(),
+                    "{tag}: link {l} window bytes diverged under attribution"
+                );
+                let entries = &a.blame[l];
+                let mut sum = 0.0f64;
+                for &(_, b) in entries {
+                    sum += b;
+                }
+                assert_eq!(
+                    sum.to_bits(),
+                    a.totals[l].to_bits(),
+                    "{tag}: link {l} blame sum not conserved"
+                );
+                for pair in entries.windows(2) {
+                    assert!(pair[0].0 < pair[1].0, "{tag}: blame keys out of order");
+                }
+                if entries.len() > 1 {
+                    shared_link = true;
+                }
+            }
+        }
+        assert!(
+            shared_link,
+            "{tag}: vacuous — no link ever had multiple blame contributors"
+        );
+        attr.run_to_completion().expect("twin finishes too");
+        assert_eq!(
+            plain.result().makespan.to_bits(),
+            attr.result().makespan.to_bits(),
+            "{tag}: attribution sampling perturbed the trajectory"
+        );
+    }
+}
+
+/// The histogram error-bound contract under the hard cases: faulted
+/// and preempted (replan loop on) packet runs with the `exact_tail`
+/// oracle enabled. Each headline quantile must be the lower boundary
+/// of exactly the bucket holding the exact nearest-rank sample —
+/// i.e. within one bucket width (≤ 3.2% relative) of the truth.
+#[test]
+fn histogram_quantiles_match_exact_oracle_under_faults_and_preemption() {
+    let topo = Topology::paper();
+    let demands = hotspot_alltoallv(&topo, 48.0 * MB, 0.7, topo.gpu(1, 0));
+    let plan = Planner::new(&topo, PlannerCfg::default()).plan(&demands);
+    let flap = scenario_schedule(
+        &topo,
+        Scenario::Flap,
+        &ScenarioParams::default(),
+        Some(&plan.link_load),
+    );
+    let mut params =
+        FabricParams { backend: BackendKind::Packet, ..FabricParams::default() };
+    params.packet.exact_tail = true;
+
+    let mut saw_preemption = false;
+    for faulted in [false, true] {
+        let mut ex = ReplanExecutor::new(
+            &topo,
+            params.clone(),
+            PlannerCfg::default(),
+            rcfg(true),
+        );
+        if faulted {
+            ex = ex.with_faults(flap.clone());
+        }
+        let out = ex.execute(&plan, &demands);
+        saw_preemption |= out.preemptions > 0;
+        let tail = out.tail.expect("packet backend records tails");
+        assert_eq!(
+            tail.sojourn_exact_s.len() as u64,
+            tail.sojourn.total(),
+            "faulted={faulted}: oracle sample count != histogram total"
+        );
+        assert_eq!(
+            tail.transit_exact_s.len() as u64,
+            tail.transit.total(),
+            "faulted={faulted}: transit oracle count != histogram total"
+        );
+        for (name, hist, exact) in [
+            ("sojourn", &tail.sojourn, &tail.sojourn_exact_s),
+            ("transit", &tail.transit, &tail.transit_exact_s),
+        ] {
+            for q in [50.0, 95.0, 99.0] {
+                let truth_ns =
+                    (percentile_nearest_rank(exact, q) * 1e9).round() as u64;
+                let got = hist.quantile_ns(q);
+                assert_eq!(
+                    got,
+                    bucket_bounds(bucket_of(truth_ns)).0,
+                    "faulted={faulted} {name} p{q}: {got} vs exact {truth_ns}"
+                );
+                assert!(
+                    got <= truth_ns && truth_ns - got <= bucket_width_ns(truth_ns),
+                    "faulted={faulted} {name} p{q}: outside one bucket width"
+                );
+            }
+            let max_ns = (exact
+                .iter()
+                .cloned()
+                .fold(0.0f64, f64::max)
+                * 1e9)
+                .round() as u64;
+            assert_eq!(hist.max_ns(), max_ns, "faulted={faulted} {name}: max drifted");
+        }
+    }
+    assert!(
+        saw_preemption,
+        "vacuous — the flap schedule never forced a preemption"
+    );
 }
 
 /// Drain an enabled recorder into JSONL text exactly as
